@@ -1,0 +1,90 @@
+//! CSR attention pipeline (paper §8.7): SDDMM → row-softmax → SpMM on
+//! the Products-like graph, showing probe-dominated cold start vs
+//! near-zero-overhead cached replay, with telemetry written to disk.
+//!
+//! ```bash
+//! cargo run --release --example csr_attention
+//! ```
+
+use std::path::Path;
+
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::gen::preset;
+use autosage::ops::reference;
+use autosage::scheduler::{DecisionSource, Op};
+use autosage::util::rng::Rng;
+use autosage::util::timing::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let cache_path = std::env::temp_dir().join("autosage_attn_cache.json");
+    let _ = std::fs::remove_file(&cache_path);
+    let mut cfg = Config::from_env().map_err(anyhow::Error::msg)?;
+    cfg.cache_path = cache_path.display().to_string();
+
+    let telemetry_dir = Path::new("results/attention_telemetry");
+    let mut sage = AutoSage::new(Path::new("artifacts"), cfg, Some(telemetry_dir))?;
+
+    let (g, _) = preset("products_s", 42);
+    let f = 64usize;
+    let mut rng = Rng::new(99);
+    let mut dense = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f32() - 0.5) * 0.5).collect()
+    };
+    let (q, k, v) = (dense(g.n_rows * f), dense(g.n_rows * f), dense(g.n_rows * f));
+
+    // Cold start: the decision probes candidates on the induced subgraph.
+    let sw = Stopwatch::start();
+    let d1 = sage.decide(&g, Op::Attention, f)?;
+    let out = sage.attention_with(&g, &q, &k, &v, f, d1.choice.variant())?;
+    println!(
+        "cold : {:7.1}ms total (probe {:5.1}ms) choice={} source={:?}",
+        sw.ms(),
+        d1.probe_wall_ms,
+        d1.choice.variant(),
+        d1.source
+    );
+
+    // Verify numerics against the Rust oracle.
+    let want = reference::csr_attention(&g, &q, &k, &v, f);
+    let diff = reference::max_abs_diff(&out, &want);
+    println!("max |Δ| vs oracle: {diff:.2e}");
+    assert!(diff < 2e-3);
+
+    // Warm replay: same (device, graph, F, op) key hits the cache.
+    let sw = Stopwatch::start();
+    let d2 = sage.decide(&g, Op::Attention, f)?;
+    let _ = sage.attention_with(&g, &q, &k, &v, f, d2.choice.variant())?;
+    println!(
+        "warm : {:7.1}ms total (probe {:5.1}ms) choice={} source={:?}",
+        sw.ms(),
+        d2.probe_wall_ms,
+        d2.choice.variant(),
+        d2.source
+    );
+    assert_eq!(d2.source, DecisionSource::Cache);
+    assert_eq!(d1.choice.variant(), d2.choice.variant());
+
+    // Replay from a *fresh process* (simulated: new AutoSage instance,
+    // same cache file) — the paper's deterministic replay mode.
+    let mut cfg2 = Config::from_env().map_err(anyhow::Error::msg)?;
+    cfg2.cache_path = cache_path.display().to_string();
+    cfg2.replay_only = true;
+    let mut sage2 = AutoSage::new(Path::new("artifacts"), cfg2, None)?;
+    let d3 = sage2.decide(&g, Op::Attention, f)?;
+    println!(
+        "replay-only new process: choice={} source={:?}",
+        d3.choice.variant(),
+        d3.source
+    );
+    assert_eq!(d3.source, DecisionSource::Cache);
+    assert_eq!(d3.choice.variant(), d1.choice.variant());
+
+    let flushed = sage.telemetry.flush(sage.config())?;
+    if let Some(p) = flushed {
+        println!("telemetry: {} (+ .meta.json sidecar)", p.display());
+    }
+    let _ = std::fs::remove_file(&cache_path);
+    println!("csr_attention OK");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! End-to-end driver: a 2-layer GCN forward pass over the Products-like
+//! graph where EVERY sparse aggregation goes through the AutoSAGE
+//! coordinator service (request queue → scheduler → PJRT kernels), and
+//! the dense transform runs as an AOT `linear_relu` artifact.
+//!
+//! Proves all layers compose: Rust coordinator (L3) → AOT jax graphs
+//! (L2) → Pallas/XLA kernels (L1), Python nowhere at runtime. Reports
+//! per-op and end-to-end latency for AutoSAGE vs all-baseline, and
+//! checks numerics against the pure-Rust oracle. Recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example gcn_e2e
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use autosage::config::Config;
+use autosage::coordinator::{AutoSage, ServiceHandle};
+use autosage::gen::preset;
+use autosage::ops::reference;
+use autosage::scheduler::Op;
+use autosage::util::rng::Rng;
+use autosage::util::timing::Stopwatch;
+
+const F: usize = 64; // feature width of both GCN layers
+
+fn main() -> anyhow::Result<()> {
+    let (g, _) = preset("products_s", 42);
+    println!(
+        "GCN-2 forward on products_s: {} rows, {} nnz, F={F}",
+        g.n_rows,
+        g.nnz()
+    );
+
+    // Model parameters (fixed seed — shared by both execution paths).
+    let mut rng = Rng::new(4242);
+    let h0: Vec<f32> = (0..g.n_rows * F).map(|_| rng.next_f32() - 0.5).collect();
+    let w1: Vec<f32> = (0..F * F).map(|_| (rng.next_f32() - 0.5) * 0.2).collect();
+    let b1: Vec<f32> = vec![0.01; F];
+    let w2 = w1.clone();
+    let b2 = b1.clone();
+
+    // ---- oracle (pure Rust) --------------------------------------------
+    let l1 = reference::gcn_layer(&g, &h0, F, &w1, F, &b1);
+    let want = reference::gcn_layer(&g, &l1, F, &w2, F, &b2);
+
+    // ---- direct facade: autosage vs baseline, timed --------------------
+    let mut cfg = Config::from_env().map_err(anyhow::Error::msg)?;
+    cfg.cache_path = String::new();
+    let mut sage = AutoSage::new(Path::new("artifacts"), cfg, None)?;
+
+    let mut forward = |sage: &mut AutoSage, variant: Option<&str>| -> anyhow::Result<(Vec<f32>, f64, Vec<String>)> {
+        let sw = Stopwatch::start();
+        let mut choices = Vec::new();
+        let mut h = h0.clone();
+        for (w, b) in [(&w1, &b1), (&w2, &b2)] {
+            let agg = match variant {
+                Some(v) => sage.spmm_with(&g, &h, F, v)?,
+                None => {
+                    let d = sage.decide(&g, Op::Spmm, F)?;
+                    choices.push(d.choice.variant().to_string());
+                    sage.spmm_with(&g, &h, F, d.choice.variant())?
+                }
+            };
+            h = sage.linear_relu(&agg, g.n_rows, F, w, F, b)?;
+        }
+        Ok((h, sw.ms(), choices))
+    };
+
+    let (out_base, ms_base, _) = forward(&mut sage, Some("baseline"))?;
+    // Cold: includes one probe (layer 2 hits the in-memory cache).
+    let (out_auto_cold, ms_cold, choices) = forward(&mut sage, None)?;
+    // Warm: both layers replay from cache.
+    let (out_auto, ms_auto, _) = forward(&mut sage, None)?;
+
+    let diff_base = reference::max_abs_diff(&out_base, &want);
+    let diff_auto = reference::max_abs_diff(&out_auto, &want);
+    println!("numerics: baseline |Δ| {diff_base:.2e}, autosage |Δ| {diff_auto:.2e}");
+    assert!(diff_base < 2e-2 && diff_auto < 2e-2);
+    let d_paths = reference::max_abs_diff(&out_auto, &out_auto_cold);
+    assert!(d_paths < 1e-5, "cold/warm paths disagree: {d_paths}");
+
+    println!("per-layer choices (cold pass): {choices:?}");
+    println!(
+        "end-to-end: all-baseline {ms_base:.1}ms | autosage cold {ms_cold:.1}ms \
+         | autosage warm {ms_auto:.1}ms | warm speedup {:.3}x",
+        ms_base / ms_auto
+    );
+
+    // ---- service-queue path (deployment shape) -------------------------
+    println!("\nservice queue (worker thread owns the device):");
+    let svc = ServiceHandle::spawn(PathBuf::from("artifacts"), {
+        let mut c = Config::from_env().map_err(anyhow::Error::msg)?;
+        c.cache_path = String::new();
+        c
+    });
+    let sw = Stopwatch::start();
+    let resp = svc.call(Op::Spmm, g.clone(), F, vec![("b".into(), h0.clone())])?;
+    let first = sw.ms();
+    let agg = resp.result?;
+    assert_eq!(agg.len(), g.n_rows * F);
+    let sw = Stopwatch::start();
+    let resp2 = svc.call(Op::Spmm, g.clone(), F, vec![("b".into(), h0.clone())])?;
+    let second = sw.ms();
+    let _ = resp2.result?;
+    println!(
+        "  request 1 (cold, probes): {first:.1}ms  variant={}  cached={}",
+        resp.variant, resp.from_cache
+    );
+    println!(
+        "  request 2 (warm replay) : {second:.1}ms  variant={}  cached={}",
+        resp2.variant, resp2.from_cache
+    );
+    assert!(resp2.from_cache, "second request must hit the schedule cache");
+    println!("gcn_e2e OK");
+    Ok(())
+}

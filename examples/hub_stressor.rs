@@ -1,0 +1,77 @@
+//! Hub-skew stressor (paper §8.5 + Table 10): sweep hub-skew
+//! configurations, compare the CTA-per-hub split against the vendor
+//! baseline, and sweep the split threshold against the measured
+//! heavy-row fraction (§8 Ablations, "Split threshold").
+//!
+//! ```bash
+//! cargo run --release --example hub_stressor
+//! ```
+
+use std::path::Path;
+
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::gen::preset;
+use autosage::graph::ell::{auto_hub_threshold, HubSplit};
+use autosage::scheduler::{InputFeatures, Op};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::from_env().map_err(anyhow::Error::msg)?;
+    cfg.cache_path = String::new();
+    let mut sage = AutoSage::new(Path::new("artifacts"), cfg, None)?;
+
+    println!("== split vs baseline on hub-skewed graphs (F=128) ==");
+    for (name, label) in [
+        ("t10a", "N=2048, hub deg 512, other 64"),
+        ("t10b", "N=2048, hub deg 1024, other 32"),
+        ("hub_s", "N=4096, 15% hubs deg 512, other 4"),
+    ] {
+        let (g, _) = preset(name, 42);
+        let b = sage.time_op(&g, Op::Spmm, 128, "baseline", 7, 2000.0)?;
+        let s = sage.time_op(&g, Op::Spmm, 128, "hub_gather", 7, 2000.0)?;
+        let d = sage.decide(&g, Op::Spmm, 128)?;
+        println!(
+            "{label}\n  baseline {:8.3}ms | split {:8.3}ms | speedup {:5.3}x | \
+             scheduler picked: {}",
+            b.median_ms,
+            s.median_ms,
+            b.median_ms / s.median_ms,
+            d.choice.variant()
+        );
+    }
+
+    println!("\n== split-threshold sweep vs heavy-row fraction (hub_s) ==");
+    let (g, _) = preset("hub_s", 42);
+    let auto_t = auto_hub_threshold(&g);
+    println!("auto threshold (p99 degree): {auto_t}");
+    for hub_t in [4usize, 8, 16, 64, 256] {
+        let heavy = InputFeatures::heavy_fraction(&g, hub_t);
+        // Feasibility of the catalog's hub bucket at this threshold:
+        let fits = HubSplit::from_csr(&g, hub_t, 4096, hub_t.max(8), 1024, 512);
+        match fits {
+            Ok(hs) => println!(
+                "  hub_t {hub_t:>4}: heavy-row fraction {heavy:.4} \
+                 ({} hubs, light pad waste {:.1}%)",
+                hs.n_hubs,
+                100.0 * hs.light.pad_waste()
+            ),
+            Err(e) => println!(
+                "  hub_t {hub_t:>4}: heavy-row fraction {heavy:.4} \
+                 (bucket infeasible: {e})"
+            ),
+        }
+    }
+
+    println!("\n== guardrail view (hub_s, F sweep) ==");
+    for f in [64usize, 128, 256] {
+        let d = sage.decide(&g, Op::Spmm, f)?;
+        println!(
+            "  F={f:<4} choice={:<12} probe: baseline {:.3}ms best {:.3}ms",
+            d.choice.variant(),
+            d.t_baseline_ms,
+            d.t_star_ms
+        );
+    }
+    println!("hub_stressor OK");
+    Ok(())
+}

@@ -1,0 +1,25 @@
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::gen::preset;
+use autosage::scheduler::Op;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.cache_path = String::new();
+    let mut sage = AutoSage::new(Path::new("artifacts"), cfg, None)?;
+    for ds in ["er_s", "hub_s", "reddit_s", "products_s"] {
+        let (g, _) = preset(ds, 42);
+        for f in [64usize, 128] {
+            print!("{ds} F={f}:");
+            for v in ["baseline", "ell_gather", "hub_gather", "ell_r32_f32", "ell_r8_f128"] {
+                match sage.time_op(&g, Op::Spmm, f, v, 5, 2000.0) {
+                    Ok(t) => print!("  {v}={:.2}ms", t.median_ms),
+                    Err(_) => print!("  {v}=n/a"),
+                }
+            }
+            println!();
+        }
+    }
+    Ok(())
+}

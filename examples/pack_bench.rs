@@ -1,0 +1,26 @@
+//! Micro-bench for the L3 packing hot path (EXPERIMENTS.md §Perf L3-2).
+use autosage::gen::preset;
+use autosage::ops::{pack_inputs, OpData};
+use autosage::runtime::Manifest;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let m = Manifest::load(Path::new("artifacts"))?;
+    let (g, _) = preset("hub_s", 42);
+    for name in ["spmm_ellg_hub_s_full_F128", "spmm_hubg_hub_s_full_F128",
+                 "spmm_base_hub_s_full_F128"] {
+        let e = m.by_name(name).unwrap();
+        let data = OpData::new().with("b", vec![0.5f32; g.n_rows * 128]);
+        // warmup
+        let _ = pack_inputs(e, &g, &data)?;
+        let iters = 20;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let t = pack_inputs(e, &g, &data)?;
+            std::hint::black_box(&t);
+        }
+        println!("{name}: {:.3}ms/pack", t0.elapsed().as_secs_f64() * 1e3 / iters as f64);
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: schedule and run one SpMM with AutoSAGE.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the ER stressor graph, lets the scheduler pick a kernel
+//! (estimate → micro-probe → guardrail), runs it, and checks the result
+//! against the pure-Rust oracle.
+
+use std::path::Path;
+
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::gen::preset;
+use autosage::ops::reference;
+use autosage::scheduler::Op;
+use autosage::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::from_env().map_err(anyhow::Error::msg)?;
+    cfg.cache_path = String::new(); // keep the demo stateless
+
+    let mut sage = AutoSage::new(Path::new("artifacts"), cfg, None)?;
+    println!("device: {}", sage.dev.signature());
+
+    // The paper's ER stressor (scaled): N=4096, avg degree 4.
+    let (g, spec) = preset("er_s", 42);
+    println!(
+        "graph: {} ({} rows, {} nnz, max degree {})",
+        spec.name, g.n_rows, g.nnz(), g.max_degree()
+    );
+
+    // Random dense features B: [n, F].
+    let f = 64usize;
+    let mut rng = Rng::new(7);
+    let b: Vec<f32> = (0..g.n_rows * f).map(|_| rng.next_f32() - 0.5).collect();
+
+    // 1. The scheduling decision (cache → estimate → probe → guardrail).
+    let d = sage.decide(&g, Op::Spmm, f)?;
+    println!(
+        "decision: {} (variant {}) — probed baseline {:.3}ms, best {:.3}ms, \
+         probe overhead {:.1}ms",
+        d.choice_label(),
+        d.choice.variant(),
+        d.t_baseline_ms,
+        d.t_star_ms,
+        d.probe_wall_ms
+    );
+
+    // 2. Run C = A @ B through the chosen kernel.
+    let c = sage.spmm_auto(&g, &b, f)?;
+
+    // 3. Verify against the pure-Rust oracle.
+    let want = reference::spmm(&g, &b, f);
+    let diff = reference::max_abs_diff(&c, &want);
+    println!("max |Δ| vs oracle: {diff:.2e}");
+    assert!(diff < 1e-3, "kernel output mismatch");
+
+    // 4. Compare full-graph latency: chosen vs vendor baseline.
+    let tb = sage.time_op(&g, Op::Spmm, f, "baseline", 7, 2000.0)?;
+    let tc = sage.time_op(&g, Op::Spmm, f, d.choice.variant(), 7, 2000.0)?;
+    println!(
+        "full graph: baseline {:.3}ms, chosen {:.3}ms, speedup {:.3}x",
+        tb.median_ms,
+        tc.median_ms,
+        tb.median_ms / tc.median_ms
+    );
+    println!("quickstart OK");
+    Ok(())
+}

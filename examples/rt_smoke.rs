@@ -1,0 +1,32 @@
+// Smoke: load spmm baseline + ell artifacts for er_s probe bucket, compare vs oracle.
+use autosage::gen::preset;
+use autosage::ops::{pack_inputs, reference, OpData};
+use autosage::ops::pack::unpad_output;
+use autosage::runtime::{Device, Manifest};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let m = Manifest::load(Path::new("artifacts"))?;
+    println!("manifest entries: {}", m.entries.len());
+    let dev = Device::cpu()?;
+    println!("device: {} {}", dev.platform_name(), dev.signature());
+    let (g, _) = preset("er_s", 42);
+    let probe = g.probe_sample(512, 1);
+    let f = 64usize;
+    let b: Vec<f32> = (0..probe.n_rows * f).map(|i| ((i % 83) as f32) * 0.01).collect();
+    let want = reference::spmm(&probe, &b, f);
+    for name in ["spmm_base_er_s_probe_F64", "spmm_ell_r8_f32_er_s_probe_F64", "spmm_ell_r32_f32_er_s_probe_F64"] {
+        let e = m.by_name(name).expect(name);
+        let data = OpData::new().with("b", b.clone());
+        let inputs = pack_inputs(e, &probe, &data)?;
+        let t0 = std::time::Instant::now();
+        let out = dev.run_f32(e, &inputs)?;
+        let ms = t0.elapsed().as_secs_f64()*1e3;
+        let out = unpad_output(out, e.param_usize("n_pad").unwrap(), probe.n_rows, f);
+        let diff = reference::max_abs_diff(&out, &want);
+        println!("{name}: diff={diff:.2e} first-run={ms:.1}ms");
+        assert!(diff < 1e-3);
+    }
+    println!("runtime smoke OK");
+    Ok(())
+}

@@ -1,0 +1,34 @@
+use autosage::runtime::{Device, Manifest};
+use autosage::ops::{pack_inputs, OpData};
+use autosage::gen::preset;
+use std::path::Path;
+fn main() -> anyhow::Result<()> {
+    let m = Manifest::load(Path::new("artifacts"))?;
+    let dev = Device::cpu()?;
+    let (g, _) = preset("er_s", 42);
+    let sub = g.probe_sample(512, 1);
+    let e = m.by_name("spmm_ellg_er_s_probe_F64").unwrap();
+    let data = OpData::new().with("b", vec![0.5f32; 512*64]);
+    let inputs = pack_inputs(e, &sub, &data)?;
+    let exe = dev.load(e)?;
+    let bufs = dev.upload(e, &inputs)?;
+    let out = dev.execute_buffers(&exe, &bufs)?;
+    let mut probe1 = [0f32; 1];
+    match out.copy_raw_to_host_sync(&mut probe1, 0) {
+        Ok(()) => println!("partial fetch works: {probe1:?}"),
+        Err(e) => println!("partial fetch FAILS: {e}"),
+    }
+    // timing comparison
+    let iters = 200;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters { let o = dev.execute_buffers(&exe, &bufs)?; dev.sync(&o)?; }
+    println!("full-literal sync: {:.3}ms/iter", t0.elapsed().as_secs_f64()*1e3/iters as f64);
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let o = dev.execute_buffers(&exe, &bufs)?;
+        let mut p = [0f32; 1];
+        if o.copy_raw_to_host_sync(&mut p, 0).is_err() { dev.sync(&o)?; }
+    }
+    println!("partial-fetch sync: {:.3}ms/iter", t0.elapsed().as_secs_f64()*1e3/iters as f64);
+    Ok(())
+}

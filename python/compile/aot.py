@@ -1,0 +1,132 @@
+"""AOT: lower every catalog entry to HLO text + write manifest.json.
+
+HLO *text* (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+rust `xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Incremental: an artifact is re-lowered only if missing or if any source
+in python/compile/ is newer (make drives this at the directory level; the
+--force flag bypasses the per-file skip).
+
+Usage: python -m compile.aot --out ../artifacts [--filter SUBSTR] [--force]
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import catalog, model
+
+_DTYPES = {"f32": jnp.float32, "s32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    return_tuple=False: every artifact has exactly one output, and an
+    array (non-tuple) root lets the Rust runtime fence timing loops with
+    a 4-byte `copy_raw_to_host_sync` probe instead of materializing the
+    whole output literal per iteration (EXPERIMENTS.md §Perf L3-1).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def entry_fn(e: catalog.Entry):
+    """Resolve a catalog entry to the L2 function with knobs bound."""
+    p = e.params
+    op, v = e.op, e.variant
+    if op == "spmm":
+        if v == "baseline_scatter":
+            return model.spmm_baseline
+        if v == "ell_gather":
+            return model.spmm_ell_gather
+        if v == "hub_gather":
+            return model.spmm_hub_gather
+        if v.startswith("ell"):
+            return functools.partial(model.spmm_ell, r=p["r"], ft=p["ft"])
+        if v.startswith("hub"):
+            return functools.partial(model.spmm_hub, r=p["r"], ft=p["ft"])
+    if op == "sddmm":
+        if v == "baseline_gather":
+            return model.sddmm_baseline
+        return functools.partial(model.sddmm_ell, r=p["r"], ft=p["ft"])
+    if op == "softmax":
+        if v == "baseline":
+            return model.softmax_baseline
+        return functools.partial(model.softmax_ell, r=p["r"])
+    if op == "attention":
+        if v == "baseline":
+            return model.attention_baseline
+        if v == "fused_gather":
+            return model.attention_fused_gather
+        return functools.partial(model.attention_fused, r=p["r"], ft=p["ft"])
+    if op == "linear_relu":
+        return model.linear_relu
+    raise ValueError(f"unknown op/variant: {op}/{v}")
+
+
+def lower_entry(e: catalog.Entry) -> str:
+    specs = [jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dt])
+             for (_, dt, shape) in e.inputs]
+    fn = entry_fn(e)
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--filter", default="", help="only build matching names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cat = catalog.build_catalog()
+    if args.filter:
+        cat = [e for e in cat if args.filter in e.name]
+
+    manifest = {"version": 1, "jax": jax.__version__, "entries": []}
+    built = skipped = 0
+    t0 = time.time()
+    for i, e in enumerate(cat):
+        path = os.path.join(args.out, e.name + ".hlo.txt")
+        if args.force or not os.path.exists(path):
+            text = lower_entry(e)
+            with open(path, "w") as f:
+                f.write(text)
+            built += 1
+        else:
+            skipped += 1
+        manifest["entries"].append({
+            "name": e.name,
+            "op": e.op,
+            "variant": e.variant,
+            "params": e.params,
+            "path": e.name + ".hlo.txt",
+            "inputs": [{"name": n, "dtype": d, "shape": s}
+                       for (n, d, s) in e.inputs],
+        })
+        if (i + 1) % 50 == 0:
+            print(f"  [{i + 1}/{len(cat)}] {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts: {built} built, {skipped} up-to-date, "
+          f"{len(cat)} total in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

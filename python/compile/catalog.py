@@ -1,0 +1,254 @@
+"""Artifact catalog: every (op, variant, shape-bucket) the system compiles.
+
+XLA/PJRT executables are shape-static, so the scheduler picks among
+pre-compiled *buckets*.  The shape contract below is shared with the Rust
+generators (``rust/src/gen``): each preset's generator guarantees
+
+  * max row degree   <= w_plain      (degree cap in the generator)
+  * hub-row count    <= h_pad        (when a hub split is cataloged)
+  * total nnz        <= nnz_pad
+
+and the Rust bucketer (``graph::ell``) pads up to these shapes.  The
+scheduler can also *cross-bucket*: any artifact whose (n_pad, w, f)
+dominates the input is a legal candidate; padding waste is charged by the
+roofline estimate.
+
+Probe buckets (n_pad = 512) exist for every full bucket so the micro-probe
+runs the *same variant* on the induced subgraph, as in the paper.
+"""
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+PROBE_N = 512
+
+# --------------------------------------------------------------- presets
+
+
+@dataclass
+class HubSpec:
+    w_light: int          # ELL width of the light partition
+    h_pad: int            # padded hub-row count (full graph)
+    w_hub: int            # per-hub-row neighbor width
+    h_pad_probe: int      # padded hub-row count at probe size
+
+
+@dataclass
+class Preset:
+    """Shape contract for one named synthetic workload (see DESIGN §4)."""
+    name: str
+    n_pad: int            # padded row count
+    w_plain: int          # plain-ELL width (== generator degree cap)
+    nnz_pad: int          # padded COO length (vendor baseline input)
+    nnz_pad_probe: int
+    fs: list              # feature widths benchmarks sweep
+    hub: Optional[HubSpec] = None
+    sddmm_fs: list = field(default_factory=list)  # F values for SDDMM/attn
+
+
+PRESETS = [
+    # ER N=200k p=2e-5 (avg deg 4) scaled to N=4096, avg deg 4.
+    # Hub spec here is a *narrow-bucket* split: rows with deg > 8 (the
+    # Poisson tail, ~2%) go to the hub block so the light ELL stays at
+    # w=8 instead of the full 32 — ER's analog of load-imbalance relief.
+    Preset("er_s", n_pad=4096, w_plain=32, nnz_pad=32768, nnz_pad_probe=8192,
+           fs=[32, 64, 128, 256], sddmm_fs=[64, 128],
+           hub=HubSpec(w_light=8, h_pad=256, w_hub=32, h_pad_probe=64)),
+    # Hub-skew N=200k k=4 h=0.15 scaled: N=4096, base deg 4, 15% hubs deg<=512.
+    Preset("hub_s", n_pad=4096, w_plain=512, nnz_pad=524288,
+           nnz_pad_probe=65536, fs=[64, 128, 256],
+           hub=HubSpec(w_light=8, h_pad=1024, w_hub=512, h_pad_probe=128)),
+    # Reddit (233k nodes, avg deg ~492) scaled: N=4096 power-law,
+    # avg deg ~32, degree cap 256.
+    Preset("reddit_s", n_pad=4096, w_plain=256, nnz_pad=262144,
+           nnz_pad_probe=65536, fs=[32, 64, 96, 128, 192, 256],
+           hub=HubSpec(w_light=128, h_pad=256, w_hub=256, h_pad_probe=64)),
+    # OGBN-Products (2.4M nodes, avg deg ~50) scaled: N=8192 power-law,
+    # avg deg ~16, degree cap 128.
+    Preset("products_s", n_pad=8192, w_plain=128, nnz_pad=262144,
+           nnz_pad_probe=32768, fs=[32, 64, 96, 128, 192, 256],
+           hub=HubSpec(w_light=64, h_pad=256, w_hub=128, h_pad_probe=64),
+           sddmm_fs=[64, 128]),
+    # Table 10 row configs, scaled /10: hubs with fixed heavy degree.
+    Preset("t10a", n_pad=2048, w_plain=512, nnz_pad=262144,
+           nnz_pad_probe=65536, fs=[128],
+           hub=HubSpec(w_light=64, h_pad=64, w_hub=512, h_pad_probe=32)),
+    Preset("t10b", n_pad=2048, w_plain=1024, nnz_pad=131072,
+           nnz_pad_probe=65536, fs=[128],
+           hub=HubSpec(w_light=32, h_pad=64, w_hub=1024, h_pad_probe=32)),
+]
+
+# SpMM row-tile instantiations: (r, ft) pairs; ft=128 is the wide-lane
+# ("vec") path and is only legal when F % 128 == 0.
+SPMM_TILES = [(8, 32), (32, 32), (8, 128)]
+HUB_TILES = [(8, 32), (8, 128)]
+SDDMM_TILES = [(8, 32), (8, 128)]
+SOFTMAX_R = 8
+
+# ------------------------------------------------------------- entries
+
+
+@dataclass
+class Entry:
+    """One artifact: a concrete (op, variant, shapes) instantiation."""
+    name: str             # unique artifact id == file stem
+    op: str               # spmm | sddmm | softmax | attention | linear_relu
+    variant: str          # scheduler candidate id
+    params: dict          # shape bucket + tile knobs (all ints)
+    inputs: list          # [(name, dtype, shape), ...] in call order
+
+
+def _spmm_entries(out, preset, n_pad, nnz_pad, h_pad, tag):
+    p = preset
+    for f in p.fs:
+        base = dict(n_pad=n_pad, w=p.w_plain, f=f, preset=p.name)
+        # Vendor baseline: COO scatter.
+        out.append(Entry(
+            f"spmm_base_{p.name}_{tag}_F{f}", "spmm", "baseline_scatter",
+            dict(base, nnz_pad=nnz_pad),
+            [("row", "s32", [nnz_pad]), ("col", "s32", [nnz_pad]),
+             ("val", "f32", [nnz_pad]), ("b", "f32", [n_pad, f])]))
+        # Whole-row gather kernel (grid-free; r = n_pad limit case).
+        out.append(Entry(
+            f"spmm_ellg_{p.name}_{tag}_F{f}", "spmm", "ell_gather",
+            dict(base),
+            [("colind", "s32", [n_pad, p.w_plain]),
+             ("val", "f32", [n_pad, p.w_plain]),
+             ("b", "f32", [n_pad, f])]))
+        # Row-tile Pallas variants.
+        for (r, ft) in SPMM_TILES:
+            if f % ft != 0:
+                continue
+            out.append(Entry(
+                f"spmm_ell_r{r}_f{ft}_{p.name}_{tag}_F{f}", "spmm",
+                f"ell_r{r}_f{ft}", dict(base, r=r, ft=ft),
+                [("colind", "s32", [n_pad, p.w_plain]),
+                 ("val", "f32", [n_pad, p.w_plain]),
+                 ("b", "f32", [n_pad, f])]))
+        # Hub-split variants.
+        if p.hub is not None:
+            h = p.hub
+            out.append(Entry(
+                f"spmm_hubg_{p.name}_{tag}_F{f}", "spmm", "hub_gather",
+                dict(base, w_light=h.w_light, h_pad=h_pad, w_hub=h.w_hub),
+                [("light_colind", "s32", [n_pad, h.w_light]),
+                 ("light_val", "f32", [n_pad, h.w_light]),
+                 ("hub_rows", "s32", [h_pad]),
+                 ("hub_colind", "s32", [h_pad, h.w_hub]),
+                 ("hub_val", "f32", [h_pad, h.w_hub]),
+                 ("b", "f32", [n_pad, f])]))
+            for (r, ft) in HUB_TILES:
+                if f % ft != 0:
+                    continue
+                out.append(Entry(
+                    f"spmm_hub_r{r}_f{ft}_{p.name}_{tag}_F{f}", "spmm",
+                    f"hub_r{r}_f{ft}",
+                    dict(base, r=r, ft=ft, w_light=h.w_light,
+                         h_pad=h_pad, w_hub=h.w_hub),
+                    [("light_colind", "s32", [n_pad, h.w_light]),
+                     ("light_val", "f32", [n_pad, h.w_light]),
+                     ("hub_rows", "s32", [h_pad]),
+                     ("hub_colind", "s32", [h_pad, h.w_hub]),
+                     ("hub_val", "f32", [h_pad, h.w_hub]),
+                     ("b", "f32", [n_pad, f])]))
+
+
+def _sddmm_entries(out, preset, n_pad, tag):
+    p = preset
+    for f in p.sddmm_fs:
+        base = dict(n_pad=n_pad, w=p.w_plain, f=f, preset=p.name)
+        shp = [("colind", "s32", [n_pad, p.w_plain]),
+               ("mask", "f32", [n_pad, p.w_plain]),
+               ("x", "f32", [n_pad, f]), ("y", "f32", [n_pad, f])]
+        out.append(Entry(f"sddmm_base_{p.name}_{tag}_F{f}", "sddmm",
+                         "baseline_gather", base, shp))
+        for (r, ft) in SDDMM_TILES:
+            if f % ft != 0:
+                continue
+            out.append(Entry(
+                f"sddmm_ell_r{r}_f{ft}_{p.name}_{tag}_F{f}", "sddmm",
+                f"ell_r{r}_f{ft}", dict(base, r=r, ft=ft), shp))
+
+
+def _softmax_entries(out, preset, n_pad, tag):
+    p = preset
+    if not p.sddmm_fs:
+        return
+    base = dict(n_pad=n_pad, w=p.w_plain, preset=p.name)
+    shp = [("val", "f32", [n_pad, p.w_plain]),
+           ("mask", "f32", [n_pad, p.w_plain])]
+    out.append(Entry(f"softmax_base_{p.name}_{tag}", "softmax", "baseline",
+                     base, shp))
+    out.append(Entry(f"softmax_ell_r{SOFTMAX_R}_{p.name}_{tag}", "softmax",
+                     f"ell_r{SOFTMAX_R}", dict(base, r=SOFTMAX_R), shp))
+
+
+def _attention_entries(out, preset, n_pad, nnz_pad, tag):
+    p = preset
+    for f in p.sddmm_fs:
+        base = dict(n_pad=n_pad, w=p.w_plain, f=f, preset=p.name)
+        out.append(Entry(
+            f"attn_base_{p.name}_{tag}_F{f}", "attention", "baseline",
+            dict(base, nnz_pad=nnz_pad),
+            [("colind", "s32", [n_pad, p.w_plain]),
+             ("mask", "f32", [n_pad, p.w_plain]),
+             ("row", "s32", [nnz_pad]), ("col", "s32", [nnz_pad]),
+             ("q", "f32", [n_pad, f]), ("k", "f32", [n_pad, f]),
+             ("v", "f32", [n_pad, f])]))
+        out.append(Entry(
+            f"attn_fgather_{p.name}_{tag}_F{f}", "attention", "fused_gather",
+            base,
+            [("colind", "s32", [n_pad, p.w_plain]),
+             ("mask", "f32", [n_pad, p.w_plain]),
+             ("q", "f32", [n_pad, f]), ("k", "f32", [n_pad, f]),
+             ("v", "f32", [n_pad, f])]))
+        for (r, ft) in SDDMM_TILES:
+            if f % ft != 0:
+                continue
+            out.append(Entry(
+                f"attn_fused_r{r}_f{ft}_{p.name}_{tag}_F{f}", "attention",
+                f"fused_r{r}_f{ft}", dict(base, r=r, ft=ft),
+                [("colind", "s32", [n_pad, p.w_plain]),
+                 ("mask", "f32", [n_pad, p.w_plain]),
+                 ("q", "f32", [n_pad, f]), ("k", "f32", [n_pad, f]),
+                 ("v", "f32", [n_pad, f])]))
+
+
+def _linear_entries(out):
+    # Dense transform buckets for the GCN end-to-end example (products_s).
+    for (n_pad, f_in, f_out) in [(8192, 64, 64), (8192, 128, 128),
+                                 (8192, 128, 64), (8192, 64, 128)]:
+        out.append(Entry(
+            f"linear_relu_n{n_pad}_{f_in}x{f_out}", "linear_relu", "dense",
+            dict(n_pad=n_pad, f_in=f_in, f_out=f_out),
+            [("h", "f32", [n_pad, f_in]), ("w", "f32", [f_in, f_out]),
+             ("bias", "f32", [f_out])]))
+
+
+def build_catalog():
+    """Enumerate every artifact Entry."""
+    out = []
+    for p in PRESETS:
+        # Full-size buckets.
+        h_pad = p.hub.h_pad if p.hub else 0
+        _spmm_entries(out, p, p.n_pad, p.nnz_pad, h_pad, "full")
+        _sddmm_entries(out, p, p.n_pad, "full")
+        _softmax_entries(out, p, p.n_pad, "full")
+        _attention_entries(out, p, p.n_pad, p.nnz_pad, "full")
+        # Probe-size buckets (induced subgraph, min 512 rows).
+        hp = p.hub.h_pad_probe if p.hub else 0
+        _spmm_entries(out, p, PROBE_N, p.nnz_pad_probe, hp, "probe")
+        _sddmm_entries(out, p, PROBE_N, "probe")
+        _softmax_entries(out, p, PROBE_N, "probe")
+        _attention_entries(out, p, PROBE_N, p.nnz_pad_probe, "probe")
+    _linear_entries(out)
+    names = [e.name for e in out]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    return out
+
+
+if __name__ == "__main__":
+    cat = build_catalog()
+    print(f"{len(cat)} artifacts")
+    for e in cat[:10]:
+        print(" ", e.name)

@@ -1,0 +1,34 @@
+"""AutoSAGE L1 kernels (Pallas, interpret mode) and pure-jnp baselines.
+
+All kernels operate on the padded ELL encoding of a CSR graph:
+
+  colind : int32[n_pad, w]   column indices, padded slots -> 0
+  val    : f32[n_pad, w]     edge values, padded slots -> 0.0
+  mask   : f32[n_pad, w]     1.0 for real slots, 0.0 for padding
+
+Padding with (col=0, val=0) makes SpMM correct without a mask (a zero
+value contributes nothing); SDDMM and row-softmax take the explicit mask.
+
+Variant knobs (the TPU analog of the paper's CUDA knobs, see
+DESIGN.md "Hardware adaptation"):
+
+  r  : rows per grid step        (warp-per-row  -> row-block)
+  ft : feature tile              (vec4/scalar   -> lane width 128 vs 32)
+  hub split                      (CTA-per-hub   -> dedicated hub kernel)
+"""
+
+from .spmm_ell import spmm_ell_rowtile
+from .spmm_hub import spmm_hub_split
+from .sddmm_ell import sddmm_ell_rowtile
+from .softmax_ell import softmax_ell_rows
+from . import baselines
+from . import ref
+
+__all__ = [
+    "spmm_ell_rowtile",
+    "spmm_hub_split",
+    "sddmm_ell_rowtile",
+    "softmax_ell_rows",
+    "baselines",
+    "ref",
+]

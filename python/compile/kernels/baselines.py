@@ -1,0 +1,48 @@
+"""Vendor-baseline ops (plain jnp / XLA-native, no Pallas).
+
+These play the role of the paper's baselines:
+
+  * ``spmm_coo_scatter``  <-> cuSPARSE CSR SpMM: the skew-immune,
+    nnz-proportional vendor path (XLA scatter-add / segment-sum).
+  * ``sddmm_gather_dot``  <-> the paper's explicit gather–dot SDDMM
+    baseline (Sec. 6 "Baselines").
+  * ``softmax_ell_jnp``   <-> plain-XLA masked row softmax.
+
+The guardrail always has one of these as the fallback; candidates must
+beat them through the micro-probe on the *same* device.
+"""
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+_TINY = 1e-30
+
+
+@jax.jit
+def spmm_coo_scatter(row, col, val, b):
+    """C = A @ B with A in padded COO form (pads: row=col=0, val=0).
+
+    row, col: i32[nnz_pad], val: f32[nnz_pad], b: f32[n_pad, f].
+    """
+    contrib = val[:, None] * jnp.take(b, col, axis=0)  # (nnz_pad, f)
+    out = jnp.zeros(b.shape, b.dtype)
+    return out.at[row].add(contrib)
+
+
+@jax.jit
+def sddmm_gather_dot(colind, mask, x, y):
+    """Gather–dot SDDMM over ELL: out[i,s] = mask * <x_i, y_colind[i,s]>."""
+    n_pad, w = colind.shape
+    g = jnp.take(y, colind.reshape(-1), axis=0).reshape(n_pad, w, -1)
+    return jnp.einsum("nf,nwf->nw", x, g) * mask
+
+
+@jax.jit
+def softmax_ell_jnp(val, mask):
+    """Masked stable row softmax (plain XLA)."""
+    z = jnp.where(mask > 0, val, _NEG)
+    mx = jnp.max(z, axis=1, keepdims=True)
+    e = jnp.where(mask > 0, jnp.exp(z - mx), 0.0)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    return e / jnp.maximum(s, _TINY)

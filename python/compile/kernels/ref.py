@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles (the pytest ground truth).
+
+Deliberately written in the most obvious dense form, with no shared code
+with either the Pallas kernels or the XLA baselines, so a bug in those
+cannot be mirrored here.
+"""
+
+import jax.numpy as jnp
+
+_NEG = -1e30
+_TINY = 1e-30
+
+
+def ell_to_dense(colind, val, mask, n_cols):
+    """Densify a padded ELL matrix -> f32[n_pad, n_cols]."""
+    n_pad, w = colind.shape
+    dense = jnp.zeros((n_pad, n_cols), val.dtype)
+    rows = jnp.repeat(jnp.arange(n_pad), w)
+    return dense.at[rows, colind.reshape(-1)].add((val * mask).reshape(-1))
+
+
+def spmm(colind, val, mask, b):
+    """Dense reference: densify A then matmul."""
+    a = ell_to_dense(colind, val, mask, b.shape[0])
+    return a @ b
+
+
+def sddmm(colind, mask, x, y):
+    """Dense reference: full XY^T then sample at the stored pattern."""
+    full = x @ y.T  # (n_pad, n_pad)
+    n_pad, w = colind.shape
+    rows = jnp.repeat(jnp.arange(n_pad), w).reshape(n_pad, w)
+    return full[rows, colind] * mask
+
+
+def softmax_rows(val, mask):
+    """Masked stable row softmax."""
+    z = jnp.where(mask > 0, val, _NEG)
+    mx = jnp.max(z, axis=1, keepdims=True)
+    e = jnp.where(mask > 0, jnp.exp(z - mx), 0.0)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    return e / jnp.maximum(s, _TINY)
+
+
+def csr_attention(colind, mask, q, k, v):
+    """SDDMM -> row softmax -> SpMM, all via the dense references."""
+    scores = sddmm(colind, mask, q, k)
+    attn = softmax_rows(scores, mask)
+    return spmm(colind, attn, mask, v)

@@ -1,0 +1,64 @@
+"""Row-block ELL SDDMM Pallas kernel (paper: row-wise CSR dot-products).
+
+For every stored edge (i, j):  out[i, slot] = <X_i, Y_j>, masked.
+
+The feature dimension is tiled (same ``ft`` knob as SpMM) and the grid
+*accumulates* partial dot products across feature tiles into the same
+output block — the output BlockSpec maps every feature step to block
+(i, 0), which Pallas treats as a revisited block (sequential grid), the
+TPU analog of a warp keeping its partial sums in registers while it
+strides the feature dimension.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sddmm_kernel(ci_ref, x_ref, y_ref, o_ref):
+    j = pl.program_id(1)
+    ci = ci_ref[...]  # (r, w) int32
+    x = x_ref[...]    # (r, ft)
+    y = y_ref[...]    # (n_pad, ft)
+    r, w = ci.shape
+    ft = x.shape[1]
+    g = jnp.take(y, ci.reshape(-1), axis=0).reshape(r, w, ft)
+    part = jnp.einsum("rf,rwf->rw", x, g)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("r", "ft"))
+def sddmm_ell_rowtile(colind, mask, x, y, *, r=8, ft=32):
+    """out[i, s] = mask[i, s] * <x_i, y_colind[i, s]>.
+
+    colind: i32[n_pad, w], mask: f32[n_pad, w],
+    x, y: f32[n_pad, f] -> f32[n_pad, w]
+    """
+    n_pad, w = colind.shape
+    f = x.shape[1]
+    assert n_pad % r == 0, (n_pad, r)
+    assert f % ft == 0, (f, ft)
+    grid = (n_pad // r, f // ft)
+    out = pl.pallas_call(
+        _sddmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, ft), lambda i, j: (i, j)),
+            pl.BlockSpec((n_pad, ft), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((r, w), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, w), x.dtype),
+        interpret=True,
+    )(colind, x, y)
+    # Padded slots computed garbage dots against row 0 — mask them out.
+    return out * mask

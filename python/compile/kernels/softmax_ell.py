@@ -1,0 +1,43 @@
+"""Numerically-stable masked row-softmax over ELL values (paper Sec. 4.1).
+
+Used between SDDMM and SpMM in the CSR attention pipeline.  Stability:
+subtract the per-row max of the *valid* slots; fully-padded rows produce
+all-zero outputs (guarded denominator) rather than NaNs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+_TINY = 1e-30
+
+
+def _softmax_kernel(v_ref, m_ref, o_ref):
+    v = v_ref[...]  # (r, w)
+    m = m_ref[...]  # (r, w)
+    z = jnp.where(m > 0, v, _NEG)
+    mx = jnp.max(z, axis=1, keepdims=True)
+    e = jnp.where(m > 0, jnp.exp(z - mx), 0.0)
+    s = jnp.sum(e, axis=1, keepdims=True)
+    o_ref[...] = e / jnp.maximum(s, _TINY)
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def softmax_ell_rows(val, mask, *, r=8):
+    """Row-wise softmax over valid slots. val, mask: f32[n_pad, w]."""
+    n_pad, w = val.shape
+    assert n_pad % r == 0, (n_pad, r)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(n_pad // r,),
+        in_specs=[
+            pl.BlockSpec((r, w), lambda i: (i, 0)),
+            pl.BlockSpec((r, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, w), val.dtype),
+        interpret=True,
+    )(val, mask)

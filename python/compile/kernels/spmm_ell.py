@@ -1,0 +1,56 @@
+"""Row-block ELL SpMM Pallas kernel (paper: warp-per-row template).
+
+Grid step = (r rows) x (ft features).  The neighbor lists of an r-row
+block are staged into VMEM via BlockSpec; the dense feature matrix B is
+sliced along features only (on a real TPU the (n_pad, ft) B panel would
+be streamed HBM->VMEM by the pipeline; the cost model in the Rust
+scheduler charges for that traffic).
+
+The "vec" variant is the same kernel instantiated with ft=128 (full VPU
+lane width) and requires F % 128 == 0 -- the TPU analog of the paper's
+vec4 alignment constraint (F % 4 == 0 and 16B alignment).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(ci_ref, v_ref, b_ref, o_ref):
+    """One grid step: C[rows, fslice] = sum_w val * B[colind, fslice]."""
+    ci = ci_ref[...]  # (r, w) int32
+    v = v_ref[...]    # (r, w) f32
+    b = b_ref[...]    # (n_pad, ft) f32
+    r, w = ci.shape
+    ft = b.shape[1]
+    # Gather the neighbor feature rows: (r*w, ft) -> (r, w, ft).
+    g = jnp.take(b, ci.reshape(-1), axis=0).reshape(r, w, ft)
+    # Weighted reduction over the neighbor axis.
+    o_ref[...] = jnp.einsum("rw,rwf->rf", v, g)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "ft"))
+def spmm_ell_rowtile(colind, val, b, *, r=8, ft=32):
+    """C = A @ B with A in padded ELL form.
+
+    colind: i32[n_pad, w], val: f32[n_pad, w], b: f32[n_pad, f] -> f32[n_pad, f]
+    """
+    n_pad, w = colind.shape
+    f = b.shape[1]
+    assert n_pad % r == 0, (n_pad, r)
+    assert f % ft == 0, (f, ft)
+    grid = (n_pad // r, f // ft)
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_pad, ft), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((r, ft), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, f), b.dtype),
+        interpret=True,
+    )(colind, val, b)

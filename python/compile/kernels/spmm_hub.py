@@ -1,0 +1,80 @@
+"""Hub-split SpMM (paper: CTA-per-hub template).
+
+Rows are partitioned by a degree threshold ``hub_t`` (Rust side,
+``graph::ell::hub_partition``):
+
+  * light rows  -> narrow ELL arrays (width w_l); hub rows appear with all
+    slots zeroed, so the light kernel contributes 0 for them.
+  * hub rows    -> a dedicated dense block: ``hub_rows: i32[h_pad]`` (row
+    ids, pads -> 0), ``hub_colind/hub_val: [h_pad, w_h]``.
+
+The light part reuses the row-tile kernel; the hub part gives every heavy
+row its own grid step, tiling its (possibly huge) neighbor list through
+VMEM in ``wc``-sized chunks — the TPU analog of dedicating a whole CTA to
+one hub row.  Padded hub rows have val == 0, so scatter-adding their zero
+contribution into row 0 is harmless.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .spmm_ell import spmm_ell_rowtile
+
+
+def _hub_kernel(ci_ref, v_ref, b_ref, o_ref):
+    """One grid step: one hub row x one feature tile, looped over chunks."""
+    ci = ci_ref[...]  # (1, w_h) int32
+    v = v_ref[...]    # (1, w_h) f32
+    b = b_ref[...]    # (n_pad, ft) f32
+    ft = b.shape[1]
+    w_h = ci.shape[1]
+    # Chunk the neighbor list through VMEM: the analog of a CTA's warps
+    # cooperatively streaming a hub row's neighbors.
+    wc = min(w_h, 256)
+    n_chunks = w_h // wc
+
+    def body(c, acc):
+        sl = jax.lax.dynamic_slice(ci, (0, c * wc), (1, wc)).reshape(-1)
+        vv = jax.lax.dynamic_slice(v, (0, c * wc), (1, wc)).reshape(-1)
+        g = jnp.take(b, sl, axis=0)  # (wc, ft)
+        return acc + vv @ g
+
+    acc = jax.lax.fori_loop(0, n_chunks, body, jnp.zeros((ft,), b.dtype))
+    o_ref[...] = acc.reshape(1, ft)
+
+
+@functools.partial(jax.jit, static_argnames=("ft",))
+def _spmm_hub_part(hub_colind, hub_val, b, *, ft=32):
+    """C_hub[h_pad, f]: per-hub-row aggregation (1 grid step per hub row)."""
+    h_pad, w_h = hub_colind.shape
+    n_pad, f = b.shape
+    assert f % ft == 0, (f, ft)
+    grid = (h_pad, f // ft)
+    return pl.pallas_call(
+        _hub_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w_h), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, w_h), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_pad, ft), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, ft), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h_pad, f), b.dtype),
+        interpret=True,
+    )(hub_colind, hub_val, b)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "ft"))
+def spmm_hub_split(light_colind, light_val, hub_rows, hub_colind, hub_val, b,
+                   *, r=8, ft=32):
+    """C = A @ B with A split into light-ELL + hub blocks.
+
+    light_colind/light_val: [n_pad, w_l]; hub_rows: i32[h_pad];
+    hub_colind/hub_val: [h_pad, w_h]; b: f32[n_pad, f] -> f32[n_pad, f]
+    """
+    c_light = spmm_ell_rowtile(light_colind, light_val, b, r=r, ft=ft)
+    c_hub = _spmm_hub_part(hub_colind, hub_val, b, ft=ft)
+    return c_light.at[hub_rows].add(c_hub)

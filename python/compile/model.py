@@ -1,0 +1,143 @@
+"""L2: the jax compute graphs that get AOT-lowered into artifacts.
+
+Every public function here is a *variant entry point* the catalog can
+instantiate at concrete shapes.  Each returns a 1-tuple so the Rust side
+can uniformly unwrap with ``to_tuple1`` (the lowering uses
+``return_tuple=True``).
+
+Naming convention for SpMM/SDDMM variants mirrors the Rust scheduler's
+candidate ids (``scheduler::estimate``):
+
+  spmm.baseline_scatter    COO scatter-add           (vendor fallback)
+  spmm.ell_r{R}_f{FT}      row-tile Pallas kernel    (warp-per-row analog)
+  spmm.hub_r{R}_f{FT}      hub-split Pallas kernels  (CTA-per-hub analog)
+  sddmm.baseline_gather    gather-dot                (vendor fallback)
+  sddmm.ell_r{R}_f{FT}     row-tile Pallas kernel
+  softmax.baseline / softmax.ell_r{R}
+  attn.baseline / attn.fused_r{R}_f{FT}   SDDMM -> softmax -> SpMM
+"""
+
+import jax.numpy as jnp
+
+from .kernels import (
+    baselines,
+    sddmm_ell_rowtile,
+    softmax_ell_rows,
+    spmm_ell_rowtile,
+    spmm_hub_split,
+)
+
+# ---------------------------------------------------------------- SpMM
+
+
+def spmm_baseline(row, col, val, b):
+    """Vendor path: COO scatter-add (cuSPARSE stand-in)."""
+    return (baselines.spmm_coo_scatter(row, col, val, b),)
+
+
+def spmm_ell(colind, val, b, *, r, ft):
+    return (spmm_ell_rowtile(colind, val, b, r=r, ft=ft),)
+
+
+def spmm_hub(light_colind, light_val, hub_rows, hub_colind, hub_val, b, *, r, ft):
+    return (
+        spmm_hub_split(light_colind, light_val, hub_rows, hub_colind, hub_val,
+                       b, r=r, ft=ft),
+    )
+
+
+def spmm_ell_gather(colind, val, b):
+    """Whole-row ELL gather-sum (GE-SpMM-style coalesced row gather).
+
+    No grid: XLA fuses gather + weighted reduction in one pass.  On a
+    real TPU this is the limit case of the row-tile kernel with
+    r = n_pad (one mega-block); on the CPU testbed it avoids the
+    per-grid-step emulation overhead of interpret mode, so it is the
+    Pallas templates' fast twin in the candidate space.
+    """
+    n_pad, w = colind.shape
+    g = jnp.take(b, colind.reshape(-1), axis=0).reshape(n_pad, w, -1)
+    return (jnp.einsum("nw,nwf->nf", val, g),)
+
+
+def spmm_hub_gather(light_colind, light_val, hub_rows, hub_colind, hub_val, b):
+    """Hub split built from whole-row gathers (CTA-per-hub analog)."""
+    c = spmm_ell_gather(light_colind, light_val, b)[0]
+    ch = spmm_ell_gather(hub_colind, hub_val, b)[0]
+    return (c.at[hub_rows].add(ch),)
+
+
+# --------------------------------------------------------------- SDDMM
+
+
+def sddmm_baseline(colind, mask, x, y):
+    return (baselines.sddmm_gather_dot(colind, mask, x, y),)
+
+
+def sddmm_ell(colind, mask, x, y, *, r, ft):
+    return (sddmm_ell_rowtile(colind, mask, x, y, r=r, ft=ft),)
+
+
+# ------------------------------------------------------------- softmax
+
+
+def softmax_baseline(val, mask):
+    return (baselines.softmax_ell_jnp(val, mask),)
+
+
+def softmax_ell(val, mask, *, r):
+    return (softmax_ell_rows(val, mask, r=r),)
+
+
+# ------------------------------------------------- CSR attention (8.7)
+
+
+def attention_baseline(colind, mask, row, col, q, k, v):
+    """All-vendor pipeline: gather-dot -> jnp softmax -> scatter SpMM.
+
+    ``row``/``col`` are the COO copy of the pattern for the scatter SpMM;
+    the softmax output is scattered into the COO value slots by (row-major)
+    slot order, which the Rust packer guarantees matches.
+    """
+    scores = baselines.sddmm_gather_dot(colind, mask, q, k)
+    attn = baselines.softmax_ell_jnp(scores, mask)
+    coo_val = _ell_vals_to_coo(attn, mask, row.shape[0])
+    return (baselines.spmm_coo_scatter(row, col, coo_val, v),)
+
+
+def attention_fused(colind, mask, q, k, v, *, r, ft):
+    """All-Pallas fused pipeline lowered as ONE artifact (no host hops)."""
+    scores = sddmm_ell_rowtile(colind, mask, q, k, r=r, ft=ft)
+    attn = softmax_ell_rows(scores, mask, r=r)
+    return (spmm_ell_rowtile(colind, attn * mask, v, r=r, ft=ft),)
+
+
+def attention_fused_gather(colind, mask, q, k, v):
+    """Fused gather-kernel pipeline: one artifact, no scatter, no COO
+    compaction — the fast twin of `attention_fused` (see
+    `spmm_ell_gather`)."""
+    scores = baselines.sddmm_gather_dot(colind, mask, q, k)
+    attn = baselines.softmax_ell_jnp(scores, mask)
+    return (spmm_ell_gather(colind, attn * mask, v)[0],)
+
+
+def _ell_vals_to_coo(ell_val, mask, nnz_pad):
+    """Compact ELL values to the COO slot order used by the Rust packer.
+
+    The packer emits COO entries row-major by (row, slot); here we select
+    the valid slots in the same order and pad with zeros.
+    """
+    flat = ell_val.reshape(-1)
+    valid = mask.reshape(-1) > 0
+    # Stable compaction: indices of valid slots in row-major order.
+    order = jnp.argsort(~valid, stable=True)
+    compacted = flat[order]
+    return compacted[:nnz_pad] * 1.0
+
+
+# ----------------------------------------------- dense helper for E2E
+
+
+def linear_relu(h, w, b):
+    """Dense transform for the GCN end-to-end example: relu(h @ w + b)."""
+    return (jnp.maximum(h @ w + b, 0.0),)

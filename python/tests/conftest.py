@@ -1,0 +1,40 @@
+"""Shared fixtures/strategies: random padded-ELL graphs and features."""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+
+def make_ell(rng, n_pad, w, density=0.6, skew=False):
+    """Random padded ELL: (colind, val, mask), valid slots left-packed.
+
+    Left-packing matches the Rust packer (CSR rows are contiguous), and
+    exercises the same memory pattern the kernels see in production.
+    """
+    degs = rng.integers(0, w + 1, n_pad)
+    if skew:
+        hubs = rng.random(n_pad) < 0.1
+        degs = np.where(hubs, w, rng.integers(0, max(w // 8, 1) + 1, n_pad))
+    degs = np.minimum((degs * density).astype(np.int64) + (degs > 0), w)
+    mask = (np.arange(w)[None, :] < degs[:, None]).astype(np.float32)
+    colind = rng.integers(0, n_pad, (n_pad, w)).astype(np.int32)
+    colind = np.where(mask > 0, colind, 0).astype(np.int32)
+    val = rng.standard_normal((n_pad, w)).astype(np.float32) * mask
+    return colind, val, mask
+
+
+def ell_to_coo(colind, val, mask, nnz_pad):
+    """Row-major compaction of valid slots -> padded COO (row, col, val)."""
+    n_pad, w = colind.shape
+    rows = np.repeat(np.arange(n_pad, dtype=np.int32), w)
+    valid = mask.reshape(-1) > 0
+    r, c, v = rows[valid], colind.reshape(-1)[valid], val.reshape(-1)[valid]
+    nnz = r.shape[0]
+    assert nnz <= nnz_pad, (nnz, nnz_pad)
+    pad = nnz_pad - nnz
+    return (np.concatenate([r, np.zeros(pad, np.int32)]),
+            np.concatenate([c, np.zeros(pad, np.int32)]),
+            np.concatenate([v, np.zeros(pad, np.float32)]))

@@ -1,0 +1,58 @@
+"""CSR attention pipeline (SDDMM -> row-softmax -> SpMM), Sec. 8.7."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .conftest import ell_to_coo, make_ell
+
+TOL = dict(rtol=5e-4, atol=5e-4)
+
+
+def _qkv(rng, n_pad, f):
+    return (rng.standard_normal((n_pad, f)).astype(np.float32),
+            rng.standard_normal((n_pad, f)).astype(np.float32),
+            rng.standard_normal((n_pad, f)).astype(np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), w=st.sampled_from([2, 4, 8]))
+def test_fused_attention_matches_ref(seed, w):
+    rng = np.random.default_rng(seed)
+    n_pad, f = 128, 64
+    colind, _, mask = make_ell(rng, n_pad, w)
+    q, k, v = _qkv(rng, n_pad, f)
+    (got,) = model.attention_fused(colind, mask, q, k, v, r=8, ft=32)
+    want = np.asarray(ref.csr_attention(colind, mask, q, k, v))
+    np.testing.assert_allclose(np.asarray(got), want, **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_baseline_attention_matches_ref(seed):
+    """Covers the ELL->COO slot-order compaction inside the baseline."""
+    rng = np.random.default_rng(seed)
+    n_pad, w, f = 64, 4, 32
+    colind, _, mask = make_ell(rng, n_pad, w)
+    nnz_pad = int(mask.sum()) + 13
+    row, col, _ = ell_to_coo(colind, np.zeros_like(mask), mask, nnz_pad)
+    q, k, v = _qkv(rng, n_pad, f)
+    (got,) = model.attention_baseline(colind, mask, row, col, q, k, v)
+    want = np.asarray(ref.csr_attention(colind, mask, q, k, v))
+    np.testing.assert_allclose(np.asarray(got), want, **TOL)
+
+
+def test_attention_rows_are_convex_combinations():
+    """Each output row lies inside the convex hull of its neighbors' V."""
+    rng = np.random.default_rng(4)
+    n_pad, w, f = 64, 4, 32
+    colind, _, mask = make_ell(rng, n_pad, w, density=1.0)
+    q, k, v = _qkv(rng, n_pad, f)
+    (got,) = model.attention_fused(colind, mask, q, k, v, r=8, ft=32)
+    got = np.asarray(got)
+    hi = v.max(axis=0, keepdims=True)
+    lo = v.min(axis=0, keepdims=True)
+    nonempty = mask.sum(axis=1) > 0
+    assert np.all(got[nonempty] <= hi + 1e-4)
+    assert np.all(got[nonempty] >= lo - 1e-4)

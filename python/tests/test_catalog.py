@@ -1,0 +1,48 @@
+"""Catalog invariants: the shape contract the Rust side relies on."""
+
+from compile import catalog
+
+
+def test_names_unique():
+    cat = catalog.build_catalog()
+    names = [e.name for e in cat]
+    assert len(names) == len(set(names))
+
+
+def test_tile_divisibility():
+    """Every Pallas instantiation obeys F % ft == 0 and n_pad % r == 0."""
+    for e in catalog.build_catalog():
+        p = e.params
+        if "ft" in p:
+            assert p["f"] % p["ft"] == 0, e.name
+        if "r" in p:
+            assert p["n_pad"] % p["r"] == 0, e.name
+
+
+def test_wide_lane_requires_f_mod_128():
+    """The vec analog: f128 variants only exist when F % 128 == 0."""
+    for e in catalog.build_catalog():
+        if "_f128" in e.variant:
+            assert e.params["f"] % 128 == 0, e.name
+
+
+def test_probe_buckets_exist_for_every_full_spmm_bucket():
+    cat = catalog.build_catalog()
+    def key(e):
+        return (e.op, e.variant, e.params.get("preset"), e.params.get("f"))
+    full = {key(e) for e in cat if "_full_" in e.name and e.op == "spmm"}
+    probe = {key(e) for e in cat if "_probe_" in e.name and e.op == "spmm"}
+    assert full == probe
+
+
+def test_input_shapes_match_params():
+    for e in catalog.build_catalog():
+        p = e.params
+        for (name, dtype, shape) in e.inputs:
+            if name in ("colind", "val", "mask") and len(shape) == 2:
+                assert shape[0] == p["n_pad"], e.name
+                assert shape[1] in (p.get("w"), p.get("w_light")), e.name
+            if name in ("row", "col") and e.op in ("spmm", "attention"):
+                assert shape == [p["nnz_pad"]], e.name
+            if name == "b":
+                assert shape == [p["n_pad"], p["f"]], e.name

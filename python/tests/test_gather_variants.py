@@ -1,0 +1,75 @@
+"""Gather-family kernels (the grid-free executable twins) vs the oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from .conftest import make_ell
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    log_n=st.integers(5, 8),
+    w=st.sampled_from([1, 2, 4, 8, 16]),
+    f=st.sampled_from([32, 64, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_ell_gather_matches_ref(log_n, w, f, seed):
+    rng = np.random.default_rng(seed)
+    n_pad = 2 ** log_n
+    colind, val, mask = make_ell(rng, n_pad, w)
+    b = rng.standard_normal((n_pad, f)).astype(np.float32)
+    (got,) = model.spmm_ell_gather(colind, val, b)
+    want = np.asarray(ref.spmm(colind, val, np.ones_like(mask), b))
+    np.testing.assert_allclose(np.asarray(got), want, **TOL)
+
+
+def test_spmm_hub_gather_matches_split_construction():
+    rng = np.random.default_rng(8)
+    n_pad, w_l, f, h_pad, w_h = 128, 4, 64, 8, 32
+    light_ci, light_v, light_m = make_ell(rng, n_pad, w_l)
+    n_hub = 5
+    hub_rows = np.zeros(h_pad, np.int32)
+    hub_rows[:n_hub] = rng.choice(n_pad, n_hub, replace=False).astype(np.int32)
+    hub_ci = rng.integers(0, n_pad, (h_pad, w_h)).astype(np.int32)
+    hub_v = rng.standard_normal((h_pad, w_h)).astype(np.float32)
+    hub_v[n_hub:] = 0.0
+    light_ci[hub_rows[:n_hub]] = 0
+    light_v[hub_rows[:n_hub]] = 0.0
+    b = rng.standard_normal((n_pad, f)).astype(np.float32)
+
+    (got,) = model.spmm_hub_gather(light_ci, light_v, hub_rows, hub_ci, hub_v, b)
+    want = np.array(ref.spmm(light_ci, light_v, np.ones_like(light_m), b))
+    hub_part = np.asarray(
+        ref.spmm(hub_ci, hub_v, np.ones((h_pad, w_h), np.float32), b))
+    for i in range(n_hub):
+        want[hub_rows[i]] += hub_part[i]
+    np.testing.assert_allclose(np.asarray(got), want, **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_attention_fused_gather_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    n_pad, w, f = 64, 4, 32
+    colind, _, mask = make_ell(rng, n_pad, w)
+    q = rng.standard_normal((n_pad, f)).astype(np.float32)
+    k = rng.standard_normal((n_pad, f)).astype(np.float32)
+    v = rng.standard_normal((n_pad, f)).astype(np.float32)
+    (got,) = model.attention_fused_gather(colind, mask, q, k, v)
+    want = np.asarray(ref.csr_attention(colind, mask, q, k, v))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-4, atol=5e-4)
+
+
+def test_gather_and_pallas_spmm_agree():
+    """The two kernel families are numerically interchangeable."""
+    rng = np.random.default_rng(15)
+    n_pad, w, f = 64, 8, 64
+    colind, val, _ = make_ell(rng, n_pad, w)
+    b = rng.standard_normal((n_pad, f)).astype(np.float32)
+    (a,) = model.spmm_ell_gather(colind, val, b)
+    (p,) = model.spmm_ell(colind, val, b, r=8, ft=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(p), **TOL)

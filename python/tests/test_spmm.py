@@ -1,0 +1,108 @@
+"""SpMM kernels vs the dense oracle (the core correctness signal)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import baselines, ref, spmm_ell_rowtile, spmm_hub_split
+from .conftest import ell_to_coo, make_ell
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("r,ft", [(8, 32), (32, 32), (8, 128)])
+@pytest.mark.parametrize("n_pad,w,f", [(64, 8, 128), (128, 16, 128),
+                                       (256, 4, 256)])
+def test_spmm_ell_matches_ref(r, ft, n_pad, w, f):
+    rng = np.random.default_rng(7)
+    colind, val, mask = make_ell(rng, n_pad, w)
+    b = rng.standard_normal((n_pad, f)).astype(np.float32)
+    got = np.asarray(spmm_ell_rowtile(colind, val, b, r=r, ft=ft))
+    want = np.asarray(ref.spmm(colind, val, np.ones_like(mask), b))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_n=st.integers(5, 8),
+    w=st.sampled_from([1, 2, 4, 8, 16]),
+    f_mult=st.integers(1, 4),
+    density=st.floats(0.1, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_ell_hypothesis(log_n, w, f_mult, density, seed):
+    """Shape/density sweep: the row-tile kernel equals the dense oracle."""
+    rng = np.random.default_rng(seed)
+    n_pad, f = 2 ** log_n, 32 * f_mult
+    colind, val, mask = make_ell(rng, n_pad, w, density=density)
+    b = rng.standard_normal((n_pad, f)).astype(np.float32)
+    got = np.asarray(spmm_ell_rowtile(colind, val, b, r=8, ft=32))
+    want = np.asarray(ref.spmm(colind, val, np.ones_like(mask), b))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.1, 1.0))
+def test_spmm_baseline_scatter_matches_ref(seed, density):
+    rng = np.random.default_rng(seed)
+    n_pad, w, f = 128, 8, 64
+    colind, val, mask = make_ell(rng, n_pad, w, density=density)
+    row, col, v = ell_to_coo(colind, val, mask, nnz_pad=n_pad * w + 17)
+    b = rng.standard_normal((n_pad, f)).astype(np.float32)
+    got = np.asarray(baselines.spmm_coo_scatter(row, col, v, b))
+    want = np.asarray(ref.spmm(colind, val, mask, b))
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_spmm_zero_matrix():
+    """All-padding input must produce exactly zero output."""
+    n_pad, w, f = 64, 4, 32
+    colind = np.zeros((n_pad, w), np.int32)
+    val = np.zeros((n_pad, w), np.float32)
+    b = np.ones((n_pad, f), np.float32)
+    got = np.asarray(spmm_ell_rowtile(colind, val, b, r=8, ft=32))
+    assert np.all(got == 0.0)
+
+
+@pytest.mark.parametrize("ft", [32, 128])
+def test_spmm_hub_split_matches_ref(ft):
+    """Light+hub decomposition reproduces the unsplit aggregation."""
+    rng = np.random.default_rng(3)
+    n_pad, w_l, f = 256, 4, 128
+    h_pad, w_h = 16, 64
+    light_ci, light_v, light_m = make_ell(rng, n_pad, w_l)
+    n_hub = 9
+    hub_rows = np.zeros(h_pad, np.int32)
+    hub_rows[:n_hub] = rng.choice(n_pad, n_hub, replace=False).astype(np.int32)
+    hub_ci = rng.integers(0, n_pad, (h_pad, w_h)).astype(np.int32)
+    hub_v = rng.standard_normal((h_pad, w_h)).astype(np.float32)
+    hub_v[n_hub:] = 0.0  # padded hub rows contribute nothing
+    # hub rows appear with zeroed slots in the light arrays
+    light_ci[hub_rows[:n_hub]] = 0
+    light_v[hub_rows[:n_hub]] = 0.0
+    b = rng.standard_normal((n_pad, f)).astype(np.float32)
+
+    got = np.asarray(spmm_hub_split(light_ci, light_v, hub_rows, hub_ci,
+                                    hub_v, b, r=8, ft=ft))
+    want = np.array(ref.spmm(light_ci, light_v, np.ones_like(light_m), b))
+    hub_part = np.asarray(ref.spmm(hub_ci, hub_v,
+                                   np.ones((h_pad, w_h), np.float32), b))
+    for i in range(n_hub):
+        want[hub_rows[i]] += hub_part[i]
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_spmm_hub_padded_rows_alias_row0_safely():
+    """Padded hub entries scatter zeros into row 0 — must not corrupt it."""
+    rng = np.random.default_rng(11)
+    n_pad, w_l, f, h_pad, w_h = 64, 2, 32, 8, 16
+    light_ci, light_v, _ = make_ell(rng, n_pad, w_l)
+    hub_rows = np.zeros(h_pad, np.int32)      # ALL padded -> alias row 0
+    hub_ci = np.zeros((h_pad, w_h), np.int32)
+    hub_v = np.zeros((h_pad, w_h), np.float32)
+    b = rng.standard_normal((n_pad, f)).astype(np.float32)
+    got = np.asarray(spmm_hub_split(light_ci, light_v, hub_rows, hub_ci,
+                                    hub_v, b, r=8, ft=32))
+    want = np.asarray(ref.spmm(light_ci, light_v,
+                               np.ones_like(light_v), b))
+    np.testing.assert_allclose(got, want, **TOL)

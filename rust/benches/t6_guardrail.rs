@@ -1,0 +1,6 @@
+//! Paper table 6 bench target (see DESIGN.md §6). `harness = false`
+//! because criterion is unavailable offline; bench_kit provides the
+//! warmup/median/cap protocol.
+fn main() {
+    autosage::bench_kit::tables::bench_main("6");
+}

@@ -1,0 +1,11 @@
+//! Bench harness (criterion replacement; criterion is unavailable in
+//! this offline environment): decision-row runners for the paper's
+//! tables, ASCII figure rendering, and CSV + meta-sidecar output.
+
+pub mod render;
+pub mod runner;
+pub mod tables;
+
+pub use render::{render_speedup_figure, render_table};
+pub use runner::{decision_row, decision_sweep, BenchRow};
+pub use tables::{run_table, table_ids, TableOutput};

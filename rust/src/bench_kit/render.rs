@@ -1,0 +1,145 @@
+//! Rendering: paper-style ASCII tables and speedup-vs-F line figures,
+//! plus CSV export. Figures are ASCII because the environment has no
+//! plotting stack; the CSV next to each figure carries the same series
+//! for external plotting.
+
+use crate::util::csv::CsvTable;
+
+use super::runner::BenchRow;
+
+/// Render rows as the paper's table layout.
+pub fn render_table(title: &str, rows: &[BenchRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!(
+        "{:>5} | {:<9} | {:>13} | {:>11} | {:>7} | {}\n",
+        "F", "choice", "baseline (ms)", "chosen (ms)", "speedup", "variant"
+    ));
+    out.push_str(&"-".repeat(72));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!(
+            "{:>5} | {:<9} | {:>13.3} | {:>11.3} | {:>7.3} | {}\n",
+            r.f, r.choice, r.baseline_ms, r.chosen_ms, r.speedup, r.variant
+        ));
+    }
+    out
+}
+
+/// Rows → CSV (same columns as the paper + provenance).
+pub fn rows_to_csv(rows: &[BenchRow]) -> CsvTable {
+    let mut t = CsvTable::new(&[
+        "F", "choice", "variant", "baseline_ms", "chosen_ms", "speedup",
+        "probe_wall_ms", "from_cache",
+    ]);
+    for r in rows {
+        t.push(vec![
+            r.f.to_string(),
+            r.choice.clone(),
+            r.variant.clone(),
+            format!("{:.4}", r.baseline_ms),
+            format!("{:.4}", r.chosen_ms),
+            format!("{:.4}", r.speedup),
+            format!("{:.3}", r.probe_wall_ms),
+            r.from_cache.to_string(),
+        ]);
+    }
+    t
+}
+
+/// ASCII speedup-vs-F line figure (the paper's Figures 1–7 shape):
+/// one `*` series (speedup) with a `1.0x` parity rule.
+pub fn render_speedup_figure(title: &str, series: &[(usize, f64)]) -> String {
+    const H: usize = 14;
+    const WCOL: usize = 8;
+    if series.is_empty() {
+        return format!("{title}\n(empty series)\n");
+    }
+    let max_s = series.iter().map(|(_, s)| *s).fold(1.0f64, f64::max) * 1.05;
+    let min_s = series.iter().map(|(_, s)| *s).fold(1.0f64, f64::min) * 0.95;
+    let span = (max_s - min_s).max(1e-9);
+    let y_of = |s: f64| (((s - min_s) / span) * (H - 1) as f64).round() as usize;
+
+    let mut grid = vec![vec![' '; series.len() * WCOL]; H];
+    let parity = y_of(1.0);
+    for row in grid.iter_mut() {
+        row[0] = '|';
+    }
+    if parity < H {
+        for c in grid[H - 1 - parity].iter_mut() {
+            if *c == ' ' {
+                *c = '.';
+            }
+        }
+    }
+    for (i, (_, s)) in series.iter().enumerate() {
+        let y = y_of(*s);
+        grid[H - 1 - y][i * WCOL + WCOL / 2] = '*';
+    }
+
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "speedup (y: {:.2}x .. {:.2}x, '.' = parity 1.0x)\n",
+        min_s, max_s
+    ));
+    for row in grid {
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    for (f, _) in series {
+        out.push_str(&format!("{:^WCOL$}", f));
+    }
+    out.push('\n');
+    for (f, s) in series {
+        out.push_str(&format!("  F={:<4} speedup={:.3}\n", f, s));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(f: usize, b: f64, c: f64) -> BenchRow {
+        BenchRow {
+            f,
+            choice: if b / c > 1.02 { "autosage" } else { "baseline" }.into(),
+            variant: "ell_r8_f32".into(),
+            baseline_ms: b,
+            chosen_ms: c,
+            speedup: b / c,
+            probe_wall_ms: 3.0,
+            from_cache: false,
+        }
+    }
+
+    #[test]
+    fn table_contains_all_rows() {
+        let rows = vec![row(64, 1.6, 1.5), row(128, 3.8, 3.8)];
+        let s = render_table("Reddit (scaled)", &rows);
+        assert!(s.contains("Reddit"));
+        assert!(s.contains("64"));
+        assert!(s.contains("128"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn csv_roundtrip_width() {
+        let t = rows_to_csv(&[row(64, 1.0, 0.5)]);
+        assert_eq!(t.n_rows(), 1);
+        assert_eq!(t.header().len(), 8);
+    }
+
+    #[test]
+    fn figure_renders_and_marks_points() {
+        let s = render_speedup_figure("fig", &[(32, 1.2), (64, 1.05), (128, 1.0)]);
+        assert_eq!(s.matches('*').count(), 3);
+        assert!(s.contains("F=32"));
+        assert!(s.contains("parity"));
+    }
+
+    #[test]
+    fn figure_empty_ok() {
+        assert!(render_speedup_figure("fig", &[]).contains("empty"));
+    }
+}

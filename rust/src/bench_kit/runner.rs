@@ -1,0 +1,67 @@
+//! Decision-row runner: produce one row of a paper table —
+//! `F | choice | baseline (ms) | chosen (ms) | speedup` — by running the
+//! scheduler and then timing both the vendor baseline and the chosen
+//! kernel on the *full* graph (the paper's protocol: medians over warmed
+//! iterations).
+
+use anyhow::Result;
+
+use crate::coordinator::AutoSage;
+use crate::graph::Csr;
+use crate::scheduler::{DecisionSource, Op};
+
+/// One table row.
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub f: usize,
+    pub choice: String,       // "autosage" | "baseline"
+    pub variant: String,      // concrete variant id
+    pub baseline_ms: f64,
+    pub chosen_ms: f64,
+    pub speedup: f64,
+    pub probe_wall_ms: f64,
+    pub from_cache: bool,
+}
+
+/// Run the scheduler for (g, op, f) and measure both sides on the full
+/// graph. `iters`/`cap_ms` bound the timing loop per kernel.
+pub fn decision_row(
+    sage: &mut AutoSage,
+    g: &Csr,
+    op: Op,
+    f: usize,
+    iters: usize,
+    cap_ms: f64,
+) -> Result<BenchRow> {
+    let d = sage.decide(g, op, f)?;
+    let baseline = sage.time_op(g, op, f, "baseline", iters, cap_ms)?;
+    let chosen = if d.choice.is_baseline() {
+        baseline.clone()
+    } else {
+        sage.time_op(g, op, f, d.choice.variant(), iters, cap_ms)?
+    };
+    Ok(BenchRow {
+        f,
+        choice: d.choice_label().to_string(),
+        variant: d.choice.variant().to_string(),
+        baseline_ms: baseline.median_ms,
+        chosen_ms: chosen.median_ms,
+        speedup: baseline.median_ms / chosen.median_ms.max(1e-9),
+        probe_wall_ms: d.probe_wall_ms,
+        from_cache: d.source == DecisionSource::Cache,
+    })
+}
+
+/// A feature-width sweep (one paper table = one sweep).
+pub fn decision_sweep(
+    sage: &mut AutoSage,
+    g: &Csr,
+    op: Op,
+    fs: &[usize],
+    iters: usize,
+    cap_ms: f64,
+) -> Result<Vec<BenchRow>> {
+    fs.iter()
+        .map(|&f| decision_row(sage, g, op, f, iters, cap_ms))
+        .collect()
+}

@@ -1,0 +1,146 @@
+//! Runtime configuration: the paper's one-line deployment toggles (§5).
+//!
+//! | Env var                 | Meaning                                | Default |
+//! |-------------------------|----------------------------------------|---------|
+//! | `AUTOSAGE_ALPHA`        | guardrail acceptance factor α          | 0.95    |
+//! | `AUTOSAGE_PROBE_FRAC`   | induced-subgraph row fraction          | 0.02    |
+//! | `AUTOSAGE_PROBE_MIN`    | minimum probe rows                     | 512     |
+//! | `AUTOSAGE_PROBE_ITERS`  | timed probe iterations                 | 5       |
+//! | `AUTOSAGE_PROBE_CAP_MS` | probe wall-time cap per candidate (ms) | 1000    |
+//! | `AUTOSAGE_TOPK`         | candidates probed after the estimate   | 3       |
+//! | `AUTOSAGE_HUB_T`        | hub degree threshold override (0=auto) | 0       |
+//! | `AUTOSAGE_VEC`          | allow wide-lane (f128 / "vec") paths   | true    |
+//! | `AUTOSAGE_GRID`         | let the scheduler pick Pallas *grid* kernels (row-tile/hub-tile). Off by default on this CPU testbed: interpret-mode grids are correctness/ablation targets whose per-step emulation cost does not extrapolate; the gather family is their executable twin (DESIGN.md §Hardware-Adaptation) | false |
+//! | `AUTOSAGE_CACHE`        | schedule-cache path ("" disables)      | autosage_cache.json |
+//! | `AUTOSAGE_REPLAY_ONLY`  | never probe; cache miss = baseline     | false   |
+//! | `AUTOSAGE_BENCH_ITERS`  | bench harness timed iterations         | 12      |
+
+use crate::util::envcfg::{env_bool, env_f64, env_string, env_usize};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub alpha: f64,
+    pub probe_frac: f64,
+    pub probe_min_rows: usize,
+    pub probe_iters: usize,
+    pub probe_cap_ms: f64,
+    /// Graphs with at most this many rows are probed on their full
+    /// bucket (guardrail exact on the real input, paper Prop. 1);
+    /// larger graphs use the induced-subgraph probe with estimate
+    /// scaling. Env: `AUTOSAGE_PROBE_FULL_MAX`.
+    pub probe_full_max_rows: usize,
+    pub top_k: usize,
+    pub hub_t: usize,
+    pub allow_vec: bool,
+    pub allow_grid_kernels: bool,
+    pub cache_path: String,
+    pub replay_only: bool,
+    pub bench_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            alpha: 0.95,
+            probe_frac: 0.02,
+            probe_min_rows: 512,
+            probe_iters: 5,
+            probe_cap_ms: 1000.0,
+            probe_full_max_rows: 16384,
+            top_k: 3,
+            hub_t: 0,
+            allow_vec: true,
+            allow_grid_kernels: false,
+            cache_path: "autosage_cache.json".to_string(),
+            replay_only: false,
+            bench_iters: 12,
+        }
+    }
+}
+
+impl Config {
+    /// Default config overridden by `AUTOSAGE_*` environment toggles.
+    pub fn from_env() -> Result<Config, String> {
+        let d = Config::default();
+        Ok(Config {
+            alpha: env_f64("AUTOSAGE_ALPHA", d.alpha)?,
+            probe_frac: env_f64("AUTOSAGE_PROBE_FRAC", d.probe_frac)?,
+            probe_min_rows: env_usize("AUTOSAGE_PROBE_MIN", d.probe_min_rows)?,
+            probe_iters: env_usize("AUTOSAGE_PROBE_ITERS", d.probe_iters)?,
+            probe_cap_ms: env_f64("AUTOSAGE_PROBE_CAP_MS", d.probe_cap_ms)?,
+            probe_full_max_rows: env_usize(
+                "AUTOSAGE_PROBE_FULL_MAX",
+                d.probe_full_max_rows,
+            )?,
+            top_k: env_usize("AUTOSAGE_TOPK", d.top_k)?,
+            hub_t: env_usize("AUTOSAGE_HUB_T", d.hub_t)?,
+            allow_vec: env_bool("AUTOSAGE_VEC", d.allow_vec)?,
+            allow_grid_kernels: env_bool("AUTOSAGE_GRID", d.allow_grid_kernels)?,
+            cache_path: env_string("AUTOSAGE_CACHE", &d.cache_path),
+            replay_only: env_bool("AUTOSAGE_REPLAY_ONLY", d.replay_only)?,
+            bench_iters: env_usize("AUTOSAGE_BENCH_ITERS", d.bench_iters)?,
+        })
+    }
+
+    /// Validate invariants the scheduler relies on.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0 < self.alpha && self.alpha <= 1.0) {
+            return Err(format!(
+                "alpha must be in (0, 1] for the non-regression guarantee \
+                 (Prop. 1); got {}",
+                self.alpha
+            ));
+        }
+        if !(0.0 < self.probe_frac && self.probe_frac <= 1.0) {
+            return Err(format!("probe_frac out of (0,1]: {}", self.probe_frac));
+        }
+        if self.probe_iters == 0 || self.bench_iters == 0 {
+            return Err("iteration counts must be positive".into());
+        }
+        if self.top_k == 0 {
+            return Err("top_k must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_papers() {
+        let c = Config::default();
+        assert_eq!(c.alpha, 0.95);
+        assert_eq!(c.probe_min_rows, 512);
+        assert_eq!(c.probe_frac, 0.02);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_alpha() {
+        let mut c = Config::default();
+        c.alpha = 1.5; // would break Proposition 1
+        assert!(c.validate().is_err());
+        c.alpha = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_iters() {
+        let mut c = Config::default();
+        c.probe_iters = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn env_overrides() {
+        std::env::set_var("AUTOSAGE_ALPHA", "0.98");
+        std::env::set_var("AUTOSAGE_TOPK", "5");
+        let c = Config::from_env().unwrap();
+        assert_eq!(c.alpha, 0.98);
+        assert_eq!(c.top_k, 5);
+        std::env::remove_var("AUTOSAGE_ALPHA");
+        std::env::remove_var("AUTOSAGE_TOPK");
+    }
+}

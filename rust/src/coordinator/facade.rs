@@ -1,0 +1,250 @@
+//! `AutoSage`: one device + one artifact manifest + the scheduler +
+//! telemetry, exposed as typed operators.
+//!
+//! Every `*_auto` call runs the full paper pipeline: cache lookup →
+//! (estimate → micro-probe → guardrail) → execute the chosen artifact.
+//! `*_with` variants bypass scheduling for ablations and benches.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::graph::Csr;
+use crate::ops::pack::{pack_inputs, unpad_output, OpData};
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::runtime::Device;
+use crate::scheduler::{probe, Decision, Op, Scheduler};
+use crate::telemetry::Telemetry;
+use crate::util::stats::TimingSummary;
+
+pub struct AutoSage {
+    pub dev: Device,
+    pub manifest: Manifest,
+    pub scheduler: Scheduler,
+    pub telemetry: Telemetry,
+}
+
+impl AutoSage {
+    /// Stand up the system from an artifacts directory.
+    pub fn new(artifacts_dir: &Path, cfg: Config, telemetry_dir: Option<&Path>) -> Result<AutoSage> {
+        let dev = Device::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let telemetry = Telemetry::new(telemetry_dir, &dev.signature());
+        let scheduler = Scheduler::new(cfg)?;
+        Ok(AutoSage { dev, manifest, scheduler, telemetry })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.scheduler.cfg
+    }
+
+    /// Schedule an op for a graph (cache → probe → guardrail), with
+    /// telemetry. Returns the decision (see paper §4.2).
+    pub fn decide(&mut self, g: &Csr, op: Op, f: usize) -> Result<Decision> {
+        let (decision, report) =
+            self.scheduler.decide(&self.dev, &self.manifest, g, op, f)?;
+        if let Some(rep) = &report {
+            self.telemetry.probe_sample(
+                op.as_str(),
+                f,
+                "baseline",
+                rep.baseline.timing.median_ms,
+            );
+            for c in &rep.candidates {
+                self.telemetry
+                    .probe_sample(op.as_str(), f, &c.variant, c.timing.median_ms);
+            }
+        }
+        self.telemetry.decision(&decision);
+        Ok(decision)
+    }
+
+    // ------------------------------------------------------------ SpMM
+
+    /// `C = A @ B` with the scheduler choosing the kernel.
+    pub fn spmm_auto(&mut self, g: &Csr, b: &[f32], f: usize) -> Result<Vec<f32>> {
+        let d = self.decide(g, Op::Spmm, f)?;
+        self.spmm_with(g, b, f, d.choice.variant())
+    }
+
+    /// `C = A @ B` with an explicit variant ("baseline" for vendor path).
+    pub fn spmm_with(&mut self, g: &Csr, b: &[f32], f: usize, variant: &str) -> Result<Vec<f32>> {
+        let entry =
+            self.scheduler
+                .select_entry(&self.manifest, g, Op::Spmm, f, variant)?;
+        let data = OpData::new().with("b", b.to_vec());
+        let out = self.run_entry(entry, g, &data)?;
+        let n_pad = entry.param_usize("n_pad").unwrap();
+        Ok(unpad_output(out, n_pad, g.n_rows, f))
+    }
+
+    // ----------------------------------------------------------- SDDMM
+
+    /// SDDMM: `out[e] = <x_i, y_j>` for each stored edge e=(i,j), in CSR
+    /// slot order.
+    pub fn sddmm_auto(&mut self, g: &Csr, x: &[f32], y: &[f32], f: usize) -> Result<Vec<f32>> {
+        let d = self.decide(g, Op::Sddmm, f)?;
+        self.sddmm_with(g, x, y, f, d.choice.variant())
+    }
+
+    pub fn sddmm_with(&mut self, g: &Csr, x: &[f32], y: &[f32], f: usize, variant: &str) -> Result<Vec<f32>> {
+        let entry =
+            self.scheduler
+                .select_entry(&self.manifest, g, Op::Sddmm, f, variant)?;
+        let data = OpData::new().with("x", x.to_vec()).with("y", y.to_vec());
+        let out = self.run_entry(entry, g, &data)?;
+        let w = entry.param_usize("w").unwrap();
+        Ok(ell_slots_to_csr(g, w, &out))
+    }
+
+    // --------------------------------------------------------- softmax
+
+    /// Numerically-stable row softmax over CSR slot-order scores.
+    pub fn softmax_with(&mut self, g: &Csr, scores: &[f32], variant: &str) -> Result<Vec<f32>> {
+        let entry =
+            self.scheduler
+                .select_entry(&self.manifest, g, Op::Softmax, 0, variant)?;
+        let w = entry.param_usize("w").unwrap();
+        let n_pad = entry.param_usize("n_pad").unwrap();
+        let data = OpData::new().with("val", csr_slots_to_ell(g, n_pad, w, scores)?);
+        let out = self.run_entry(entry, g, &data)?;
+        Ok(ell_slots_to_csr(g, w, &out))
+    }
+
+    // ------------------------------------------------------- attention
+
+    /// CSR attention forward (paper §8.7): per-sub-op scheduling is done
+    /// by the fused/baseline artifact choice.
+    pub fn attention_auto(&mut self, g: &Csr, q: &[f32], k: &[f32], v: &[f32], f: usize) -> Result<Vec<f32>> {
+        let d = self.decide(g, Op::Attention, f)?;
+        self.attention_with(g, q, k, v, f, d.choice.variant())
+    }
+
+    pub fn attention_with(&mut self, g: &Csr, q: &[f32], k: &[f32], v: &[f32], f: usize, variant: &str) -> Result<Vec<f32>> {
+        let entry = self.scheduler.select_entry(
+            &self.manifest,
+            g,
+            Op::Attention,
+            f,
+            variant,
+        )?;
+        let data = OpData::new()
+            .with("q", q.to_vec())
+            .with("k", k.to_vec())
+            .with("v", v.to_vec());
+        let out = self.run_entry(entry, g, &data)?;
+        let n_pad = entry.param_usize("n_pad").unwrap();
+        Ok(unpad_output(out, n_pad, g.n_rows, f))
+    }
+
+    // ----------------------------------------------- dense E2E helper
+
+    /// `relu(H @ W + bias)` via the dense artifact (GCN example).
+    pub fn linear_relu(&mut self, h: &[f32], n_rows: usize, f_in: usize, w: &[f32], f_out: usize, bias: &[f32]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .filter(|e| {
+                e.op == "linear_relu"
+                    && e.param_usize("f_in") == Some(f_in)
+                    && e.param_usize("f_out") == Some(f_out)
+                    && e.param_usize("n_pad").map_or(false, |n| n >= n_rows)
+            })
+            .min_by_key(|e| e.param_usize("n_pad").unwrap())
+            .ok_or_else(|| anyhow!("no linear_relu artifact {f_in}x{f_out}"))?
+            .clone();
+        let n_pad = entry.param_usize("n_pad").unwrap();
+        let mut hp = h.to_vec();
+        hp.resize(n_pad * f_in, 0.0);
+        let data = OpData::new()
+            .with("h", hp)
+            .with("w", w.to_vec())
+            .with("bias", bias.to_vec());
+        // linear_relu has no sparse inputs; pack against an empty graph.
+        let empty = Csr::from_rows(1, vec![vec![]]);
+        let inputs = pack_inputs(&entry, &empty, &data)?;
+        let out = self.dev.run_f32(&entry, &inputs)?;
+        Ok(unpad_output(out, n_pad, n_rows, f_out))
+    }
+
+    // ----------------------------------------------------- bench hooks
+
+    /// Median full-graph latency of (op, variant) — the quantity the
+    /// paper's tables report per row.
+    pub fn time_op(&mut self, g: &Csr, op: Op, f: usize, variant: &str, iters: usize, cap_ms: f64) -> Result<TimingSummary> {
+        let entry = self
+            .scheduler
+            .select_entry(&self.manifest, g, op, f, variant)?;
+        let data = probe::synth_operands(op, g.n_rows, f, 0xBE7C);
+        probe::time_entry(&self.dev, entry, g, &data, 1, iters, cap_ms)
+    }
+
+    // ------------------------------------------------------- internals
+
+    fn run_entry(&self, entry: &ArtifactEntry, g: &Csr, data: &OpData) -> Result<Vec<f32>> {
+        let inputs = pack_inputs(entry, g, data)?;
+        self.dev.run_f32(entry, &inputs)
+    }
+}
+
+/// Compact an ELL `[n_pad, w]` output to CSR slot order (valid slots are
+/// left-packed by construction).
+pub fn ell_slots_to_csr(g: &Csr, w: usize, ell: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(g.nnz());
+    for i in 0..g.n_rows {
+        let deg = g.degree(i);
+        out.extend_from_slice(&ell[i * w..i * w + deg]);
+    }
+    out
+}
+
+/// Spread CSR slot-order values into an ELL `[n_pad, w]` buffer.
+pub fn csr_slots_to_ell(g: &Csr, n_pad: usize, w: usize, slots: &[f32]) -> Result<Vec<f32>> {
+    if slots.len() != g.nnz() {
+        return Err(anyhow!(
+            "slot vector length {} != nnz {}",
+            slots.len(),
+            g.nnz()
+        ));
+    }
+    if g.max_degree() > w || g.n_rows > n_pad {
+        return Err(anyhow!("graph does not fit ELL bucket ({n_pad}, {w})"));
+    }
+    let mut out = vec![0.0f32; n_pad * w];
+    for i in 0..g.n_rows {
+        let (a, b) = (g.rowptr[i], g.rowptr[i + 1]);
+        out[i * w..i * w + (b - a)].copy_from_slice(&slots[a..b]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g() -> Csr {
+        Csr::from_rows(3, vec![vec![(1, 1.0), (2, 2.0)], vec![], vec![(0, 3.0)]])
+    }
+
+    #[test]
+    fn slot_conversions_roundtrip() {
+        let g = g();
+        let slots = vec![10.0, 20.0, 30.0];
+        let ell = csr_slots_to_ell(&g, 4, 2, &slots).unwrap();
+        assert_eq!(ell[0], 10.0);
+        assert_eq!(ell[1], 20.0);
+        assert_eq!(ell[2 * 2], 30.0);
+        let back = ell_slots_to_csr(&g, 2, &ell);
+        assert_eq!(back, slots);
+    }
+
+    #[test]
+    fn slot_conversion_validates() {
+        let g = g();
+        assert!(csr_slots_to_ell(&g, 4, 2, &[1.0]).is_err()); // wrong nnz
+        assert!(csr_slots_to_ell(&g, 4, 1, &[1.0, 2.0, 3.0]).is_err()); // w too small
+        assert!(csr_slots_to_ell(&g, 2, 2, &[1.0, 2.0, 3.0]).is_err()); // n_pad small
+    }
+}

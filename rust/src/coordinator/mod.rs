@@ -1,0 +1,9 @@
+//! The coordinator: AutoSAGE's public facade (the paper's
+//! `autosage::spmm_csr` / `sddmm_csr` / `csr_attention_forward`
+//! bindings) plus a single-device request queue for service-style use.
+
+pub mod facade;
+pub mod queue;
+
+pub use facade::AutoSage;
+pub use queue::{OpRequest, OpResponse, ServiceHandle};

@@ -1,0 +1,151 @@
+//! Service-style request queue: one worker thread owns the PJRT device
+//! (PJRT handles are not `Send`) and drains an mpsc channel of operator
+//! requests; callers get results over per-request response channels.
+//!
+//! This is the deployment shape a GNN-training host integrates with: the
+//! aggregation service amortizes probe cost across requests because all
+//! requests against the same (graph, F, op) hit the schedule cache after
+//! the first.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::graph::Csr;
+use crate::scheduler::Op;
+
+use super::facade::AutoSage;
+
+/// One operator request. Dense operands are in the same layout the
+/// facade takes (`[n_rows, f]` row-major).
+pub struct OpRequest {
+    pub op: Op,
+    pub graph: Csr,
+    pub f: usize,
+    pub operands: Vec<(String, Vec<f32>)>,
+    pub respond: mpsc::Sender<OpResponse>,
+}
+
+/// Operator result + the decision that produced it.
+pub struct OpResponse {
+    pub result: Result<Vec<f32>>,
+    pub variant: String,
+    pub from_cache: bool,
+}
+
+/// Handle to the running service.
+pub struct ServiceHandle {
+    tx: mpsc::Sender<OpRequest>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    /// Spawn the worker; the device + manifest are constructed on the
+    /// worker thread (PJRT is thread-bound).
+    pub fn spawn(artifacts_dir: PathBuf, cfg: Config) -> ServiceHandle {
+        let (tx, rx) = mpsc::channel::<OpRequest>();
+        let join = std::thread::spawn(move || {
+            let mut sage = match AutoSage::new(&artifacts_dir, cfg, None) {
+                Ok(s) => s,
+                Err(e) => {
+                    // Fail every request with the construction error.
+                    for req in rx {
+                        let _ = req.respond.send(OpResponse {
+                            result: Err(anyhow!("service init failed: {e:#}")),
+                            variant: String::new(),
+                            from_cache: false,
+                        });
+                    }
+                    return;
+                }
+            };
+            for req in rx {
+                let resp = serve_one(&mut sage, &req);
+                let _ = req.respond.send(resp);
+            }
+        });
+        ServiceHandle { tx, join: Some(join) }
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+    ) -> Result<mpsc::Receiver<OpResponse>> {
+        let (respond, rx) = mpsc::channel();
+        self.tx
+            .send(OpRequest { op, graph, f, operands, respond })
+            .map_err(|_| anyhow!("service thread terminated"))?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+    ) -> Result<OpResponse> {
+        let rx = self.submit(op, graph, f, operands)?;
+        rx.recv().map_err(|_| anyhow!("service dropped the request"))
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        // Close the channel, then join the worker.
+        let (tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn serve_one(sage: &mut AutoSage, req: &OpRequest) -> OpResponse {
+    let get = |name: &str| -> Result<&Vec<f32>> {
+        req.operands
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow!("request missing operand {name:?}"))
+    };
+    let decision = match sage.decide(&req.graph, req.op, req.f) {
+        Ok(d) => d,
+        Err(e) => {
+            return OpResponse {
+                result: Err(e),
+                variant: String::new(),
+                from_cache: false,
+            }
+        }
+    };
+    let variant = decision.choice.variant().to_string();
+    let from_cache =
+        decision.source == crate::scheduler::DecisionSource::Cache;
+    let result = (|| -> Result<Vec<f32>> {
+        match req.op {
+            Op::Spmm => sage.spmm_with(&req.graph, get("b")?, req.f, &variant),
+            Op::Sddmm => {
+                sage.sddmm_with(&req.graph, get("x")?, get("y")?, req.f, &variant)
+            }
+            Op::Softmax => sage.softmax_with(&req.graph, get("val")?, &variant),
+            Op::Attention => sage.attention_with(
+                &req.graph,
+                get("q")?,
+                get("k")?,
+                get("v")?,
+                req.f,
+                &variant,
+            ),
+        }
+    })();
+    OpResponse { result, variant, from_cache }
+}

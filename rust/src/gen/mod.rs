@@ -1,0 +1,14 @@
+//! Synthetic workload generators: the paper's datasets, scaled.
+//!
+//! Real Reddit / OGBN-Products are too large for interpret-mode CPU
+//! execution, so each is replaced by a seeded generator calibrated to the
+//! same *degree-distribution shape* (see DESIGN.md §4 Substitutions).
+//! Every generator respects its preset's shape contract in
+//! `python/compile/catalog.py` (degree cap ≤ w_plain, hub count ≤ h_pad,
+//! nnz ≤ nnz_pad) so the AOT buckets always fit.
+
+pub mod presets;
+pub mod synth;
+
+pub use presets::{preset, preset_names, PresetSpec};
+pub use synth::{erdos_renyi, hub_skew, power_law};

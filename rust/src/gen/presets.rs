@@ -1,0 +1,182 @@
+//! Named workload presets matching the artifact catalog's shape contract
+//! (`python/compile/catalog.py` PRESETS). Each preset is the scaled
+//! stand-in for a paper workload — see DESIGN.md §4 for the substitution
+//! rationale and calibration targets.
+
+use crate::graph::Csr;
+
+use super::synth::{erdos_renyi, hub_skew, power_law};
+
+/// A preset: generator parameters + the catalog bucket contract.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PresetSpec {
+    pub name: &'static str,
+    /// Paper workload this stands in for.
+    pub paper_name: &'static str,
+    pub n: usize,
+    /// Degree cap == catalog `w_plain`.
+    pub w_plain: usize,
+    pub nnz_pad: usize,
+    pub default_seed: u64,
+}
+
+/// All preset names, in catalog order.
+pub fn preset_names() -> &'static [&'static str] {
+    &["er_s", "hub_s", "reddit_s", "products_s", "t10a", "t10b"]
+}
+
+/// Generate a preset graph. Panics on unknown name (CLI validates first).
+pub fn preset(name: &str, seed: u64) -> (Csr, PresetSpec) {
+    let (g, spec) = match name {
+        // ER N=200k p=2e-5 (avg deg 4), scaled.
+        "er_s" => (
+            erdos_renyi(4096, 4.0, 32, seed),
+            PresetSpec {
+                name: "er_s",
+                paper_name: "Erdos-Renyi N=200k p=2e-5",
+                n: 4096,
+                w_plain: 32,
+                nnz_pad: 32768,
+                default_seed: seed,
+            },
+        ),
+        // Hub-skew N=200k k=4 h=0.15, scaled; hub degree = 512.
+        "hub_s" => (
+            hub_skew(4096, 4, 0.15, 512, seed),
+            PresetSpec {
+                name: "hub_s",
+                paper_name: "hub-skew N=200k k=4 h=0.15",
+                n: 4096,
+                w_plain: 512,
+                nnz_pad: 524288,
+                default_seed: seed,
+            },
+        ),
+        // Reddit (PyG): power-law, avg deg ~29 after cap 256.
+        "reddit_s" => (
+            power_law(4096, 12.0, 1.6, 256, seed),
+            PresetSpec {
+                name: "reddit_s",
+                paper_name: "Reddit (PyG), scaled",
+                n: 4096,
+                w_plain: 256,
+                nnz_pad: 262144,
+                default_seed: seed,
+            },
+        ),
+        // OGBN-Products: power-law, avg deg ~15 after cap 128.
+        "products_s" => (
+            power_law(8192, 6.0, 1.6, 128, seed),
+            PresetSpec {
+                name: "products_s",
+                paper_name: "OGBN-Products, scaled",
+                n: 8192,
+                w_plain: 128,
+                nnz_pad: 262144,
+                default_seed: seed,
+            },
+        ),
+        // Table 10 configs (scaled /10): fixed hub count + heavy degree.
+        "t10a" => (
+            hub_skew(2048, 64, 32.0 / 2048.0, 512, seed),
+            PresetSpec {
+                name: "t10a",
+                paper_name: "T10: N=20k hub=5k other=64",
+                n: 2048,
+                w_plain: 512,
+                nnz_pad: 262144,
+                default_seed: seed,
+            },
+        ),
+        "t10b" => (
+            hub_skew(2048, 32, 32.0 / 2048.0, 1024, seed),
+            PresetSpec {
+                name: "t10b",
+                paper_name: "T10: N=20k hub=12k other=32",
+                n: 2048,
+                w_plain: 1024,
+                nnz_pad: 131072,
+                default_seed: seed,
+            },
+        ),
+        other => panic!("unknown preset {other:?}; see preset_names()"),
+    };
+    debug_assert!(g.validate().is_ok());
+    (g, spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_respect_catalog_contract() {
+        for &name in preset_names() {
+            let (g, spec) = preset(name, 42);
+            g.validate().unwrap();
+            assert!(
+                g.max_degree() <= spec.w_plain,
+                "{name}: max degree {} > w_plain {}",
+                g.max_degree(),
+                spec.w_plain
+            );
+            assert!(
+                g.nnz() <= spec.nnz_pad,
+                "{name}: nnz {} > nnz_pad {}",
+                g.nnz(),
+                spec.nnz_pad
+            );
+            assert_eq!(g.n_rows, spec.n, "{name}");
+        }
+    }
+
+    #[test]
+    fn presets_deterministic() {
+        for &name in preset_names() {
+            assert_eq!(preset(name, 7).0, preset(name, 7).0, "{name}");
+        }
+    }
+
+    #[test]
+    fn er_matches_paper_regime() {
+        let (g, _) = preset("er_s", 42);
+        assert!((g.avg_degree() - 4.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn hub_s_fraction_matches_paper() {
+        let (g, _) = preset("hub_s", 42);
+        let hubs = g.degrees().iter().filter(|&&d| d >= 512).count();
+        let frac = hubs as f64 / g.n_rows as f64;
+        assert!((frac - 0.15).abs() < 0.01, "hub fraction {frac}");
+    }
+
+    #[test]
+    fn reddit_s_hub_partition_fits_catalog() {
+        // Catalog contract: hubs (deg > w_light=128) fit in h_pad=256.
+        let (g, _) = preset("reddit_s", 42);
+        let hubs = g.degrees().iter().filter(|&&d| d > 128).count();
+        assert!(hubs <= 256, "{hubs} hubs overflow h_pad");
+        assert!(hubs > 16, "want a meaningful hub population, got {hubs}");
+    }
+
+    #[test]
+    fn products_s_hub_partition_fits_catalog() {
+        let (g, _) = preset("products_s", 42);
+        let hubs = g.degrees().iter().filter(|&&d| d > 64).count();
+        assert!(hubs <= 256, "{hubs} hubs overflow h_pad=256");
+    }
+
+    #[test]
+    fn t10_configs_fit() {
+        for name in ["t10a", "t10b"] {
+            let (g, spec) = preset(name, 42);
+            let hubs = g
+                .degrees()
+                .iter()
+                .filter(|&&d| d > spec.w_plain / 4)
+                .count();
+            assert!(hubs <= 64, "{name}: {hubs} hubs overflow h_pad=64");
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Core synthetic graph generators (ER, hub-skew, power-law).
+//!
+//! All are deterministic in (parameters, seed) and emit sorted CSR rows
+//! with uniform [0,1) edge values. Self-loops are allowed (they are
+//! ordinary nonzeros to a kernel); duplicate columns within a row are not.
+
+use crate::graph::Csr;
+use crate::util::rng::Rng;
+
+/// Erdős–Rényi G(n, p) by row: degree ~ Binomial(n, p) ≈ Poisson(np),
+/// matching the paper's "ER N=200k, p=2e-5" stressor regime (tiny rows).
+/// Degrees are clamped to `cap`.
+pub fn erdos_renyi(n: usize, avg_deg: f64, cap: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let rows = (0..n)
+        .map(|_| {
+            let d = rng.poisson(avg_deg).min(cap).min(n);
+            rng.sample_distinct(n, d)
+                .into_iter()
+                .map(|c| (c as u32, rng.next_f32()))
+                .collect()
+        })
+        .collect();
+    Csr::from_rows(n, rows)
+}
+
+/// Hub-skew: every row has base degree `k`; a fraction `h` of rows are
+/// hubs with degree `hub_deg` (paper: N=200k, k=4, h=0.15).
+pub fn hub_skew(n: usize, k: usize, h: f64, hub_deg: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let n_hubs = ((n as f64) * h).round() as usize;
+    // Deterministic hub placement: spread hubs evenly, then shuffle row
+    // order decisions through the RNG for value diversity.
+    let mut is_hub = vec![false; n];
+    if n_hubs > 0 {
+        let stride = n as f64 / n_hubs as f64;
+        for i in 0..n_hubs {
+            is_hub[(i as f64 * stride) as usize] = true;
+        }
+    }
+    let rows = (0..n)
+        .map(|i| {
+            let d = if is_hub[i] { hub_deg } else { k }.min(n);
+            rng.sample_distinct(n, d)
+                .into_iter()
+                .map(|c| (c as u32, rng.next_f32()))
+                .collect()
+        })
+        .collect();
+    Csr::from_rows(n, rows)
+}
+
+/// Power-law (discrete Pareto) degrees: `deg ~ floor(x_min * U^(-1/alpha))`
+/// clamped to `[1, cap]` — the heavy-tailed model for Reddit/Products-like
+/// graphs. `cap` doubles as the preset's `w_plain` contract.
+pub fn power_law(n: usize, x_min: f64, alpha: f64, cap: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let rows = (0..n)
+        .map(|_| {
+            let d = rng.pareto_deg(x_min, alpha, cap).min(n);
+            rng.sample_distinct(n, d)
+                .into_iter()
+                .map(|c| (c as u32, rng.next_f32()))
+                .collect()
+        })
+        .collect();
+    Csr::from_rows(n, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn er_avg_degree_close() {
+        let g = erdos_renyi(2000, 4.0, 32, 7);
+        g.validate().unwrap();
+        assert!((g.avg_degree() - 4.0).abs() < 0.3, "{}", g.avg_degree());
+        assert!(g.max_degree() <= 32);
+    }
+
+    #[test]
+    fn er_deterministic() {
+        assert_eq!(erdos_renyi(500, 4.0, 32, 1), erdos_renyi(500, 4.0, 32, 1));
+        assert_ne!(erdos_renyi(500, 4.0, 32, 1), erdos_renyi(500, 4.0, 32, 2));
+    }
+
+    #[test]
+    fn hub_skew_structure() {
+        let g = hub_skew(1000, 4, 0.15, 64, 3);
+        g.validate().unwrap();
+        let degs = g.degrees();
+        let hubs = degs.iter().filter(|&&d| d == 64).count();
+        let light = degs.iter().filter(|&&d| d == 4).count();
+        assert_eq!(hubs, 150);
+        assert_eq!(light, 850);
+    }
+
+    #[test]
+    fn hub_skew_gini_exceeds_er() {
+        let er = erdos_renyi(1000, 8.0, 64, 5);
+        let hs = hub_skew(1000, 4, 0.15, 64, 5);
+        let gd = |g: &Csr| {
+            let d: Vec<f64> = g.degrees().iter().map(|&x| x as f64).collect();
+            stats::gini(&d)
+        };
+        assert!(gd(&hs) > gd(&er) + 0.2);
+    }
+
+    #[test]
+    fn power_law_heavy_tail_and_capped() {
+        let g = power_law(4000, 12.0, 1.6, 256, 11);
+        g.validate().unwrap();
+        assert!(g.max_degree() <= 256);
+        assert!(g.max_degree() > 128, "tail too light: {}", g.max_degree());
+        let avg = g.avg_degree();
+        assert!((20.0..40.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn no_duplicate_columns_within_rows() {
+        let g = power_law(500, 8.0, 1.4, 128, 13);
+        for i in 0..g.n_rows {
+            let (cols, _) = g.row(i);
+            for w in cols.windows(2) {
+                assert!(w[0] < w[1], "row {i} has duplicate/unsorted cols");
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! CSR sparse matrix: the canonical graph representation (paper §Notation:
+//! `(rowptr, colind, val)`), plus the structure queries the scheduler's
+//! feature extraction needs (degree quantiles, skew) and the induced
+//! subgraph sampling the micro-probe needs.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// CSR adjacency: row `i` owns `colind[rowptr[i]..rowptr[i+1]]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub rowptr: Vec<usize>,
+    pub colind: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from per-row adjacency lists (sorted for determinism).
+    pub fn from_rows(n_cols: usize, rows: Vec<Vec<(u32, f32)>>) -> Csr {
+        let n_rows = rows.len();
+        let mut rowptr = Vec::with_capacity(n_rows + 1);
+        let mut colind = Vec::new();
+        let mut val = Vec::new();
+        rowptr.push(0);
+        for mut row in rows {
+            row.sort_by_key(|(c, _)| *c);
+            for (c, v) in row {
+                assert!((c as usize) < n_cols, "col {c} >= n_cols {n_cols}");
+                colind.push(c);
+                val.push(v);
+            }
+            rowptr.push(colind.len());
+        }
+        Csr { n_rows, n_cols, rowptr, colind, val }
+    }
+
+    /// Validate structural invariants; used by tests and after loads.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.n_rows + 1 {
+            return Err("rowptr length != n_rows + 1".into());
+        }
+        if self.rowptr[0] != 0 || *self.rowptr.last().unwrap() != self.colind.len() {
+            return Err("rowptr endpoints wrong".into());
+        }
+        if self.colind.len() != self.val.len() {
+            return Err("colind/val length mismatch".into());
+        }
+        for w in self.rowptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("rowptr not monotone".into());
+            }
+        }
+        if let Some(&c) = self.colind.iter().find(|&&c| c as usize >= self.n_cols)
+        {
+            return Err(format!("colind {c} out of range"));
+        }
+        Ok(())
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.colind.len()
+    }
+
+    pub fn degree(&self, row: usize) -> usize {
+        self.rowptr[row + 1] - self.rowptr[row]
+    }
+
+    pub fn degrees(&self) -> Vec<usize> {
+        (0..self.n_rows).map(|i| self.degree(i)).collect()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.degrees().into_iter().max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n_rows == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / self.n_rows as f64
+        }
+    }
+
+    /// Degree quantile (type-7 interpolation), q in [0,1].
+    pub fn degree_quantile(&self, q: f64) -> f64 {
+        let degs: Vec<f64> = self.degrees().iter().map(|&d| d as f64).collect();
+        if degs.is_empty() {
+            return 0.0;
+        }
+        stats::quantile(&degs, q)
+    }
+
+    /// Row slice accessors.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.rowptr[i], self.rowptr[i + 1]);
+        (&self.colind[a..b], &self.val[a..b])
+    }
+
+    /// Micro-probe workload: sample `k` rows (without replacement, seeded)
+    /// and keep their full adjacency lists, remapping column ids into the
+    /// probe's index space (`col % k`).  Row *degrees* — the quantity that
+    /// drives kernel cost — are preserved exactly; semantics are not,
+    /// which is fine: the probe is a timing device, not a compute result
+    /// (paper §4.2 "induced subgraph").
+    pub fn probe_sample(&self, k: usize, seed: u64) -> Csr {
+        let k = k.min(self.n_rows).max(1);
+        let mut rng = Rng::new(seed);
+        let mut picks = rng.sample_distinct(self.n_rows, k);
+        picks.sort_unstable();
+        let rows = picks
+            .iter()
+            .map(|&r| {
+                let (cols, vals) = self.row(r);
+                cols.iter()
+                    .zip(vals)
+                    .map(|(&c, &v)| ((c as usize % k) as u32, v))
+                    .collect()
+            })
+            .collect();
+        Csr::from_rows(k, rows)
+    }
+
+    /// Dense row-major materialization (test oracle only; O(n^2)).
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut out = vec![vec![0.0; self.n_cols]; self.n_rows];
+        for i in 0..self.n_rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                out[i][c as usize] += v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Csr {
+        // rows: {0:[1,2], 1:[], 2:[0], 3:[0,1,2,3]}
+        Csr::from_rows(
+            4,
+            vec![
+                vec![(1, 1.0), (2, 2.0)],
+                vec![],
+                vec![(0, 3.0)],
+                vec![(3, 4.0), (0, 5.0), (1, 6.0), (2, 7.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny();
+        g.validate().unwrap();
+        assert_eq!(g.nnz(), 7);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 0);
+        assert_eq!(g.degree(3), 4);
+        assert_eq!(g.max_degree(), 4);
+        assert!((g.avg_degree() - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_sorted_by_column() {
+        let g = tiny();
+        let (cols, vals) = g.row(3);
+        assert_eq!(cols, &[0, 1, 2, 3]);
+        assert_eq!(vals, &[5.0, 6.0, 7.0, 4.0]);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = tiny();
+        g.colind[0] = 99;
+        assert!(g.validate().is_err());
+        let mut g2 = tiny();
+        g2.rowptr[2] = 0;
+        assert!(g2.validate().is_err());
+    }
+
+    #[test]
+    fn degree_quantiles() {
+        let g = tiny();
+        // degrees [2, 0, 1, 4]
+        assert_eq!(g.degree_quantile(0.0), 0.0);
+        assert_eq!(g.degree_quantile(1.0), 4.0);
+        assert_eq!(g.degree_quantile(0.5), 1.5);
+    }
+
+    #[test]
+    fn probe_sample_preserves_degrees() {
+        let g = tiny();
+        let p = g.probe_sample(4, 1);
+        p.validate().unwrap();
+        assert_eq!(p.n_rows, 4);
+        let mut got: Vec<usize> = p.degrees();
+        let mut want = g.degrees();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn probe_sample_subset_and_deterministic() {
+        let mut rows = Vec::new();
+        for i in 0..100u32 {
+            rows.push(vec![((i * 7 % 100), 1.0f32), ((i * 13 % 100), 2.0)]);
+        }
+        let g = Csr::from_rows(100, rows);
+        let a = g.probe_sample(10, 42);
+        let b = g.probe_sample(10, 42);
+        assert_eq!(a, b);
+        let c = g.probe_sample(10, 43);
+        assert_ne!(a, c);
+        assert_eq!(a.n_rows, 10);
+        assert!(a.colind.iter().all(|&c| c < 10));
+    }
+
+    #[test]
+    fn to_dense_matches() {
+        let g = tiny();
+        let d = g.to_dense();
+        assert_eq!(d[0][1], 1.0);
+        assert_eq!(d[2][0], 3.0);
+        assert_eq!(d[1], vec![0.0; 4]);
+    }
+}

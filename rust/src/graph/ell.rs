@@ -1,0 +1,334 @@
+//! Padded static-shape encodings consumed by the AOT kernels.
+//!
+//! * [`EllBuffers`] — padded ELL: `colind/val/mask: [n_pad, w]` (pads are
+//!   col=0, val=0, mask=0, so SpMM needs no mask and SDDMM/softmax use it).
+//! * [`CooBuffers`] — padded COO for the vendor scatter baseline.
+//! * [`HubSplit`] — the CTA-per-hub analog: light rows in a narrow ELL,
+//!   hub rows (degree > `hub_t`) in a dedicated `[h_pad, w_hub]` block.
+//!
+//! Padding waste recorded here feeds the roofline estimate: it is the
+//! TPU-bucketing analog of CUDA warp load imbalance.
+
+use super::csr::Csr;
+
+/// Padded ELL encoding of a CSR matrix at bucket shape `(n_pad, w)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EllBuffers {
+    pub n_rows: usize, // real rows (<= n_pad)
+    pub n_pad: usize,
+    pub w: usize,
+    pub colind: Vec<i32>, // [n_pad * w], row-major
+    pub val: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+impl EllBuffers {
+    /// Pad `g` to bucket `(n_pad, w)`. Fails if the graph does not fit.
+    pub fn from_csr(g: &Csr, n_pad: usize, w: usize) -> Result<EllBuffers, String> {
+        if g.n_rows > n_pad {
+            return Err(format!("{} rows > bucket n_pad {}", g.n_rows, n_pad));
+        }
+        let max_deg = g.max_degree();
+        if max_deg > w {
+            return Err(format!("max degree {max_deg} > bucket width {w}"));
+        }
+        if g.n_cols > n_pad {
+            return Err(format!("{} cols > bucket n_pad {}", g.n_cols, n_pad));
+        }
+        let mut colind = vec![0i32; n_pad * w];
+        let mut val = vec![0f32; n_pad * w];
+        let mut mask = vec![0f32; n_pad * w];
+        for i in 0..g.n_rows {
+            let (cols, vals) = g.row(i);
+            for (s, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+                colind[i * w + s] = c as i32;
+                val[i * w + s] = v;
+                mask[i * w + s] = 1.0;
+            }
+        }
+        Ok(EllBuffers { n_rows: g.n_rows, n_pad, w, colind, val, mask })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    /// Fraction of slots that are padding (cost-model feature).
+    pub fn pad_waste(&self) -> f64 {
+        let slots = (self.n_pad * self.w) as f64;
+        if slots == 0.0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / slots
+    }
+
+    /// Round-trip back to CSR (drops padding). Test/verification aid.
+    pub fn to_csr(&self, n_cols: usize) -> Csr {
+        let rows = (0..self.n_rows)
+            .map(|i| {
+                (0..self.w)
+                    .filter(|s| self.mask[i * self.w + s] > 0.0)
+                    .map(|s| (self.colind[i * self.w + s] as u32,
+                              self.val[i * self.w + s]))
+                    .collect()
+            })
+            .collect();
+        Csr::from_rows(n_cols, rows)
+    }
+}
+
+/// Padded COO (row-major slot order — matches the ELL compaction the
+/// baseline attention artifact performs; see `model.py`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooBuffers {
+    pub nnz: usize, // real entries (<= nnz_pad)
+    pub nnz_pad: usize,
+    pub row: Vec<i32>,
+    pub col: Vec<i32>,
+    pub val: Vec<f32>,
+}
+
+impl CooBuffers {
+    pub fn from_csr(g: &Csr, nnz_pad: usize) -> Result<CooBuffers, String> {
+        if g.nnz() > nnz_pad {
+            return Err(format!("nnz {} > bucket nnz_pad {}", g.nnz(), nnz_pad));
+        }
+        let mut row = Vec::with_capacity(nnz_pad);
+        let mut col = Vec::with_capacity(nnz_pad);
+        let mut val = Vec::with_capacity(nnz_pad);
+        for i in 0..g.n_rows {
+            let (cols, vals) = g.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                row.push(i as i32);
+                col.push(c as i32);
+                val.push(v);
+            }
+        }
+        row.resize(nnz_pad, 0);
+        col.resize(nnz_pad, 0);
+        val.resize(nnz_pad, 0.0);
+        Ok(CooBuffers { nnz: g.nnz(), nnz_pad, row, col, val })
+    }
+}
+
+/// Hub partition of a CSR graph (paper §4.1 "hub-split").
+#[derive(Debug, Clone, PartialEq)]
+pub struct HubSplit {
+    pub hub_t: usize,        // degree threshold used
+    pub light: EllBuffers,   // hub rows zeroed out here
+    pub hub_rows: Vec<i32>,  // [h_pad], padded with 0
+    pub hub_colind: Vec<i32>, // [h_pad * w_hub]
+    pub hub_val: Vec<f32>,
+    pub n_hubs: usize,
+}
+
+impl HubSplit {
+    /// Split at degree threshold `hub_t` into bucket shapes
+    /// `(n_pad, w_light)` for light rows and `(h_pad, w_hub)` for hubs.
+    pub fn from_csr(
+        g: &Csr,
+        hub_t: usize,
+        n_pad: usize,
+        w_light: usize,
+        h_pad: usize,
+        w_hub: usize,
+    ) -> Result<HubSplit, String> {
+        if g.n_rows > n_pad {
+            return Err(format!("{} rows > n_pad {}", g.n_rows, n_pad));
+        }
+        let degs = g.degrees();
+        let hubs: Vec<usize> =
+            (0..g.n_rows).filter(|&i| degs[i] > hub_t).collect();
+        if hubs.len() > h_pad {
+            return Err(format!("{} hubs > bucket h_pad {}", hubs.len(), h_pad));
+        }
+        if let Some(&d) = hubs.iter().map(|&i| &degs[i]).max() {
+            if d > w_hub {
+                return Err(format!("hub degree {d} > bucket w_hub {w_hub}"));
+            }
+        }
+        if let Some(d) = (0..g.n_rows)
+            .filter(|&i| degs[i] <= hub_t)
+            .map(|i| degs[i])
+            .max()
+        {
+            if d > w_light {
+                return Err(format!("light degree {d} > w_light {w_light}"));
+            }
+        }
+
+        // Light ELL with hub rows zeroed.
+        let mut colind = vec![0i32; n_pad * w_light];
+        let mut val = vec![0f32; n_pad * w_light];
+        let mut mask = vec![0f32; n_pad * w_light];
+        for i in 0..g.n_rows {
+            if degs[i] > hub_t {
+                continue;
+            }
+            let (cols, vals) = g.row(i);
+            for (s, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+                colind[i * w_light + s] = c as i32;
+                val[i * w_light + s] = v;
+                mask[i * w_light + s] = 1.0;
+            }
+        }
+        let light = EllBuffers {
+            n_rows: g.n_rows,
+            n_pad,
+            w: w_light,
+            colind,
+            val,
+            mask,
+        };
+
+        // Hub block: one padded neighbor list per hub row.
+        let mut hub_rows = vec![0i32; h_pad];
+        let mut hub_colind = vec![0i32; h_pad * w_hub];
+        let mut hub_val = vec![0f32; h_pad * w_hub];
+        for (k, &i) in hubs.iter().enumerate() {
+            hub_rows[k] = i as i32;
+            let (cols, vals) = g.row(i);
+            for (s, (&c, &v)) in cols.iter().zip(vals).enumerate() {
+                hub_colind[k * w_hub + s] = c as i32;
+                hub_val[k * w_hub + s] = v;
+            }
+        }
+        Ok(HubSplit {
+            hub_t,
+            light,
+            hub_rows,
+            hub_colind,
+            hub_val,
+            n_hubs: hubs.len(),
+        })
+    }
+
+    /// Heavy-row fraction — the paper sweeps split thresholds against
+    /// "measured heavy-row fractions" (§8 Ablations).
+    pub fn hub_fraction(&self) -> f64 {
+        if self.light.n_rows == 0 {
+            return 0.0;
+        }
+        self.n_hubs as f64 / self.light.n_rows as f64
+    }
+}
+
+/// Default hub threshold: p99 degree, clamped to at least the mean
+/// (used when `AUTOSAGE_HUB_T` = 0 = auto).
+pub fn auto_hub_threshold(g: &Csr) -> usize {
+    let p99 = g.degree_quantile(0.99);
+    let mean = g.avg_degree();
+    p99.max(mean).ceil() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, max_deg: usize) -> Csr {
+        let mut rng = Rng::new(seed);
+        let rows = (0..n)
+            .map(|_| {
+                let d = rng.below(max_deg + 1);
+                let cols = rng.sample_distinct(n, d);
+                cols.into_iter()
+                    .map(|c| (c as u32, rng.next_f32()))
+                    .collect()
+            })
+            .collect();
+        Csr::from_rows(n, rows)
+    }
+
+    #[test]
+    fn ell_roundtrip() {
+        let g = random_graph(1, 50, 6);
+        let e = EllBuffers::from_csr(&g, 64, 8).unwrap();
+        assert_eq!(e.nnz(), g.nnz());
+        let back = e.to_csr(g.n_cols);
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn ell_rejects_too_small_bucket() {
+        let g = random_graph(2, 50, 6);
+        assert!(EllBuffers::from_csr(&g, 32, 8).is_err()); // rows don't fit
+        let g2 = Csr::from_rows(4, vec![vec![(0, 1.0), (1, 1.0), (2, 1.0)]]);
+        assert!(EllBuffers::from_csr(&g2, 8, 2).is_err()); // width too small
+    }
+
+    #[test]
+    fn ell_pad_waste() {
+        let g = Csr::from_rows(2, vec![vec![(0, 1.0)], vec![(1, 1.0)]]);
+        let e = EllBuffers::from_csr(&g, 4, 2).unwrap();
+        // 2 real slots of 8 -> 75% waste
+        assert!((e.pad_waste() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coo_layout_row_major() {
+        let g = Csr::from_rows(
+            3,
+            vec![vec![(2, 1.0), (0, 2.0)], vec![], vec![(1, 3.0)]],
+        );
+        let c = CooBuffers::from_csr(&g, 5).unwrap();
+        assert_eq!(c.nnz, 3);
+        assert_eq!(&c.row[..3], &[0, 0, 2]);
+        assert_eq!(&c.col[..3], &[0, 2, 1]); // row 0 sorted by col
+        assert_eq!(&c.val[3..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn coo_rejects_overflow() {
+        let g = random_graph(3, 20, 5);
+        assert!(CooBuffers::from_csr(&g, g.nnz() - 1).is_err());
+    }
+
+    #[test]
+    fn hub_split_partitions_exactly() {
+        let mut rows: Vec<Vec<(u32, f32)>> = (0..32)
+            .map(|i| vec![((i as u32 + 1) % 32, 1.0)])
+            .collect();
+        rows[3] = (0..20).map(|c| (c as u32, 1.0)).collect(); // hub deg 20
+        rows[17] = (0..15).map(|c| (c as u32, 1.0)).collect(); // hub deg 15
+        let g = Csr::from_rows(32, rows);
+        let hs = HubSplit::from_csr(&g, 4, 32, 4, 8, 32).unwrap();
+        assert_eq!(hs.n_hubs, 2);
+        assert_eq!(&hs.hub_rows[..2], &[3, 17]);
+        assert!((hs.hub_fraction() - 2.0 / 32.0).abs() < 1e-12);
+        // Hub rows zeroed in light part.
+        for s in 0..4 {
+            assert_eq!(hs.light.mask[3 * 4 + s], 0.0);
+            assert_eq!(hs.light.val[17 * 4 + s], 0.0);
+        }
+        // Light rows intact.
+        assert_eq!(hs.light.mask[0], 1.0);
+    }
+
+    #[test]
+    fn hub_split_mass_conserved() {
+        // sum of light.val + hub_val == sum of g.val
+        let g = random_graph(5, 64, 10);
+        let t = 5;
+        let hs = HubSplit::from_csr(&g, t, 64, t, 64, 16).unwrap();
+        let total: f32 = g.val.iter().sum();
+        let split: f32 =
+            hs.light.val.iter().sum::<f32>() + hs.hub_val.iter().sum::<f32>();
+        assert!((total - split).abs() < 1e-3);
+    }
+
+    #[test]
+    fn hub_split_rejects_small_buckets() {
+        let g = random_graph(7, 64, 10);
+        assert!(HubSplit::from_csr(&g, 5, 64, 5, 0, 16).is_err() ||
+                g.degrees().iter().all(|&d| d <= 5));
+    }
+
+    #[test]
+    fn auto_threshold_sane() {
+        let g = random_graph(9, 100, 8);
+        let t = auto_hub_threshold(&g);
+        assert!(t >= g.avg_degree() as usize);
+        assert!(t <= g.max_degree().max(1));
+    }
+}

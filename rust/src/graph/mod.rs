@@ -1,0 +1,10 @@
+//! Sparse-graph substrate: CSR canonical form, padded ELL/COO buckets
+//! (the static-shape encodings the AOT kernels consume), hub partition,
+//! and content signatures for the schedule cache.
+
+pub mod csr;
+pub mod ell;
+pub mod signature;
+
+pub use csr::Csr;
+pub use ell::{CooBuffers, EllBuffers, HubSplit};

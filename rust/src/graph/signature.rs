@@ -1,0 +1,116 @@
+//! Content signatures for the persistent schedule cache (paper §4.2:
+//! cache key = `(device_sig, graph_sig, F, op)`).
+//!
+//! FNV-1a over the CSR structure. The signature covers *structure*
+//! (rowptr/colind) and dimensions, not edge values: the paper's scheduler
+//! decisions depend on sparsity pattern, never on values.
+
+use super::csr::Csr;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a byte stream.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Structural signature of a graph, hex-encoded.
+pub fn graph_signature(g: &Csr) -> String {
+    let mut h = Fnv1a::new();
+    h.write_u64(g.n_rows as u64);
+    h.write_u64(g.n_cols as u64);
+    h.write_u64(g.nnz() as u64);
+    for &p in &g.rowptr {
+        h.write_u64(p as u64);
+    }
+    for &c in &g.colind {
+        h.write_u64(c as u64);
+    }
+    format!("{:016x}", h.finish())
+}
+
+/// Device signature: platform name/version + logical CPU count.
+/// Encodes "device + toolchain minors" so stale cache entries from a
+/// different machine are never reused (paper §12 Internal validity).
+pub fn device_signature(platform: &str, version: &str) -> String {
+    let cpus = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut h = Fnv1a::new();
+    h.write(platform.as_bytes());
+    h.write(version.as_bytes());
+    h.write_u64(cpus as u64);
+    format!("{}-{}cpu-{:08x}", platform, cpus, h.finish() as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn g1() -> Csr {
+        Csr::from_rows(3, vec![vec![(1, 1.0)], vec![(2, 2.0)], vec![]])
+    }
+
+    #[test]
+    fn signature_deterministic() {
+        assert_eq!(graph_signature(&g1()), graph_signature(&g1()));
+    }
+
+    #[test]
+    fn signature_ignores_values() {
+        let mut g2 = g1();
+        g2.val[0] = 99.0;
+        assert_eq!(graph_signature(&g1()), graph_signature(&g2));
+    }
+
+    #[test]
+    fn signature_sensitive_to_structure() {
+        let mut g2 = g1();
+        g2.colind[0] = 2;
+        assert_ne!(graph_signature(&g1()), graph_signature(&g2));
+
+        let g3 = Csr::from_rows(3, vec![vec![], vec![(1, 1.0), (2, 2.0)], vec![]]);
+        assert_ne!(graph_signature(&g1()), graph_signature(&g3));
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a("a") = 0xaf63dc4c8601ec8c
+        let mut h = Fnv1a::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn device_signature_stable_and_named() {
+        let a = device_signature("cpu", "1.0");
+        let b = device_signature("cpu", "1.0");
+        assert_eq!(a, b);
+        assert!(a.starts_with("cpu-"));
+        assert_ne!(a, device_signature("cpu", "2.0"));
+    }
+}

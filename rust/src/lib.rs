@@ -1,0 +1,33 @@
+//! AutoSAGE — input-aware scheduling for sparse GNN aggregation
+//! (CSR/ELL SpMM, SDDMM and CSR attention) on a Rust + JAX + Pallas
+//! AOT stack (PJRT runtime).
+//!
+//! Reproduction of: *AutoSAGE: Input-Aware CUDA Scheduling for Sparse GNN
+//! Aggregation (SpMM/SDDMM) and CSR Attention* (Stanković, 2025), adapted
+//! from CUDA to a TPU-style Pallas kernel space (see `DESIGN.md`).
+//!
+//! Layering:
+//! * [`util`] — substrates built from scratch (JSON, RNG, stats, CSV, env).
+//! * [`graph`] — CSR/ELL formats, bucketing, signatures.
+//! * [`gen`] — synthetic workload generators (paper presets, scaled).
+//! * [`runtime`] — PJRT client, artifact manifest, executable cache.
+//! * [`ops`] — typed SpMM/SDDMM/softmax/attention ops + Rust oracle.
+//! * [`scheduler`] — the paper's contribution: estimate → micro-probe →
+//!   guardrail, with a persistent decision cache and replay mode.
+//! * [`coordinator`] — the public facade (`AutoSage`) and request queue.
+//! * [`bench_kit`] — criterion-replacement harness + table/figure output.
+
+pub mod bench_kit;
+pub mod config;
+pub mod coordinator;
+pub mod gen;
+pub mod graph;
+pub mod ops;
+pub mod runtime;
+pub mod scheduler;
+pub mod telemetry;
+pub mod util;
+
+
+
+pub fn cli_placeholder() { println!("autosage"); }

@@ -1,0 +1,325 @@
+//! AutoSAGE CLI — the leader entrypoint.
+//!
+//! ```text
+//! autosage gen     --preset reddit_s [--seed 42]
+//! autosage decide  --preset er_s --op spmm --f 64 [--alpha 0.95]
+//! autosage run     --preset er_s --op spmm --f 64
+//! autosage table   <2..12> [--iters 7] [--cap-ms 1500] [--out results]
+//! autosage figure  <1..7>  [--iters 7] [--cap-ms 1500] [--out results]
+//! autosage all     [--out results]
+//! autosage cache   dump|clear [--path autosage_cache.json]
+//! ```
+//!
+//! Env toggles (AUTOSAGE_ALPHA, AUTOSAGE_PROBE_*, AUTOSAGE_VEC,
+//! AUTOSAGE_CACHE, AUTOSAGE_REPLAY_ONLY, ...) apply everywhere; see
+//! `config.rs`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use autosage::bench_kit::tables::{run_figure, run_table, table_ids};
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::gen::{preset, preset_names};
+use autosage::graph::signature::graph_signature;
+use autosage::scheduler::{probe, InputFeatures, Op, ScheduleCache};
+use autosage::telemetry::meta_sidecar;
+use autosage::util::stats;
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Minimal flag parser: positionals + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| anyhow!("invalid value for --{key}: {raw:?}")),
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts").unwrap_or("artifacts"))
+}
+
+fn real_main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        print_usage();
+        return Ok(());
+    }
+    let cmd = raw[0].clone();
+    let args = Args::parse(&raw[1..])?;
+    match cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "decide" => cmd_decide(&args),
+        "run" => cmd_run(&args),
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "all" => cmd_all(&args),
+        "cache" => cmd_cache(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `autosage help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "autosage — input-aware scheduling for sparse GNN aggregation\n\
+         commands:\n\
+         \x20 gen     --preset <{presets}> [--seed N]\n\
+         \x20 decide  --preset P --op <spmm|sddmm|attention> --f F [--alpha A]\n\
+         \x20 run     --preset P --op <spmm|sddmm|attention> --f F\n\
+         \x20 table   <2..12> [--iters N] [--cap-ms MS] [--out DIR]\n\
+         \x20 figure  <1..7>  [--iters N] [--cap-ms MS] [--out DIR]\n\
+         \x20 all     [--out DIR]\n\
+         \x20 cache   dump|clear [--path FILE]\n\
+         flags: --artifacts DIR (default: artifacts)",
+        presets = preset_names().join("|")
+    );
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let name = args.get("preset").context("--preset required")?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let (g, spec) = preset(name, seed);
+    let feats = InputFeatures::extract(&g, 0);
+    println!("preset {name} (stand-in for: {})", spec.paper_name);
+    println!(
+        "  rows {}  nnz {}  signature {}",
+        g.n_rows,
+        g.nnz(),
+        graph_signature(&g)
+    );
+    println!(
+        "  degree: avg {:.2}  p50 {:.0}  p90 {:.0}  p99 {:.0}  max {}",
+        feats.avg_deg, feats.p50_deg, feats.p90_deg, feats.p99_deg, feats.max_deg
+    );
+    println!("  skew: gini {:.3}  cv {:.3}", feats.gini, feats.cv);
+    println!("  degree histogram (log2 buckets):");
+    let degs: Vec<f64> = g.degrees().iter().map(|&d| d as f64).collect();
+    let mut hist = [0usize; 12];
+    for &d in &degs {
+        let b = (d.max(1.0).log2() as usize).min(11);
+        hist[b] += 1;
+    }
+    for (b, count) in hist.iter().enumerate() {
+        if *count > 0 {
+            println!(
+                "    deg {:>5}..{:<5} {:>6} rows  {}",
+                1 << b,
+                (1 << (b + 1)) - 1,
+                count,
+                "#".repeat((count * 60 / g.n_rows).max(1))
+            );
+        }
+    }
+    Ok(())
+}
+
+fn parse_op(args: &Args) -> Result<Op> {
+    let raw = args.get("op").unwrap_or("spmm");
+    Op::parse(raw).ok_or_else(|| anyhow!("unknown op {raw:?}"))
+}
+
+fn sage_from(args: &Args) -> Result<AutoSage> {
+    let mut cfg = Config::from_env().map_err(|e| anyhow!(e))?;
+    if let Some(a) = args.get("alpha") {
+        cfg.alpha = a.parse().map_err(|_| anyhow!("bad --alpha"))?;
+    }
+    AutoSage::new(&artifacts_dir(args), cfg, None)
+}
+
+fn cmd_decide(args: &Args) -> Result<()> {
+    let name = args.get("preset").context("--preset required")?;
+    let f = args.get_parse("f", 64usize)?;
+    let op = parse_op(args)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let (g, _) = preset(name, seed);
+    let mut sage = sage_from(args)?;
+    let d = sage.decide(&g, op, f)?;
+    println!("key     : {}", d.key);
+    println!("choice  : {} ({})", d.choice_label(), d.choice.variant());
+    println!("source  : {:?}", d.source);
+    println!(
+        "probe   : baseline {:.4}ms  best {:.4}ms  wall {:.2}ms  alpha {}",
+        d.t_baseline_ms, d.t_star_ms, d.probe_wall_ms, sage.config().alpha
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name = args.get("preset").context("--preset required")?;
+    let f = args.get_parse("f", 64usize)?;
+    let op = parse_op(args)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let (g, _) = preset(name, seed);
+    let mut sage = sage_from(args)?;
+    let data = probe::synth_operands(op, g.n_rows, f, seed);
+    let get = |n: &str| data.dense.get(n).unwrap().as_slice();
+    let sw = autosage::util::timing::Stopwatch::start();
+    let out = match op {
+        Op::Spmm => sage.spmm_auto(&g, get("b"), f)?,
+        Op::Sddmm => sage.sddmm_auto(&g, get("x"), get("y"), f)?,
+        Op::Attention => sage.attention_auto(&g, get("q"), get("k"), get("v"), f)?,
+        Op::Softmax => bail!("softmax runs inside the attention pipeline"),
+    };
+    let total = sw.ms();
+    let sum: f64 = out.iter().map(|&x| x as f64).sum();
+    println!(
+        "op={} preset={name} F={f}: {} outputs, checksum {:.4}, end-to-end {:.2}ms",
+        op.as_str(),
+        out.len(),
+        sum,
+        total
+    );
+    let mean: Vec<f64> = out.iter().map(|&x| x as f64).collect();
+    println!(
+        "output stats: mean {:.4}  min {:.4}  max {:.4}",
+        stats::mean(&mean),
+        stats::min(&mean),
+        stats::max(&mean)
+    );
+    Ok(())
+}
+
+fn bench_params(args: &Args) -> Result<(usize, f64)> {
+    Ok((
+        args.get_parse("iters", 7usize)?,
+        args.get_parse("cap-ms", 1500.0f64)?,
+    ))
+}
+
+fn write_output(
+    out_dir: Option<&str>,
+    stem: &str,
+    text: &str,
+    csv: &autosage::util::csv::CsvTable,
+) -> Result<()> {
+    println!("{text}");
+    if let Some(dir) = out_dir {
+        let dir = Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        csv.write_to(&dir.join(format!("{stem}.csv")))?;
+        std::fs::write(dir.join(format!("{stem}.txt")), text)?;
+        let cfg = Config::from_env().map_err(|e| anyhow!(e))?;
+        std::fs::write(
+            dir.join(format!("{stem}.csv.meta.json")),
+            meta_sidecar("cpu-pjrt", &cfg).pretty(),
+        )?;
+        println!(
+            "[written to {}/{stem}.{{csv,txt,csv.meta.json}}]",
+            dir.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("table id required (2..12)")?;
+    let (iters, cap) = bench_params(args)?;
+    let out = run_table(&artifacts_dir(args), id, iters, cap)?;
+    write_output(args.get("out"), &format!("table{id}"), &out.text, &out.csv)
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("figure id required (1..7)")?;
+    let (iters, cap) = bench_params(args)?;
+    let (text, csv) = run_figure(&artifacts_dir(args), id, iters, cap)?;
+    write_output(args.get("out"), &format!("figure{id}"), &text, &csv)
+}
+
+fn cmd_all(args: &Args) -> Result<()> {
+    let (iters, cap) = bench_params(args)?;
+    let out_dir = args.get("out").unwrap_or("results");
+    let sw = autosage::util::timing::Stopwatch::start();
+    for id in table_ids() {
+        let out = run_table(&artifacts_dir(args), id, iters, cap)?;
+        write_output(Some(out_dir), &format!("table{id}"), &out.text, &out.csv)?;
+    }
+    for id in ["1", "2", "3", "4", "5", "6", "7"] {
+        let (text, csv) = run_figure(&artifacts_dir(args), id, iters, cap)?;
+        write_output(Some(out_dir), &format!("figure{id}"), &text, &csv)?;
+    }
+    println!("all tables+figures regenerated in {:.1}s", sw.ms() / 1e3);
+    Ok(())
+}
+
+fn cmd_cache(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .context("cache action: dump|clear")?;
+    let path = PathBuf::from(args.get("path").unwrap_or("autosage_cache.json"));
+    match action.as_str() {
+        "dump" => {
+            let cache = ScheduleCache::load(&path)?;
+            println!("cache {} ({} entries)", path.display(), cache.len());
+            for (k, v) in cache.dump() {
+                println!(
+                    "  {k} -> {} (t_b {:.4}ms, t* {:.4}ms, alpha {})",
+                    v.variant, v.t_baseline_ms, v.t_star_ms, v.alpha
+                );
+            }
+            Ok(())
+        }
+        "clear" => {
+            if path.exists() {
+                std::fs::remove_file(&path)?;
+                println!("removed {}", path.display());
+            } else {
+                println!("no cache at {}", path.display());
+            }
+            Ok(())
+        }
+        other => bail!("unknown cache action {other:?}"),
+    }
+}

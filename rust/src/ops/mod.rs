@@ -1,0 +1,8 @@
+//! Typed operators over the runtime: SpMM, SDDMM, row-softmax and the
+//! CSR attention pipeline, plus the pure-Rust reference oracle used by
+//! integration tests and as a CPU comparison point.
+
+pub mod pack;
+pub mod reference;
+
+pub use pack::{pack_inputs, OpData};

@@ -1,0 +1,271 @@
+//! Packing: turn a CSR graph + dense features into the exact input
+//! tensors an artifact expects, driven by the artifact's `InputSpec`s.
+//!
+//! This is where bucketing happens: the graph is padded to the entry's
+//! static shapes (ELL width, COO length, hub block), reusing the
+//! encoders in [`crate::graph::ell`].
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::graph::ell::{CooBuffers, EllBuffers, HubSplit};
+use crate::graph::Csr;
+use crate::runtime::manifest::ArtifactEntry;
+use crate::runtime::tensor::Tensor;
+
+/// Dense operands for one op invocation, keyed by artifact input name
+/// (`b`, `x`, `y`, `q`, `k`, `v`, `h`, `w`, `bias`).
+///
+/// Features are supplied at the *graph* size; packing pads rows with
+/// zeros up to the bucket's `n_pad`.
+#[derive(Debug, Clone, Default)]
+pub struct OpData {
+    pub dense: HashMap<String, Vec<f32>>,
+}
+
+impl OpData {
+    pub fn new() -> OpData {
+        OpData { dense: HashMap::new() }
+    }
+    pub fn with(mut self, name: &str, data: Vec<f32>) -> OpData {
+        self.dense.insert(name.to_string(), data);
+        self
+    }
+}
+
+/// Pad a row-major `[rows, f]` feature matrix with zero rows to `n_pad`.
+fn pad_rows(data: &[f32], f: usize, n_pad: usize) -> Result<Vec<f32>> {
+    if f == 0 || data.len() % f != 0 {
+        bail!("feature matrix length {} not divisible by f={}", data.len(), f);
+    }
+    let rows = data.len() / f;
+    if rows > n_pad {
+        bail!("feature rows {rows} exceed bucket n_pad {n_pad}");
+    }
+    let mut out = vec![0.0f32; n_pad * f];
+    out[..data.len()].copy_from_slice(data);
+    Ok(out)
+}
+
+/// Pack inputs for `entry` from graph `g` and dense operands `data`.
+///
+/// The returned tensors are in the artifact's declared call order and
+/// already shape-checked. The sparse encodings are derived per the
+/// entry's variant:
+/// * `baseline_scatter`  → COO (row/col/val)
+/// * `ell_*` / softmax   → plain ELL at the entry's width
+/// * `hub_*`             → hub split at `hub_t = w_light`
+/// * attention baseline  → ELL + COO of the same pattern
+pub fn pack_inputs(entry: &ArtifactEntry, g: &Csr, data: &OpData) -> Result<Vec<Tensor>> {
+    let n_pad = entry
+        .param_usize("n_pad")
+        .ok_or_else(|| anyhow!("{}: missing n_pad", entry.name))?;
+
+    // Build the sparse encodings this entry needs, lazily.
+    let mut ell: Option<EllBuffers> = None;
+    let mut coo: Option<CooBuffers> = None;
+    let mut hub: Option<HubSplit> = None;
+
+    let need = |name: &str| entry.inputs.iter().any(|i| i.name == name);
+
+    if need("colind") || need("mask") || (need("val") && !need("row")) {
+        let w = entry
+            .param_usize("w")
+            .ok_or_else(|| anyhow!("{}: missing w", entry.name))?;
+        ell = Some(
+            EllBuffers::from_csr(g, n_pad, w)
+                .map_err(|e| anyhow!("{}: {e}", entry.name))?,
+        );
+    }
+    if need("row") {
+        let nnz_pad = entry
+            .param_usize("nnz_pad")
+            .ok_or_else(|| anyhow!("{}: missing nnz_pad", entry.name))?;
+        coo = Some(
+            CooBuffers::from_csr(g, nnz_pad)
+                .map_err(|e| anyhow!("{}: {e}", entry.name))?,
+        );
+    }
+    if need("hub_rows") {
+        let w_light = entry
+            .param_usize("w_light")
+            .ok_or_else(|| anyhow!("{}: missing w_light", entry.name))?;
+        let h_pad = entry
+            .param_usize("h_pad")
+            .ok_or_else(|| anyhow!("{}: missing h_pad", entry.name))?;
+        let w_hub = entry
+            .param_usize("w_hub")
+            .ok_or_else(|| anyhow!("{}: missing w_hub", entry.name))?;
+        // Rows that do not fit the light width go to the hub block.
+        hub = Some(
+            HubSplit::from_csr(g, w_light, n_pad, w_light, h_pad, w_hub)
+                .map_err(|e| anyhow!("{}: {e}", entry.name))?,
+        );
+    }
+
+    // The built encodings are moved (not cloned) into tensors — each
+    // field is consumed by exactly one input, and on multi-MB buckets
+    // the saved memcpys dominate the pack cost (EXPERIMENTS §Perf L3-2).
+    let mut out = Vec::with_capacity(entry.inputs.len());
+    for spec in &entry.inputs {
+        let t = match spec.name.as_str() {
+            "colind" => {
+                let e = ell.as_mut().unwrap();
+                Tensor::i32(std::mem::take(&mut e.colind), vec![e.n_pad, e.w])
+            }
+            "mask" => {
+                let e = ell.as_mut().unwrap();
+                Tensor::f32(std::mem::take(&mut e.mask), vec![e.n_pad, e.w])
+            }
+            "val" if coo.is_some() => {
+                let c = coo.as_mut().unwrap();
+                Tensor::f32(std::mem::take(&mut c.val), vec![c.nnz_pad])
+            }
+            "val" => {
+                let e = ell.as_mut().unwrap();
+                // softmax consumes externally-supplied ELL values when
+                // present in `data` (attention pipeline); else edge vals.
+                match data.dense.get("val") {
+                    Some(v) if v.len() == e.n_pad * e.w => {
+                        Tensor::f32(v.clone(), vec![e.n_pad, e.w])
+                    }
+                    Some(_) => bail!("{}: supplied val has wrong size", entry.name),
+                    None => Tensor::f32(std::mem::take(&mut e.val), vec![e.n_pad, e.w]),
+                }
+            }
+            "row" => {
+                let c = coo.as_mut().unwrap();
+                Tensor::i32(std::mem::take(&mut c.row), vec![c.nnz_pad])
+            }
+            "col" => {
+                let c = coo.as_mut().unwrap();
+                Tensor::i32(std::mem::take(&mut c.col), vec![c.nnz_pad])
+            }
+            "light_colind" => {
+                let h = hub.as_mut().unwrap();
+                let (n_pad, w) = (h.light.n_pad, h.light.w);
+                Tensor::i32(std::mem::take(&mut h.light.colind), vec![n_pad, w])
+            }
+            "light_val" => {
+                let h = hub.as_mut().unwrap();
+                let (n_pad, w) = (h.light.n_pad, h.light.w);
+                Tensor::f32(std::mem::take(&mut h.light.val), vec![n_pad, w])
+            }
+            "hub_rows" => {
+                let h = hub.as_mut().unwrap();
+                let n = h.hub_rows.len();
+                Tensor::i32(std::mem::take(&mut h.hub_rows), vec![n])
+            }
+            "hub_colind" => {
+                let h = hub.as_mut().unwrap();
+                let h_pad = entry.param_usize("h_pad").unwrap_or(1);
+                let w_hub = h.hub_colind.len() / h_pad.max(1);
+                Tensor::i32(std::mem::take(&mut h.hub_colind), vec![h_pad, w_hub])
+            }
+            "hub_val" => {
+                let h = hub.as_mut().unwrap();
+                let h_pad = entry.param_usize("h_pad").unwrap_or(1);
+                let w_hub = h.hub_val.len() / h_pad.max(1);
+                Tensor::f32(std::mem::take(&mut h.hub_val), vec![h_pad, w_hub])
+            }
+            // Dense operands, padded to the bucket's row count.
+            dense_name => {
+                let raw = data.dense.get(dense_name).ok_or_else(|| {
+                    anyhow!("{}: missing dense operand {dense_name:?}", entry.name)
+                })?;
+                if spec.shape.len() == 2 && spec.shape[0] == n_pad {
+                    let f = spec.shape[1];
+                    Tensor::f32(pad_rows(raw, f, n_pad)?, vec![n_pad, f])
+                } else {
+                    // Exact-shape operands (weights, bias).
+                    Tensor::f32(raw.clone(), spec.shape.clone())
+                }
+            }
+        };
+        t.check_spec(spec)
+            .map_err(|e| anyhow!("{}: {e}", entry.name))?;
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// Slice an artifact's padded `[n_pad, f]` output back to `[n_rows, f]`.
+pub fn unpad_output(out: Vec<f32>, n_pad: usize, n_rows: usize, f: usize) -> Vec<f32> {
+    assert_eq!(out.len(), n_pad * f);
+    let mut v = out;
+    v.truncate(n_rows * f);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{InputSpec, Manifest};
+    use std::path::Path;
+
+    fn spmm_ell_entry() -> ArtifactEntry {
+        let m = Manifest::parse(
+            Path::new("/x"),
+            r#"{"entries":[{"name":"e","op":"spmm","variant":"ell_r8_f32",
+              "params":{"n_pad":8,"w":4,"f":2,"r":8,"ft":2},
+              "path":"e.hlo.txt",
+              "inputs":[
+                {"name":"colind","dtype":"s32","shape":[8,4]},
+                {"name":"val","dtype":"f32","shape":[8,4]},
+                {"name":"b","dtype":"f32","shape":[8,2]}]}]}"#,
+        )
+        .unwrap();
+        m.entries[0].clone()
+    }
+
+    fn tiny_graph() -> Csr {
+        Csr::from_rows(3, vec![vec![(1, 2.0)], vec![(0, 3.0), (2, 4.0)], vec![]])
+    }
+
+    #[test]
+    fn pack_ell_spmm() {
+        let g = tiny_graph();
+        let data = OpData::new().with("b", vec![1.0; 6]); // 3 rows x f=2
+        let ts = pack_inputs(&spmm_ell_entry(), &g, &data).unwrap();
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts[0].shape(), &[8, 4]);
+        // b padded from 3 rows to 8
+        assert_eq!(ts[2].shape(), &[8, 2]);
+        if let Tensor::F32 { data, .. } = &ts[2] {
+            assert_eq!(&data[..6], &[1.0; 6]);
+            assert!(data[6..].iter().all(|&x| x == 0.0));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn pack_missing_dense_errors() {
+        let g = tiny_graph();
+        let err = pack_inputs(&spmm_ell_entry(), &g, &OpData::new());
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("b"));
+    }
+
+    #[test]
+    fn pack_graph_too_big_errors() {
+        let g = Csr::from_rows(
+            9,
+            (0..9).map(|i| vec![((i as u32 + 1) % 9, 1.0f32)]).collect(),
+        );
+        let data = OpData::new().with("b", vec![0.0; 18]);
+        assert!(pack_inputs(&spmm_ell_entry(), &g, &data).is_err());
+    }
+
+    #[test]
+    fn unpad_slices() {
+        let out = unpad_output(vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0], 3, 2, 2);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pad_rows_rejects_ragged() {
+        assert!(pad_rows(&[1.0, 2.0, 3.0], 2, 4).is_err());
+    }
+}

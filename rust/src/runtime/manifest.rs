@@ -1,0 +1,209 @@
+//! Artifact manifest: the contract between the AOT compile path and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named input of an artifact (call order is significant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub dtype: String, // "f32" | "s32"
+    pub shape: Vec<usize>,
+}
+
+/// One compiled artifact: an (op, variant, shape-bucket) instantiation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub op: String,
+    pub variant: String,
+    pub params: BTreeMap<String, i64>,
+    pub path: PathBuf, // absolute
+    pub inputs: Vec<InputSpec>,
+    /// Preset tag this bucket was sized for (informational).
+    pub preset_tag: Option<String>,
+}
+
+impl ArtifactEntry {
+    pub fn param(&self, key: &str) -> Option<i64> {
+        self.params.get(key).copied()
+    }
+    pub fn param_usize(&self, key: &str) -> Option<usize> {
+        self.param(key).and_then(|v| usize::try_from(v).ok())
+    }
+    /// The preset tag this bucket was sized for (informational).
+    pub fn preset(&self) -> Option<&str> {
+        self.preset_tag.as_deref()
+    }
+    /// Whether this is a probe-size (n_pad = 512) bucket.
+    pub fn is_probe(&self) -> bool {
+        self.name.contains("_probe_")
+    }
+}
+
+/// The parsed manifest: all artifacts under one directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts`", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let entries_json = root
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: missing entries[]"))?;
+        let mut entries = Vec::with_capacity(entries_json.len());
+        for e in entries_json {
+            let name = e
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let op = e.get("op").as_str().unwrap_or_default().to_string();
+            let variant = e.get("variant").as_str().unwrap_or_default().to_string();
+            let rel = e
+                .get("path")
+                .as_str()
+                .ok_or_else(|| anyhow!("entry {name}: missing path"))?;
+            let mut params = BTreeMap::new();
+            let mut preset_tag = None;
+            if let Some(obj) = e.get("params").as_obj() {
+                for (k, v) in obj {
+                    if let Some(i) = v.as_i64() {
+                        params.insert(k.clone(), i);
+                    } else if let Some(s) = v.as_str() {
+                        if k == "preset" {
+                            preset_tag = Some(s.to_string());
+                        }
+                    }
+                }
+            }
+            let mut inputs = Vec::new();
+            for inp in e.get("inputs").as_arr().unwrap_or(&[]) {
+                let shape = inp
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                inputs.push(InputSpec {
+                    name: inp.get("name").as_str().unwrap_or_default().to_string(),
+                    dtype: inp.get("dtype").as_str().unwrap_or_default().to_string(),
+                    shape,
+                });
+            }
+            if op.is_empty() || variant.is_empty() || inputs.is_empty() {
+                bail!("entry {name}: incomplete record");
+            }
+            entries.push(ArtifactEntry {
+                name,
+                op,
+                variant,
+                params,
+                path: dir.join(rel),
+                inputs,
+                preset_tag,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All entries for an op at a given feature width and size class.
+    /// `f = None` matches ops without an F parameter (softmax).
+    pub fn candidates(
+        &self,
+        op: &str,
+        f: Option<usize>,
+        probe: bool,
+    ) -> Vec<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.is_probe() == probe)
+            .filter(|e| match f {
+                Some(f) => e.param_usize("f") == Some(f),
+                None => true,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "jax": "0.8.2",
+      "entries": [
+        {"name": "spmm_base_er_s_full_F64", "op": "spmm",
+         "variant": "baseline_scatter",
+         "params": {"n_pad": 4096, "w": 32, "f": 64, "preset": "er_s",
+                    "nnz_pad": 32768},
+         "path": "spmm_base_er_s_full_F64.hlo.txt",
+         "inputs": [
+            {"name": "row", "dtype": "s32", "shape": [32768]},
+            {"name": "col", "dtype": "s32", "shape": [32768]},
+            {"name": "val", "dtype": "f32", "shape": [32768]},
+            {"name": "b", "dtype": "f32", "shape": [4096, 64]}]},
+        {"name": "spmm_ell_r8_f32_er_s_probe_F64", "op": "spmm",
+         "variant": "ell_r8_f32",
+         "params": {"n_pad": 512, "w": 32, "f": 64, "r": 8, "ft": 32,
+                    "preset": "er_s"},
+         "path": "spmm_ell_r8_f32_er_s_probe_F64.hlo.txt",
+         "inputs": [
+            {"name": "colind", "dtype": "s32", "shape": [512, 32]},
+            {"name": "val", "dtype": "f32", "shape": [512, 32]},
+            {"name": "b", "dtype": "f32", "shape": [512, 64]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp/arts"), SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.by_name("spmm_base_er_s_full_F64").unwrap();
+        assert_eq!(e.op, "spmm");
+        assert_eq!(e.param_usize("nnz_pad"), Some(32768));
+        assert_eq!(e.preset(), Some("er_s"));
+        assert!(!e.is_probe());
+        assert_eq!(e.path, Path::new("/tmp/arts/spmm_base_er_s_full_F64.hlo.txt"));
+        assert_eq!(e.inputs[3].shape, vec![4096, 64]);
+    }
+
+    #[test]
+    fn candidates_filter() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        assert_eq!(m.candidates("spmm", Some(64), false).len(), 1);
+        assert_eq!(m.candidates("spmm", Some(64), true).len(), 1);
+        assert_eq!(m.candidates("spmm", Some(128), false).len(), 0);
+        assert_eq!(m.candidates("sddmm", Some(64), false).len(), 0);
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        let bad = r#"{"entries": [{"name": "x", "op": "spmm",
+            "variant": "v", "path": "p", "inputs": []}]}"#;
+        assert!(Manifest::parse(Path::new("/x"), bad).is_err());
+    }
+}

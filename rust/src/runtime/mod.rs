@@ -1,0 +1,11 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) produced by
+//! `python/compile/aot.py`, compiles them once, and executes them on the
+//! request path. Python never runs here.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::Device;
+pub use manifest::{ArtifactEntry, InputSpec, Manifest};
+pub use tensor::Tensor;

@@ -1,0 +1,104 @@
+//! Host-side tensors handed to the PJRT runtime.
+//!
+//! A deliberately tiny type: dense row-major data + shape, f32 or i32.
+//! Shape is validated against the artifact's `InputSpec` at call time so
+//! a packing bug fails loudly instead of feeding the kernel garbage.
+
+use anyhow::{bail, Result};
+
+use super::manifest::InputSpec;
+
+/// Row-major dense tensor, f32 or i32.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32 { data, shape }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "s32",
+        }
+    }
+
+    /// Check this tensor against an artifact input spec.
+    pub fn check_spec(&self, spec: &InputSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input {}: dtype {} != artifact dtype {}",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            );
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "input {}: shape {:?} != artifact shape {:?}",
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_query() {
+        let t = Tensor::f32(vec![0.0; 6], vec![2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), "f32");
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::i32(vec![1, 2, 3], vec![2, 2]);
+    }
+
+    #[test]
+    fn spec_check() {
+        let spec = InputSpec {
+            name: "b".into(),
+            dtype: "f32".into(),
+            shape: vec![4, 2],
+        };
+        assert!(Tensor::f32(vec![0.0; 8], vec![4, 2]).check_spec(&spec).is_ok());
+        assert!(Tensor::f32(vec![0.0; 8], vec![2, 4]).check_spec(&spec).is_err());
+        assert!(Tensor::i32(vec![0; 8], vec![4, 2]).check_spec(&spec).is_err());
+    }
+}

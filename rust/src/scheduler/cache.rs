@@ -1,0 +1,217 @@
+//! Persistent schedule cache with replay (paper §4.2 + §10).
+//!
+//! Key: `(device_sig, graph_sig, F, op)` — exactly the paper's tuple.
+//! Values record the chosen variant plus the probe evidence (baseline
+//! and candidate medians) so replayed runs can audit why a choice was
+//! made. The file is pretty-printed JSON for diffability.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One cached decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedChoice {
+    pub variant: String, // "baseline" or a candidate variant id
+    pub t_baseline_ms: f64,
+    pub t_star_ms: f64,
+    pub alpha: f64,
+}
+
+/// The cache: an ordered map (stable file output) + optional backing file.
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    path: Option<PathBuf>,
+    entries: BTreeMap<String, CachedChoice>,
+    /// Telemetry counters (§8.6 warm-up vs steady-state accounting).
+    pub hits: usize,
+    pub misses: usize,
+}
+
+/// Compose the paper's cache key.
+pub fn cache_key(device_sig: &str, graph_sig: &str, f: usize, op: &str) -> String {
+    format!("{device_sig}|{graph_sig}|F{f}|{op}")
+}
+
+impl ScheduleCache {
+    /// In-memory cache (tests, `AUTOSAGE_CACHE=""`).
+    pub fn in_memory() -> ScheduleCache {
+        ScheduleCache::default()
+    }
+
+    /// Load from `path`, creating an empty cache if the file is absent.
+    pub fn load(path: &Path) -> Result<ScheduleCache> {
+        let mut cache = ScheduleCache {
+            path: Some(path.to_path_buf()),
+            ..Default::default()
+        };
+        if path.exists() {
+            let text = fs::read_to_string(path)
+                .with_context(|| format!("reading cache {}", path.display()))?;
+            let root = Json::parse(&text).map_err(|e| anyhow!("cache: {e}"))?;
+            if let Some(obj) = root.get("entries").as_obj() {
+                for (k, v) in obj {
+                    cache.entries.insert(
+                        k.clone(),
+                        CachedChoice {
+                            variant: v
+                                .get("variant")
+                                .as_str()
+                                .unwrap_or("baseline")
+                                .to_string(),
+                            t_baseline_ms: v.get("t_baseline_ms").as_f64().unwrap_or(0.0),
+                            t_star_ms: v.get("t_star_ms").as_f64().unwrap_or(0.0),
+                            alpha: v.get("alpha").as_f64().unwrap_or(0.95),
+                        },
+                    );
+                }
+            }
+        }
+        Ok(cache)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<CachedChoice> {
+        let hit = self.entries.get(key).cloned();
+        if hit.is_some() {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        hit
+    }
+
+    /// Peek without touching hit/miss counters.
+    pub fn peek(&self, key: &str) -> Option<&CachedChoice> {
+        self.entries.get(key)
+    }
+
+    pub fn insert(&mut self, key: String, choice: CachedChoice) {
+        self.entries.insert(key, choice);
+    }
+
+    /// Persist to the backing file (no-op for in-memory caches).
+    pub fn save(&self) -> Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let mut obj = BTreeMap::new();
+        for (k, v) in &self.entries {
+            obj.insert(
+                k.clone(),
+                Json::obj(vec![
+                    ("variant", Json::str(v.variant.clone())),
+                    ("t_baseline_ms", Json::num(v.t_baseline_ms)),
+                    ("t_star_ms", Json::num(v.t_star_ms)),
+                    ("alpha", Json::num(v.alpha)),
+                ]),
+            );
+        }
+        let root = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("entries", Json::Obj(obj)),
+        ]);
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).ok();
+        }
+        fs::write(path, root.pretty())
+            .with_context(|| format!("writing cache {}", path.display()))
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Dump entries for the CLI (`autosage cache dump`).
+    pub fn dump(&self) -> Vec<(String, CachedChoice)> {
+        self.entries
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("autosage_cache_tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> CachedChoice {
+        CachedChoice {
+            variant: "ell_r8_f32".into(),
+            t_baseline_ms: 1.5,
+            t_star_ms: 0.4,
+            alpha: 0.95,
+        }
+    }
+
+    #[test]
+    fn key_format_matches_paper_tuple() {
+        let k = cache_key("cpu-1", "abc123", 64, "spmm");
+        assert_eq!(k, "cpu-1|abc123|F64|spmm");
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let path = tmpfile("roundtrip.json");
+        let _ = fs::remove_file(&path);
+        let mut c = ScheduleCache::load(&path).unwrap();
+        assert!(c.is_empty());
+        c.insert(cache_key("d", "g", 64, "spmm"), sample());
+        c.save().unwrap();
+
+        let mut c2 = ScheduleCache::load(&path).unwrap();
+        let got = c2.get(&cache_key("d", "g", 64, "spmm")).unwrap();
+        assert_eq!(got, sample());
+        assert_eq!(c2.hits, 1);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let mut c = ScheduleCache::in_memory();
+        assert!(c.get("nope").is_none());
+        c.insert("k".into(), sample());
+        assert!(c.get("k").is_some());
+        assert_eq!((c.hits, c.misses), (1, 1));
+    }
+
+    #[test]
+    fn different_device_is_different_key() {
+        // Paper §12: cache schema encodes device/toolchain so a cache
+        // from another machine is never reused.
+        assert_ne!(
+            cache_key("cpu-A", "g", 64, "spmm"),
+            cache_key("cpu-B", "g", 64, "spmm")
+        );
+    }
+
+    #[test]
+    fn corrupted_file_is_an_error() {
+        let path = tmpfile("corrupt.json");
+        fs::write(&path, "{not json").unwrap();
+        assert!(ScheduleCache::load(&path).is_err());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn in_memory_save_is_noop() {
+        let mut c = ScheduleCache::in_memory();
+        c.insert("k".into(), sample());
+        c.save().unwrap(); // must not panic or write anywhere
+    }
+}

@@ -1,0 +1,289 @@
+//! Roofline-style candidate estimate (paper §4.2: "shortlist candidates
+//! with a roofline-style estimate").
+//!
+//! The estimate does not need to be accurate in absolute terms — it only
+//! ranks candidates so the micro-probe times just the top-k. It charges
+//! each variant for the bytes it must move on *this* bucket, so ELL
+//! padding waste (the TPU analog of warp load imbalance) and hub-split
+//! savings show up directly.
+
+use crate::runtime::manifest::ArtifactEntry;
+
+use super::features::InputFeatures;
+
+/// Modeled traffic/compute for one candidate on one input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Estimate {
+    pub entry_name: String,
+    pub variant: String,
+    pub bytes: f64,
+    pub flops: f64,
+    /// Roofline score: max(bytes / BW, flops / peak); lower is better.
+    pub score: f64,
+}
+
+/// Device roofline constants. Absolute values only set the balance point
+/// between bytes and flops; ranking is insensitive to modest error. The
+/// defaults model one CPU core with SIMD (this testbed); `calibrate`
+/// can overwrite them from two measured kernels.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceModel {
+    pub mem_bw_gbps: f64,
+    pub peak_gflops: f64,
+    /// Fixed cost per Pallas grid step on this backend. Interpret-mode
+    /// grids run as XLA while-loops with per-step block slice/update
+    /// copies — the CPU analog of CUDA kernel-launch/occupancy overhead,
+    /// and the reason small-`r` row tiles lose here. A real TPU model
+    /// would set this near zero and re-weight VMEM streaming instead.
+    pub step_us: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        DeviceModel { mem_bw_gbps: 8.0, peak_gflops: 8.0, step_us: 50.0 }
+    }
+}
+
+const B4: f64 = 4.0; // bytes per f32 / i32
+
+/// Model bytes/flops for an entry given input features.
+/// Returns None for entries whose variant this model does not cover.
+pub fn estimate_entry(
+    entry: &ArtifactEntry,
+    feats: &InputFeatures,
+    dev: &DeviceModel,
+) -> Option<Estimate> {
+    let f = feats.f as f64;
+    let n_pad = entry.param_usize("n_pad")? as f64;
+    let v = entry.variant.as_str();
+    // Pallas grid-step count (0 for grid-free gather variants and the
+    // vendor baselines).
+    let mut steps = 0.0;
+    let mut panel_bytes = 0.0;
+    if let (Some(r), Some(ft)) = (entry.param_usize("r"), entry.param_usize("ft")) {
+        steps = (n_pad / r as f64) * (f / ft as f64).max(1.0);
+        // Interpret-mode grids re-slice the (n_pad, ft) B/X/Y panel every
+        // step (the emulation of the HBM→VMEM stream), so the panel
+        // traffic scales with steps × n_pad — the term that makes small-r
+        // row tiles non-viable at full size on this backend.
+        panel_bytes = steps * n_pad * ft as f64 * B4;
+    }
+    let (bytes, flops) = match entry.op.as_str() {
+        "spmm" => match v {
+            // COO scatter: nnz-proportional, skew-immune. Scatter-add is
+            // read-modify-write on C (factor 2) plus gathered B rows.
+            "baseline_scatter" => {
+                let nnz_pad = entry.param_usize("nnz_pad")? as f64;
+                let bytes = nnz_pad * (3.0 * B4)          // row/col/val
+                    + nnz_pad * f * B4                    // gather B rows
+                    + 2.0 * nnz_pad * f * B4              // scatter-add C
+                    + n_pad * f * B4;                     // C init
+                (bytes, 2.0 * nnz_pad * f)
+            }
+            // Whole-row gather (grid-free): same slot traffic as the
+            // row-tile kernel, no step overhead.
+            "ell_gather" => {
+                let w = entry.param_usize("w")? as f64;
+                let slots = n_pad * w;
+                let bytes = slots * (2.0 * B4)
+                    + slots * f * B4
+                    + 2.0 * n_pad * f * B4;
+                (bytes, 2.0 * slots * f)
+            }
+            "hub_gather" => {
+                let w_l = entry.param_usize("w_light")? as f64;
+                let h_pad = entry.param_usize("h_pad")? as f64;
+                let w_h = entry.param_usize("w_hub")? as f64;
+                let slots = n_pad * w_l + h_pad * w_h;
+                let bytes = slots * (2.0 * B4)
+                    + slots * f * B4
+                    + 2.0 * n_pad * f * B4
+                    + 2.0 * h_pad * f * B4;
+                (bytes, 2.0 * slots * f)
+            }
+            // Plain ELL row-tile: pays for every padded slot.
+            _ if v.starts_with("ell_") => {
+                let w = entry.param_usize("w")? as f64;
+                let slots = n_pad * w;
+                let bytes = slots * (2.0 * B4)            // colind + val
+                    + slots * f * B4                      // gathered B rows
+                    + 2.0 * n_pad * f * B4;               // B panel + C
+                (bytes, 2.0 * slots * f)
+            }
+            // Hub split: light slots + hub slots + hub scatter.
+            _ if v.starts_with("hub_") => {
+                let w_l = entry.param_usize("w_light")? as f64;
+                let h_pad = entry.param_usize("h_pad")? as f64;
+                let w_h = entry.param_usize("w_hub")? as f64;
+                let slots = n_pad * w_l + h_pad * w_h;
+                let bytes = slots * (2.0 * B4)
+                    + slots * f * B4
+                    + 2.0 * n_pad * f * B4
+                    + 2.0 * h_pad * f * B4;               // hub scatter-add
+                (bytes, 2.0 * slots * f)
+            }
+            _ => return None,
+        },
+        "sddmm" => {
+            // Gather-dot and the ELL kernel move the same data; they
+            // differ in fusion/launch behaviour, which only the probe
+            // can see — the estimate ranks them equal on purpose.
+            if v != "baseline_gather" && !v.starts_with("ell_") {
+                return None;
+            }
+            let w = entry.param_usize("w")? as f64;
+            let slots = n_pad * w;
+            let bytes = slots * (3.0 * B4)                // colind, mask, out
+                + slots * f * B4                          // gathered Y rows
+                + 2.0 * n_pad * f * B4;                   // X + Y panels
+            (bytes, 2.0 * slots * f)
+        }
+        "softmax" => {
+            let w = entry.param_usize("w")? as f64;
+            let slots = n_pad * w;
+            (slots * 3.0 * B4, 4.0 * slots)
+        }
+        "attention" => {
+            let w = entry.param_usize("w")? as f64;
+            let slots = n_pad * w;
+            // SDDMM + softmax + SpMM over the same pattern.
+            let bytes = slots * (8.0 * B4) + 2.0 * slots * f * B4
+                + 4.0 * n_pad * f * B4;
+            (bytes, 4.0 * slots * f + 4.0 * slots)
+        }
+        _ => return None,
+    };
+    let bytes = bytes + panel_bytes;
+    let score = (bytes / (dev.mem_bw_gbps * 1e9))
+        .max(flops / (dev.peak_gflops * 1e9))
+        + steps * dev.step_us * 1e-6;
+    Some(Estimate {
+        entry_name: entry.name.clone(),
+        variant: entry.variant.clone(),
+        bytes,
+        flops,
+        score,
+    })
+}
+
+/// Rank candidates by roofline score (ascending), applying feasibility
+/// gates: wide-lane variants require alignment (vec gating) + the
+/// `allow_vec` toggle; all variants must fit their bucket.
+pub fn shortlist<'a>(
+    entries: &[&'a ArtifactEntry],
+    feats: &InputFeatures,
+    dev: &DeviceModel,
+    allow_vec: bool,
+    top_k: usize,
+) -> Vec<(&'a ArtifactEntry, Estimate)> {
+    let mut scored: Vec<(&ArtifactEntry, Estimate)> = entries
+        .iter()
+        .filter(|e| {
+            // The wide-lane ("vec4") gate: F % 128 == 0.
+            if e.variant.contains("_f128") && !(feats.vec_aligned && allow_vec) {
+                return false;
+            }
+            true
+        })
+        .filter_map(|e| estimate_entry(e, feats, dev).map(|est| (*e, est)))
+        .collect();
+    scored.sort_by(|a, b| a.1.score.partial_cmp(&b.1.score).unwrap());
+    scored.truncate(top_k);
+    scored
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::Path;
+
+    fn fake_manifest() -> Manifest {
+        Manifest::parse(
+            Path::new("/x"),
+            r#"{"entries":[
+          {"name":"base","op":"spmm","variant":"baseline_scatter",
+           "params":{"n_pad":4096,"w":512,"f":64,"nnz_pad":32768},
+           "path":"a","inputs":[{"name":"row","dtype":"s32","shape":[32768]}]},
+          {"name":"ell32","op":"spmm","variant":"ell_r8_f32",
+           "params":{"n_pad":4096,"w":512,"f":64,"r":8,"ft":32},
+           "path":"a","inputs":[{"name":"colind","dtype":"s32","shape":[4096,512]}]},
+          {"name":"ellv","op":"spmm","variant":"ell_r8_f128",
+           "params":{"n_pad":4096,"w":512,"f":64,"r":8,"ft":128},
+           "path":"a","inputs":[{"name":"colind","dtype":"s32","shape":[4096,512]}]},
+          {"name":"hub","op":"spmm","variant":"hub_r8_f32",
+           "params":{"n_pad":4096,"w":512,"f":64,"r":8,"ft":32,
+                     "w_light":8,"h_pad":1024,"w_hub":512},
+           "path":"a","inputs":[{"name":"hub_rows","dtype":"s32","shape":[1024]}]}
+        ]}"#,
+        )
+        .unwrap()
+    }
+
+    fn skewed_feats() -> InputFeatures {
+        InputFeatures {
+            n_rows: 4096,
+            nnz: 330_000,
+            f: 64,
+            avg_deg: 80.0,
+            p50_deg: 4.0,
+            p90_deg: 512.0,
+            p99_deg: 512.0,
+            max_deg: 512,
+            gini: 0.8,
+            cv: 2.0,
+            vec_aligned: false,
+        }
+    }
+
+    #[test]
+    fn hub_split_beats_plain_ell_under_skew() {
+        // Plain ELL at w=512 pays ~16x padding on a skewed graph vs the
+        // hub split's (n*8 + 1024*512) slots — the estimate must rank
+        // the split strictly better.
+        let m = fake_manifest();
+        let feats = skewed_feats();
+        let dev = DeviceModel::default();
+        let ell = estimate_entry(m.by_name("ell32").unwrap(), &feats, &dev).unwrap();
+        let hub = estimate_entry(m.by_name("hub").unwrap(), &feats, &dev).unwrap();
+        assert!(hub.score < ell.score);
+    }
+
+    #[test]
+    fn scatter_baseline_scales_with_nnz_not_padding() {
+        let m = fake_manifest();
+        let feats = skewed_feats();
+        let dev = DeviceModel::default();
+        let base = estimate_entry(m.by_name("base").unwrap(), &feats, &dev).unwrap();
+        let ell = estimate_entry(m.by_name("ell32").unwrap(), &feats, &dev).unwrap();
+        assert!(base.score < ell.score); // 32k nnz vs 2M padded slots
+    }
+
+    #[test]
+    fn vec_gate_blocks_unaligned() {
+        let m = fake_manifest();
+        let entries: Vec<&ArtifactEntry> = m.entries.iter().collect();
+        let feats = skewed_feats(); // f=64 -> not vec aligned
+        let dev = DeviceModel::default();
+        let top = shortlist(&entries, &feats, &dev, true, 10);
+        assert!(top.iter().all(|(e, _)| !e.variant.contains("_f128")));
+
+        let mut aligned = feats.clone();
+        aligned.f = 128;
+        aligned.vec_aligned = true;
+        let top = shortlist(&entries, &aligned, &dev, true, 10);
+        assert!(top.iter().any(|(e, _)| e.variant.contains("_f128")));
+        // AUTOSAGE_VEC=0 disables even when aligned.
+        let top = shortlist(&entries, &aligned, &dev, false, 10);
+        assert!(top.iter().all(|(e, _)| !e.variant.contains("_f128")));
+    }
+
+    #[test]
+    fn shortlist_truncates_and_sorts() {
+        let m = fake_manifest();
+        let entries: Vec<&ArtifactEntry> = m.entries.iter().collect();
+        let top = shortlist(&entries, &skewed_feats(), &DeviceModel::default(), true, 2);
+        assert_eq!(top.len(), 2);
+        assert!(top[0].1.score <= top[1].1.score);
+    }
+}

@@ -1,0 +1,93 @@
+//! Input feature extraction (paper §4.2: "#rows/nnz, degree quantiles,
+//! F, device caps"). These drive the roofline shortlist; the cache key
+//! uses the graph signature, not these floats.
+
+use crate::graph::Csr;
+use crate::util::stats;
+
+/// Features of one (graph, F) scheduling input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputFeatures {
+    pub n_rows: usize,
+    pub nnz: usize,
+    pub f: usize,
+    pub avg_deg: f64,
+    pub p50_deg: f64,
+    pub p90_deg: f64,
+    pub p99_deg: f64,
+    pub max_deg: usize,
+    /// Degree Gini coefficient — skew (0 balanced → 1 hub-dominated).
+    pub gini: f64,
+    /// Degree coefficient of variation — secondary skew measure.
+    pub cv: f64,
+    /// Wide-lane ("vec") alignment: F % 128 == 0 (paper: F % 4 == 0).
+    pub vec_aligned: bool,
+}
+
+impl InputFeatures {
+    pub fn extract(g: &Csr, f: usize) -> InputFeatures {
+        let degs: Vec<f64> = g.degrees().iter().map(|&d| d as f64).collect();
+        let q = |p: f64| {
+            if degs.is_empty() {
+                0.0
+            } else {
+                stats::quantile(&degs, p)
+            }
+        };
+        InputFeatures {
+            n_rows: g.n_rows,
+            nnz: g.nnz(),
+            f,
+            avg_deg: g.avg_degree(),
+            p50_deg: q(0.5),
+            p90_deg: q(0.9),
+            p99_deg: q(0.99),
+            max_deg: g.max_degree(),
+            gini: stats::gini(&degs),
+            cv: stats::cv(&degs),
+            vec_aligned: f % 128 == 0,
+        }
+    }
+
+    /// Heavy-row fraction above a threshold (split-threshold ablation).
+    pub fn heavy_fraction(g: &Csr, threshold: usize) -> f64 {
+        if g.n_rows == 0 {
+            return 0.0;
+        }
+        g.degrees().iter().filter(|&&d| d > threshold).count() as f64
+            / g.n_rows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{erdos_renyi, hub_skew};
+
+    #[test]
+    fn er_features_balanced() {
+        let g = erdos_renyi(2000, 4.0, 32, 3);
+        let f = InputFeatures::extract(&g, 64);
+        assert_eq!(f.n_rows, 2000);
+        assert!((f.avg_deg - 4.0).abs() < 0.4);
+        assert!(f.gini < 0.4, "ER gini {}", f.gini);
+        assert!(!f.vec_aligned);
+    }
+
+    #[test]
+    fn hub_features_skewed() {
+        let g = hub_skew(2000, 4, 0.15, 256, 3);
+        let f = InputFeatures::extract(&g, 128);
+        assert!(f.gini > 0.5, "hub gini {}", f.gini);
+        assert_eq!(f.max_deg, 256);
+        assert!(f.vec_aligned);
+        assert!(f.p99_deg >= 250.0);
+    }
+
+    #[test]
+    fn heavy_fraction_matches_construction() {
+        let g = hub_skew(1000, 4, 0.15, 64, 3);
+        let hf = InputFeatures::heavy_fraction(&g, 32);
+        assert!((hf - 0.15).abs() < 0.01);
+    }
+}

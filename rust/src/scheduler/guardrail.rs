@@ -1,0 +1,129 @@
+//! The guardrail (paper §4.2 + Proposition 1): accept the best probed
+//! candidate iff `t* <= α · t_b`, else fall back to the vendor baseline.
+//! With α ≤ 1 the chosen runtime never exceeds the baseline's on the
+//! probed input — the non-regression guarantee.
+
+/// Outcome of a guardrail evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Choice {
+    /// Candidate accepted (variant id).
+    Candidate(String),
+    /// Fall back to the vendor baseline.
+    Baseline,
+}
+
+impl Choice {
+    pub fn variant(&self) -> &str {
+        match self {
+            Choice::Candidate(v) => v,
+            Choice::Baseline => "baseline",
+        }
+    }
+    pub fn is_baseline(&self) -> bool {
+        matches!(self, Choice::Baseline)
+    }
+}
+
+/// Apply the guardrail to probe results.
+///
+/// `candidates` are (variant, median_ms) pairs from the micro-probe;
+/// `t_b_ms` the probed baseline. Exact pseudocode from the paper:
+/// pick `t* = min`, accept iff `t* <= alpha * t_b`.
+pub fn decide(candidates: &[(String, f64)], t_b_ms: f64, alpha: f64) -> Choice {
+    assert!(alpha > 0.0, "alpha must be positive");
+    let best = candidates
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    match best {
+        Some((variant, t_star)) if *t_star <= alpha * t_b_ms => {
+            Choice::Candidate(variant.clone())
+        }
+        _ => Choice::Baseline,
+    }
+}
+
+/// The chosen runtime implied by a decision (Proposition 1 quantity):
+/// candidate time if accepted, else the baseline time.
+pub fn chosen_time(candidates: &[(String, f64)], t_b_ms: f64, alpha: f64) -> f64 {
+    match decide(candidates, t_b_ms, alpha) {
+        Choice::Baseline => t_b_ms,
+        Choice::Candidate(v) => {
+            candidates.iter().find(|(c, _)| *c == v).map(|(_, t)| *t).unwrap()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn c(v: &str, t: f64) -> (String, f64) {
+        (v.to_string(), t)
+    }
+
+    #[test]
+    fn accepts_clear_win() {
+        let cands = [c("ell_r8_f32", 0.5), c("hub_r8_f32", 0.8)];
+        assert_eq!(
+            decide(&cands, 1.0, 0.95),
+            Choice::Candidate("ell_r8_f32".into())
+        );
+    }
+
+    #[test]
+    fn rejects_marginal_win_below_alpha() {
+        // 0.97 < 1.0 but > 0.95 * 1.0 -> fallback
+        let cands = [c("ell_r8_f32", 0.97)];
+        assert_eq!(decide(&cands, 1.0, 0.95), Choice::Baseline);
+    }
+
+    #[test]
+    fn alpha_098_accepts_more_than_095() {
+        // The paper's §8.3: larger alpha prefers candidates more often
+        // (accepts smaller margins).
+        let cands = [c("x", 0.97)];
+        assert_eq!(decide(&cands, 1.0, 0.98).variant(), "x");
+        assert!(decide(&cands, 1.0, 0.95).is_baseline());
+    }
+
+    #[test]
+    fn empty_candidates_fall_back() {
+        assert!(decide(&[], 1.0, 0.95).is_baseline());
+    }
+
+    #[test]
+    fn proposition_1_non_regression_property() {
+        // For any randomized probe outcome and any alpha <= 1,
+        // chosen_time <= t_b. (Property test over 10k random cases.)
+        let mut rng = Rng::new(2025);
+        for _ in 0..10_000 {
+            let t_b = rng.next_f64() * 10.0 + 1e-3;
+            let n = rng.below(5);
+            let cands: Vec<(String, f64)> = (0..n)
+                .map(|i| c(&format!("v{i}"), rng.next_f64() * 20.0 + 1e-4))
+                .collect();
+            let alpha = 0.5 + rng.next_f64() * 0.5; // (0.5, 1.0]
+            let t = chosen_time(&cands, t_b, alpha);
+            assert!(
+                t <= t_b + 1e-12,
+                "regression: chosen {t} > baseline {t_b} (alpha {alpha})"
+            );
+        }
+    }
+
+    #[test]
+    fn alpha_above_one_can_regress_hence_config_forbids_it() {
+        // Documented edge: alpha > 1 breaks Prop 1; Config::validate
+        // rejects it. Show the counterexample here.
+        let cands = [c("v", 1.05)];
+        let t = chosen_time(&cands, 1.0, 1.1);
+        assert!(t > 1.0);
+    }
+
+    #[test]
+    fn ties_resolved_to_first_minimum() {
+        let cands = [c("a", 0.5), c("b", 0.5)];
+        assert_eq!(decide(&cands, 1.0, 0.95).variant(), "a");
+    }
+}

@@ -1,0 +1,567 @@
+//! The AutoSAGE scheduler (paper §4.2): features → roofline estimate →
+//! micro-probe → guardrail, with a persistent per-(device, graph, F, op)
+//! decision cache and replay-only mode.
+
+pub mod cache;
+pub mod estimate;
+pub mod features;
+pub mod guardrail;
+pub mod probe;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::graph::signature::graph_signature;
+use crate::graph::Csr;
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::runtime::Device;
+
+pub use cache::{cache_key, CachedChoice, ScheduleCache};
+pub use estimate::DeviceModel;
+pub use features::InputFeatures;
+pub use guardrail::Choice;
+pub use probe::ProbeReport;
+
+/// The scheduled operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    Spmm,
+    Sddmm,
+    Softmax,
+    Attention,
+}
+
+impl Op {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Op::Spmm => "spmm",
+            Op::Sddmm => "sddmm",
+            Op::Softmax => "softmax",
+            Op::Attention => "attention",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Op> {
+        match s {
+            "spmm" => Some(Op::Spmm),
+            "sddmm" => Some(Op::Sddmm),
+            "softmax" => Some(Op::Softmax),
+            "attention" => Some(Op::Attention),
+            _ => None,
+        }
+    }
+
+    /// The vendor-baseline variant id for this op.
+    pub fn baseline_variant(&self) -> &'static str {
+        match self {
+            Op::Spmm => "baseline_scatter",
+            Op::Sddmm => "baseline_gather",
+            Op::Softmax | Op::Attention => "baseline",
+        }
+    }
+
+    /// Dense operand names the op consumes (probe input synthesis).
+    pub fn dense_operands(&self) -> &'static [&'static str] {
+        match self {
+            Op::Spmm => &["b"],
+            Op::Sddmm => &["x", "y"],
+            Op::Softmax => &[],
+            Op::Attention => &["q", "k", "v"],
+        }
+    }
+
+    /// Whether this op's artifacts carry an `f` parameter.
+    pub fn has_f(&self) -> bool {
+        !matches!(self, Op::Softmax)
+    }
+}
+
+/// Where a decision came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionSource {
+    /// Persistent-cache hit (steady-state replay).
+    Cache,
+    /// Fresh probe run.
+    Probe,
+    /// Replay-only mode, no cache entry → forced baseline.
+    ReplayFallback,
+}
+
+/// The outcome of `autosage_decide` for one (graph, F, op).
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub op: Op,
+    pub f: usize,
+    pub key: String,
+    pub choice: Choice,
+    pub source: DecisionSource,
+    /// Probed medians (0.0 on cache/replay paths for t_star when absent).
+    pub t_baseline_ms: f64,
+    pub t_star_ms: f64,
+    /// Probe wall-clock overhead (0 for cache hits).
+    pub probe_wall_ms: f64,
+}
+
+impl Decision {
+    /// Paper tables' "choice" column: "autosage" or "baseline".
+    pub fn choice_label(&self) -> &'static str {
+        if self.choice.is_baseline() {
+            "baseline"
+        } else {
+            "autosage"
+        }
+    }
+}
+
+/// Padded-slot count of a bucket — the tie-breaker for choosing among
+/// fitting buckets of one variant (less padding = less work). Must be
+/// used consistently by probe-entry selection AND deployment selection,
+/// or the guardrail compares a different bucket than it deploys.
+pub fn bucket_cost(entry: &ArtifactEntry) -> usize {
+    let n_pad = entry.param_usize("n_pad").unwrap_or(usize::MAX / 4);
+    if let Some(nnz_pad) = entry.param_usize("nnz_pad") {
+        return nnz_pad + n_pad;
+    }
+    if let (Some(w_l), Some(h_pad), Some(w_h)) = (
+        entry.param_usize("w_light"),
+        entry.param_usize("h_pad"),
+        entry.param_usize("w_hub"),
+    ) {
+        return n_pad * w_l + h_pad * w_h;
+    }
+    n_pad * entry.param_usize("w").unwrap_or(1)
+}
+
+/// Does a full-size artifact bucket fit this graph?
+pub fn entry_fits(entry: &ArtifactEntry, g: &Csr) -> bool {
+    let Some(n_pad) = entry.param_usize("n_pad") else { return false };
+    if g.n_rows > n_pad || g.n_cols > n_pad {
+        return false;
+    }
+    let v = entry.variant.as_str();
+    if v == "baseline_scatter" || entry.op == "attention" && v == "baseline" {
+        if let Some(nnz_pad) = entry.param_usize("nnz_pad") {
+            if g.nnz() > nnz_pad {
+                return false;
+            }
+        } else {
+            return false;
+        }
+    }
+    if v.starts_with("hub_") {
+        let (Some(w_light), Some(h_pad), Some(w_hub)) = (
+            entry.param_usize("w_light"),
+            entry.param_usize("h_pad"),
+            entry.param_usize("w_hub"),
+        ) else {
+            return false;
+        };
+        let degs = g.degrees();
+        let hubs = degs.iter().filter(|&&d| d > w_light).count();
+        let max_hub = degs.iter().copied().max().unwrap_or(0);
+        return hubs <= h_pad && max_hub <= w_hub;
+    }
+    // ELL-pattern entries (plain spmm/sddmm/softmax/fused attention,
+    // and the ELL side of the gather baselines).
+    if let Some(w) = entry.param_usize("w") {
+        if entry.inputs.iter().any(|i| i.name == "colind" || i.name == "val") {
+            return g.max_degree() <= w;
+        }
+    }
+    true
+}
+
+/// The scheduler: config + device model + decision cache.
+pub struct Scheduler {
+    pub cfg: Config,
+    pub dev_model: DeviceModel,
+    pub cache: ScheduleCache,
+    pub probe_seed: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: Config) -> Result<Scheduler> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let cache = if cfg.cache_path.is_empty() {
+            ScheduleCache::in_memory()
+        } else {
+            ScheduleCache::load(std::path::Path::new(&cfg.cache_path))?
+        };
+        Ok(Scheduler {
+            cfg,
+            dev_model: DeviceModel::default(),
+            cache,
+            probe_seed: 0xA0705A6E,
+        })
+    }
+
+    /// `autosage_decide` (paper §4.2 pseudocode): cache → shortlist →
+    /// probe → guardrail → cache.
+    pub fn decide(
+        &mut self,
+        dev: &Device,
+        manifest: &Manifest,
+        g: &Csr,
+        op: Op,
+        f: usize,
+    ) -> Result<(Decision, Option<ProbeReport>)> {
+        let key = cache_key(
+            &dev.signature(),
+            &graph_signature(g),
+            if op.has_f() { f } else { 0 },
+            op.as_str(),
+        );
+
+        // 1. Cache hit → replay.
+        if let Some(hit) = self.cache.get(&key) {
+            let choice = if hit.variant == "baseline" {
+                Choice::Baseline
+            } else {
+                Choice::Candidate(hit.variant.clone())
+            };
+            return Ok((
+                Decision {
+                    op,
+                    f,
+                    key,
+                    choice,
+                    source: DecisionSource::Cache,
+                    t_baseline_ms: hit.t_baseline_ms,
+                    t_star_ms: hit.t_star_ms,
+                    probe_wall_ms: 0.0,
+                },
+                None,
+            ));
+        }
+
+        // 2. Replay-only mode: miss → guaranteed-safe baseline.
+        if self.cfg.replay_only {
+            return Ok((
+                Decision {
+                    op,
+                    f,
+                    key,
+                    choice: Choice::Baseline,
+                    source: DecisionSource::ReplayFallback,
+                    t_baseline_ms: 0.0,
+                    t_star_ms: 0.0,
+                    probe_wall_ms: 0.0,
+                },
+                None,
+            ));
+        }
+
+        // 3. Shortlist by estimating the FULL-size candidates (their
+        //    cost is what the decision commits to — grid kernels have
+        //    per-step costs that grow with n_pad, so scoring the probe
+        //    bucket would not extrapolate), then probe each winner's
+        //    probe-size twin.
+        let fq = if op.has_f() { Some(f) } else { None };
+        // Small-enough inputs are probed on their full bucket — the
+        // guardrail is then exact on the real input (Prop. 1); larger
+        // ones probe an induced subgraph and scale by the estimate.
+        let full_probe = g.n_rows <= self.cfg.probe_full_max_rows;
+        let probe_entries = manifest.candidates(op.as_str(), fq, !full_probe);
+        let sub = if full_probe {
+            g.clone()
+        } else {
+            let probe_sub_rows = probe::probe_rows(g.n_rows, &self.cfg);
+            g.probe_sample(probe_sub_rows, self.probe_seed)
+        };
+        let baseline = probe_entries
+            .iter()
+            .filter(|e| e.variant == op.baseline_variant() && entry_fits(e, &sub))
+            .min_by_key(|e| bucket_cost(e))
+            .copied()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no probe baseline artifact fits op={} f={f} (rows {})",
+                    op.as_str(),
+                    sub.n_rows
+                )
+            })?;
+        let feats = InputFeatures::extract(g, f);
+        let full_cands: Vec<&ArtifactEntry> = manifest
+            .candidates(op.as_str(), fq, false)
+            .into_iter()
+            .filter(|e| e.variant != op.baseline_variant() && entry_fits(e, g))
+            // Grid (row-tile) Pallas kernels are compile/correctness
+            // targets on this CPU backend; they join the executable
+            // candidate space only with AUTOSAGE_GRID=1 (see config.rs).
+            .filter(|e| {
+                self.cfg.allow_grid_kernels || e.param("r").is_none()
+            })
+            .collect();
+        let shortlisted = estimate::shortlist(
+            &full_cands,
+            &feats,
+            &self.dev_model,
+            self.cfg.allow_vec,
+            self.cfg.top_k,
+        );
+        // Map each shortlisted full entry to its probe twin (same
+        // variant; prefer the same preset bucket family), remembering
+        // the estimate's full/probe cost ratio: probe timings are
+        // *scaled by that ratio* before the guardrail, because grid
+        // kernels have per-step costs that grow with n_pad and a raw
+        // 512-row probe would not extrapolate ("estimate refined by
+        // micro-probes", paper §1).
+        let feats_probe = InputFeatures::extract(&sub, f);
+        let mut short_refs: Vec<&ArtifactEntry> = Vec::new();
+        let mut scale_of: std::collections::HashMap<String, f64> =
+            std::collections::HashMap::new();
+        let mut baseline_scale = 1.0;
+        if full_probe {
+            // Probe the shortlisted full-size entries themselves —
+            // no twins, no scaling, Prop. 1 exact. One bucket per
+            // variant: the shortlist is score-ascending, so the first
+            // occurrence is the cheapest fitting bucket.
+            for (full, _) in &shortlisted {
+                if !short_refs
+                    .iter()
+                    .any(|e: &&ArtifactEntry| e.variant == full.variant)
+                {
+                    short_refs.push(*full);
+                }
+            }
+        } else {
+            for (full, est_full) in &shortlisted {
+                let twin = probe_entries
+                    .iter()
+                    .filter(|p| p.variant == full.variant && entry_fits(p, &sub))
+                    .min_by_key(|p| (p.preset_tag != full.preset_tag) as usize)
+                    .copied();
+                if let Some(t) = twin {
+                    if !short_refs.iter().any(|e| e.name == t.name) {
+                        let est_probe =
+                            estimate::estimate_entry(t, &feats_probe, &self.dev_model);
+                        let ratio = match est_probe {
+                            Some(p) if p.score > 0.0 => {
+                                (est_full.score / p.score).clamp(1e-3, 1e6)
+                            }
+                            _ => 1.0,
+                        };
+                        scale_of.insert(t.variant.clone(), ratio);
+                        short_refs.push(t);
+                    }
+                }
+            }
+            // Baseline scale: full vs probe bucket of the vendor path.
+            let bscale = manifest
+                .candidates(op.as_str(), fq, false)
+                .into_iter()
+                .filter(|e| e.variant == op.baseline_variant() && entry_fits(e, g))
+                .filter_map(|fe| {
+                    let ef = estimate::estimate_entry(fe, &feats, &self.dev_model)?;
+                    let ep = estimate::estimate_entry(
+                        baseline,
+                        &feats_probe,
+                        &self.dev_model,
+                    )?;
+                    if ep.score > 0.0 {
+                        Some((ef.score / ep.score).clamp(1e-3, 1e6))
+                    } else {
+                        None
+                    }
+                })
+                .fold(f64::INFINITY, f64::min);
+            if bscale.is_finite() {
+                baseline_scale = bscale;
+            }
+        }
+
+        // 4. Micro-probe (on the subgraph built in step 3).
+        let report = probe::run_probe(
+            dev,
+            op,
+            f,
+            &sub,
+            baseline,
+            &short_refs,
+            &self.cfg,
+            self.probe_seed,
+        )?;
+
+        // 5. Guardrail on estimate-scaled probe timings (predicted
+        //    full-graph medians).
+        let probed: Vec<(String, f64)> = report
+            .candidates
+            .iter()
+            .map(|r| {
+                let s = scale_of.get(&r.variant).copied().unwrap_or(1.0);
+                (r.variant.clone(), r.timing.median_ms * s)
+            })
+            .collect();
+        let t_b = report.baseline.timing.median_ms * baseline_scale;
+        let choice = guardrail::decide(&probed, t_b, self.cfg.alpha);
+        let t_star = probed
+            .iter()
+            .map(|(_, t)| *t)
+            .fold(f64::INFINITY, f64::min);
+
+        // 6. Cache + persist.
+        self.cache.insert(
+            key.clone(),
+            CachedChoice {
+                variant: choice.variant().to_string(),
+                t_baseline_ms: t_b,
+                t_star_ms: if t_star.is_finite() { t_star } else { 0.0 },
+                alpha: self.cfg.alpha,
+            },
+        );
+        self.cache.save()?;
+
+        Ok((
+            Decision {
+                op,
+                f,
+                key,
+                choice,
+                source: DecisionSource::Probe,
+                t_baseline_ms: t_b,
+                t_star_ms: if t_star.is_finite() { t_star } else { 0.0 },
+                probe_wall_ms: report.wall_ms,
+            },
+            Some(report),
+        ))
+    }
+
+    /// Resolve the full-size artifact implementing `decision` on `g`.
+    pub fn select_entry<'m>(
+        &self,
+        manifest: &'m Manifest,
+        g: &Csr,
+        op: Op,
+        f: usize,
+        variant: &str,
+    ) -> Result<&'m ArtifactEntry> {
+        let fq = if op.has_f() { Some(f) } else { None };
+        let variant = if variant == "baseline" {
+            op.baseline_variant()
+        } else {
+            variant
+        };
+        manifest
+            .candidates(op.as_str(), fq, false)
+            .into_iter()
+            .filter(|e| e.variant == variant && entry_fits(e, g))
+            // Smallest fitting bucket = least padding; same metric the
+            // probe used, so the deployed entry is the probed entry.
+            .min_by_key(|e| bucket_cost(e))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no full-size artifact for op={} f={f} variant={variant} \
+                     fitting rows={} max_deg={} nnz={} — extend the catalog",
+                    op.as_str(),
+                    g.n_rows,
+                    g.max_degree(),
+                    g.nnz()
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::Path;
+
+    fn manifest_with_fits() -> Manifest {
+        Manifest::parse(
+            Path::new("/x"),
+            r#"{"entries":[
+          {"name":"full_ell","op":"spmm","variant":"ell_r8_f32",
+           "params":{"n_pad":64,"w":8,"f":32,"r":8,"ft":32},
+           "path":"a","inputs":[{"name":"colind","dtype":"s32","shape":[64,8]},
+             {"name":"val","dtype":"f32","shape":[64,8]},
+             {"name":"b","dtype":"f32","shape":[64,32]}]},
+          {"name":"full_base","op":"spmm","variant":"baseline_scatter",
+           "params":{"n_pad":64,"w":8,"f":32,"nnz_pad":128},
+           "path":"a","inputs":[{"name":"row","dtype":"s32","shape":[128]},
+             {"name":"col","dtype":"s32","shape":[128]},
+             {"name":"val","dtype":"f32","shape":[128]},
+             {"name":"b","dtype":"f32","shape":[64,32]}]},
+          {"name":"full_hub","op":"spmm","variant":"hub_r8_f32",
+           "params":{"n_pad":64,"w":8,"f":32,"r":8,"ft":32,
+                     "w_light":2,"h_pad":4,"w_hub":8},
+           "path":"a","inputs":[{"name":"hub_rows","dtype":"s32","shape":[4]}]}
+        ]}"#,
+        )
+        .unwrap()
+    }
+
+    fn graph(max_deg: usize, n: usize) -> Csr {
+        Csr::from_rows(
+            n,
+            (0..n)
+                .map(|i| {
+                    (0..max_deg.min(if i == 0 { max_deg } else { 1 }))
+                        .map(|k| (((i + k + 1) % n) as u32, 1.0f32))
+                        .collect()
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn op_roundtrip() {
+        for op in [Op::Spmm, Op::Sddmm, Op::Softmax, Op::Attention] {
+            assert_eq!(Op::parse(op.as_str()), Some(op));
+        }
+        assert_eq!(Op::parse("nope"), None);
+    }
+
+    #[test]
+    fn fits_ell_by_max_degree() {
+        let m = manifest_with_fits();
+        let e = m.by_name("full_ell").unwrap();
+        assert!(entry_fits(e, &graph(8, 32)));
+        assert!(!entry_fits(e, &graph(9, 32))); // row 0 degree 9 > w 8
+        assert!(!entry_fits(e, &graph(2, 100))); // rows exceed n_pad
+    }
+
+    #[test]
+    fn fits_scatter_by_nnz() {
+        let m = manifest_with_fits();
+        let e = m.by_name("full_base").unwrap();
+        assert!(entry_fits(e, &graph(8, 32)));
+        let big = Csr::from_rows(
+            60,
+            (0..60)
+                .map(|i| (0..3).map(|k| (((i + k) % 60) as u32, 1.0f32)).collect())
+                .collect(),
+        );
+        assert!(big.nnz() > 128);
+        assert!(!entry_fits(e, &big));
+    }
+
+    #[test]
+    fn fits_hub_by_hub_population() {
+        let m = manifest_with_fits();
+        let e = m.by_name("full_hub").unwrap();
+        // 1 hub (row 0 deg 8 > w_light 2), others deg 1 -> fits
+        assert!(entry_fits(e, &graph(8, 32)));
+        // all rows deg 3 -> 32 hubs > h_pad 4 -> no fit
+        let dense = Csr::from_rows(
+            32,
+            (0..32)
+                .map(|i| (0..3).map(|k| (((i + k) % 32) as u32, 1.0f32)).collect())
+                .collect(),
+        );
+        assert!(!entry_fits(e, &dense));
+    }
+
+    #[test]
+    fn select_entry_prefers_smallest_fit_and_maps_baseline() {
+        let cfg = Config { cache_path: String::new(), ..Config::default() };
+        let s = Scheduler::new(cfg).unwrap();
+        let m = manifest_with_fits();
+        let g = graph(8, 32);
+        let e = s.select_entry(&m, &g, Op::Spmm, 32, "baseline").unwrap();
+        assert_eq!(e.variant, "baseline_scatter");
+        let e = s.select_entry(&m, &g, Op::Spmm, 32, "ell_r8_f32").unwrap();
+        assert_eq!(e.name, "full_ell");
+        assert!(s.select_entry(&m, &g, Op::Spmm, 64, "ell_r8_f32").is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! On-device micro-probe (paper §4.2): time the shortlisted candidates
+//! and the baseline on an induced subgraph (default 2–3% of rows,
+//! min 512) for `n` iterations under a wall-time cap.
+//!
+//! Inputs are uploaded to device buffers once per candidate; the timed
+//! loop is execute + output sync only, mirroring CUDA-event kernel
+//! timing as closely as the PJRT CPU client allows.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::graph::Csr;
+use crate::ops::pack::{pack_inputs, OpData};
+use crate::runtime::manifest::ArtifactEntry;
+use crate::runtime::Device;
+use crate::util::rng::Rng;
+use crate::util::stats::TimingSummary;
+use crate::util::timing::{time_fn, Stopwatch};
+
+use super::Op;
+
+/// Timing of one probed entry.
+#[derive(Debug, Clone)]
+pub struct ProbeResult {
+    pub entry_name: String,
+    pub variant: String,
+    pub timing: TimingSummary,
+}
+
+/// Full probe report for one decision.
+#[derive(Debug, Clone)]
+pub struct ProbeReport {
+    pub probe_rows: usize,
+    pub baseline: ProbeResult,
+    pub candidates: Vec<ProbeResult>,
+    /// Total wall time of the probe phase (overhead accounting, §8.6).
+    pub wall_ms: f64,
+}
+
+/// Number of probe rows for a graph (paper default: 2% of rows, min 512).
+pub fn probe_rows(n_rows: usize, cfg: &Config) -> usize {
+    ((n_rows as f64 * cfg.probe_frac) as usize)
+        .max(cfg.probe_min_rows)
+        .min(n_rows)
+}
+
+/// Deterministic random dense operands for an op at the probe size.
+/// Probe timings must not depend on operand values, but deterministic
+/// inputs keep replays bit-identical.
+pub fn synth_operands(op: Op, n_rows: usize, f: usize, seed: u64) -> OpData {
+    let mut rng = Rng::new(seed);
+    let mut data = OpData::new();
+    for name in op.dense_operands() {
+        let v: Vec<f32> = (0..n_rows * f).map(|_| rng.next_f32() - 0.5).collect();
+        data = data.with(name, v);
+    }
+    data
+}
+
+/// Time one entry on `g` with operands `data`: upload once, then timed
+/// execute+sync iterations.
+pub fn time_entry(
+    dev: &Device,
+    entry: &ArtifactEntry,
+    g: &Csr,
+    data: &OpData,
+    warmup: usize,
+    iters: usize,
+    cap_ms: f64,
+) -> Result<TimingSummary> {
+    let exe = dev.load(entry)?;
+    let inputs = pack_inputs(entry, g, data)?;
+    let bufs = dev.upload(entry, &inputs)?;
+    let mut err: Option<anyhow::Error> = None;
+    let summary = time_fn(
+        || {
+            if err.is_some() {
+                return;
+            }
+            match dev.execute_buffers(&exe, &bufs) {
+                Ok(out) => {
+                    if let Err(e) = dev.sync(&out) {
+                        err = Some(e);
+                    }
+                }
+                Err(e) => err = Some(e),
+            }
+        },
+        warmup,
+        iters,
+        cap_ms,
+    );
+    match err {
+        Some(e) => Err(e),
+        None => Ok(summary),
+    }
+}
+
+/// Run the micro-probe: baseline + each shortlisted candidate on the
+/// induced subgraph `sub` (built once by the caller, who also needs it
+/// for bucket-fit checks — see `Scheduler::decide`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_probe(
+    dev: &Device,
+    op: Op,
+    f: usize,
+    sub: &Csr,
+    baseline: &ArtifactEntry,
+    shortlisted: &[&ArtifactEntry],
+    cfg: &Config,
+    seed: u64,
+) -> Result<ProbeReport> {
+    let sw = Stopwatch::start();
+    let rows = sub.n_rows;
+    let data = synth_operands(op, sub.n_rows, f, seed ^ 0x5eed);
+
+    let time = |e: &ArtifactEntry| -> Result<ProbeResult> {
+        let timing = time_entry(dev, e, sub, &data, 1, cfg.probe_iters, cfg.probe_cap_ms)?;
+        Ok(ProbeResult {
+            entry_name: e.name.clone(),
+            variant: e.variant.clone(),
+            timing,
+        })
+    };
+
+    let baseline_res = time(baseline)
+        .map_err(|e| anyhow!("probing baseline {}: {e}", baseline.name))?;
+    let mut candidates = Vec::with_capacity(shortlisted.len());
+    for e in shortlisted {
+        candidates.push(time(e).map_err(|er| anyhow!("probing {}: {er}", e.name))?);
+    }
+    Ok(ProbeReport {
+        probe_rows: rows,
+        baseline: baseline_res,
+        candidates,
+        wall_ms: sw.ms(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_rows_respects_min_and_frac() {
+        let cfg = Config::default(); // frac 0.02, min 512
+        assert_eq!(probe_rows(4096, &cfg), 512); // 2% = 82 -> min 512
+        assert_eq!(probe_rows(100_000, &cfg), 2000);
+        assert_eq!(probe_rows(300, &cfg), 300); // capped at graph size
+    }
+
+    #[test]
+    fn synth_operands_deterministic_and_shaped() {
+        let a = synth_operands(Op::Sddmm, 16, 8, 7);
+        let b = synth_operands(Op::Sddmm, 16, 8, 7);
+        assert_eq!(a.dense.get("x"), b.dense.get("x"));
+        assert_eq!(a.dense.get("y").unwrap().len(), 128);
+        assert!(a.dense.get("b").is_none());
+        let c = synth_operands(Op::Spmm, 16, 8, 7);
+        assert!(c.dense.contains_key("b"));
+        let d = synth_operands(Op::Attention, 4, 4, 1);
+        assert_eq!(d.dense.len(), 3);
+    }
+}

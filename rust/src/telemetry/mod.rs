@@ -1,0 +1,185 @@
+//! Telemetry (paper §5 + §10): CSV event logs with `.meta.json`
+//! sidecars recording device, toolchain and env toggles, so every CSV
+//! is self-describing and replayable.
+
+use std::cell::RefCell;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::scheduler::{Decision, DecisionSource};
+use crate::util::csv::CsvTable;
+use crate::util::json::Json;
+
+/// Event sink. With `dir = None` events are kept in memory only
+/// (inspectable in tests); with a directory they flush to
+/// `events.csv` + `events.csv.meta.json`.
+pub struct Telemetry {
+    dir: Option<PathBuf>,
+    events: RefCell<CsvTable>,
+    device_sig: String,
+}
+
+const HEADER: &[&str] = &[
+    "event", "op", "f", "variant", "source", "t_baseline_ms", "t_star_ms",
+    "probe_wall_ms", "key",
+];
+
+impl Telemetry {
+    pub fn new(dir: Option<&Path>, device_sig: &str) -> Telemetry {
+        Telemetry {
+            dir: dir.map(|d| d.to_path_buf()),
+            events: RefCell::new(CsvTable::new(HEADER)),
+            device_sig: device_sig.to_string(),
+        }
+    }
+
+    /// Record a scheduling decision.
+    pub fn decision(&self, d: &Decision) {
+        let source = match d.source {
+            DecisionSource::Cache => "cache",
+            DecisionSource::Probe => "probe",
+            DecisionSource::ReplayFallback => "replay_fallback",
+        };
+        self.events.borrow_mut().push(vec![
+            "decision".into(),
+            d.op.as_str().into(),
+            d.f.to_string(),
+            d.choice.variant().into(),
+            source.into(),
+            format!("{:.6}", d.t_baseline_ms),
+            format!("{:.6}", d.t_star_ms),
+            format!("{:.6}", d.probe_wall_ms),
+            d.key.clone(),
+        ]);
+    }
+
+    /// Record a probed candidate sample.
+    pub fn probe_sample(&self, op: &str, f: usize, variant: &str, median_ms: f64) {
+        self.events.borrow_mut().push(vec![
+            "probe".into(),
+            op.into(),
+            f.to_string(),
+            variant.into(),
+            "probe".into(),
+            String::new(),
+            format!("{median_ms:.6}"),
+            String::new(),
+            String::new(),
+        ]);
+    }
+
+    pub fn n_events(&self) -> usize {
+        self.events.borrow().n_rows()
+    }
+
+    /// Rows matching an event kind (test/CLI inspection).
+    pub fn events_of(&self, kind: &str) -> Vec<Vec<String>> {
+        self.events
+            .borrow()
+            .rows()
+            .iter()
+            .filter(|r| r[0] == kind)
+            .cloned()
+            .collect()
+    }
+
+    /// Flush `events.csv` + `.meta.json` sidecar. No-op in memory mode.
+    pub fn flush(&self, cfg: &Config) -> Result<Option<PathBuf>> {
+        let Some(dir) = &self.dir else { return Ok(None) };
+        fs::create_dir_all(dir)?;
+        let csv_path = dir.join("events.csv");
+        self.events.borrow().write_to(&csv_path)?;
+        let meta = meta_sidecar(&self.device_sig, cfg);
+        fs::write(
+            dir.join("events.csv.meta.json"),
+            meta.pretty(),
+        )?;
+        Ok(Some(csv_path))
+    }
+}
+
+/// The `.meta.json` sidecar content (paper §10: "GPU/SM, Torch/CUDA
+/// versions, and env vars" → here: device signature, rustc/runtime
+/// identity, and all AUTOSAGE_* toggles).
+pub fn meta_sidecar(device_sig: &str, cfg: &Config) -> Json {
+    let env_toggles: Vec<(String, Json)> = std::env::vars()
+        .filter(|(k, _)| k.starts_with("AUTOSAGE_"))
+        .map(|(k, v)| (k, Json::str(v)))
+        .collect();
+    Json::obj(vec![
+        ("device_sig", Json::str(device_sig)),
+        ("runtime", Json::str("xla-0.1.6/pjrt-cpu")),
+        ("alpha", Json::num(cfg.alpha)),
+        ("probe_frac", Json::num(cfg.probe_frac)),
+        ("probe_iters", Json::num(cfg.probe_iters as f64)),
+        ("probe_cap_ms", Json::num(cfg.probe_cap_ms)),
+        ("top_k", Json::num(cfg.top_k as f64)),
+        ("allow_vec", Json::from(cfg.allow_vec)),
+        ("replay_only", Json::from(cfg.replay_only)),
+        (
+            "env",
+            Json::Obj(env_toggles.into_iter().collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{Choice, Op};
+
+    fn decision() -> Decision {
+        Decision {
+            op: Op::Spmm,
+            f: 64,
+            key: "d|g|F64|spmm".into(),
+            choice: Choice::Candidate("ell_r8_f32".into()),
+            source: DecisionSource::Probe,
+            t_baseline_ms: 1.0,
+            t_star_ms: 0.5,
+            probe_wall_ms: 12.0,
+        }
+    }
+
+    #[test]
+    fn records_events_in_memory() {
+        let t = Telemetry::new(None, "dev");
+        t.decision(&decision());
+        t.probe_sample("spmm", 64, "hub_r8_f32", 0.7);
+        assert_eq!(t.n_events(), 2);
+        let d = t.events_of("decision");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0][3], "ell_r8_f32");
+        assert!(t.flush(&Config::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn flush_writes_csv_and_sidecar() {
+        let dir = std::env::temp_dir().join("autosage_telemetry_test");
+        let _ = fs::remove_dir_all(&dir);
+        let t = Telemetry::new(Some(&dir), "devsig");
+        t.decision(&decision());
+        let path = t.flush(&Config::default()).unwrap().unwrap();
+        assert!(path.exists());
+        let meta_raw =
+            fs::read_to_string(dir.join("events.csv.meta.json")).unwrap();
+        let meta = Json::parse(&meta_raw).unwrap();
+        assert_eq!(meta.get("device_sig").as_str(), Some("devsig"));
+        assert_eq!(meta.get("alpha").as_f64(), Some(0.95));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sidecar_captures_autosage_env() {
+        std::env::set_var("AUTOSAGE_TEST_SIDECAR", "42");
+        let meta = meta_sidecar("d", &Config::default());
+        assert_eq!(
+            meta.get("env").get("AUTOSAGE_TEST_SIDECAR").as_str(),
+            Some("42")
+        );
+        std::env::remove_var("AUTOSAGE_TEST_SIDECAR");
+    }
+}

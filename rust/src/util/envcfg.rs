@@ -1,0 +1,73 @@
+//! Typed environment-toggle parsing for the `AUTOSAGE_*` controls
+//! (paper §5: deployment toggles): probe budget, thresholds,
+//! vectorization, cache path, replay-only mode.
+
+use std::env;
+
+/// Read an env var through a parser, with a default on absence.
+/// Malformed values are an error (silently ignoring a typo'd toggle is
+/// exactly the failure mode the paper's telemetry is meant to prevent).
+pub fn parse_env<T, F>(name: &str, default: T, parse: F) -> Result<T, String>
+where
+    F: FnOnce(&str) -> Option<T>,
+{
+    match env::var(name) {
+        Err(_) => Ok(default),
+        Ok(raw) => parse(raw.trim())
+            .ok_or_else(|| format!("invalid value for {name}: {raw:?}")),
+    }
+}
+
+pub fn env_f64(name: &str, default: f64) -> Result<f64, String> {
+    parse_env(name, default, |s| s.parse().ok())
+}
+
+pub fn env_usize(name: &str, default: usize) -> Result<usize, String> {
+    parse_env(name, default, |s| s.parse().ok())
+}
+
+pub fn env_bool(name: &str, default: bool) -> Result<bool, String> {
+    parse_env(name, default, |s| match s.to_ascii_lowercase().as_str() {
+        "1" | "true" | "yes" | "on" => Some(true),
+        "0" | "false" | "no" | "off" => Some(false),
+        _ => None,
+    })
+}
+
+pub fn env_string(name: &str, default: &str) -> String {
+    env::var(name).unwrap_or_else(|_| default.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: env-var tests mutate process state; each test uses a unique
+    // variable name to stay independent under parallel test threads.
+
+    #[test]
+    fn default_when_absent() {
+        assert_eq!(env_f64("AUTOSAGE_TEST_ABSENT_F", 0.95).unwrap(), 0.95);
+        assert_eq!(env_usize("AUTOSAGE_TEST_ABSENT_U", 3).unwrap(), 3);
+        assert!(env_bool("AUTOSAGE_TEST_ABSENT_B", true).unwrap());
+    }
+
+    #[test]
+    fn parses_values() {
+        env::set_var("AUTOSAGE_TEST_F", "0.98");
+        assert_eq!(env_f64("AUTOSAGE_TEST_F", 0.0).unwrap(), 0.98);
+        env::set_var("AUTOSAGE_TEST_U", " 512 ");
+        assert_eq!(env_usize("AUTOSAGE_TEST_U", 0).unwrap(), 512);
+        env::set_var("AUTOSAGE_TEST_B1", "on");
+        assert!(env_bool("AUTOSAGE_TEST_B1", false).unwrap());
+        env::set_var("AUTOSAGE_TEST_B0", "FALSE");
+        assert!(!env_bool("AUTOSAGE_TEST_B0", true).unwrap());
+    }
+
+    #[test]
+    fn malformed_is_error() {
+        env::set_var("AUTOSAGE_TEST_BAD", "not-a-number");
+        assert!(env_f64("AUTOSAGE_TEST_BAD", 1.0).is_err());
+        assert!(env_bool("AUTOSAGE_TEST_BAD", false).is_err());
+    }
+}

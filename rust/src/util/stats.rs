@@ -1,0 +1,164 @@
+//! Descriptive statistics used by feature extraction (degree quantiles,
+//! skew) and by the timing harness (median-of-n, the paper's protocol).
+
+/// Quantile of a sorted slice with linear interpolation (type-7, the
+/// numpy default — keeps our feature values comparable to the paper's).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Quantile of an unsorted slice (copies + sorts).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+/// Gini coefficient of a non-negative distribution — our degree-skew
+/// feature (0 = perfectly balanced rows, →1 = extreme hub skew).
+pub fn gini(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let total: f64 = v.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let weighted: f64 = v
+        .iter()
+        .enumerate()
+        .map(|(i, x)| (i as f64 + 1.0) * x)
+        .sum();
+    (2.0 * weighted) / (n * total) - (n + 1.0) / n
+}
+
+/// Coefficient of variation (std/mean) — secondary skew feature.
+pub fn cv(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    var.sqrt() / m
+}
+
+/// Summary of repeated timing measurements (milliseconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingSummary {
+    pub n: usize,
+    pub median_ms: f64,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub p90_ms: f64,
+}
+
+impl TimingSummary {
+    pub fn from_ms(samples: &[f64]) -> TimingSummary {
+        assert!(!samples.is_empty());
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        TimingSummary {
+            n: v.len(),
+            median_ms: quantile_sorted(&v, 0.5),
+            mean_ms: mean(&v),
+            min_ms: v[0],
+            max_ms: v[v.len() - 1],
+            p90_ms: quantile_sorted(&v, 0.9),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_match_numpy_type7() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn gini_uniform_zero() {
+        assert!(gini(&[5.0; 100]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gini_extreme_near_one() {
+        let mut xs = vec![0.0; 999];
+        xs.push(1000.0);
+        assert!(gini(&xs) > 0.99);
+    }
+
+    #[test]
+    fn gini_monotone_in_skew() {
+        let balanced = vec![4.0; 100];
+        let mut skewed = vec![1.0; 100];
+        for d in skewed.iter_mut().take(10) {
+            *d = 300.0;
+        }
+        assert!(gini(&skewed) > gini(&balanced));
+    }
+
+    #[test]
+    fn cv_zero_for_constant() {
+        assert_eq!(cv(&[2.0, 2.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn timing_summary_basics() {
+        let s = TimingSummary::from_ms(&[3.0, 1.0, 2.0, 10.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min_ms, 1.0);
+        assert_eq!(s.max_ms, 10.0);
+        assert_eq!(s.median_ms, 2.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_empty_panics() {
+        quantile_sorted(&[], 0.5);
+    }
+}

@@ -1,0 +1,82 @@
+//! Wall-clock timing loop used by the micro-probe and the bench harness:
+//! warm-up, then `iters` timed repetitions bounded by a wall-time cap —
+//! the paper's protocol (§6: medians over 10–15 iterations after warm-up,
+//! probe loops with a wall-time cap).
+
+use std::time::Instant;
+
+use super::stats::TimingSummary;
+
+/// Run `f` `warmup` times untimed, then up to `iters` timed runs, stopping
+/// early once the *timed* phase exceeds `cap_ms` (at least one timed run
+/// always happens). Returns a median-based summary.
+pub fn time_fn<F: FnMut()>(
+    mut f: F,
+    warmup: usize,
+    iters: usize,
+    cap_ms: f64,
+) -> TimingSummary {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        if start.elapsed().as_secs_f64() * 1e3 > cap_ms {
+            break;
+        }
+    }
+    TimingSummary::from_ms(&samples)
+}
+
+/// Stopwatch for one-off phase measurements.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_iters_under_cap() {
+        let mut n = 0;
+        let s = time_fn(|| n += 1, 2, 5, 1e9);
+        assert_eq!(n, 7); // 2 warmup + 5 timed
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn cap_stops_early_but_keeps_one() {
+        let mut n = 0;
+        let s = time_fn(
+            || {
+                n += 1;
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            },
+            0,
+            1000,
+            1.0,
+        );
+        assert!(s.n >= 1);
+        assert!(s.n < 1000);
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(sw.ms() >= 1.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Integration: every artifact family's output equals the pure-Rust
+//! oracle on random graphs. Closes the correctness triangle:
+//! Pallas kernel ≡ jnp ref (pytest) ≡ Rust oracle (this file).
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use std::path::Path;
+
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::gen::{erdos_renyi, hub_skew, preset};
+use autosage::ops::reference;
+use autosage::util::rng::Rng;
+
+const TOL: f32 = 2e-3;
+
+fn sage() -> Option<AutoSage> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+        return None;
+    }
+    let mut cfg = Config::default();
+    cfg.cache_path = String::new();
+    Some(AutoSage::new(Path::new("artifacts"), cfg, None).unwrap())
+}
+
+fn dense(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+#[test]
+fn spmm_variants_match_oracle_on_er() {
+    let Some(mut sage) = sage() else { return };
+    let g = erdos_renyi(700, 4.0, 32, 3);
+    let f = 64;
+    let mut rng = Rng::new(1);
+    let b = dense(&mut rng, g.n_rows * f);
+    let want = reference::spmm(&g, &b, f);
+    for variant in ["baseline", "ell_gather", "hub_gather", "ell_r8_f32", "ell_r32_f32"] {
+        let got = sage.spmm_with(&g, &b, f, variant).unwrap();
+        let d = reference::max_abs_diff(&got, &want);
+        assert!(d < TOL, "spmm {variant}: max diff {d}");
+    }
+}
+
+#[test]
+fn spmm_wide_lane_matches_oracle() {
+    let Some(mut sage) = sage() else { return };
+    let g = erdos_renyi(700, 4.0, 32, 5);
+    let f = 128;
+    let mut rng = Rng::new(2);
+    let b = dense(&mut rng, g.n_rows * f);
+    let want = reference::spmm(&g, &b, f);
+    for variant in ["ell_r8_f128", "ell_gather", "baseline"] {
+        let got = sage.spmm_with(&g, &b, f, variant).unwrap();
+        let d = reference::max_abs_diff(&got, &want);
+        assert!(d < TOL, "spmm {variant}: max diff {d}");
+    }
+}
+
+#[test]
+fn spmm_hub_split_matches_oracle_on_skew() {
+    let Some(mut sage) = sage() else { return };
+    // 15% hubs with degree 400 — forces real hub traffic.
+    let g = hub_skew(600, 4, 0.15, 400, 7);
+    let f = 64;
+    let mut rng = Rng::new(3);
+    let b = dense(&mut rng, g.n_rows * f);
+    let want = reference::spmm(&g, &b, f);
+    for variant in ["hub_gather", "hub_r8_f32", "baseline"] {
+        let got = sage.spmm_with(&g, &b, f, variant).unwrap();
+        let d = reference::max_abs_diff(&got, &want);
+        assert!(d < TOL, "spmm {variant}: max diff {d}");
+    }
+}
+
+#[test]
+fn sddmm_variants_match_oracle() {
+    let Some(mut sage) = sage() else { return };
+    let g = erdos_renyi(700, 4.0, 32, 11);
+    let f = 64;
+    let mut rng = Rng::new(4);
+    let x = dense(&mut rng, g.n_rows * f);
+    let y = dense(&mut rng, g.n_rows * f);
+    let want = reference::sddmm(&g, &x, &y, f);
+    for variant in ["baseline", "ell_r8_f32"] {
+        let got = sage.sddmm_with(&g, &x, &y, f, variant).unwrap();
+        assert_eq!(got.len(), g.nnz());
+        let d = reference::max_abs_diff(&got, &want);
+        assert!(d < TOL, "sddmm {variant}: max diff {d}");
+    }
+}
+
+#[test]
+fn softmax_matches_oracle() {
+    let Some(mut sage) = sage() else { return };
+    let g = erdos_renyi(700, 4.0, 32, 13);
+    let mut rng = Rng::new(5);
+    let scores = dense(&mut rng, g.nnz());
+    let want = reference::softmax_rows(&g, &scores);
+    for variant in ["baseline", "ell_r8"] {
+        let got = sage.softmax_with(&g, &scores, variant).unwrap();
+        let d = reference::max_abs_diff(&got, &want);
+        assert!(d < 1e-4, "softmax {variant}: max diff {d}");
+    }
+}
+
+#[test]
+fn attention_pipeline_matches_oracle() {
+    let Some(mut sage) = sage() else { return };
+    let g = erdos_renyi(700, 4.0, 32, 17);
+    let f = 64;
+    let mut rng = Rng::new(6);
+    let q = dense(&mut rng, g.n_rows * f);
+    let k = dense(&mut rng, g.n_rows * f);
+    let v = dense(&mut rng, g.n_rows * f);
+    let want = reference::csr_attention(&g, &q, &k, &v, f);
+    for variant in ["baseline", "fused_gather", "fused_r8_f32"] {
+        let got = sage.attention_with(&g, &q, &k, &v, f, variant).unwrap();
+        let d = reference::max_abs_diff(&got, &want);
+        assert!(d < TOL, "attention {variant}: max diff {d}");
+    }
+}
+
+#[test]
+fn presets_run_through_auto_path() {
+    let Some(mut sage) = sage() else { return };
+    // Smallest preset end-to-end through the full scheduling path.
+    let (g, _) = preset("er_s", 1);
+    let f = 32;
+    let mut rng = Rng::new(7);
+    let b = dense(&mut rng, g.n_rows * f);
+    let got = sage.spmm_auto(&g, &b, f).unwrap();
+    let want = reference::spmm(&g, &b, f);
+    let d = reference::max_abs_diff(&got, &want);
+    assert!(d < TOL, "spmm_auto on er_s: max diff {d}");
+}

@@ -1,0 +1,216 @@
+//! Property-based tests (hand-rolled driver over the deterministic PRNG;
+//! proptest is unavailable offline): format round-trips, conversion
+//! inverses, cache-key stability, scheduler determinism — each over
+//! hundreds of randomized cases.
+
+use autosage::coordinator::facade::{csr_slots_to_ell, ell_slots_to_csr};
+use autosage::graph::ell::{CooBuffers, EllBuffers, HubSplit};
+use autosage::graph::signature::graph_signature;
+use autosage::graph::Csr;
+use autosage::scheduler::cache::cache_key;
+use autosage::util::json::Json;
+use autosage::util::rng::Rng;
+
+/// Random CSR with rows ≤ max_n, degrees ≤ max_deg.
+fn arb_graph(rng: &mut Rng, max_n: usize, max_deg: usize) -> Csr {
+    let n = rng.range(1, max_n);
+    let rows = (0..n)
+        .map(|_| {
+            let d = rng.below(max_deg.min(n) + 1);
+            rng.sample_distinct(n, d)
+                .into_iter()
+                .map(|c| (c as u32, rng.next_f32() * 2.0 - 1.0))
+                .collect()
+        })
+        .collect();
+    Csr::from_rows(n, rows)
+}
+
+fn next_pow2(x: usize) -> usize {
+    x.next_power_of_two().max(1)
+}
+
+#[test]
+fn prop_ell_roundtrip() {
+    let mut rng = Rng::new(100);
+    for case in 0..300 {
+        let g = arb_graph(&mut rng, 80, 12);
+        let n_pad = next_pow2(g.n_rows.max(g.n_cols));
+        let w = next_pow2(g.max_degree().max(1));
+        let e = EllBuffers::from_csr(&g, n_pad, w)
+            .unwrap_or_else(|err| panic!("case {case}: {err}"));
+        assert_eq!(e.to_csr(g.n_cols), g, "case {case}");
+        assert_eq!(e.nnz(), g.nnz(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_coo_roundtrip_order_and_padding() {
+    let mut rng = Rng::new(101);
+    for case in 0..300 {
+        let g = arb_graph(&mut rng, 60, 8);
+        let nnz_pad = g.nnz() + rng.below(50);
+        let c = CooBuffers::from_csr(&g, nnz_pad).unwrap();
+        // Row indices are non-decreasing (CSR slot order).
+        for w in c.row[..c.nnz].windows(2) {
+            assert!(w[0] <= w[1], "case {case}: rows out of order");
+        }
+        // Padding is all zeros.
+        assert!(c.val[c.nnz..].iter().all(|&v| v == 0.0), "case {case}");
+        // Mass conserved.
+        let total: f32 = g.val.iter().sum();
+        let packed: f32 = c.val.iter().sum();
+        assert!((total - packed).abs() < 1e-3, "case {case}");
+    }
+}
+
+#[test]
+fn prop_hub_split_conserves_every_edge() {
+    let mut rng = Rng::new(102);
+    for case in 0..200 {
+        let g = arb_graph(&mut rng, 60, 16);
+        let hub_t = rng.range(1, 16);
+        let n_pad = next_pow2(g.n_rows.max(g.n_cols));
+        let degs = g.degrees();
+        let n_hubs = degs.iter().filter(|&&d| d > hub_t).count();
+        let h_pad = next_pow2(n_hubs.max(1));
+        let w_hub = next_pow2(g.max_degree().max(1));
+        let hs = HubSplit::from_csr(&g, hub_t, n_pad, hub_t.max(1), h_pad, w_hub)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(hs.n_hubs, n_hubs, "case {case}");
+        // Reconstruct: light CSR + hub rows = original.
+        let mut rebuilt: Vec<Vec<(u32, f32)>> = (0..g.n_rows)
+            .map(|i| {
+                (0..hs.light.w)
+                    .filter(|s| hs.light.mask[i * hs.light.w + s] > 0.0)
+                    .map(|s| {
+                        (hs.light.colind[i * hs.light.w + s] as u32,
+                         hs.light.val[i * hs.light.w + s])
+                    })
+                    .collect()
+            })
+            .collect();
+        for k in 0..hs.n_hubs {
+            let row = hs.hub_rows[k] as usize;
+            for s in 0..w_hub {
+                // padded hub slots have val 0 AND col 0; only take real
+                // slots (tracked via degree).
+                if s < degs[row] {
+                    rebuilt[row].push((
+                        hs.hub_colind[k * w_hub + s] as u32,
+                        hs.hub_val[k * w_hub + s],
+                    ));
+                }
+            }
+        }
+        let rebuilt = Csr::from_rows(g.n_cols, rebuilt);
+        assert_eq!(rebuilt, g, "case {case} (hub_t {hub_t})");
+    }
+}
+
+#[test]
+fn prop_slot_conversions_inverse() {
+    let mut rng = Rng::new(103);
+    for case in 0..300 {
+        let g = arb_graph(&mut rng, 60, 10);
+        let slots: Vec<f32> = (0..g.nnz()).map(|_| rng.next_f32()).collect();
+        let n_pad = next_pow2(g.n_rows);
+        let w = next_pow2(g.max_degree().max(1));
+        let ell = csr_slots_to_ell(&g, n_pad, w, &slots).unwrap();
+        let back = ell_slots_to_csr(&g, w, &ell);
+        assert_eq!(back, slots, "case {case}");
+    }
+}
+
+#[test]
+fn prop_graph_signature_stable_under_value_change_only() {
+    let mut rng = Rng::new(104);
+    for case in 0..200 {
+        let g = arb_graph(&mut rng, 50, 8);
+        let sig = graph_signature(&g);
+        // Value perturbation: signature unchanged.
+        let mut g2 = g.clone();
+        if !g2.val.is_empty() {
+            let i = rng.below(g2.val.len());
+            g2.val[i] += 1.0;
+            assert_eq!(sig, graph_signature(&g2), "case {case}");
+        }
+        // Structural perturbation: signature changes.
+        if g.nnz() > 0 {
+            let mut g3 = g.clone();
+            let i = rng.below(g3.colind.len());
+            g3.colind[i] = (g3.colind[i] + 1) % g3.n_cols as u32;
+            if g3.colind != g.colind {
+                assert_ne!(sig, graph_signature(&g3), "case {case}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cache_key_injective_over_components() {
+    let mut rng = Rng::new(105);
+    let mut seen = std::collections::HashMap::new();
+    for _ in 0..500 {
+        let dev = format!("dev{}", rng.below(5));
+        let gsig = format!("{:08x}", rng.below(16) as u64);
+        let f = [32, 64, 128, 256][rng.below(4)];
+        let op = ["spmm", "sddmm", "attention"][rng.below(3)];
+        let key = cache_key(&dev, &gsig, f, op);
+        let val = (dev, gsig, f, op);
+        if let Some(prev) = seen.insert(key.clone(), val.clone()) {
+            assert_eq!(prev, val, "key collision on {key}");
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    let mut rng = Rng::new(106);
+    fn arb_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(100000) as f64) / 8.0 - 1000.0),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| {
+                        ['a', 'Z', '"', '\\', '\n', 'π', '0', ' '][rng.below(8)]
+                    })
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| arb_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), arb_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..500 {
+        let v = arb_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e} in {text}"));
+        assert_eq!(v, back, "case {case}");
+        // pretty form parses to the same value too
+        assert_eq!(v, Json::parse(&v.pretty()).unwrap(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_probe_sample_degree_multiset_preserved() {
+    let mut rng = Rng::new(107);
+    for case in 0..100 {
+        let g = arb_graph(&mut rng, 120, 10);
+        let k = rng.range(1, g.n_rows);
+        let p = g.probe_sample(k, case as u64);
+        assert_eq!(p.n_rows, k.max(1).min(g.n_rows), "case {case}");
+        // every probe row's degree exists in the original multiset
+        let mut orig = g.degrees();
+        orig.sort_unstable();
+        for d in p.degrees() {
+            assert!(orig.binary_search(&d).is_ok(), "case {case}: degree {d}");
+        }
+    }
+}

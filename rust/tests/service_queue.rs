@@ -1,0 +1,109 @@
+//! Integration: the coordinator's request-queue service — worker thread
+//! owns the PJRT device, requests flow over channels, schedule cache
+//! amortizes probes across requests.
+
+use std::path::{Path, PathBuf};
+
+use autosage::config::Config;
+use autosage::coordinator::ServiceHandle;
+use autosage::gen::preset;
+use autosage::ops::reference;
+use autosage::scheduler::Op;
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
+    }
+    ok
+}
+
+fn service() -> ServiceHandle {
+    let mut cfg = Config::default();
+    cfg.cache_path = String::new();
+    ServiceHandle::spawn(PathBuf::from("artifacts"), cfg)
+}
+
+#[test]
+fn serves_spmm_and_caches_schedule() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = service();
+    let (g, _) = preset("er_s", 21);
+    let f = 64;
+    let b: Vec<f32> = (0..g.n_rows * f).map(|i| (i % 13) as f32 * 0.1).collect();
+
+    let r1 = svc
+        .call(Op::Spmm, g.clone(), f, vec![("b".into(), b.clone())])
+        .unwrap();
+    let out1 = r1.result.unwrap();
+    assert!(!r1.from_cache, "first request must probe");
+    let want = reference::spmm(&g, &b, f);
+    assert!(reference::max_abs_diff(&out1, &want) < 2e-3);
+
+    let r2 = svc
+        .call(Op::Spmm, g.clone(), f, vec![("b".into(), b)])
+        .unwrap();
+    assert!(r2.from_cache, "second request must replay from cache");
+    assert_eq!(r2.variant, r1.variant);
+}
+
+#[test]
+fn serves_attention_and_missing_operand_is_error() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = service();
+    let (g, _) = preset("er_s", 22);
+    let f = 64;
+    let n = g.n_rows * f;
+    let q: Vec<f32> = (0..n).map(|i| ((i * 7 % 23) as f32) * 0.05 - 0.5).collect();
+    let resp = svc
+        .call(
+            Op::Attention,
+            g.clone(),
+            f,
+            vec![
+                ("q".into(), q.clone()),
+                ("k".into(), q.clone()),
+                ("v".into(), q.clone()),
+            ],
+        )
+        .unwrap();
+    let out = resp.result.unwrap();
+    let want = reference::csr_attention(&g, &q, &q, &q, f);
+    assert!(reference::max_abs_diff(&out, &want) < 2e-3);
+
+    // Missing operand -> error response, service stays alive.
+    let resp = svc
+        .call(Op::Spmm, g.clone(), f, vec![])
+        .unwrap();
+    assert!(resp.result.is_err());
+    let b = vec![0.0f32; n];
+    let resp = svc.call(Op::Spmm, g, f, vec![("b".into(), b)]).unwrap();
+    assert!(resp.result.is_ok(), "service must survive a bad request");
+}
+
+#[test]
+fn pipelined_requests_all_complete() {
+    if !have_artifacts() {
+        return;
+    }
+    let svc = service();
+    let (g, _) = preset("er_s", 23);
+    let f = 32;
+    // Submit several requests before reading any response.
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            let b: Vec<f32> =
+                (0..g.n_rows * f).map(|j| ((i + j) % 11) as f32 * 0.1).collect();
+            svc.submit(Op::Spmm, g.clone(), f, vec![("b".into(), b)])
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.result.unwrap().len(), g.n_rows * f);
+    }
+}
