@@ -1,7 +1,9 @@
 //! Quickstart: schedule and run one SpMM with AutoSAGE.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart            # native backend
+//! make artifacts && AUTOSAGE_BACKEND=pjrt \
+//!   cargo run --release --features pjrt --example quickstart
 //! ```
 //!
 //! Builds the ER stressor graph, lets the scheduler pick a kernel
@@ -22,7 +24,11 @@ fn main() -> anyhow::Result<()> {
     cfg.cache_path = String::new(); // keep the demo stateless
 
     let mut sage = AutoSage::new(Path::new("artifacts"), cfg, None)?;
-    println!("device: {}", sage.dev.signature());
+    println!(
+        "backend: {} ({})",
+        sage.backend_name(),
+        sage.backend_signature()
+    );
 
     // The paper's ER stressor (scaled): N=4096, avg degree 4.
     let (g, spec) = preset("er_s", 42);

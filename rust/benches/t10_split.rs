@@ -1,4 +1,4 @@
-//! Paper table 10 bench target (see DESIGN.md §6). `harness = false`
+//! Paper table 10 bench target (see README.md §Benchmarks). `harness = false`
 //! because criterion is unavailable offline; bench_kit provides the
 //! warmup/median/cap protocol.
 fn main() {

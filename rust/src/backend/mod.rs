@@ -1,0 +1,238 @@
+//! Execution backends: the abstraction that makes the scheduler's
+//! decisions portable.
+//!
+//! The paper's pipeline (estimate → micro-probe → guardrail → cache) is
+//! backend-agnostic: it only needs something that can *execute* an
+//! `ArtifactEntry`-shaped kernel on packed tensors and report timings
+//! and a platform signature. The [`Backend`] trait captures exactly
+//! that, with two implementations:
+//!
+//! * [`NativeBackend`] — every manifest variant family implemented in
+//!   pure Rust with real tiling/mapping parameters (ELL row/feature
+//!   tiles, hub split, COO scatter, fused attention). It synthesizes
+//!   its own manifest, so the whole system runs end-to-end with no
+//!   artifacts directory and no PJRT runtime.
+//! * `PjrtBackend` (the `runtime::client::Device`, behind the `pjrt`
+//!   cargo feature) — compiles and executes AOT HLO artifacts through a
+//!   PJRT client, as in the original testbed.
+//!
+//! Selection: `AUTOSAGE_BACKEND=auto|native|pjrt` (see `config.rs`).
+//! `auto` picks PJRT only when the build has the `pjrt` feature *and*
+//! an artifacts manifest exists; otherwise native.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::runtime::Tensor;
+use crate::scheduler::estimate::DeviceModel;
+use crate::util::stats::TimingSummary;
+
+pub use native::NativeBackend;
+
+/// One kernel-execution engine. Object-safe: the coordinator owns a
+/// `Box<dyn Backend>` and the scheduler probes through `&dyn Backend`.
+pub trait Backend {
+    /// Short backend id: `"native"` or `"pjrt"`.
+    fn name(&self) -> &'static str;
+
+    fn platform_name(&self) -> String;
+
+    fn platform_version(&self) -> String;
+
+    /// Device signature for cache keys (paper §4.2 `device_sig()`).
+    /// Backends with different cost behaviour must never share cached
+    /// schedule decisions; the signature includes the backend name.
+    fn signature(&self) -> String {
+        crate::graph::signature::device_signature(
+            &self.platform_name(),
+            &self.platform_version(),
+        )
+    }
+
+    /// Compile / resolve an entry's kernel (lazy, cached per process).
+    fn load(&self, entry: &ArtifactEntry) -> Result<()>;
+
+    /// Upload, execute once, fetch the f32 output.
+    fn run_f32(&self, entry: &ArtifactEntry, inputs: &[Tensor]) -> Result<Vec<f32>>;
+
+    /// Upload once, then `warmup` untimed + up to `iters` timed
+    /// execute+sync repetitions bounded by `cap_ms` (the probe / bench
+    /// protocol, paper §6).
+    fn time_entry(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: &[Tensor],
+        warmup: usize,
+        iters: usize,
+        cap_ms: f64,
+    ) -> Result<TimingSummary>;
+
+    /// Whether row-tile ("grid") kernels execute at native cost on this
+    /// backend. On the PJRT CPU testbed interpret-mode grids are
+    /// correctness targets whose per-step emulation cost does not
+    /// extrapolate, so they join the candidate space only with
+    /// `AUTOSAGE_GRID=1`; the native backend's tiled kernels are real.
+    fn executes_grid_kernels(&self) -> bool;
+
+    /// Roofline constants the estimate should use for this backend.
+    fn device_model(&self) -> DeviceModel;
+
+    /// Total compile/warm-up time spent so far (telemetry, §8.6).
+    fn total_compile_ms(&self) -> f64;
+
+    /// Number of distinct entries compiled/resolved so far.
+    fn compiled_count(&self) -> usize;
+}
+
+/// Resolved backend choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Native,
+    Pjrt,
+}
+
+/// Is the PJRT backend compiled into this binary?
+pub fn pjrt_compiled() -> bool {
+    cfg!(feature = "pjrt")
+}
+
+/// Resolve an `AUTOSAGE_BACKEND` / `--backend` choice string.
+pub fn resolve_kind(choice: &str, artifacts_dir: &Path) -> Result<BackendKind> {
+    match choice {
+        "native" => Ok(BackendKind::Native),
+        "pjrt" => Ok(BackendKind::Pjrt),
+        "auto" | "" => {
+            if pjrt_compiled() && artifacts_dir.join("manifest.json").exists() {
+                Ok(BackendKind::Pjrt)
+            } else {
+                Ok(BackendKind::Native)
+            }
+        }
+        other => bail!(
+            "unknown backend {other:?} (valid: auto, native, pjrt)"
+        ),
+    }
+}
+
+/// Construct the chosen backend together with its manifest: PJRT loads
+/// `<artifacts_dir>/manifest.json`; native synthesizes its catalog.
+pub fn create(choice: &str, artifacts_dir: &Path) -> Result<(Box<dyn Backend>, Manifest)> {
+    match resolve_kind(choice, artifacts_dir)? {
+        BackendKind::Native => Ok((
+            Box::new(NativeBackend::new()),
+            Manifest::synthetic(),
+        )),
+        BackendKind::Pjrt => create_pjrt(artifacts_dir),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn create_pjrt(artifacts_dir: &Path) -> Result<(Box<dyn Backend>, Manifest)> {
+    let dev = crate::runtime::Device::cpu()?;
+    let manifest = Manifest::load(artifacts_dir)?;
+    Ok((Box::new(dev), manifest))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn create_pjrt(_artifacts_dir: &Path) -> Result<(Box<dyn Backend>, Manifest)> {
+    bail!(
+        "backend \"pjrt\" requested but this binary was built without the \
+         `pjrt` feature; rebuild with `cargo build --features pjrt` or use \
+         AUTOSAGE_BACKEND=native"
+    )
+}
+
+/// Describe every backend for the CLI (`autosage backends`): name,
+/// availability, signature.
+pub fn describe_backends(artifacts_dir: &Path) -> Vec<(String, String)> {
+    let native = NativeBackend::new();
+    vec![
+        (
+            "native".to_string(),
+            format!(
+                "available — signature {} (synthetic manifest, {} entries)",
+                Backend::signature(&native),
+                Manifest::synthetic().entries.len()
+            ),
+        ),
+        ("pjrt".to_string(), describe_pjrt(artifacts_dir)),
+    ]
+}
+
+#[cfg(feature = "pjrt")]
+fn describe_pjrt(artifacts_dir: &Path) -> String {
+    let manifest_note = if artifacts_dir.join("manifest.json").exists() {
+        format!("artifacts at {}", artifacts_dir.display())
+    } else {
+        format!(
+            "NO artifacts at {} (run `make artifacts`)",
+            artifacts_dir.display()
+        )
+    };
+    match crate::runtime::Device::cpu() {
+        Ok(dev) => format!(
+            "available — signature {} ({manifest_note})",
+            dev.signature()
+        ),
+        Err(e) => format!("compiled but failed to initialize: {e:#}"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn describe_pjrt(_artifacts_dir: &Path) -> String {
+    "unavailable (built without the `pjrt` cargo feature)".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn resolve_explicit_kinds() {
+        let dir = PathBuf::from("/definitely/not/here");
+        assert_eq!(resolve_kind("native", &dir).unwrap(), BackendKind::Native);
+        assert_eq!(resolve_kind("pjrt", &dir).unwrap(), BackendKind::Pjrt);
+        assert!(resolve_kind("cuda", &dir).is_err());
+    }
+
+    #[test]
+    fn auto_without_artifacts_is_native() {
+        let dir = PathBuf::from("/definitely/not/here");
+        assert_eq!(resolve_kind("auto", &dir).unwrap(), BackendKind::Native);
+        assert_eq!(resolve_kind("", &dir).unwrap(), BackendKind::Native);
+    }
+
+    #[test]
+    fn create_native_yields_synthetic_manifest() {
+        let dir = PathBuf::from("/definitely/not/here");
+        let (backend, manifest) = create("native", &dir).unwrap();
+        assert_eq!(backend.name(), "native");
+        assert!(!manifest.entries.is_empty());
+        assert!(backend.executes_grid_kernels());
+    }
+
+    #[test]
+    fn describe_lists_both_backends() {
+        let dir = PathBuf::from("/definitely/not/here");
+        let d = describe_backends(&dir);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].0, "native");
+        assert_eq!(d[1].0, "pjrt");
+        assert!(d[0].1.contains("available"));
+    }
+
+    #[test]
+    fn backend_signatures_distinguish_backends() {
+        // Cached schedules must never leak across backends with
+        // different cost behaviour.
+        let native = NativeBackend::new();
+        assert!(Backend::signature(&native).starts_with("native"));
+    }
+}

@@ -1,0 +1,98 @@
+//! `Backend` implementation for the PJRT device (`runtime::client::Device`).
+//!
+//! This is the original execution path — compile-once AOT HLO artifacts
+//! through a PJRT client — refactored behind the [`Backend`] trait so
+//! the scheduler, facade, queue and bench harness no longer care which
+//! engine runs the kernels. Only compiled with the `pjrt` cargo feature.
+
+use anyhow::Result;
+
+use crate::runtime::manifest::ArtifactEntry;
+use crate::runtime::{Device, Tensor};
+use crate::scheduler::estimate::DeviceModel;
+use crate::util::stats::TimingSummary;
+use crate::util::timing::time_fn;
+
+use super::Backend;
+
+impl Backend for Device {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform_name(&self) -> String {
+        Device::platform_name(self)
+    }
+
+    fn platform_version(&self) -> String {
+        Device::platform_version(self)
+    }
+
+    fn signature(&self) -> String {
+        Device::signature(self)
+    }
+
+    fn load(&self, entry: &ArtifactEntry) -> Result<()> {
+        Device::load(self, entry).map(|_| ())
+    }
+
+    fn run_f32(&self, entry: &ArtifactEntry, inputs: &[Tensor]) -> Result<Vec<f32>> {
+        Device::run_f32(self, entry, inputs)
+    }
+
+    /// Upload once, then timed execute+sync iterations — mirrors
+    /// CUDA-event kernel timing as closely as the PJRT client allows.
+    fn time_entry(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: &[Tensor],
+        warmup: usize,
+        iters: usize,
+        cap_ms: f64,
+    ) -> Result<TimingSummary> {
+        let exe = Device::load(self, entry)?;
+        let bufs = self.upload(entry, inputs)?;
+        let mut err: Option<anyhow::Error> = None;
+        let summary = time_fn(
+            || {
+                if err.is_some() {
+                    return;
+                }
+                match self.execute_buffers(&exe, &bufs) {
+                    Ok(out) => {
+                        if let Err(e) = self.sync(&out) {
+                            err = Some(e);
+                        }
+                    }
+                    Err(e) => err = Some(e),
+                }
+            },
+            warmup,
+            iters,
+            cap_ms,
+        );
+        match err {
+            Some(e) => Err(e),
+            None => Ok(summary),
+        }
+    }
+
+    fn executes_grid_kernels(&self) -> bool {
+        // Interpret-mode Pallas grids on the PJRT CPU client are
+        // correctness targets, not performance kernels; they join the
+        // candidate space only via AUTOSAGE_GRID=1.
+        false
+    }
+
+    fn device_model(&self) -> DeviceModel {
+        DeviceModel::default()
+    }
+
+    fn total_compile_ms(&self) -> f64 {
+        Device::total_compile_ms(self)
+    }
+
+    fn compiled_count(&self) -> usize {
+        Device::compiled_count(self)
+    }
+}

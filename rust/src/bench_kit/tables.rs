@@ -1,4 +1,4 @@
-//! One entry point per paper table/figure (DESIGN.md §6 index).
+//! One entry point per paper table/figure (see README.md §Benchmarks).
 //!
 //! Every `run_table(id)` regenerates the corresponding table's rows on
 //! this testbed and returns text + CSV; figures reuse the same sweeps.
@@ -35,8 +35,11 @@ pub fn table_ids() -> &'static [&'static str] {
 
 const SEED: u64 = 42;
 
-fn fresh_sage(artifacts: &Path, alpha: f64) -> Result<AutoSage> {
+fn fresh_sage(artifacts: &Path, backend: Option<&str>, alpha: f64) -> Result<AutoSage> {
     let mut cfg = Config::from_env().map_err(|e| anyhow!(e))?;
+    if let Some(b) = backend {
+        cfg.backend = b.to_string();
+    }
     cfg.alpha = alpha;
     cfg.cache_path = String::new(); // decisions must be fresh per table
     // Table protocol: medians over >= 9 probe iterations (paper §6 uses
@@ -47,8 +50,10 @@ fn fresh_sage(artifacts: &Path, alpha: f64) -> Result<AutoSage> {
     AutoSage::new(artifacts, cfg, None)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn sweep_table(
     artifacts: &Path,
+    backend: Option<&str>,
     id: &str,
     title: &str,
     preset_name: &str,
@@ -57,7 +62,7 @@ fn sweep_table(
     iters: usize,
     cap_ms: f64,
 ) -> Result<TableOutput> {
-    let mut sage = fresh_sage(artifacts, alpha)?;
+    let mut sage = fresh_sage(artifacts, backend, alpha)?;
     let (g, _) = preset(preset_name, SEED);
     let rows = decision_sweep(&mut sage, &g, Op::Spmm, fs, iters, cap_ms)?;
     Ok(finish(id, title, rows))
@@ -74,55 +79,62 @@ fn finish(id: &str, title: &str, rows: Vec<BenchRow>) -> TableOutput {
     }
 }
 
-/// Run one paper table by id ("2".."12").
-pub fn run_table(artifacts: &Path, id: &str, iters: usize, cap_ms: f64) -> Result<TableOutput> {
+/// Run one paper table by id ("2".."12"). `backend` overrides
+/// `AUTOSAGE_BACKEND` (CLI `--backend`); `None` defers to the env.
+pub fn run_table(
+    artifacts: &Path,
+    backend: Option<&str>,
+    id: &str,
+    iters: usize,
+    cap_ms: f64,
+) -> Result<TableOutput> {
     match id {
         // Table 2: Reddit, F ∈ {64,128,256}, α = 0.95.
         "2" => sweep_table(
-            artifacts, "2",
+            artifacts, backend, "2",
             "Table 2: Reddit (scaled), guardrail = 0.95",
             "reddit_s", &[64, 128, 256], 0.95, iters, cap_ms,
         ),
         // Table 3: OGBN-Products.
         "3" => sweep_table(
-            artifacts, "3",
+            artifacts, backend, "3",
             "Table 3: OGBN-Products (scaled), guardrail = 0.95",
             "products_s", &[64, 128, 256], 0.95, iters, cap_ms,
         ),
         // Table 4: ER synthetic (+ Figure 6).
         "4" => sweep_table(
-            artifacts, "4",
+            artifacts, backend, "4",
             "Table 4: Erdos-Renyi synthetic (scaled), guardrail = 0.95",
             "er_s", &[64, 128, 256], 0.95, iters, cap_ms,
         ),
         // Table 5: hub-skew synthetic (+ Figure 7).
         "5" => sweep_table(
-            artifacts, "5",
+            artifacts, backend, "5",
             "Table 5: Hub-skew synthetic (scaled), guardrail = 0.95",
             "hub_s", &[64, 128, 256], 0.95, iters, cap_ms,
         ),
         // Table 6: guardrail sensitivity — Reddit at α = 0.98 (+ Fig 3).
         "6" => sweep_table(
-            artifacts, "6",
+            artifacts, backend, "6",
             "Table 6: Guardrail sensitivity (Reddit scaled), alpha = 0.98",
             "reddit_s", &[64, 128, 256], 0.98, iters, cap_ms,
         ),
         // Table 7: Reddit wide-F sweep (+ Figure 5).
         "7" => sweep_table(
-            artifacts, "7",
+            artifacts, backend, "7",
             "Table 7: Reddit (scaled) feature-width sweep",
             "reddit_s", &[32, 64, 96, 128, 192, 256], 0.95, iters, cap_ms,
         ),
         // Table 8: Products wide-F sweep (+ Figures 1/2).
         "8" => sweep_table(
-            artifacts, "8",
+            artifacts, backend, "8",
             "Table 8: Products (scaled) feature-width sweep",
             "products_s", &[32, 64, 96, 128, 192, 256], 0.95, iters, cap_ms,
         ),
-        "9" => table9_vec_ablation(artifacts, iters, cap_ms),
-        "10" => table10_split(artifacts, iters, cap_ms),
-        "11" => table11_probe_overhead(artifacts, iters, cap_ms),
-        "12" => table12_attention(artifacts, iters, cap_ms),
+        "9" => table9_vec_ablation(artifacts, backend, iters, cap_ms),
+        "10" => table10_split(artifacts, backend, iters, cap_ms),
+        "11" => table11_probe_overhead(artifacts, backend, iters, cap_ms),
+        "12" => table12_attention(artifacts, backend, iters, cap_ms),
         other => Err(anyhow!("unknown table id {other:?} (valid: 2..12)")),
     }
 }
@@ -130,8 +142,8 @@ pub fn run_table(artifacts: &Path, id: &str, iters: usize, cap_ms: f64) -> Resul
 /// Table 9: vec ablation — where a Pallas kernel is chosen, compare the
 /// wide-lane (f128, the vec4 analog) against the scalar (f32) tiling.
 /// speedup = scalar_ms / wide_ms (OFF/ON; > 1 means vec helps).
-fn table9_vec_ablation(artifacts: &Path, iters: usize, cap_ms: f64) -> Result<TableOutput> {
-    let mut sage = fresh_sage(artifacts, 0.95)?;
+fn table9_vec_ablation(artifacts: &Path, backend: Option<&str>, iters: usize, cap_ms: f64) -> Result<TableOutput> {
+    let mut sage = fresh_sage(artifacts, backend, 0.95)?;
     let mut csv = CsvTable::new(&["dataset", "F", "scalar_ms", "wide_ms", "speedup"]);
     let mut text = String::from(
         "Table 9: wide-lane (vec) ablation, speedup = scalar/wide (>1 helps)\n",
@@ -171,8 +183,8 @@ fn table9_vec_ablation(artifacts: &Path, iters: usize, cap_ms: f64) -> Result<Ta
 
 /// Table 10: CTA-per-hub split vs vendor baseline on hub-skewed graphs
 /// at F = 128 (the paper's two scaled configs).
-fn table10_split(artifacts: &Path, iters: usize, cap_ms: f64) -> Result<TableOutput> {
-    let mut sage = fresh_sage(artifacts, 0.95)?;
+fn table10_split(artifacts: &Path, backend: Option<&str>, iters: usize, cap_ms: f64) -> Result<TableOutput> {
+    let mut sage = fresh_sage(artifacts, backend, 0.95)?;
     let mut csv =
         CsvTable::new(&["setting", "baseline_ms", "split_ms", "speedup"]);
     let mut text =
@@ -212,7 +224,7 @@ fn table10_split(artifacts: &Path, iters: usize, cap_ms: f64) -> Result<TableOut
 
 /// §8.6: probe overhead as a fraction of one full-graph iteration at
 /// Reddit F=64, for the default and the low-overhead probe settings.
-fn table11_probe_overhead(artifacts: &Path, iters: usize, cap_ms: f64) -> Result<TableOutput> {
+fn table11_probe_overhead(artifacts: &Path, backend: Option<&str>, iters: usize, cap_ms: f64) -> Result<TableOutput> {
     let mut csv = CsvTable::new(&[
         "probe_frac", "cap_ms", "probe_wall_ms", "full_iter_ms", "overhead_pct",
     ]);
@@ -220,6 +232,9 @@ fn table11_probe_overhead(artifacts: &Path, iters: usize, cap_ms: f64) -> Result
     let mut series = Vec::new();
     for (i, (frac, cap)) in [(0.03, 1000.0), (0.02, 500.0)].iter().enumerate() {
         let mut cfg = Config::from_env().map_err(|e| anyhow!(e))?;
+        if let Some(b) = backend {
+            cfg.backend = b.to_string();
+        }
         cfg.probe_frac = *frac;
         cfg.probe_cap_ms = *cap;
         cfg.cache_path = String::new();
@@ -253,8 +268,8 @@ fn table11_probe_overhead(artifacts: &Path, iters: usize, cap_ms: f64) -> Result
 /// §8.7: SDDMM-auto + softmax + SpMM composed as CSR attention on
 /// products (scaled): uncached (probe-dominated) vs cached replay, with
 /// per-sub-op choices.
-fn table12_attention(artifacts: &Path, iters: usize, cap_ms: f64) -> Result<TableOutput> {
-    let mut sage = fresh_sage(artifacts, 0.95)?;
+fn table12_attention(artifacts: &Path, backend: Option<&str>, iters: usize, cap_ms: f64) -> Result<TableOutput> {
+    let mut sage = fresh_sage(artifacts, backend, 0.95)?;
     let (g, _) = preset("products_s", SEED);
     let f = 64usize;
     let data = probe::synth_operands(Op::Attention, g.n_rows, f, 77);
@@ -326,7 +341,7 @@ pub fn bench_main(table_id: &str) {
         std::env::var("AUTOSAGE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
     let sw = crate::util::timing::Stopwatch::start();
-    match run_table(&artifacts, table_id, iters, 1500.0) {
+    match run_table(&artifacts, None, table_id, iters, 1500.0) {
         Ok(out) => {
             println!("{}", out.text);
             let dir = PathBuf::from("results/bench");
@@ -365,10 +380,16 @@ pub fn figure_source(id: &str) -> Option<(&'static str, &'static str)> {
 }
 
 /// Render a figure by id, running its source table.
-pub fn run_figure(artifacts: &Path, id: &str, iters: usize, cap_ms: f64) -> Result<(String, CsvTable)> {
+pub fn run_figure(
+    artifacts: &Path,
+    backend: Option<&str>,
+    id: &str,
+    iters: usize,
+    cap_ms: f64,
+) -> Result<(String, CsvTable)> {
     let (title, table_id) =
         figure_source(id).ok_or_else(|| anyhow!("unknown figure id {id:?}"))?;
-    let out = run_table(artifacts, table_id, iters, cap_ms)?;
+    let out = run_table(artifacts, backend, table_id, iters, cap_ms)?;
     Ok((render_speedup_figure(title, &out.series), out.csv))
 }
 
@@ -387,6 +408,6 @@ mod tests {
 
     #[test]
     fn unknown_table_is_error() {
-        assert!(run_table(Path::new("/nonexistent"), "99", 3, 100.0).is_err());
+        assert!(run_table(Path::new("/nonexistent"), None, "99", 3, 100.0).is_err());
     }
 }

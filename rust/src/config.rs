@@ -2,6 +2,7 @@
 //!
 //! | Env var                 | Meaning                                | Default |
 //! |-------------------------|----------------------------------------|---------|
+//! | `AUTOSAGE_BACKEND`      | execution engine: `auto` \| `native` \| `pjrt`. `auto` = PJRT when built with the `pjrt` feature AND `artifacts/manifest.json` exists, else the pure-Rust native backend | auto |
 //! | `AUTOSAGE_ALPHA`        | guardrail acceptance factor α          | 0.95    |
 //! | `AUTOSAGE_PROBE_FRAC`   | induced-subgraph row fraction          | 0.02    |
 //! | `AUTOSAGE_PROBE_MIN`    | minimum probe rows                     | 512     |
@@ -10,7 +11,7 @@
 //! | `AUTOSAGE_TOPK`         | candidates probed after the estimate   | 3       |
 //! | `AUTOSAGE_HUB_T`        | hub degree threshold override (0=auto) | 0       |
 //! | `AUTOSAGE_VEC`          | allow wide-lane (f128 / "vec") paths   | true    |
-//! | `AUTOSAGE_GRID`         | let the scheduler pick Pallas *grid* kernels (row-tile/hub-tile). Off by default on this CPU testbed: interpret-mode grids are correctness/ablation targets whose per-step emulation cost does not extrapolate; the gather family is their executable twin (DESIGN.md §Hardware-Adaptation) | false |
+//! | `AUTOSAGE_GRID`         | let the scheduler pick Pallas *grid* kernels (row-tile/hub-tile). Off by default on this CPU testbed: interpret-mode grids are correctness/ablation targets whose per-step emulation cost does not extrapolate; the gather family is their executable twin; the native backend runs grids at real cost regardless (see backend/) | false |
 //! | `AUTOSAGE_CACHE`        | schedule-cache path ("" disables)      | autosage_cache.json |
 //! | `AUTOSAGE_REPLAY_ONLY`  | never probe; cache miss = baseline     | false   |
 //! | `AUTOSAGE_BENCH_ITERS`  | bench harness timed iterations         | 12      |
@@ -19,6 +20,9 @@ use crate::util::envcfg::{env_bool, env_f64, env_string, env_usize};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
+    /// Execution backend: "auto" | "native" | "pjrt" (see
+    /// `backend::resolve_kind`). Env: `AUTOSAGE_BACKEND`.
+    pub backend: String,
     pub alpha: f64,
     pub probe_frac: f64,
     pub probe_min_rows: usize,
@@ -41,6 +45,7 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         Config {
+            backend: "auto".to_string(),
             alpha: 0.95,
             probe_frac: 0.02,
             probe_min_rows: 512,
@@ -63,6 +68,7 @@ impl Config {
     pub fn from_env() -> Result<Config, String> {
         let d = Config::default();
         Ok(Config {
+            backend: env_string("AUTOSAGE_BACKEND", &d.backend),
             alpha: env_f64("AUTOSAGE_ALPHA", d.alpha)?,
             probe_frac: env_f64("AUTOSAGE_PROBE_FRAC", d.probe_frac)?,
             probe_min_rows: env_usize("AUTOSAGE_PROBE_MIN", d.probe_min_rows)?,
@@ -84,6 +90,12 @@ impl Config {
 
     /// Validate invariants the scheduler relies on.
     pub fn validate(&self) -> Result<(), String> {
+        if !matches!(self.backend.as_str(), "auto" | "native" | "pjrt" | "") {
+            return Err(format!(
+                "unknown AUTOSAGE_BACKEND {:?} (valid: auto, native, pjrt)",
+                self.backend
+            ));
+        }
         if !(0.0 < self.alpha && self.alpha <= 1.0) {
             return Err(format!(
                 "alpha must be in (0, 1] for the non-regression guarantee \
@@ -114,7 +126,19 @@ mod tests {
         assert_eq!(c.alpha, 0.95);
         assert_eq!(c.probe_min_rows, 512);
         assert_eq!(c.probe_frac, 0.02);
+        assert_eq!(c.backend, "auto");
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_backend() {
+        let mut c = Config::default();
+        c.backend = "cuda".to_string();
+        assert!(c.validate().is_err());
+        for ok in ["auto", "native", "pjrt"] {
+            c.backend = ok.to_string();
+            assert!(c.validate().is_ok(), "{ok}");
+        }
     }
 
     #[test]

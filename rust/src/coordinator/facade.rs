@@ -1,49 +1,68 @@
-//! `AutoSage`: one device + one artifact manifest + the scheduler +
-//! telemetry, exposed as typed operators.
+//! `AutoSage`: one execution backend + one kernel manifest + the
+//! scheduler + telemetry, exposed as typed operators.
 //!
 //! Every `*_auto` call runs the full paper pipeline: cache lookup →
-//! (estimate → micro-probe → guardrail) → execute the chosen artifact.
+//! (estimate → micro-probe → guardrail) → execute the chosen kernel.
 //! `*_with` variants bypass scheduling for ablations and benches.
+//!
+//! The backend is chosen by `Config::backend` (`AUTOSAGE_BACKEND`):
+//! the pure-Rust `NativeBackend` needs no artifacts; the PJRT backend
+//! (feature `pjrt`) loads the AOT catalog from `artifacts_dir`.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::{self, Backend};
 use crate::config::Config;
 use crate::graph::Csr;
 use crate::ops::pack::{pack_inputs, unpad_output, OpData};
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
-use crate::runtime::Device;
 use crate::scheduler::{probe, Decision, Op, Scheduler};
 use crate::telemetry::Telemetry;
 use crate::util::stats::TimingSummary;
 
 pub struct AutoSage {
-    pub dev: Device,
+    pub backend: Box<dyn Backend>,
     pub manifest: Manifest,
     pub scheduler: Scheduler,
     pub telemetry: Telemetry,
 }
 
 impl AutoSage {
-    /// Stand up the system from an artifacts directory.
+    /// Stand up the system. `artifacts_dir` only matters for the PJRT
+    /// backend; the native backend synthesizes its manifest.
     pub fn new(artifacts_dir: &Path, cfg: Config, telemetry_dir: Option<&Path>) -> Result<AutoSage> {
-        let dev = Device::cpu()?;
-        let manifest = Manifest::load(artifacts_dir)?;
-        let telemetry = Telemetry::new(telemetry_dir, &dev.signature());
-        let scheduler = Scheduler::new(cfg)?;
-        Ok(AutoSage { dev, manifest, scheduler, telemetry })
+        let (backend, manifest) = backend::create(&cfg.backend, artifacts_dir)?;
+        let telemetry = Telemetry::new(telemetry_dir, &backend.signature());
+        let mut scheduler = Scheduler::new(cfg)?;
+        // The roofline estimate must model the engine that will actually
+        // run the kernels (grid-step cost differs radically between
+        // interpret-mode PJRT and native tiled loops).
+        scheduler.dev_model = backend.device_model();
+        Ok(AutoSage { backend, manifest, scheduler, telemetry })
     }
 
     pub fn config(&self) -> &Config {
         &self.scheduler.cfg
     }
 
+    /// Short id of the active backend ("native" | "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Device signature of the active backend (cache-key component).
+    pub fn backend_signature(&self) -> String {
+        self.backend.signature()
+    }
+
     /// Schedule an op for a graph (cache → probe → guardrail), with
     /// telemetry. Returns the decision (see paper §4.2).
     pub fn decide(&mut self, g: &Csr, op: Op, f: usize) -> Result<Decision> {
         let (decision, report) =
-            self.scheduler.decide(&self.dev, &self.manifest, g, op, f)?;
+            self.scheduler
+                .decide(self.backend.as_ref(), &self.manifest, g, op, f)?;
         if let Some(rep) = &report {
             self.telemetry.probe_sample(
                 op.as_str(),
@@ -74,8 +93,8 @@ impl AutoSage {
             self.scheduler
                 .select_entry(&self.manifest, g, Op::Spmm, f, variant)?;
         let data = OpData::new().with("b", b.to_vec());
+        let n_pad = entry.require_usize("n_pad")?;
         let out = self.run_entry(entry, g, &data)?;
-        let n_pad = entry.param_usize("n_pad").unwrap();
         Ok(unpad_output(out, n_pad, g.n_rows, f))
     }
 
@@ -93,8 +112,8 @@ impl AutoSage {
             self.scheduler
                 .select_entry(&self.manifest, g, Op::Sddmm, f, variant)?;
         let data = OpData::new().with("x", x.to_vec()).with("y", y.to_vec());
+        let w = entry.require_usize("w")?;
         let out = self.run_entry(entry, g, &data)?;
-        let w = entry.param_usize("w").unwrap();
         Ok(ell_slots_to_csr(g, w, &out))
     }
 
@@ -105,8 +124,8 @@ impl AutoSage {
         let entry =
             self.scheduler
                 .select_entry(&self.manifest, g, Op::Softmax, 0, variant)?;
-        let w = entry.param_usize("w").unwrap();
-        let n_pad = entry.param_usize("n_pad").unwrap();
+        let w = entry.require_usize("w")?;
+        let n_pad = entry.require_usize("n_pad")?;
         let data = OpData::new().with("val", csr_slots_to_ell(g, n_pad, w, scores)?);
         let out = self.run_entry(entry, g, &data)?;
         Ok(ell_slots_to_csr(g, w, &out))
@@ -133,8 +152,8 @@ impl AutoSage {
             .with("q", q.to_vec())
             .with("k", k.to_vec())
             .with("v", v.to_vec());
+        let n_pad = entry.require_usize("n_pad")?;
         let out = self.run_entry(entry, g, &data)?;
-        let n_pad = entry.param_usize("n_pad").unwrap();
         Ok(unpad_output(out, n_pad, g.n_rows, f))
     }
 
@@ -152,10 +171,10 @@ impl AutoSage {
                     && e.param_usize("f_out") == Some(f_out)
                     && e.param_usize("n_pad").map_or(false, |n| n >= n_rows)
             })
-            .min_by_key(|e| e.param_usize("n_pad").unwrap())
+            .min_by_key(|e| e.param_usize("n_pad").unwrap_or(usize::MAX))
             .ok_or_else(|| anyhow!("no linear_relu artifact {f_in}x{f_out}"))?
             .clone();
-        let n_pad = entry.param_usize("n_pad").unwrap();
+        let n_pad = entry.require_usize("n_pad")?;
         let mut hp = h.to_vec();
         hp.resize(n_pad * f_in, 0.0);
         let data = OpData::new()
@@ -165,7 +184,7 @@ impl AutoSage {
         // linear_relu has no sparse inputs; pack against an empty graph.
         let empty = Csr::from_rows(1, vec![vec![]]);
         let inputs = pack_inputs(&entry, &empty, &data)?;
-        let out = self.dev.run_f32(&entry, &inputs)?;
+        let out = self.backend.run_f32(&entry, &inputs)?;
         Ok(unpad_output(out, n_pad, n_rows, f_out))
     }
 
@@ -178,14 +197,14 @@ impl AutoSage {
             .scheduler
             .select_entry(&self.manifest, g, op, f, variant)?;
         let data = probe::synth_operands(op, g.n_rows, f, 0xBE7C);
-        probe::time_entry(&self.dev, entry, g, &data, 1, iters, cap_ms)
+        probe::time_entry(self.backend.as_ref(), entry, g, &data, 1, iters, cap_ms)
     }
 
     // ------------------------------------------------------- internals
 
     fn run_entry(&self, entry: &ArtifactEntry, g: &Csr, data: &OpData) -> Result<Vec<f32>> {
         let inputs = pack_inputs(entry, g, data)?;
-        self.dev.run_f32(entry, &inputs)
+        self.backend.run_f32(entry, &inputs)
     }
 }
 

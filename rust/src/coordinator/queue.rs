@@ -1,5 +1,6 @@
-//! Service-style request queue: one worker thread owns the PJRT device
-//! (PJRT handles are not `Send`) and drains an mpsc channel of operator
+//! Service-style request queue: one worker thread owns the execution
+//! backend (PJRT handles are not `Send`; the native backend simply
+//! lives where it was built) and drains an mpsc channel of operator
 //! requests; callers get results over per-request response channels.
 //!
 //! This is the deployment shape a GNN-training host integrates with: the
@@ -43,8 +44,8 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Spawn the worker; the device + manifest are constructed on the
-    /// worker thread (PJRT is thread-bound).
+    /// Spawn the worker; the backend + manifest are constructed on the
+    /// worker thread (PJRT is thread-bound; native doesn't care).
     pub fn spawn(artifacts_dir: PathBuf, cfg: Config) -> ServiceHandle {
         let (tx, rx) = mpsc::channel::<OpRequest>();
         let join = std::thread::spawn(move || {

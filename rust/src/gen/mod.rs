@@ -2,7 +2,7 @@
 //!
 //! Real Reddit / OGBN-Products are too large for interpret-mode CPU
 //! execution, so each is replaced by a seeded generator calibrated to the
-//! same *degree-distribution shape* (see DESIGN.md §4 Substitutions).
+//! same *degree-distribution shape* (see README.md §Workloads).
 //! Every generator respects its preset's shape contract in
 //! `python/compile/catalog.py` (degree cap ≤ w_plain, hub count ≤ h_pad,
 //! nnz ≤ nnz_pad) so the AOT buckets always fit.

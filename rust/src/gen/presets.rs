@@ -1,7 +1,7 @@
 //! Named workload presets matching the artifact catalog's shape contract
 //! (`python/compile/catalog.py` PRESETS). Each preset is the scaled
-//! stand-in for a paper workload — see DESIGN.md §4 for the substitution
-//! rationale and calibration targets.
+//! stand-in for a paper workload — see README.md §Workloads for the
+//! substitution rationale and calibration targets.
 
 use crate::graph::Csr;
 

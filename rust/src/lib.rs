@@ -1,22 +1,31 @@
 //! AutoSAGE — input-aware scheduling for sparse GNN aggregation
-//! (CSR/ELL SpMM, SDDMM and CSR attention) on a Rust + JAX + Pallas
-//! AOT stack (PJRT runtime).
+//! (CSR/ELL SpMM, SDDMM and CSR attention) with pluggable execution
+//! backends: a pure-Rust parameterized kernel engine (default) and a
+//! Rust + JAX + Pallas AOT stack over a PJRT runtime (feature `pjrt`).
 //!
 //! Reproduction of: *AutoSAGE: Input-Aware CUDA Scheduling for Sparse GNN
 //! Aggregation (SpMM/SDDMM) and CSR Attention* (Stanković, 2025), adapted
-//! from CUDA to a TPU-style Pallas kernel space (see `DESIGN.md`).
+//! from CUDA to parameterized kernel spaces the scheduler can probe (see
+//! `README.md` for the backend architecture).
 //!
 //! Layering:
 //! * [`util`] — substrates built from scratch (JSON, RNG, stats, CSV, env).
 //! * [`graph`] — CSR/ELL formats, bucketing, signatures.
 //! * [`gen`] — synthetic workload generators (paper presets, scaled).
-//! * [`runtime`] — PJRT client, artifact manifest, executable cache.
+//! * [`runtime`] — kernel manifest (parsed from `artifacts/manifest.json`
+//!   or synthesized natively), host tensors, and — behind the `pjrt`
+//!   feature — the PJRT client for AOT artifacts.
+//! * [`backend`] — the `Backend` trait plus its two engines: the native
+//!   pure-Rust kernels (ELL row/feature tiles, hub split, COO scatter,
+//!   fused attention) and the PJRT device. The scheduler probes and the
+//!   coordinator executes only through this trait.
 //! * [`ops`] — typed SpMM/SDDMM/softmax/attention ops + Rust oracle.
 //! * [`scheduler`] — the paper's contribution: estimate → micro-probe →
 //!   guardrail, with a persistent decision cache and replay mode.
 //! * [`coordinator`] — the public facade (`AutoSage`) and request queue.
 //! * [`bench_kit`] — criterion-replacement harness + table/figure output.
 
+pub mod backend;
 pub mod bench_kit;
 pub mod config;
 pub mod coordinator;
@@ -27,7 +36,3 @@ pub mod runtime;
 pub mod scheduler;
 pub mod telemetry;
 pub mod util;
-
-
-
-pub fn cli_placeholder() { println!("autosage"); }

@@ -1,6 +1,7 @@
 //! AutoSAGE CLI — the leader entrypoint.
 //!
 //! ```text
+//! autosage backends
 //! autosage gen     --preset reddit_s [--seed 42]
 //! autosage decide  --preset er_s --op spmm --f 64 [--alpha 0.95]
 //! autosage run     --preset er_s --op spmm --f 64
@@ -10,7 +11,9 @@
 //! autosage cache   dump|clear [--path autosage_cache.json]
 //! ```
 //!
-//! Env toggles (AUTOSAGE_ALPHA, AUTOSAGE_PROBE_*, AUTOSAGE_VEC,
+//! `decide`/`run`/`table`/`figure`/`all` honor `--backend
+//! auto|native|pjrt` (default: `AUTOSAGE_BACKEND`, then auto). Other
+//! env toggles (AUTOSAGE_ALPHA, AUTOSAGE_PROBE_*, AUTOSAGE_VEC,
 //! AUTOSAGE_CACHE, AUTOSAGE_REPLAY_ONLY, ...) apply everywhere; see
 //! `config.rs`.
 
@@ -90,6 +93,7 @@ fn real_main() -> Result<()> {
     let cmd = raw[0].clone();
     let args = Args::parse(&raw[1..])?;
     match cmd.as_str() {
+        "backends" => cmd_backends(&args),
         "gen" => cmd_gen(&args),
         "decide" => cmd_decide(&args),
         "run" => cmd_run(&args),
@@ -109,6 +113,7 @@ fn print_usage() {
     println!(
         "autosage — input-aware scheduling for sparse GNN aggregation\n\
          commands:\n\
+         \x20 backends  (list execution backends + signatures)\n\
          \x20 gen     --preset <{presets}> [--seed N]\n\
          \x20 decide  --preset P --op <spmm|sddmm|attention> --f F [--alpha A]\n\
          \x20 run     --preset P --op <spmm|sddmm|attention> --f F\n\
@@ -116,9 +121,22 @@ fn print_usage() {
          \x20 figure  <1..7>  [--iters N] [--cap-ms MS] [--out DIR]\n\
          \x20 all     [--out DIR]\n\
          \x20 cache   dump|clear [--path FILE]\n\
-         flags: --artifacts DIR (default: artifacts)",
+         flags: --backend <auto|native|pjrt> (default: AUTOSAGE_BACKEND or auto)\n\
+         \x20      --artifacts DIR (default: artifacts; pjrt backend only)",
         presets = preset_names().join("|")
     );
+}
+
+fn cmd_backends(args: &Args) -> Result<()> {
+    println!("execution backends:");
+    for (name, desc) in autosage::backend::describe_backends(&artifacts_dir(args)) {
+        println!("  {name:<8} {desc}");
+    }
+    let cfg = Config::from_env().map_err(|e| anyhow!(e))?;
+    let kind =
+        autosage::backend::resolve_kind(&cfg.backend, &artifacts_dir(args))?;
+    println!("selected (AUTOSAGE_BACKEND={}): {kind:?}", cfg.backend);
+    Ok(())
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -169,6 +187,9 @@ fn sage_from(args: &Args) -> Result<AutoSage> {
     if let Some(a) = args.get("alpha") {
         cfg.alpha = a.parse().map_err(|_| anyhow!("bad --alpha"))?;
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+    }
     AutoSage::new(&artifacts_dir(args), cfg, None)
 }
 
@@ -180,6 +201,7 @@ fn cmd_decide(args: &Args) -> Result<()> {
     let (g, _) = preset(name, seed);
     let mut sage = sage_from(args)?;
     let d = sage.decide(&g, op, f)?;
+    println!("backend : {} ({})", sage.backend_name(), sage.backend_signature());
     println!("key     : {}", d.key);
     println!("choice  : {} ({})", d.choice_label(), d.choice.variant());
     println!("source  : {:?}", d.source);
@@ -209,8 +231,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     let total = sw.ms();
     let sum: f64 = out.iter().map(|&x| x as f64).sum();
     println!(
-        "op={} preset={name} F={f}: {} outputs, checksum {:.4}, end-to-end {:.2}ms",
+        "op={} preset={name} F={f} backend={}: {} outputs, checksum {:.4}, end-to-end {:.2}ms",
         op.as_str(),
+        sage.backend_name(),
         out.len(),
         sum,
         total
@@ -232,8 +255,28 @@ fn bench_params(args: &Args) -> Result<(usize, f64)> {
     ))
 }
 
+/// The backend label for output sidecars: the RESOLVED engine
+/// (`native`/`pjrt`), not the raw `auto` choice string — two runs on
+/// different actual backends must not produce identical provenance.
+fn backend_label(args: &Args) -> String {
+    let choice = args
+        .get("backend")
+        .map(str::to_string)
+        .unwrap_or_else(|| {
+            Config::from_env()
+                .map(|c| c.backend)
+                .unwrap_or_else(|_| "auto".to_string())
+        });
+    match autosage::backend::resolve_kind(&choice, &artifacts_dir(args)) {
+        Ok(autosage::backend::BackendKind::Native) => "native".to_string(),
+        Ok(autosage::backend::BackendKind::Pjrt) => "pjrt".to_string(),
+        Err(_) => choice,
+    }
+}
+
 fn write_output(
     out_dir: Option<&str>,
+    backend: &str,
     stem: &str,
     text: &str,
     csv: &autosage::util::csv::CsvTable,
@@ -247,7 +290,7 @@ fn write_output(
         let cfg = Config::from_env().map_err(|e| anyhow!(e))?;
         std::fs::write(
             dir.join(format!("{stem}.csv.meta.json")),
-            meta_sidecar("cpu-pjrt", &cfg).pretty(),
+            meta_sidecar(backend, &cfg).pretty(),
         )?;
         println!(
             "[written to {}/{stem}.{{csv,txt,csv.meta.json}}]",
@@ -263,8 +306,14 @@ fn cmd_table(args: &Args) -> Result<()> {
         .first()
         .context("table id required (2..12)")?;
     let (iters, cap) = bench_params(args)?;
-    let out = run_table(&artifacts_dir(args), id, iters, cap)?;
-    write_output(args.get("out"), &format!("table{id}"), &out.text, &out.csv)
+    let out = run_table(&artifacts_dir(args), args.get("backend"), id, iters, cap)?;
+    write_output(
+        args.get("out"),
+        &backend_label(args),
+        &format!("table{id}"),
+        &out.text,
+        &out.csv,
+    )
 }
 
 fn cmd_figure(args: &Args) -> Result<()> {
@@ -273,21 +322,30 @@ fn cmd_figure(args: &Args) -> Result<()> {
         .first()
         .context("figure id required (1..7)")?;
     let (iters, cap) = bench_params(args)?;
-    let (text, csv) = run_figure(&artifacts_dir(args), id, iters, cap)?;
-    write_output(args.get("out"), &format!("figure{id}"), &text, &csv)
+    let (text, csv) =
+        run_figure(&artifacts_dir(args), args.get("backend"), id, iters, cap)?;
+    write_output(
+        args.get("out"),
+        &backend_label(args),
+        &format!("figure{id}"),
+        &text,
+        &csv,
+    )
 }
 
 fn cmd_all(args: &Args) -> Result<()> {
     let (iters, cap) = bench_params(args)?;
     let out_dir = args.get("out").unwrap_or("results");
+    let backend = backend_label(args);
     let sw = autosage::util::timing::Stopwatch::start();
     for id in table_ids() {
-        let out = run_table(&artifacts_dir(args), id, iters, cap)?;
-        write_output(Some(out_dir), &format!("table{id}"), &out.text, &out.csv)?;
+        let out = run_table(&artifacts_dir(args), args.get("backend"), id, iters, cap)?;
+        write_output(Some(out_dir), &backend, &format!("table{id}"), &out.text, &out.csv)?;
     }
     for id in ["1", "2", "3", "4", "5", "6", "7"] {
-        let (text, csv) = run_figure(&artifacts_dir(args), id, iters, cap)?;
-        write_output(Some(out_dir), &format!("figure{id}"), &text, &csv)?;
+        let (text, csv) =
+            run_figure(&artifacts_dir(args), args.get("backend"), id, iters, cap)?;
+        write_output(Some(out_dir), &backend, &format!("figure{id}"), &text, &csv)?;
     }
     println!("all tables+figures regenerated in {:.1}s", sw.ms() / 1e3);
     Ok(())

@@ -37,6 +37,14 @@ impl ArtifactEntry {
     pub fn param_usize(&self, key: &str) -> Option<usize> {
         self.param(key).and_then(|v| usize::try_from(v).ok())
     }
+    /// Required parameter, or an error naming the entry and the param
+    /// (the facade and the native kernels must never panic on a
+    /// malformed catalog entry).
+    pub fn require_usize(&self, key: &str) -> Result<usize> {
+        self.param_usize(key).ok_or_else(|| {
+            anyhow!("artifact {}: missing required param {key:?}", self.name)
+        })
+    }
     /// The preset tag this bucket was sized for (informational).
     pub fn preset(&self) -> Option<&str> {
         self.preset_tag.as_deref()
@@ -126,6 +134,43 @@ impl Manifest {
         Ok(Manifest { dir: dir.to_path_buf(), entries })
     }
 
+    /// Synthesize the full kernel catalog for the native backend — no
+    /// artifact files involved. Mirrors `python/compile/catalog.py`
+    /// (same presets, variants, tiles and naming, so schedule caches
+    /// and CLI flows are interchangeable across backends) plus a tiny
+    /// `micro` bucket family so small inputs and tests stay fast.
+    pub fn synthetic() -> Manifest {
+        let dir = PathBuf::from("<native-synthetic>");
+        let mut entries = Vec::new();
+        for p in SYNTH_PRESETS {
+            // Full-size buckets.
+            let h_pad = p.hub.map(|h| h.1).unwrap_or(0);
+            synth_spmm(&mut entries, &dir, p, p.n_pad, p.nnz_pad, h_pad, "full");
+            synth_sddmm(&mut entries, &dir, p, p.n_pad, "full");
+            synth_softmax(&mut entries, &dir, p, p.n_pad, "full");
+            synth_attention(&mut entries, &dir, p, p.n_pad, p.nnz_pad, "full");
+            // Probe-size buckets (induced subgraph, min 512 rows).
+            if p.probe_buckets {
+                let hp = p.hub.map(|h| h.3).unwrap_or(0);
+                synth_spmm(&mut entries, &dir, p, PROBE_N, p.nnz_pad_probe, hp, "probe");
+                synth_sddmm(&mut entries, &dir, p, PROBE_N, "probe");
+                synth_softmax(&mut entries, &dir, p, PROBE_N, "probe");
+                synth_attention(&mut entries, &dir, p, PROBE_N, p.nnz_pad_probe, "probe");
+            }
+        }
+        synth_linear(&mut entries, &dir);
+        debug_assert_eq!(
+            entries.len(),
+            entries
+                .iter()
+                .map(|e| e.name.as_str())
+                .collect::<std::collections::BTreeSet<_>>()
+                .len(),
+            "duplicate synthetic artifact names"
+        );
+        Manifest { dir, entries }
+    }
+
     pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
@@ -146,6 +191,421 @@ impl Manifest {
                 None => true,
             })
             .collect()
+    }
+}
+
+// ----------------------------------------------------- synthetic catalog
+
+/// Shape contract of one synthetic bucket family (mirror of
+/// `python/compile/catalog.py` `PRESETS`).
+struct SynthPreset {
+    name: &'static str,
+    n_pad: usize,
+    w_plain: usize,
+    nnz_pad: usize,
+    nnz_pad_probe: usize,
+    fs: &'static [usize],
+    sddmm_fs: &'static [usize],
+    /// (w_light, h_pad, w_hub, h_pad_probe)
+    hub: Option<(usize, usize, usize, usize)>,
+    /// Emit probe-size (n_pad = 512) twins.
+    probe_buckets: bool,
+}
+
+const PROBE_N: usize = 512;
+/// SpMM row-tile instantiations: (r, ft); ft = 128 is the wide-lane
+/// ("vec") path, legal only when F % 128 == 0.
+const SPMM_TILES: &[(usize, usize)] = &[(8, 32), (32, 32), (8, 128)];
+const HUB_TILES: &[(usize, usize)] = &[(8, 32), (8, 128)];
+const SDDMM_TILES: &[(usize, usize)] = &[(8, 32), (8, 128)];
+const SOFTMAX_R: usize = 8;
+
+const SYNTH_PRESETS: &[SynthPreset] = &[
+    // Tiny buckets so sub-256-row inputs (and the test suite) never pay
+    // for a 4096-row pad. No probe twins: such inputs always take the
+    // full-bucket probe path.
+    SynthPreset {
+        name: "micro",
+        n_pad: 256,
+        w_plain: 16,
+        nnz_pad: 4096,
+        nnz_pad_probe: 0,
+        fs: &[8, 16, 32, 64, 128],
+        sddmm_fs: &[8, 16, 32, 64, 128],
+        hub: Some((4, 64, 16, 0)),
+        probe_buckets: false,
+    },
+    SynthPreset {
+        name: "er_s",
+        n_pad: 4096,
+        w_plain: 32,
+        nnz_pad: 32768,
+        nnz_pad_probe: 8192,
+        fs: &[32, 64, 128, 256],
+        sddmm_fs: &[64, 128],
+        hub: Some((8, 256, 32, 64)),
+        probe_buckets: true,
+    },
+    SynthPreset {
+        name: "hub_s",
+        n_pad: 4096,
+        w_plain: 512,
+        nnz_pad: 524288,
+        nnz_pad_probe: 65536,
+        fs: &[64, 128, 256],
+        sddmm_fs: &[],
+        hub: Some((8, 1024, 512, 128)),
+        probe_buckets: true,
+    },
+    SynthPreset {
+        name: "reddit_s",
+        n_pad: 4096,
+        w_plain: 256,
+        nnz_pad: 262144,
+        nnz_pad_probe: 65536,
+        fs: &[32, 64, 96, 128, 192, 256],
+        sddmm_fs: &[],
+        hub: Some((128, 256, 256, 64)),
+        probe_buckets: true,
+    },
+    SynthPreset {
+        name: "products_s",
+        n_pad: 8192,
+        w_plain: 128,
+        nnz_pad: 262144,
+        nnz_pad_probe: 32768,
+        fs: &[32, 64, 96, 128, 192, 256],
+        sddmm_fs: &[64, 128],
+        hub: Some((64, 256, 128, 64)),
+        probe_buckets: true,
+    },
+    SynthPreset {
+        name: "t10a",
+        n_pad: 2048,
+        w_plain: 512,
+        nnz_pad: 262144,
+        nnz_pad_probe: 65536,
+        fs: &[128],
+        sddmm_fs: &[],
+        hub: Some((64, 64, 512, 32)),
+        probe_buckets: true,
+    },
+    SynthPreset {
+        name: "t10b",
+        n_pad: 2048,
+        w_plain: 1024,
+        nnz_pad: 131072,
+        nnz_pad_probe: 65536,
+        fs: &[128],
+        sddmm_fs: &[],
+        hub: Some((32, 64, 1024, 32)),
+        probe_buckets: true,
+    },
+];
+
+type SynthInput = (&'static str, &'static str, Vec<usize>);
+
+fn synth_entry(
+    dir: &Path,
+    name: String,
+    op: &str,
+    variant: &str,
+    preset: &str,
+    params: &[(&str, usize)],
+    inputs: Vec<SynthInput>,
+) -> ArtifactEntry {
+    let mut p = BTreeMap::new();
+    for (k, v) in params {
+        p.insert((*k).to_string(), *v as i64);
+    }
+    let path = dir.join(format!("{name}.native"));
+    ArtifactEntry {
+        name,
+        op: op.to_string(),
+        variant: variant.to_string(),
+        params: p,
+        path,
+        inputs: inputs
+            .into_iter()
+            .map(|(n, d, shape)| InputSpec {
+                name: n.to_string(),
+                dtype: d.to_string(),
+                shape,
+            })
+            .collect(),
+        preset_tag: Some(preset.to_string()),
+    }
+}
+
+fn synth_spmm(
+    out: &mut Vec<ArtifactEntry>,
+    dir: &Path,
+    p: &SynthPreset,
+    n_pad: usize,
+    nnz_pad: usize,
+    h_pad: usize,
+    tag: &str,
+) {
+    let w = p.w_plain;
+    for &f in p.fs {
+        let base = [("n_pad", n_pad), ("w", w), ("f", f)];
+        // Vendor baseline: COO scatter.
+        out.push(synth_entry(
+            dir,
+            format!("spmm_base_{}_{tag}_F{f}", p.name),
+            "spmm",
+            "baseline_scatter",
+            p.name,
+            &[("n_pad", n_pad), ("w", w), ("f", f), ("nnz_pad", nnz_pad)],
+            vec![
+                ("row", "s32", vec![nnz_pad]),
+                ("col", "s32", vec![nnz_pad]),
+                ("val", "f32", vec![nnz_pad]),
+                ("b", "f32", vec![n_pad, f]),
+            ],
+        ));
+        // Whole-row gather (grid-free limit).
+        out.push(synth_entry(
+            dir,
+            format!("spmm_ellg_{}_{tag}_F{f}", p.name),
+            "spmm",
+            "ell_gather",
+            p.name,
+            &base,
+            vec![
+                ("colind", "s32", vec![n_pad, w]),
+                ("val", "f32", vec![n_pad, w]),
+                ("b", "f32", vec![n_pad, f]),
+            ],
+        ));
+        // Row-tile kernels.
+        for &(r, ft) in SPMM_TILES {
+            if f % ft != 0 {
+                continue;
+            }
+            out.push(synth_entry(
+                dir,
+                format!("spmm_ell_r{r}_f{ft}_{}_{tag}_F{f}", p.name),
+                "spmm",
+                &format!("ell_r{r}_f{ft}"),
+                p.name,
+                &[("n_pad", n_pad), ("w", w), ("f", f), ("r", r), ("ft", ft)],
+                vec![
+                    ("colind", "s32", vec![n_pad, w]),
+                    ("val", "f32", vec![n_pad, w]),
+                    ("b", "f32", vec![n_pad, f]),
+                ],
+            ));
+        }
+        // Hub-split kernels.
+        if let Some((w_light, _, w_hub, _)) = p.hub {
+            let hub_inputs = |f: usize| -> Vec<SynthInput> {
+                vec![
+                    ("light_colind", "s32", vec![n_pad, w_light]),
+                    ("light_val", "f32", vec![n_pad, w_light]),
+                    ("hub_rows", "s32", vec![h_pad]),
+                    ("hub_colind", "s32", vec![h_pad, w_hub]),
+                    ("hub_val", "f32", vec![h_pad, w_hub]),
+                    ("b", "f32", vec![n_pad, f]),
+                ]
+            };
+            out.push(synth_entry(
+                dir,
+                format!("spmm_hubg_{}_{tag}_F{f}", p.name),
+                "spmm",
+                "hub_gather",
+                p.name,
+                &[
+                    ("n_pad", n_pad),
+                    ("w", w),
+                    ("f", f),
+                    ("w_light", w_light),
+                    ("h_pad", h_pad),
+                    ("w_hub", w_hub),
+                ],
+                hub_inputs(f),
+            ));
+            for &(r, ft) in HUB_TILES {
+                if f % ft != 0 {
+                    continue;
+                }
+                out.push(synth_entry(
+                    dir,
+                    format!("spmm_hub_r{r}_f{ft}_{}_{tag}_F{f}", p.name),
+                    "spmm",
+                    &format!("hub_r{r}_f{ft}"),
+                    p.name,
+                    &[
+                        ("n_pad", n_pad),
+                        ("w", w),
+                        ("f", f),
+                        ("r", r),
+                        ("ft", ft),
+                        ("w_light", w_light),
+                        ("h_pad", h_pad),
+                        ("w_hub", w_hub),
+                    ],
+                    hub_inputs(f),
+                ));
+            }
+        }
+    }
+}
+
+fn synth_sddmm(out: &mut Vec<ArtifactEntry>, dir: &Path, p: &SynthPreset, n_pad: usize, tag: &str) {
+    let w = p.w_plain;
+    for &f in p.sddmm_fs {
+        let inputs = |f: usize| -> Vec<SynthInput> {
+            vec![
+                ("colind", "s32", vec![n_pad, w]),
+                ("mask", "f32", vec![n_pad, w]),
+                ("x", "f32", vec![n_pad, f]),
+                ("y", "f32", vec![n_pad, f]),
+            ]
+        };
+        out.push(synth_entry(
+            dir,
+            format!("sddmm_base_{}_{tag}_F{f}", p.name),
+            "sddmm",
+            "baseline_gather",
+            p.name,
+            &[("n_pad", n_pad), ("w", w), ("f", f)],
+            inputs(f),
+        ));
+        for &(r, ft) in SDDMM_TILES {
+            if f % ft != 0 {
+                continue;
+            }
+            out.push(synth_entry(
+                dir,
+                format!("sddmm_ell_r{r}_f{ft}_{}_{tag}_F{f}", p.name),
+                "sddmm",
+                &format!("ell_r{r}_f{ft}"),
+                p.name,
+                &[("n_pad", n_pad), ("w", w), ("f", f), ("r", r), ("ft", ft)],
+                inputs(f),
+            ));
+        }
+    }
+}
+
+fn synth_softmax(out: &mut Vec<ArtifactEntry>, dir: &Path, p: &SynthPreset, n_pad: usize, tag: &str) {
+    if p.sddmm_fs.is_empty() {
+        return;
+    }
+    let w = p.w_plain;
+    let inputs = || -> Vec<SynthInput> {
+        vec![
+            ("val", "f32", vec![n_pad, w]),
+            ("mask", "f32", vec![n_pad, w]),
+        ]
+    };
+    out.push(synth_entry(
+        dir,
+        format!("softmax_base_{}_{tag}", p.name),
+        "softmax",
+        "baseline",
+        p.name,
+        &[("n_pad", n_pad), ("w", w)],
+        inputs(),
+    ));
+    out.push(synth_entry(
+        dir,
+        format!("softmax_ell_r{SOFTMAX_R}_{}_{tag}", p.name),
+        "softmax",
+        &format!("ell_r{SOFTMAX_R}"),
+        p.name,
+        &[("n_pad", n_pad), ("w", w), ("r", SOFTMAX_R)],
+        inputs(),
+    ));
+}
+
+fn synth_attention(
+    out: &mut Vec<ArtifactEntry>,
+    dir: &Path,
+    p: &SynthPreset,
+    n_pad: usize,
+    nnz_pad: usize,
+    tag: &str,
+) {
+    let w = p.w_plain;
+    for &f in p.sddmm_fs {
+        out.push(synth_entry(
+            dir,
+            format!("attn_base_{}_{tag}_F{f}", p.name),
+            "attention",
+            "baseline",
+            p.name,
+            &[("n_pad", n_pad), ("w", w), ("f", f), ("nnz_pad", nnz_pad)],
+            vec![
+                ("colind", "s32", vec![n_pad, w]),
+                ("mask", "f32", vec![n_pad, w]),
+                ("row", "s32", vec![nnz_pad]),
+                ("col", "s32", vec![nnz_pad]),
+                ("q", "f32", vec![n_pad, f]),
+                ("k", "f32", vec![n_pad, f]),
+                ("v", "f32", vec![n_pad, f]),
+            ],
+        ));
+        let fused_inputs = |f: usize| -> Vec<SynthInput> {
+            vec![
+                ("colind", "s32", vec![n_pad, w]),
+                ("mask", "f32", vec![n_pad, w]),
+                ("q", "f32", vec![n_pad, f]),
+                ("k", "f32", vec![n_pad, f]),
+                ("v", "f32", vec![n_pad, f]),
+            ]
+        };
+        out.push(synth_entry(
+            dir,
+            format!("attn_fgather_{}_{tag}_F{f}", p.name),
+            "attention",
+            "fused_gather",
+            p.name,
+            &[("n_pad", n_pad), ("w", w), ("f", f)],
+            fused_inputs(f),
+        ));
+        for &(r, ft) in SDDMM_TILES {
+            if f % ft != 0 {
+                continue;
+            }
+            out.push(synth_entry(
+                dir,
+                format!("attn_fused_r{r}_f{ft}_{}_{tag}_F{f}", p.name),
+                "attention",
+                &format!("fused_r{r}_f{ft}"),
+                p.name,
+                &[("n_pad", n_pad), ("w", w), ("f", f), ("r", r), ("ft", ft)],
+                fused_inputs(f),
+            ));
+        }
+    }
+}
+
+fn synth_linear(out: &mut Vec<ArtifactEntry>, dir: &Path) {
+    // Dense transform buckets for the GCN end-to-end example, plus
+    // micro sizes for tests.
+    for (n_pad, f_in, f_out) in [
+        (8192, 64, 64),
+        (8192, 128, 128),
+        (8192, 128, 64),
+        (8192, 64, 128),
+        (256, 16, 16),
+        (256, 32, 32),
+    ] {
+        out.push(synth_entry(
+            dir,
+            format!("linear_relu_n{n_pad}_{f_in}x{f_out}"),
+            "linear_relu",
+            "dense",
+            "dense",
+            &[("n_pad", n_pad), ("f_in", f_in), ("f_out", f_out)],
+            vec![
+                ("h", "f32", vec![n_pad, f_in]),
+                ("w", "f32", vec![f_in, f_out]),
+                ("bias", "f32", vec![f_out]),
+            ],
+        ));
     }
 }
 
@@ -205,5 +665,80 @@ mod tests {
         let bad = r#"{"entries": [{"name": "x", "op": "spmm",
             "variant": "v", "path": "p", "inputs": []}]}"#;
         assert!(Manifest::parse(Path::new("/x"), bad).is_err());
+    }
+
+    #[test]
+    fn require_usize_names_entry_and_param() {
+        let m = Manifest::parse(Path::new("/x"), SAMPLE).unwrap();
+        let e = m.by_name("spmm_base_er_s_full_F64").unwrap();
+        assert_eq!(e.require_usize("n_pad").unwrap(), 4096);
+        let err = e.require_usize("nope").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("spmm_base_er_s_full_F64"), "{msg}");
+        assert!(msg.contains("nope"), "{msg}");
+    }
+
+    #[test]
+    fn synthetic_catalog_is_complete_and_unique() {
+        let m = Manifest::synthetic();
+        assert!(m.entries.len() > 100, "only {} entries", m.entries.len());
+        let names: std::collections::BTreeSet<&str> =
+            m.entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names.len(), m.entries.len(), "duplicate names");
+        // Every op family is present at full and probe size.
+        for op in ["spmm", "sddmm", "softmax", "attention"] {
+            assert!(
+                m.entries.iter().any(|e| e.op == op && !e.is_probe()),
+                "{op}: no full buckets"
+            );
+            assert!(
+                m.entries.iter().any(|e| e.op == op && e.is_probe()),
+                "{op}: no probe buckets"
+            );
+        }
+        // Baselines exist wherever candidates exist.
+        assert!(m
+            .entries
+            .iter()
+            .any(|e| e.op == "spmm" && e.variant == "baseline_scatter"));
+        assert!(m
+            .entries
+            .iter()
+            .any(|e| e.op == "sddmm" && e.variant == "baseline_gather"));
+        // Wide-lane tiles only at F % 128 == 0.
+        for e in &m.entries {
+            if e.variant.contains("f128") {
+                assert_eq!(e.param_usize("f").unwrap() % 128, 0, "{}", e.name);
+            }
+        }
+        // Input shapes are consistent with the bucket params.
+        for e in &m.entries {
+            let n_pad = e.param_usize("n_pad").unwrap();
+            for spec in &e.inputs {
+                if spec.name == "colind" || spec.name == "mask" {
+                    assert_eq!(spec.shape[0], n_pad, "{}", e.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_candidates_cover_presets() {
+        let m = Manifest::synthetic();
+        // The probe path needs probe-size baselines + candidates for
+        // every (spmm, F) the bench sweeps.
+        for f in [32, 64, 128, 256] {
+            let probe = m.candidates("spmm", Some(f), true);
+            assert!(
+                probe.iter().any(|e| e.variant == "baseline_scatter"),
+                "F={f}: no probe baseline"
+            );
+            assert!(
+                probe.iter().any(|e| e.variant != "baseline_scatter"),
+                "F={f}: no probe candidates"
+            );
+            let full = m.candidates("spmm", Some(f), false);
+            assert!(full.len() >= 4, "F={f}: only {} full entries", full.len());
+        }
     }
 }

@@ -1,11 +1,14 @@
-//! PJRT runtime: loads AOT artifacts (HLO text) produced by
-//! `python/compile/aot.py`, compiles them once, and executes them on the
-//! request path. Python never runs here.
+//! Kernel-catalog runtime: the artifact manifest (parsed from
+//! `artifacts/manifest.json` or synthesized for the native backend),
+//! host tensors, and — behind the `pjrt` cargo feature — the PJRT
+//! client that compiles and executes AOT HLO artifacts.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use client::Device;
 pub use manifest::{ArtifactEntry, InputSpec, Manifest};
 pub use tensor::Tensor;

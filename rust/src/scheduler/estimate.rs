@@ -36,11 +36,22 @@ pub struct DeviceModel {
     /// and the reason small-`r` row tiles lose here. A real TPU model
     /// would set this near zero and re-weight VMEM streaming instead.
     pub step_us: f64,
+    /// Whether grid kernels pay the interpret-mode full-panel re-slice
+    /// per step (PJRT CPU testbed). Native tiled kernels instead pay one
+    /// extra read of the slot arrays per feature pass — far cheaper, and
+    /// modeled separately in `estimate_entry`. Backends supply this via
+    /// `Backend::device_model()`.
+    pub grid_panel_emulation: bool,
 }
 
 impl Default for DeviceModel {
     fn default() -> Self {
-        DeviceModel { mem_bw_gbps: 8.0, peak_gflops: 8.0, step_us: 50.0 }
+        DeviceModel {
+            mem_bw_gbps: 8.0,
+            peak_gflops: 8.0,
+            step_us: 50.0,
+            grid_panel_emulation: true,
+        }
     }
 }
 
@@ -62,11 +73,26 @@ pub fn estimate_entry(
     let mut panel_bytes = 0.0;
     if let (Some(r), Some(ft)) = (entry.param_usize("r"), entry.param_usize("ft")) {
         steps = (n_pad / r as f64) * (f / ft as f64).max(1.0);
-        // Interpret-mode grids re-slice the (n_pad, ft) B/X/Y panel every
-        // step (the emulation of the HBM→VMEM stream), so the panel
-        // traffic scales with steps × n_pad — the term that makes small-r
-        // row tiles non-viable at full size on this backend.
-        panel_bytes = steps * n_pad * ft as f64 * B4;
+        if dev.grid_panel_emulation {
+            // Interpret-mode grids re-slice the (n_pad, ft) B/X/Y panel
+            // every step (the emulation of the HBM→VMEM stream), so the
+            // panel traffic scales with steps × n_pad — the term that
+            // makes small-r row tiles non-viable at full size on the
+            // PJRT CPU backend.
+            panel_bytes = steps * n_pad * ft as f64 * B4;
+        } else {
+            // Native tiled kernels re-read the slot arrays (colind+val,
+            // 8 bytes/slot over the row width) once per feature pass.
+            // Hub-split kernels only feature-tile the LIGHT partition
+            // (the hub block runs full-F once), so charge w_light there,
+            // not the plain ELL width.
+            let passes = (f / ft as f64).max(1.0) - 1.0;
+            let w = entry
+                .param_usize("w_light")
+                .or(entry.param_usize("w"))
+                .unwrap_or(1) as f64;
+            panel_bytes = passes * n_pad * w * 2.0 * B4;
+        }
     }
     let (bytes, flops) = match entry.op.as_str() {
         "spmm" => match v {

@@ -10,11 +10,11 @@ pub mod probe;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::Backend;
 use crate::config::Config;
 use crate::graph::signature::graph_signature;
 use crate::graph::Csr;
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
-use crate::runtime::Device;
 
 pub use cache::{cache_key, CachedChoice, ScheduleCache};
 pub use estimate::DeviceModel;
@@ -199,7 +199,7 @@ impl Scheduler {
     /// probe → guardrail → cache.
     pub fn decide(
         &mut self,
-        dev: &Device,
+        dev: &dyn Backend,
         manifest: &Manifest,
         g: &Csr,
         op: Op,
@@ -285,11 +285,14 @@ impl Scheduler {
             .candidates(op.as_str(), fq, false)
             .into_iter()
             .filter(|e| e.variant != op.baseline_variant() && entry_fits(e, g))
-            // Grid (row-tile) Pallas kernels are compile/correctness
-            // targets on this CPU backend; they join the executable
-            // candidate space only with AUTOSAGE_GRID=1 (see config.rs).
+            // Grid (row-tile) kernels join the executable candidate
+            // space when the backend runs them at native cost (the
+            // NativeBackend's tiled kernels) or when forced with
+            // AUTOSAGE_GRID=1 (interpret-mode ablations; see config.rs).
             .filter(|e| {
-                self.cfg.allow_grid_kernels || e.param("r").is_none()
+                self.cfg.allow_grid_kernels
+                    || dev.executes_grid_kernels()
+                    || e.param("r").is_none()
             })
             .collect();
         let shortlisted = estimate::shortlist(

@@ -2,20 +2,21 @@
 //! and the baseline on an induced subgraph (default 2–3% of rows,
 //! min 512) for `n` iterations under a wall-time cap.
 //!
-//! Inputs are uploaded to device buffers once per candidate; the timed
-//! loop is execute + output sync only, mirroring CUDA-event kernel
-//! timing as closely as the PJRT CPU client allows.
+//! Inputs are packed once per candidate and handed to the backend's
+//! timing loop (`Backend::time_entry`), which uploads once and runs
+//! execute + output sync per iteration — mirroring CUDA-event kernel
+//! timing as closely as each engine allows.
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::Backend;
 use crate::config::Config;
 use crate::graph::Csr;
 use crate::ops::pack::{pack_inputs, OpData};
 use crate::runtime::manifest::ArtifactEntry;
-use crate::runtime::Device;
 use crate::util::rng::Rng;
 use crate::util::stats::TimingSummary;
-use crate::util::timing::{time_fn, Stopwatch};
+use crate::util::timing::Stopwatch;
 
 use super::Op;
 
@@ -57,10 +58,10 @@ pub fn synth_operands(op: Op, n_rows: usize, f: usize, seed: u64) -> OpData {
     data
 }
 
-/// Time one entry on `g` with operands `data`: upload once, then timed
-/// execute+sync iterations.
+/// Time one entry on `g` with operands `data`: pack once, then hand the
+/// packed tensors to the backend's upload-once timed loop.
 pub fn time_entry(
-    dev: &Device,
+    dev: &dyn Backend,
     entry: &ArtifactEntry,
     g: &Csr,
     data: &OpData,
@@ -68,32 +69,9 @@ pub fn time_entry(
     iters: usize,
     cap_ms: f64,
 ) -> Result<TimingSummary> {
-    let exe = dev.load(entry)?;
+    dev.load(entry)?;
     let inputs = pack_inputs(entry, g, data)?;
-    let bufs = dev.upload(entry, &inputs)?;
-    let mut err: Option<anyhow::Error> = None;
-    let summary = time_fn(
-        || {
-            if err.is_some() {
-                return;
-            }
-            match dev.execute_buffers(&exe, &bufs) {
-                Ok(out) => {
-                    if let Err(e) = dev.sync(&out) {
-                        err = Some(e);
-                    }
-                }
-                Err(e) => err = Some(e),
-            }
-        },
-        warmup,
-        iters,
-        cap_ms,
-    );
-    match err {
-        Some(e) => Err(e),
-        None => Ok(summary),
-    }
+    dev.time_entry(entry, &inputs, warmup, iters, cap_ms)
 }
 
 /// Run the micro-probe: baseline + each shortlisted candidate on the
@@ -101,7 +79,7 @@ pub fn time_entry(
 /// for bucket-fit checks — see `Scheduler::decide`).
 #[allow(clippy::too_many_arguments)]
 pub fn run_probe(
-    dev: &Device,
+    dev: &dyn Backend,
     op: Op,
     f: usize,
     sub: &Csr,

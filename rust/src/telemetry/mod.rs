@@ -102,7 +102,7 @@ impl Telemetry {
 }
 
 /// The `.meta.json` sidecar content (paper §10: "GPU/SM, Torch/CUDA
-/// versions, and env vars" → here: device signature, rustc/runtime
+/// versions, and env vars" → here: device/backend signature, runtime
 /// identity, and all AUTOSAGE_* toggles).
 pub fn meta_sidecar(device_sig: &str, cfg: &Config) -> Json {
     let env_toggles: Vec<(String, Json)> = std::env::vars()
@@ -111,7 +111,8 @@ pub fn meta_sidecar(device_sig: &str, cfg: &Config) -> Json {
         .collect();
     Json::obj(vec![
         ("device_sig", Json::str(device_sig)),
-        ("runtime", Json::str("xla-0.1.6/pjrt-cpu")),
+        ("runtime", Json::str(format!("autosage-{}", env!("CARGO_PKG_VERSION")))),
+        ("backend_cfg", Json::str(cfg.backend.clone())),
         ("alpha", Json::num(cfg.alpha)),
         ("probe_frac", Json::num(cfg.probe_frac)),
         ("probe_iters", Json::num(cfg.probe_iters as f64)),

@@ -1,0 +1,288 @@
+//! Property tests: every `NativeBackend` kernel variant equals the
+//! pure-Rust oracle (`ops::reference`) across randomized graphs, plus
+//! the adversarial structures the bucketer must survive: empty rows,
+//! a single hub, and max-degree-exactly-at-bucket-boundary.
+//!
+//! Runs from a clean checkout — the native backend synthesizes its own
+//! manifest, no artifacts directory involved.
+
+use std::path::Path;
+
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::graph::Csr;
+use autosage::ops::reference;
+use autosage::util::rng::Rng;
+
+const TOL: f32 = 1e-4;
+
+fn native_sage() -> AutoSage {
+    let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
+    cfg.cache_path = String::new();
+    AutoSage::new(Path::new("ignored_for_native"), cfg, None).unwrap()
+}
+
+/// Random CSR: `n` rows, degrees uniform in [0, max_deg].
+fn arb_graph(rng: &mut Rng, n: usize, max_deg: usize) -> Csr {
+    let rows = (0..n)
+        .map(|_| {
+            let d = rng.below(max_deg + 1);
+            rng.sample_distinct(n, d)
+                .into_iter()
+                .map(|c| (c as u32, rng.next_f32() - 0.5))
+                .collect()
+        })
+        .collect();
+    Csr::from_rows(n, rows)
+}
+
+fn dense(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() - 0.5).collect()
+}
+
+/// The structural edge cases every variant must handle:
+/// * graph with empty rows scattered through it,
+/// * a single hub row among degree-1 rows,
+/// * max degree == 16, the micro bucket's exact ELL width boundary.
+fn edge_case_graphs(rng: &mut Rng) -> Vec<(&'static str, Csr)> {
+    // Every third row empty.
+    let sparse_rows: Vec<Vec<(u32, f32)>> = (0..60)
+        .map(|i| {
+            if i % 3 == 0 {
+                vec![]
+            } else {
+                vec![((i as u32 + 1) % 60, rng.next_f32() - 0.5)]
+            }
+        })
+        .collect();
+    // One hub of degree 16 (== micro w_plain AND micro w_hub), others degree 1.
+    let mut hub_rows: Vec<Vec<(u32, f32)>> = (0..50)
+        .map(|i| vec![((i as u32 + 7) % 50, rng.next_f32() - 0.5)])
+        .collect();
+    hub_rows[11] = (0..16).map(|c| (c as u32, rng.next_f32() - 0.5)).collect();
+    // All rows at exactly the micro bucket boundary (deg 16 == w).
+    let boundary_rows: Vec<Vec<(u32, f32)>> = (0..40)
+        .map(|i| {
+            (0..16)
+                .map(|k| (((i + k * 3) % 40) as u32, rng.next_f32() - 0.5))
+                .collect()
+        })
+        .collect();
+    vec![
+        ("empty_rows", Csr::from_rows(60, sparse_rows)),
+        ("single_hub", Csr::from_rows(50, hub_rows)),
+        ("deg_at_boundary", Csr::from_rows(40, boundary_rows)),
+    ]
+}
+
+const SPMM_VARIANTS: &[&str] = &[
+    "baseline",
+    "ell_gather",
+    "ell_r8_f32",
+    "ell_r32_f32",
+    "hub_gather",
+    "hub_r8_f32",
+];
+
+#[test]
+fn prop_spmm_all_variants_match_oracle() {
+    let mut sage = native_sage();
+    let mut rng = Rng::new(0x5A6E);
+    let f = 32;
+    for case in 0..12 {
+        let n = 40 + rng.below(80);
+        let g = arb_graph(&mut rng, n, 12);
+        let b = dense(&mut rng, g.n_rows * f);
+        let want = reference::spmm(&g, &b, f);
+        for variant in SPMM_VARIANTS {
+            let got = sage
+                .spmm_with(&g, &b, f, variant)
+                .unwrap_or_else(|e| panic!("case {case} {variant}: {e:#}"));
+            let d = reference::max_abs_diff(&got, &want);
+            assert!(d < TOL, "case {case} spmm {variant}: max diff {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_spmm_wide_lane_matches_oracle() {
+    let mut sage = native_sage();
+    let mut rng = Rng::new(0x1234);
+    let f = 128; // F % 128 == 0 -> the vec path is legal
+    for case in 0..6 {
+        let n = 30 + rng.below(60);
+        let g = arb_graph(&mut rng, n, 10);
+        let b = dense(&mut rng, g.n_rows * f);
+        let want = reference::spmm(&g, &b, f);
+        for variant in ["ell_r8_f128", "hub_r8_f128", "ell_gather", "baseline"] {
+            let got = sage.spmm_with(&g, &b, f, variant).unwrap();
+            let d = reference::max_abs_diff(&got, &want);
+            assert!(d < TOL, "case {case} spmm {variant}: max diff {d}");
+        }
+    }
+}
+
+#[test]
+fn spmm_edge_cases_all_variants() {
+    let mut sage = native_sage();
+    let mut rng = Rng::new(0xED6E);
+    let f = 32;
+    for (name, g) in edge_case_graphs(&mut rng) {
+        let b = dense(&mut rng, g.n_rows * f);
+        let want = reference::spmm(&g, &b, f);
+        for variant in SPMM_VARIANTS {
+            let got = sage
+                .spmm_with(&g, &b, f, variant)
+                .unwrap_or_else(|e| panic!("{name} {variant}: {e:#}"));
+            let d = reference::max_abs_diff(&got, &want);
+            assert!(d < TOL, "{name} spmm {variant}: max diff {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_sddmm_variants_match_oracle() {
+    let mut sage = native_sage();
+    let mut rng = Rng::new(0xDD);
+    let f = 32;
+    for case in 0..10 {
+        let n = 40 + rng.below(60);
+        let g = arb_graph(&mut rng, n, 12);
+        let x = dense(&mut rng, g.n_rows * f);
+        let y = dense(&mut rng, g.n_rows * f);
+        let want = reference::sddmm(&g, &x, &y, f);
+        for variant in ["baseline", "ell_r8_f32"] {
+            let got = sage.sddmm_with(&g, &x, &y, f, variant).unwrap();
+            assert_eq!(got.len(), g.nnz(), "case {case}");
+            let d = reference::max_abs_diff(&got, &want);
+            assert!(d < TOL, "case {case} sddmm {variant}: max diff {d}");
+        }
+    }
+    // Wide-lane SDDMM at F = 128.
+    let f = 128;
+    let g = arb_graph(&mut rng, 50, 10);
+    let x = dense(&mut rng, g.n_rows * f);
+    let y = dense(&mut rng, g.n_rows * f);
+    let want = reference::sddmm(&g, &x, &y, f);
+    let got = sage.sddmm_with(&g, &x, &y, f, "ell_r8_f128").unwrap();
+    let d = reference::max_abs_diff(&got, &want);
+    assert!(d < 5e-4, "sddmm ell_r8_f128: max diff {d}");
+}
+
+#[test]
+fn prop_softmax_matches_oracle_including_empty_rows() {
+    let mut sage = native_sage();
+    let mut rng = Rng::new(0x50F);
+    for case in 0..10 {
+        let n = 30 + rng.below(80);
+        let g = arb_graph(&mut rng, n, 10);
+        let scores = dense(&mut rng, g.nnz());
+        let want = reference::softmax_rows(&g, &scores);
+        for variant in ["baseline", "ell_r8"] {
+            let got = sage.softmax_with(&g, &scores, variant).unwrap();
+            let d = reference::max_abs_diff(&got, &want);
+            assert!(d < TOL, "case {case} softmax {variant}: max diff {d}");
+        }
+        // Row sums are 1 for non-empty rows (sanity on the oracle too).
+        let got = sage.softmax_with(&g, &scores, "baseline").unwrap();
+        for i in 0..g.n_rows {
+            let (a, b) = (g.rowptr[i], g.rowptr[i + 1]);
+            if a == b {
+                continue;
+            }
+            let s: f32 = got[a..b].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "case {case} row {i} sums to {s}");
+        }
+    }
+}
+
+#[test]
+fn prop_attention_variants_match_oracle() {
+    let mut sage = native_sage();
+    let mut rng = Rng::new(0xA77);
+    let f = 32;
+    for case in 0..8 {
+        let n = 30 + rng.below(60);
+        let g = arb_graph(&mut rng, n, 10);
+        let q = dense(&mut rng, g.n_rows * f);
+        let k = dense(&mut rng, g.n_rows * f);
+        let v = dense(&mut rng, g.n_rows * f);
+        let want = reference::csr_attention(&g, &q, &k, &v, f);
+        for variant in ["baseline", "fused_gather", "fused_r8_f32"] {
+            let got = sage
+                .attention_with(&g, &q, &k, &v, f, variant)
+                .unwrap_or_else(|e| panic!("case {case} {variant}: {e:#}"));
+            let d = reference::max_abs_diff(&got, &want);
+            assert!(d < TOL, "case {case} attention {variant}: max diff {d}");
+        }
+    }
+}
+
+#[test]
+fn attention_edge_cases() {
+    let mut sage = native_sage();
+    let mut rng = Rng::new(0xA778);
+    let f = 16;
+    for (name, g) in edge_case_graphs(&mut rng) {
+        let q = dense(&mut rng, g.n_rows * f);
+        let k = dense(&mut rng, g.n_rows * f);
+        let v = dense(&mut rng, g.n_rows * f);
+        let want = reference::csr_attention(&g, &q, &k, &v, f);
+        for variant in ["baseline", "fused_gather"] {
+            let got = sage.attention_with(&g, &q, &k, &v, f, variant).unwrap();
+            let d = reference::max_abs_diff(&got, &want);
+            assert!(d < TOL, "{name} attention {variant}: max diff {d}");
+            assert!(got.iter().all(|x| x.is_finite()), "{name}: non-finite output");
+        }
+    }
+}
+
+#[test]
+fn auto_path_runs_native_end_to_end() {
+    // The full pipeline (estimate -> probe -> guardrail -> execute) over
+    // the native backend, matching the oracle regardless of which
+    // variant wins.
+    let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
+    cfg.cache_path = String::new();
+    cfg.probe_iters = 2;
+    cfg.probe_cap_ms = 100.0;
+    let mut sage = AutoSage::new(Path::new("x"), cfg, None).unwrap();
+    let mut rng = Rng::new(0xE2E);
+    let g = arb_graph(&mut rng, 120, 10);
+    let f = 32;
+    let b = dense(&mut rng, g.n_rows * f);
+    let got = sage.spmm_auto(&g, &b, f).unwrap();
+    let want = reference::spmm(&g, &b, f);
+    assert!(reference::max_abs_diff(&got, &want) < TOL);
+
+    let q = dense(&mut rng, g.n_rows * f);
+    let got = sage.attention_auto(&g, &q, &q, &q, f).unwrap();
+    let want = reference::csr_attention(&g, &q, &q, &q, f);
+    assert!(reference::max_abs_diff(&got, &want) < TOL);
+}
+
+#[test]
+fn linear_relu_matches_oracle() {
+    let mut sage = native_sage();
+    let mut rng = Rng::new(0x6C);
+    let (n, f_in, f_out) = (100, 16, 16);
+    let h = dense(&mut rng, n * f_in);
+    let w = dense(&mut rng, f_in * f_out);
+    let bias = dense(&mut rng, f_out);
+    let got = sage.linear_relu(&h, n, f_in, &w, f_out, &bias).unwrap();
+    // Oracle: gcn_layer over an identity-free graph is just the dense
+    // transform; compute it directly.
+    let mut want = vec![0.0f32; n * f_out];
+    for i in 0..n {
+        for o in 0..f_out {
+            let mut acc = bias[o];
+            for k in 0..f_in {
+                acc += h[i * f_in + k] * w[k * f_out + o];
+            }
+            want[i * f_out + o] = acc.max(0.0);
+        }
+    }
+    assert!(reference::max_abs_diff(&got, &want) < TOL);
+}

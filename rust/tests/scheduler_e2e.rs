@@ -1,6 +1,9 @@
 //! Integration: the scheduling pipeline end-to-end — decide → cache →
 //! persist → replay across instances; replay-only semantics; guardrail
 //! non-regression on measured full-graph medians.
+//!
+//! Runs on the native backend so a clean checkout needs no artifacts;
+//! `artifacts_vs_oracle.rs` covers the PJRT path.
 
 use std::path::Path;
 
@@ -9,25 +12,20 @@ use autosage::coordinator::AutoSage;
 use autosage::gen::preset;
 use autosage::scheduler::{DecisionSource, Op};
 
-fn have_artifacts() -> bool {
-    let ok = Path::new("artifacts/manifest.json").exists();
-    if !ok {
-        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
-    }
-    ok
-}
-
 fn cfg_with_cache(path: &str) -> Config {
     let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
     cfg.cache_path = path.to_string();
+    // Probe induced 512-row subgraphs (not the full 4096-row buckets):
+    // exercises the twin-mapping path and keeps debug-mode runs fast.
+    cfg.probe_full_max_rows = 512;
+    cfg.probe_iters = 3;
+    cfg.probe_cap_ms = 300.0;
     cfg
 }
 
 #[test]
 fn decide_then_cache_hit_same_instance() {
-    if !have_artifacts() {
-        return;
-    }
     let mut sage = AutoSage::new(Path::new("artifacts"), cfg_with_cache(""), None).unwrap();
     let (g, _) = preset("er_s", 9);
     let d1 = sage.decide(&g, Op::Spmm, 64).unwrap();
@@ -41,9 +39,6 @@ fn decide_then_cache_hit_same_instance() {
 
 #[test]
 fn cache_persists_across_instances_and_replay_only_works() {
-    if !have_artifacts() {
-        return;
-    }
     let cache = std::env::temp_dir().join("autosage_it_cache.json");
     let _ = std::fs::remove_file(&cache);
     let cache_s = cache.display().to_string();
@@ -76,9 +71,6 @@ fn cache_persists_across_instances_and_replay_only_works() {
 
 #[test]
 fn different_f_and_op_get_distinct_cache_keys() {
-    if !have_artifacts() {
-        return;
-    }
     let mut sage = AutoSage::new(Path::new("artifacts"), cfg_with_cache(""), None).unwrap();
     let (g, _) = preset("er_s", 11);
     let d_spmm64 = sage.decide(&g, Op::Spmm, 64).unwrap();
@@ -94,9 +86,6 @@ fn different_f_and_op_get_distinct_cache_keys() {
 
 #[test]
 fn guardrail_non_regression_on_full_graph() {
-    if !have_artifacts() {
-        return;
-    }
     // Proposition 1, checked against *measured* full-graph medians:
     // the chosen kernel must not be meaningfully slower than the vendor
     // baseline (allow 40% slack for single-core timing noise and
@@ -122,9 +111,6 @@ fn guardrail_non_regression_on_full_graph() {
 
 #[test]
 fn alpha_one_accepts_any_probe_winner() {
-    if !have_artifacts() {
-        return;
-    }
     let mut cfg = cfg_with_cache("");
     cfg.alpha = 1.0;
     let mut sage = AutoSage::new(Path::new("artifacts"), cfg, None).unwrap();
@@ -139,9 +125,6 @@ fn alpha_one_accepts_any_probe_winner() {
 
 #[test]
 fn telemetry_records_probe_and_decision_events() {
-    if !have_artifacts() {
-        return;
-    }
     let mut sage = AutoSage::new(Path::new("artifacts"), cfg_with_cache(""), None).unwrap();
     let (g, _) = preset("er_s", 14);
     let _ = sage.decide(&g, Op::Spmm, 64).unwrap();

@@ -1,8 +1,9 @@
 //! Integration: the coordinator's request-queue service — worker thread
-//! owns the PJRT device, requests flow over channels, schedule cache
-//! amortizes probes across requests.
+//! owns the execution backend, requests flow over channels, schedule
+//! cache amortizes probes across requests. Runs on the native backend,
+//! so no artifacts are needed.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use autosage::config::Config;
 use autosage::coordinator::ServiceHandle;
@@ -10,25 +11,19 @@ use autosage::gen::preset;
 use autosage::ops::reference;
 use autosage::scheduler::Op;
 
-fn have_artifacts() -> bool {
-    let ok = Path::new("artifacts/manifest.json").exists();
-    if !ok {
-        eprintln!("SKIP: artifacts/ missing; run `make artifacts`");
-    }
-    ok
-}
-
 fn service() -> ServiceHandle {
     let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
     cfg.cache_path = String::new();
+    // Keep debug-mode probes on 512-row subgraphs and short loops.
+    cfg.probe_full_max_rows = 512;
+    cfg.probe_iters = 3;
+    cfg.probe_cap_ms = 300.0;
     ServiceHandle::spawn(PathBuf::from("artifacts"), cfg)
 }
 
 #[test]
 fn serves_spmm_and_caches_schedule() {
-    if !have_artifacts() {
-        return;
-    }
     let svc = service();
     let (g, _) = preset("er_s", 21);
     let f = 64;
@@ -51,9 +46,6 @@ fn serves_spmm_and_caches_schedule() {
 
 #[test]
 fn serves_attention_and_missing_operand_is_error() {
-    if !have_artifacts() {
-        return;
-    }
     let svc = service();
     let (g, _) = preset("er_s", 22);
     let f = 64;
@@ -87,9 +79,6 @@ fn serves_attention_and_missing_operand_is_error() {
 
 #[test]
 fn pipelined_requests_all_complete() {
-    if !have_artifacts() {
-        return;
-    }
     let svc = service();
     let (g, _) = preset("er_s", 23);
     let f = 32;

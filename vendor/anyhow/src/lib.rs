@@ -1,0 +1,173 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! This environment has no crates.io access, so the subset of the anyhow
+//! API the workspace uses is re-implemented here behind the same names:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! [`anyhow!`] / [`bail!`] macros. Error values carry a plain string
+//! context chain (innermost cause first); `{:#}` formatting prints the
+//! whole chain outermost-first, mirroring anyhow's alternate Display.
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result` with a defaulted error type, as in anyhow.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chain error value.
+pub struct Error {
+    /// Context chain, innermost (root cause) first.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // "{:#}": outermost context first, `: `-separated chain.
+            for (i, msg) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(msg)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+// Like anyhow: any std error converts into `Error` (this is what makes
+// `?` work on io::Error etc.); `Error` itself deliberately does NOT
+// implement std::error::Error so this blanket impl stays coherent with
+// the reflexive `From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, as in anyhow.
+pub trait Context<T> {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("root").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("writing cache").unwrap_err();
+        assert_eq!(format!("{e:#}"), "writing cache: disk on fire");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "missing flag").unwrap_err();
+        assert_eq!(format!("{e}"), "missing flag");
+        assert_eq!(Some(1).context("x").unwrap(), 1);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "disk on fire");
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        let x = 7;
+        let e = anyhow!("x = {x}");
+        assert_eq!(format!("{e}"), "x = 7");
+        let e = anyhow!("pair {} {}", 1, 2);
+        assert_eq!(format!("{e}"), "pair 1 2");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+        fn f() -> Result<()> {
+            bail!("no {}", "good");
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "no good");
+    }
+}

@@ -1,0 +1,109 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links the PJRT C API and executes compiled HLO. This
+//! stub exists so `--features pjrt` *compiles* in environments without
+//! the PJRT runtime: every entry point returns [`XlaError`] at runtime.
+//! To actually execute AOT artifacts, point the `xla` path dependency in
+//! the workspace `Cargo.toml` at the real bindings — the API surface
+//! below matches what `runtime::client::Device` uses.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' displayable error.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(XlaError(format!(
+        "{what}: PJRT runtime unavailable (offline `xla` stub; swap \
+         vendor/xla for the real bindings to execute artifacts)"
+    )))
+}
+
+pub struct PjRtClient(());
+pub struct PjRtLoadedExecutable(());
+pub struct PjRtBuffer(());
+pub struct Literal(());
+pub struct HloModuleProto(());
+pub struct XlaComputation(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+    pub fn platform_version(&self) -> String {
+        "0.0".to_string()
+    }
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _bufs: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+    pub fn copy_raw_to_host_sync(&self, _dst: &mut [f32], _offset: usize) -> Result<()> {
+        unavailable("PjRtBuffer::copy_raw_to_host_sync")
+    }
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+}
