@@ -6,6 +6,6 @@ pub mod render;
 pub mod runner;
 pub mod tables;
 
-pub use render::{render_speedup_figure, render_table};
+pub use render::{render_serving_table, render_speedup_figure, render_table};
 pub use runner::{decision_row, decision_sweep, BenchRow};
 pub use tables::{run_table, table_ids, TableOutput};

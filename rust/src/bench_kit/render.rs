@@ -3,6 +3,7 @@
 //! plotting stack; the CSV next to each figure carries the same series
 //! for external plotting.
 
+use crate::telemetry::ServeShardStats;
 use crate::util::csv::CsvTable;
 
 use super::runner::BenchRow;
@@ -45,6 +46,45 @@ pub fn rows_to_csv(rows: &[BenchRow]) -> CsvTable {
         ]);
     }
     t
+}
+
+/// ASCII per-shard serving-metrics table (`serve-bench` stdout; the
+/// CSV twin is `telemetry::serving_table`).
+pub fn render_serving_table(title: &str, shards: &[ServeShardStats]) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>8} | {:>8} | {:>8}\n",
+        "shard",
+        "requests",
+        "batches",
+        "coalesced",
+        "probes",
+        "cache_hit",
+        "errors",
+        "rejected",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms"
+    ));
+    out.push_str(&"-".repeat(112));
+    out.push('\n');
+    for s in shards {
+        out.push_str(&format!(
+            "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>8.3} | {:>8.3} | {:>8.3}\n",
+            s.shard,
+            s.requests,
+            s.batches,
+            s.coalesced,
+            s.probes,
+            s.cache_hits,
+            s.errors,
+            s.rejected,
+            s.p50_ms,
+            s.p95_ms,
+            s.p99_ms
+        ));
+    }
+    out
 }
 
 /// ASCII speedup-vs-F line figure (the paper's Figures 1–7 shape):
@@ -141,5 +181,17 @@ mod tests {
     #[test]
     fn figure_empty_ok() {
         assert!(render_speedup_figure("fig", &[]).contains("empty"));
+    }
+
+    #[test]
+    fn serving_table_renders_every_shard() {
+        let shards = vec![
+            ServeShardStats { shard: 0, requests: 12, probes: 3, ..Default::default() },
+            ServeShardStats { shard: 1, requests: 7, rejected: 2, ..Default::default() },
+        ];
+        let s = render_serving_table("serve", &shards);
+        assert!(s.contains("serve"));
+        assert!(s.contains("coalesced"));
+        assert_eq!(s.lines().count(), 5); // title + header + rule + 2 shards
     }
 }

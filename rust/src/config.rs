@@ -15,6 +15,10 @@
 //! | `AUTOSAGE_CACHE`        | schedule-cache path ("" disables)      | autosage_cache.json |
 //! | `AUTOSAGE_REPLAY_ONLY`  | never probe; cache miss = baseline     | false   |
 //! | `AUTOSAGE_BENCH_ITERS`  | bench harness timed iterations         | 12      |
+//! | `AUTOSAGE_SERVE_WORKERS` | serving pool shard/worker count       | 4       |
+//! | `AUTOSAGE_SERVE_QUEUE`  | bounded per-shard queue depth (submit rejects with `QueueFull` beyond it) | 64 |
+//! | `AUTOSAGE_SERVE_BATCH`  | max requests drained per batch         | 16      |
+//! | `AUTOSAGE_SERVE_WINDOW_US` | batching window: how long a worker waits past the first request for coalescable stragglers (µs; 0 = drain-only) | 0 |
 
 use crate::util::envcfg::{env_bool, env_f64, env_string, env_usize};
 
@@ -40,6 +44,19 @@ pub struct Config {
     pub cache_path: String,
     pub replay_only: bool,
     pub bench_iters: usize,
+    /// Serving pool worker/shard count. Env: `AUTOSAGE_SERVE_WORKERS`.
+    pub serve_workers: usize,
+    /// Bounded per-shard queue depth; `try_submit` returns `QueueFull`
+    /// beyond it (backpressure). Env: `AUTOSAGE_SERVE_QUEUE`.
+    pub serve_queue_depth: usize,
+    /// Max requests a worker drains into one coalescing batch.
+    /// Env: `AUTOSAGE_SERVE_BATCH`.
+    pub serve_batch_max: usize,
+    /// Batching window in microseconds: after the first request a
+    /// worker waits up to this long for coalescable stragglers
+    /// (0 = only drain what is already queued). Env:
+    /// `AUTOSAGE_SERVE_WINDOW_US`.
+    pub serve_batch_window_us: usize,
 }
 
 impl Default for Config {
@@ -59,6 +76,10 @@ impl Default for Config {
             cache_path: "autosage_cache.json".to_string(),
             replay_only: false,
             bench_iters: 12,
+            serve_workers: 4,
+            serve_queue_depth: 64,
+            serve_batch_max: 16,
+            serve_batch_window_us: 0,
         }
     }
 }
@@ -85,6 +106,13 @@ impl Config {
             cache_path: env_string("AUTOSAGE_CACHE", &d.cache_path),
             replay_only: env_bool("AUTOSAGE_REPLAY_ONLY", d.replay_only)?,
             bench_iters: env_usize("AUTOSAGE_BENCH_ITERS", d.bench_iters)?,
+            serve_workers: env_usize("AUTOSAGE_SERVE_WORKERS", d.serve_workers)?,
+            serve_queue_depth: env_usize("AUTOSAGE_SERVE_QUEUE", d.serve_queue_depth)?,
+            serve_batch_max: env_usize("AUTOSAGE_SERVE_BATCH", d.serve_batch_max)?,
+            serve_batch_window_us: env_usize(
+                "AUTOSAGE_SERVE_WINDOW_US",
+                d.serve_batch_window_us,
+            )?,
         })
     }
 
@@ -111,6 +139,12 @@ impl Config {
         }
         if self.top_k == 0 {
             return Err("top_k must be >= 1".into());
+        }
+        if self.serve_workers == 0 {
+            return Err("serve_workers must be >= 1".into());
+        }
+        if self.serve_queue_depth == 0 || self.serve_batch_max == 0 {
+            return Err("serve queue depth and batch size must be >= 1".into());
         }
         Ok(())
     }
@@ -155,6 +189,27 @@ mod tests {
         let mut c = Config::default();
         c.probe_iters = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_serving_params() {
+        let mut c = Config::default();
+        c.serve_workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.serve_queue_depth = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.serve_batch_max = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn serve_defaults_are_concurrent_and_bounded() {
+        let c = Config::default();
+        assert!(c.serve_workers >= 1);
+        assert!(c.serve_queue_depth >= 1);
+        assert!(c.validate().is_ok());
     }
 
     #[test]

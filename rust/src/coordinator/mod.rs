@@ -1,9 +1,10 @@
 //! The coordinator: AutoSAGE's public facade (the paper's
 //! `autosage::spmm_csr` / `sddmm_csr` / `csr_attention_forward`
-//! bindings) plus a single-device request queue for service-style use.
+//! bindings) plus the legacy single-worker service queue, now a
+//! compatibility wrapper over the `server` pool.
 
 pub mod facade;
 pub mod queue;
 
 pub use facade::AutoSage;
-pub use queue::{OpRequest, OpResponse, ServiceHandle};
+pub use queue::{OpResponse, ServiceHandle};

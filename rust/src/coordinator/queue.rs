@@ -1,77 +1,54 @@
-//! Service-style request queue: one worker thread owns the execution
-//! backend (PJRT handles are not `Send`; the native backend simply
-//! lives where it was built) and drains an mpsc channel of operator
-//! requests; callers get results over per-request response channels.
+//! Legacy service-style request queue, now a thin compatibility
+//! wrapper over the concurrent serving pool (`server::ServerPool`).
 //!
-//! This is the deployment shape a GNN-training host integrates with: the
-//! aggregation service amortizes probe cost across requests because all
-//! requests against the same (graph, F, op) hit the schedule cache after
-//! the first.
+//! Historically this module owned a single worker thread draining an
+//! unbounded mpsc channel. The serving subsystem replaced that with a
+//! sharded pool + shared single-flight schedule cache + bounded queues;
+//! `ServiceHandle` keeps the old API (spawn → submit/call, one worker,
+//! blocking submission) so existing tests and examples keep passing,
+//! while routing everything through the pool. Worker panics are
+//! surfaced on drop by the pool's shutdown path instead of being
+//! silently discarded.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::Config;
 use crate::graph::Csr;
 use crate::scheduler::Op;
+use crate::server::{ServeResponse, ServerPool};
 
-use super::facade::AutoSage;
+/// Operator result + the decision that produced it (the pool's richer
+/// response type; legacy callers read `result`/`variant`/`from_cache`).
+pub type OpResponse = ServeResponse;
 
-/// One operator request. Dense operands are in the same layout the
-/// facade takes (`[n_rows, f]` row-major).
-pub struct OpRequest {
-    pub op: Op,
-    pub graph: Csr,
-    pub f: usize,
-    pub operands: Vec<(String, Vec<f32>)>,
-    pub respond: mpsc::Sender<OpResponse>,
-}
-
-/// Operator result + the decision that produced it.
-pub struct OpResponse {
-    pub result: Result<Vec<f32>>,
-    pub variant: String,
-    pub from_cache: bool,
-}
-
-/// Handle to the running service.
+/// Handle to the running service: a 1-worker serving pool.
 pub struct ServiceHandle {
-    tx: mpsc::Sender<OpRequest>,
-    join: Option<JoinHandle<()>>,
+    pool: Option<ServerPool>,
+    init_err: Option<String>,
 }
 
 impl ServiceHandle {
     /// Spawn the worker; the backend + manifest are constructed on the
-    /// worker thread (PJRT is thread-bound; native doesn't care).
-    pub fn spawn(artifacts_dir: PathBuf, cfg: Config) -> ServiceHandle {
-        let (tx, rx) = mpsc::channel::<OpRequest>();
-        let join = std::thread::spawn(move || {
-            let mut sage = match AutoSage::new(&artifacts_dir, cfg, None) {
-                Ok(s) => s,
-                Err(e) => {
-                    // Fail every request with the construction error.
-                    for req in rx {
-                        let _ = req.respond.send(OpResponse {
-                            result: Err(anyhow!("service init failed: {e:#}")),
-                            variant: String::new(),
-                            from_cache: false,
-                        });
-                    }
-                    return;
-                }
-            };
-            for req in rx {
-                let resp = serve_one(&mut sage, &req);
-                let _ = req.respond.send(resp);
-            }
-        });
-        ServiceHandle { tx, join: Some(join) }
+    /// worker thread (PJRT is thread-bound; native doesn't care). The
+    /// worker count is pinned to 1 for the legacy single-device shape —
+    /// use `server::ServerPool` directly for the sharded pool.
+    pub fn spawn(artifacts_dir: PathBuf, mut cfg: Config) -> ServiceHandle {
+        cfg.serve_workers = 1;
+        match ServerPool::spawn(artifacts_dir, cfg) {
+            Ok(pool) => ServiceHandle { pool: Some(pool), init_err: None },
+            Err(e) => ServiceHandle {
+                pool: None,
+                init_err: Some(format!("service init failed: {e:#}")),
+            },
+        }
     }
 
-    /// Submit a request; returns the receiver for its response.
+    /// Submit a request; returns the receiver for its response. Blocks
+    /// for queue room instead of rejecting (legacy unbounded-queue
+    /// semantics).
     pub fn submit(
         &self,
         op: Op,
@@ -79,11 +56,15 @@ impl ServiceHandle {
         f: usize,
         operands: Vec<(String, Vec<f32>)>,
     ) -> Result<mpsc::Receiver<OpResponse>> {
-        let (respond, rx) = mpsc::channel();
-        self.tx
-            .send(OpRequest { op, graph, f, operands, respond })
-            .map_err(|_| anyhow!("service thread terminated"))?;
-        Ok(rx)
+        match &self.pool {
+            Some(pool) => pool
+                .submit(op, graph, f, operands)
+                .map_err(|e| anyhow!("service submit failed: {e}")),
+            None => Err(anyhow!(
+                "{}",
+                self.init_err.as_deref().unwrap_or("service init failed")
+            )),
+        }
     }
 
     /// Convenience: submit and wait.
@@ -97,56 +78,4 @@ impl ServiceHandle {
         let rx = self.submit(op, graph, f, operands)?;
         rx.recv().map_err(|_| anyhow!("service dropped the request"))
     }
-}
-
-impl Drop for ServiceHandle {
-    fn drop(&mut self) {
-        // Close the channel, then join the worker.
-        let (tx, _) = mpsc::channel();
-        drop(std::mem::replace(&mut self.tx, tx));
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-fn serve_one(sage: &mut AutoSage, req: &OpRequest) -> OpResponse {
-    let get = |name: &str| -> Result<&Vec<f32>> {
-        req.operands
-            .iter()
-            .find(|(n, _)| n == name)
-            .map(|(_, v)| v)
-            .ok_or_else(|| anyhow!("request missing operand {name:?}"))
-    };
-    let decision = match sage.decide(&req.graph, req.op, req.f) {
-        Ok(d) => d,
-        Err(e) => {
-            return OpResponse {
-                result: Err(e),
-                variant: String::new(),
-                from_cache: false,
-            }
-        }
-    };
-    let variant = decision.choice.variant().to_string();
-    let from_cache =
-        decision.source == crate::scheduler::DecisionSource::Cache;
-    let result = (|| -> Result<Vec<f32>> {
-        match req.op {
-            Op::Spmm => sage.spmm_with(&req.graph, get("b")?, req.f, &variant),
-            Op::Sddmm => {
-                sage.sddmm_with(&req.graph, get("x")?, get("y")?, req.f, &variant)
-            }
-            Op::Softmax => sage.softmax_with(&req.graph, get("val")?, &variant),
-            Op::Attention => sage.attention_with(
-                &req.graph,
-                get("q")?,
-                get("k")?,
-                get("v")?,
-                req.f,
-                &variant,
-            ),
-        }
-    })();
-    OpResponse { result, variant, from_cache }
 }

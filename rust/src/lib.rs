@@ -23,6 +23,9 @@
 //! * [`scheduler`] — the paper's contribution: estimate → micro-probe →
 //!   guardrail, with a persistent decision cache and replay mode.
 //! * [`coordinator`] — the public facade (`AutoSage`) and request queue.
+//! * [`server`] — the concurrent serving subsystem: sharded worker
+//!   pool, shared single-flight schedule cache, request coalescing,
+//!   bounded queues with backpressure, serving metrics, load generator.
 //! * [`bench_kit`] — criterion-replacement harness + table/figure output.
 
 pub mod backend;
@@ -34,5 +37,6 @@ pub mod graph;
 pub mod ops;
 pub mod runtime;
 pub mod scheduler;
+pub mod server;
 pub mod telemetry;
 pub mod util;

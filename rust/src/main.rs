@@ -8,7 +8,9 @@
 //! autosage table   <2..12> [--iters 7] [--cap-ms 1500] [--out results]
 //! autosage figure  <1..7>  [--iters 7] [--cap-ms 1500] [--out results]
 //! autosage all     [--out results]
-//! autosage cache   dump|clear [--path autosage_cache.json]
+//! autosage cache   dump|clear|stats [--path autosage_cache.json]
+//! autosage serve-bench [--smoke] [--workers 4] [--clients 8] [--requests 8]
+//!                      [--presets er_s,products_s] [--ops spmm,sddmm,attention]
 //! ```
 //!
 //! `decide`/`run`/`table`/`figure`/`all` honor `--backend
@@ -17,7 +19,7 @@
 //! AUTOSAGE_CACHE, AUTOSAGE_REPLAY_ONLY, ...) apply everywhere; see
 //! `config.rs`.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
@@ -53,12 +55,24 @@ impl Args {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut it = raw.iter().peekable();
+        // Flags that may appear bare, with no value (`--smoke`); every
+        // other flag still hard-errors when its value is missing.
+        const BOOL_FLAGS: &[&str] = &["smoke"];
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
-                let val = it
-                    .next()
-                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
-                flags.insert(key.to_string(), val.clone());
+                let val = if BOOL_FLAGS.contains(&key) {
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            it.next().expect("peeked").clone()
+                        }
+                        _ => "true".to_string(),
+                    }
+                } else {
+                    it.next()
+                        .ok_or_else(|| anyhow!("flag --{key} needs a value"))?
+                        .clone()
+                };
+                flags.insert(key.to_string(), val);
             } else {
                 positional.push(a.clone());
             }
@@ -101,6 +115,7 @@ fn real_main() -> Result<()> {
         "figure" => cmd_figure(&args),
         "all" => cmd_all(&args),
         "cache" => cmd_cache(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -120,7 +135,10 @@ fn print_usage() {
          \x20 table   <2..12> [--iters N] [--cap-ms MS] [--out DIR]\n\
          \x20 figure  <1..7>  [--iters N] [--cap-ms MS] [--out DIR]\n\
          \x20 all     [--out DIR]\n\
-         \x20 cache   dump|clear [--path FILE]\n\
+         \x20 cache   dump|clear|stats [--path FILE]\n\
+         \x20 serve-bench [--smoke] [--workers K] [--clients N] [--requests M]\n\
+         \x20             [--presets a,b] [--ops spmm,sddmm,attention] [--f F]\n\
+         \x20             [--seed N] [--cache FILE] [--out DIR]\n\
          flags: --backend <auto|native|pjrt> (default: AUTOSAGE_BACKEND or auto)\n\
          \x20      --artifacts DIR (default: artifacts; pjrt backend only)",
         presets = preset_names().join("|")
@@ -351,11 +369,63 @@ fn cmd_all(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use autosage::server::{run_load, LoadSpec, ServerPool};
+    let smoke = args.get("smoke").map(|v| v != "false").unwrap_or(false);
+    let mut cfg = Config::from_env().map_err(|e| anyhow!(e))?;
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+    }
+    // Fresh in-memory schedule cache by default so the bench measures
+    // cold probes + warm replay; `--cache FILE` opts into persistence.
+    cfg.cache_path = args.get("cache").unwrap_or("").to_string();
+    cfg.serve_workers = args.get_parse("workers", cfg.serve_workers)?;
+    let mut spec = if smoke { LoadSpec::smoke() } else { LoadSpec::bench() };
+    spec.clients = args.get_parse("clients", spec.clients)?;
+    spec.requests_per_client = args.get_parse("requests", spec.requests_per_client)?;
+    spec.f = args.get_parse("f", spec.f)?;
+    spec.seed = args.get_parse("seed", spec.seed)?;
+    if let Some(p) = args.get("presets") {
+        spec.presets = p.split(',').map(str::to_string).collect();
+    }
+    if let Some(o) = args.get("ops") {
+        spec.ops = o
+            .split(',')
+            .map(|s| Op::parse(s).ok_or_else(|| anyhow!("unknown op {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let pool =
+        std::sync::Arc::new(ServerPool::spawn(artifacts_dir(args), cfg.clone())?);
+    let report = run_load(std::sync::Arc::clone(&pool), &spec)?;
+    println!("{}", report.text);
+    if let Some(dir) = args.get("out") {
+        let path = autosage::telemetry::write_csv_with_sidecar(
+            Path::new(dir),
+            "serve_bench",
+            &report.csv,
+            &backend_label(args),
+            &cfg,
+        )?;
+        println!("[written to {}]", path.display());
+    }
+    if report.errors > 0 {
+        bail!("{} of {} requests failed", report.errors, report.total);
+    }
+    if report.mismatches > 0 {
+        bail!(
+            "{} of {} responses mismatched the native oracle",
+            report.mismatches,
+            report.total
+        );
+    }
+    Ok(())
+}
+
 fn cmd_cache(args: &Args) -> Result<()> {
     let action = args
         .positional
         .first()
-        .context("cache action: dump|clear")?;
+        .context("cache action: dump|clear|stats")?;
     let path = PathBuf::from(args.get("path").unwrap_or("autosage_cache.json"));
     match action.as_str() {
         "dump" => {
@@ -375,6 +445,29 @@ fn cmd_cache(args: &Args) -> Result<()> {
                 println!("removed {}", path.display());
             } else {
                 println!("no cache at {}", path.display());
+            }
+            Ok(())
+        }
+        "stats" => {
+            let cache = ScheduleCache::load(&path)?;
+            println!("cache {} — {} entries", path.display(), cache.len());
+            println!(
+                "lifetime counters: {} hits, {} misses",
+                cache.hits, cache.misses
+            );
+            let mut per_op: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+            for (k, v) in cache.dump() {
+                let op = k.rsplit('|').next().unwrap_or("?").to_string();
+                *per_op.entry(op).or_default().entry(v.variant).or_default() += 1;
+            }
+            for (op, variants) in per_op {
+                let n: usize = variants.values().sum();
+                let detail = variants
+                    .iter()
+                    .map(|(v, c)| format!("{v} x{c}"))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                println!("  {op:<10} {n} entries ({detail})");
             }
             Ok(())
         }

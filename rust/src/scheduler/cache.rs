@@ -37,6 +37,10 @@ pub fn cache_key(device_sig: &str, graph_sig: &str, f: usize, op: &str) -> Strin
     format!("{device_sig}|{graph_sig}|F{f}|{op}")
 }
 
+/// Cache-file schema version. Bump when the JSON layout changes; load
+/// rejects anything else rather than misinterpreting it.
+pub const CACHE_VERSION: i64 = 1;
+
 impl ScheduleCache {
     /// In-memory cache (tests, `AUTOSAGE_CACHE=""`).
     pub fn in_memory() -> ScheduleCache {
@@ -53,16 +57,35 @@ impl ScheduleCache {
             let text = fs::read_to_string(path)
                 .with_context(|| format!("reading cache {}", path.display()))?;
             let root = Json::parse(&text).map_err(|e| anyhow!("cache: {e}"))?;
+            let version = root.get("version").as_i64().ok_or_else(|| {
+                anyhow!("cache {}: missing version field", path.display())
+            })?;
+            if version != CACHE_VERSION {
+                return Err(anyhow!(
+                    "cache {}: unsupported version {version} (expected \
+                     {CACHE_VERSION}); delete or regenerate the file",
+                    path.display()
+                ));
+            }
+            // Lifetime hit/miss counters persist across sessions (§8.6
+            // warm-up vs steady-state accounting survives restarts).
+            cache.hits = root.get("hits").as_usize().unwrap_or(0);
+            cache.misses = root.get("misses").as_usize().unwrap_or(0);
             if let Some(obj) = root.get("entries").as_obj() {
                 for (k, v) in obj {
+                    let variant = v.get("variant").as_str().unwrap_or("");
+                    if variant.is_empty() {
+                        // Silently defaulting to "baseline" would turn a
+                        // corrupt entry into a wrong-but-plausible replay.
+                        return Err(anyhow!(
+                            "cache {}: entry {k:?} has a missing or empty variant",
+                            path.display()
+                        ));
+                    }
                     cache.entries.insert(
                         k.clone(),
                         CachedChoice {
-                            variant: v
-                                .get("variant")
-                                .as_str()
-                                .unwrap_or("baseline")
-                                .to_string(),
+                            variant: variant.to_string(),
                             t_baseline_ms: v.get("t_baseline_ms").as_f64().unwrap_or(0.0),
                             t_star_ms: v.get("t_star_ms").as_f64().unwrap_or(0.0),
                             alpha: v.get("alpha").as_f64().unwrap_or(0.95),
@@ -117,14 +140,26 @@ impl ScheduleCache {
             );
         }
         let root = Json::obj(vec![
-            ("version", Json::num(1.0)),
+            ("version", Json::num(CACHE_VERSION as f64)),
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
             ("entries", Json::Obj(obj)),
         ]);
         if let Some(dir) = path.parent() {
             fs::create_dir_all(dir).ok();
         }
-        fs::write(path, root.pretty())
-            .with_context(|| format!("writing cache {}", path.display()))
+        // Crash safety: write a sibling temp file, then rename over the
+        // target — a crash mid-write leaves the old cache intact instead
+        // of a truncated/corrupt file.
+        let file_name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "cache.json".to_string());
+        let tmp = path.with_file_name(format!("{file_name}.tmp"));
+        fs::write(&tmp, root.pretty())
+            .with_context(|| format!("writing cache temp file {}", tmp.display()))?;
+        fs::rename(&tmp, path)
+            .with_context(|| format!("renaming cache temp file over {}", path.display()))
     }
 
     pub fn clear(&mut self) {
@@ -198,6 +233,77 @@ mod tests {
             cache_key("cpu-A", "g", 64, "spmm"),
             cache_key("cpu-B", "g", 64, "spmm")
         );
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_temp_file() {
+        let path = tmpfile("atomic.json");
+        let _ = fs::remove_file(&path);
+        let mut c = ScheduleCache::load(&path).unwrap();
+        c.insert("k".into(), sample());
+        c.save().unwrap();
+        assert!(path.exists());
+        assert!(
+            !path.with_file_name("atomic.json.tmp").exists(),
+            "temp file must be renamed away"
+        );
+        // Overwriting an existing cache stays parseable.
+        c.insert("k2".into(), sample());
+        c.save().unwrap();
+        assert_eq!(ScheduleCache::load(&path).unwrap().len(), 2);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_missing_version() {
+        let path = tmpfile("nover.json");
+        fs::write(&path, r#"{"entries": {}}"#).unwrap();
+        let err = ScheduleCache::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_unsupported_version() {
+        let path = tmpfile("futver.json");
+        fs::write(&path, r#"{"version": 99, "entries": {}}"#).unwrap();
+        let err = ScheduleCache::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported version"), "{err:#}");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_missing_or_empty_variant() {
+        for (name, body) in [
+            (
+                "novariant.json",
+                r#"{"version": 1, "entries": {"d|g|F64|spmm": {"t_baseline_ms": 1.0}}}"#,
+            ),
+            (
+                "emptyvariant.json",
+                r#"{"version": 1, "entries": {"d|g|F64|spmm": {"variant": ""}}}"#,
+            ),
+        ] {
+            let path = tmpfile(name);
+            fs::write(&path, body).unwrap();
+            let err = ScheduleCache::load(&path).unwrap_err();
+            assert!(format!("{err:#}").contains("variant"), "{name}: {err:#}");
+            let _ = fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn hit_miss_counters_persist_across_save_load() {
+        let path = tmpfile("counters.json");
+        let _ = fs::remove_file(&path);
+        let mut c = ScheduleCache::load(&path).unwrap();
+        c.insert("k".into(), sample());
+        assert!(c.get("k").is_some());
+        assert!(c.get("missing").is_none());
+        c.save().unwrap();
+        let c2 = ScheduleCache::load(&path).unwrap();
+        assert_eq!((c2.hits, c2.misses), (1, 1));
+        let _ = fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Multi-threaded load generator for the serving pool (`autosage
+//! serve-bench`): N client threads fire a mixed SpMM/SDDMM/attention
+//! request stream built from `gen/` presets at the pool, verify every
+//! response against the pure-Rust oracle, and report throughput +
+//! client-observed latency next to the pool's per-shard serving
+//! metrics.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bench_kit::render::render_serving_table;
+use crate::gen::{preset, preset_names};
+use crate::graph::Csr;
+use crate::ops::reference;
+use crate::scheduler::{probe, Op};
+use crate::telemetry::{serving_table, ServeShardStats};
+use crate::util::csv::CsvTable;
+use crate::util::stats;
+
+use super::pool::ServerPool;
+
+/// One load-generation run's shape.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// Feature width for every request (the synthetic catalog carries
+    /// SDDMM/attention buckets at F ∈ {64, 128} on er_s/products_s).
+    pub f: usize,
+    pub presets: Vec<String>,
+    pub ops: Vec<Op>,
+    pub seed: u64,
+    /// Check every response against the reference oracle.
+    pub verify: bool,
+}
+
+impl LoadSpec {
+    /// Default bench shape: 8 clients, mixed ops over two presets.
+    pub fn bench() -> LoadSpec {
+        LoadSpec {
+            clients: 8,
+            requests_per_client: 8,
+            f: 64,
+            presets: vec!["er_s".into(), "products_s".into()],
+            ops: vec![Op::Spmm, Op::Sddmm, Op::Attention],
+            seed: 42,
+            verify: true,
+        }
+    }
+
+    /// CI smoke shape: same worker/client concurrency, short stream.
+    pub fn smoke() -> LoadSpec {
+        LoadSpec {
+            clients: 8,
+            requests_per_client: 2,
+            f: 64,
+            presets: vec!["er_s".into()],
+            ops: vec![Op::Spmm, Op::Sddmm, Op::Attention],
+            seed: 42,
+            verify: true,
+        }
+    }
+}
+
+/// Aggregated result of one run.
+pub struct LoadReport {
+    /// Human-readable table + summary (serve-bench stdout).
+    pub text: String,
+    /// Per-shard serving metrics CSV (telemetry format).
+    pub csv: CsvTable,
+    pub total: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub mismatches: usize,
+    pub wall_ms: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Micro-probes actually run across all shards.
+    pub probes: u64,
+    /// Distinct (graph, op, F) request keys in the workload.
+    pub unique_keys: usize,
+    pub shards: Vec<ServeShardStats>,
+}
+
+/// One request template: deterministic operands + its oracle output.
+struct Combo {
+    op: Op,
+    graph: Csr,
+    f: usize,
+    operands: Vec<(String, Vec<f32>)>,
+    oracle: Vec<f32>,
+}
+
+fn build_combos(spec: &LoadSpec) -> Result<Vec<Combo>> {
+    if spec.ops.is_empty() || spec.presets.is_empty() {
+        bail!("load spec needs at least one op and one preset");
+    }
+    if spec.clients == 0 || spec.requests_per_client == 0 {
+        bail!("load spec needs at least one client and one request");
+    }
+    let mut combos = Vec::new();
+    for (pi, name) in spec.presets.iter().enumerate() {
+        if !preset_names().contains(&name.as_str()) {
+            bail!(
+                "unknown preset {name:?} (valid: {})",
+                preset_names().join(", ")
+            );
+        }
+        let (g, _) = preset(name, spec.seed.wrapping_add(pi as u64));
+        for (oi, &op) in spec.ops.iter().enumerate() {
+            if op == Op::Softmax {
+                bail!("softmax is served inside the attention pipeline; mix spmm|sddmm|attention");
+            }
+            let opseed = spec.seed ^ (((pi as u64) << 8) | oi as u64).wrapping_add(1);
+            let data = probe::synth_operands(op, g.n_rows, spec.f, opseed);
+            let get = |n: &str| -> &[f32] {
+                data.dense.get(n).map(|v| v.as_slice()).unwrap_or(&[])
+            };
+            let oracle = match op {
+                Op::Spmm => reference::spmm(&g, get("b"), spec.f),
+                Op::Sddmm => reference::sddmm(&g, get("x"), get("y"), spec.f),
+                Op::Attention => {
+                    reference::csr_attention(&g, get("q"), get("k"), get("v"), spec.f)
+                }
+                Op::Softmax => unreachable!("rejected above"),
+            };
+            let operands = op
+                .dense_operands()
+                .iter()
+                .map(|n| ((*n).to_string(), data.dense.get(*n).cloned().unwrap_or_default()))
+                .collect();
+            combos.push(Combo { op, graph: g.clone(), f: spec.f, operands, oracle });
+        }
+    }
+    Ok(combos)
+}
+
+/// Run the load against `pool` and aggregate a report. Clients walk the
+/// combo list round-robin (offset by client id so the mix interleaves)
+/// using the blocking submit path.
+pub fn run_load(pool: Arc<ServerPool>, spec: &LoadSpec) -> Result<LoadReport> {
+    let combos = Arc::new(build_combos(spec)?);
+    let unique_keys = combos.len();
+    let sw = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..spec.clients {
+        let pool = Arc::clone(&pool);
+        let combos = Arc::clone(&combos);
+        let rpc = spec.requests_per_client;
+        let verify = spec.verify;
+        let handle = std::thread::Builder::new()
+            .name(format!("loadgen-client-{c}"))
+            .spawn(move || -> (Vec<f64>, usize, usize, usize) {
+                let mut lat = Vec::new();
+                let (mut ok, mut errors, mut mismatches) = (0usize, 0usize, 0usize);
+                for r in 0..rpc {
+                    let combo = &combos[(c + r) % combos.len()];
+                    let t0 = Instant::now();
+                    let rx = match pool.submit(
+                        combo.op,
+                        combo.graph.clone(),
+                        combo.f,
+                        combo.operands.clone(),
+                    ) {
+                        Ok(rx) => rx,
+                        Err(_) => {
+                            errors += 1;
+                            continue;
+                        }
+                    };
+                    match rx.recv() {
+                        Err(_) => errors += 1,
+                        Ok(resp) => match resp.result {
+                            Err(_) => errors += 1,
+                            Ok(out) => {
+                                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                                if verify
+                                    && reference::max_abs_diff(&out, &combo.oracle) >= 2e-3
+                                {
+                                    mismatches += 1;
+                                } else {
+                                    ok += 1;
+                                }
+                            }
+                        },
+                    }
+                }
+                (lat, ok, errors, mismatches)
+            })
+            .with_context(|| format!("spawning load client {c}"))?;
+        handles.push(handle);
+    }
+
+    let mut lat = Vec::new();
+    let (mut ok, mut errors, mut mismatches) = (0usize, 0usize, 0usize);
+    for h in handles {
+        let (l, o, e, m) = h.join().map_err(|_| anyhow!("load client panicked"))?;
+        lat.extend(l);
+        ok += o;
+        errors += e;
+        mismatches += m;
+    }
+    let wall_ms = sw.elapsed().as_secs_f64() * 1e3;
+    let total = spec.clients * spec.requests_per_client;
+    let (p50_ms, p95_ms, p99_ms) = if lat.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            stats::quantile(&lat, 0.50),
+            stats::quantile(&lat, 0.95),
+            stats::quantile(&lat, 0.99),
+        )
+    };
+    let throughput_rps = if wall_ms > 0.0 { ok as f64 / (wall_ms / 1e3) } else { 0.0 };
+    let shards = pool.metrics().snapshot();
+    let probes = pool.metrics().total_probes();
+    let (cache_hits, cache_misses, cache_len) = pool.cache_stats();
+
+    let ops: Vec<&str> = spec.ops.iter().map(|o| o.as_str()).collect();
+    let mut text = render_serving_table(
+        &format!(
+            "serve-bench: {} workers | {} clients x {} reqs | presets [{}] | ops [{}] | F={}",
+            pool.n_shards(),
+            spec.clients,
+            spec.requests_per_client,
+            spec.presets.join(","),
+            ops.join(","),
+            spec.f,
+        ),
+        &shards,
+    );
+    text.push_str(&format!(
+        "\nrequests : {total} total | {ok} ok | {errors} errors | {mismatches} oracle mismatches\n"
+    ));
+    text.push_str(&format!(
+        "schedule : {unique_keys} unique keys | {probes} probes | cache {cache_hits} hits / \
+         {cache_misses} misses / {cache_len} entries (single-flight saved {} probes)\n",
+        (cache_misses as u64).saturating_sub(probes),
+    ));
+    text.push_str(&format!(
+        "latency  : p50 {p50_ms:.2}ms | p95 {p95_ms:.2}ms | p99 {p99_ms:.2}ms (client-observed)\n"
+    ));
+    text.push_str(&format!(
+        "thruput  : {throughput_rps:.1} req/s over {:.1}ms wall\n",
+        wall_ms
+    ));
+
+    Ok(LoadReport {
+        text,
+        csv: serving_table(&shards),
+        total,
+        ok,
+        errors,
+        mismatches,
+        wall_ms,
+        throughput_rps,
+        p50_ms,
+        p95_ms,
+        p99_ms,
+        probes,
+        unique_keys,
+        shards,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combos_cover_preset_x_op_grid() {
+        let spec = LoadSpec {
+            clients: 1,
+            requests_per_client: 1,
+            f: 64,
+            presets: vec!["er_s".into()],
+            ops: vec![Op::Spmm, Op::Sddmm],
+            seed: 7,
+            verify: false,
+        };
+        let combos = build_combos(&spec).unwrap();
+        assert_eq!(combos.len(), 2);
+        assert_eq!(combos[0].op, Op::Spmm);
+        assert_eq!(combos[0].oracle.len(), combos[0].graph.n_rows * 64);
+        // SDDMM oracle is per-edge.
+        assert_eq!(combos[1].oracle.len(), combos[1].graph.nnz());
+    }
+
+    #[test]
+    fn combos_reject_bad_specs() {
+        let mut spec = LoadSpec::smoke();
+        spec.presets = vec!["nope".into()];
+        assert!(build_combos(&spec).is_err());
+        let mut spec = LoadSpec::smoke();
+        spec.ops = vec![Op::Softmax];
+        assert!(build_combos(&spec).is_err());
+        let mut spec = LoadSpec::smoke();
+        spec.clients = 0;
+        assert!(build_combos(&spec).is_err());
+    }
+
+    #[test]
+    fn default_specs_are_mixed_and_concurrent() {
+        let b = LoadSpec::bench();
+        assert!(b.clients >= 8);
+        assert!(b.ops.len() == 3);
+        let s = LoadSpec::smoke();
+        assert!(s.clients >= 8);
+        assert_eq!(s.f, 64);
+    }
+}

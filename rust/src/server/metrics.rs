@@ -1,0 +1,204 @@
+//! Serving metrics: per-shard throughput/error/queue counters and
+//! log-bucketed latency histograms (p50/p95/p99), lock-free on the hot
+//! path (relaxed atomics only). Snapshots flow through `telemetry` into
+//! the repo's standard CSV + `.meta.json` sidecar format.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::telemetry::ServeShardStats;
+
+/// Histogram bucket count: 40 log2 buckets cover 1 µs .. ~9 minutes.
+const N_BUCKETS: usize = 40;
+
+/// Log2-bucketed latency histogram. Bucket `b` counts samples in
+/// `[2^b, 2^(b+1))` microseconds; quantiles report the geometric
+/// midpoint of the bucket holding the q-th sample (≤ ~50% relative
+/// error, which is plenty for p50/p95/p99 monitoring without locks).
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; N_BUCKETS],
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn bucket_of(ms: f64) -> usize {
+        let us = (ms * 1000.0).max(1.0) as u64;
+        ((63 - us.leading_zeros()) as usize).min(N_BUCKETS - 1)
+    }
+
+    pub fn record_ms(&self, ms: f64) {
+        self.buckets[Self::bucket_of(ms)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Latency quantile estimate in milliseconds (0.0 when empty).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            cum += bucket.load(Ordering::Relaxed);
+            if cum >= rank {
+                return (1u64 << b) as f64 * 1.5 / 1000.0;
+            }
+        }
+        (1u64 << (N_BUCKETS - 1)) as f64 * 1.5 / 1000.0
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One shard's counters. All relaxed atomics: torn cross-counter reads
+/// in a snapshot are acceptable for monitoring.
+#[derive(Default)]
+pub struct ShardMetrics {
+    /// Requests dequeued by the worker (includes ones that later error).
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    /// Batches drained (one scheduling pass each).
+    pub batches: AtomicU64,
+    /// Requests that shared a batch-mate with the same (graph, op, F)
+    /// key, i.e. executed under a coalesced decision.
+    pub coalesced: AtomicU64,
+    /// Fresh micro-probes run by this shard (cache + single-flight
+    /// misses that this worker won).
+    pub probes: AtomicU64,
+    /// Decisions served from the shared schedule cache.
+    pub cache_hits: AtomicU64,
+    /// Submissions rejected with `QueueFull` (backpressure).
+    pub rejected: AtomicU64,
+    pub queue_depth: AtomicU64,
+    pub max_queue_depth: AtomicU64,
+    /// End-to-end latency (enqueue → response) per completed request.
+    pub latency: LatencyHistogram,
+}
+
+/// All shards of one pool.
+pub struct ServerMetrics {
+    pub shards: Vec<ShardMetrics>,
+}
+
+impl ServerMetrics {
+    pub fn new(n_shards: usize) -> ServerMetrics {
+        ServerMetrics {
+            shards: (0..n_shards).map(|_| ShardMetrics::default()).collect(),
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<ServeShardStats> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ServeShardStats {
+                shard: i,
+                requests: s.requests.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                coalesced: s.coalesced.load(Ordering::Relaxed),
+                probes: s.probes.load(Ordering::Relaxed),
+                cache_hits: s.cache_hits.load(Ordering::Relaxed),
+                errors: s.errors.load(Ordering::Relaxed),
+                rejected: s.rejected.load(Ordering::Relaxed),
+                max_queue_depth: s.max_queue_depth.load(Ordering::Relaxed),
+                p50_ms: s.latency.quantile_ms(0.50),
+                p95_ms: s.latency.quantile_ms(0.95),
+                p99_ms: s.latency.quantile_ms(0.99),
+            })
+            .collect()
+    }
+
+    pub fn total_probes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.probes.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.requests.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn total_rejected(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.rejected.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn total_errors(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.errors.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_orders_quantiles() {
+        let h = LatencyHistogram::new();
+        for _ in 0..90 {
+            h.record_ms(1.0);
+        }
+        for _ in 0..10 {
+            h.record_ms(100.0);
+        }
+        assert_eq!(h.count(), 100);
+        let (p50, p99) = (h.quantile_ms(0.5), h.quantile_ms(0.99));
+        assert!(p50 < p99, "p50 {p50} must be < p99 {p99}");
+        assert!(p50 < 2.0, "p50 {p50} should sit near 1ms");
+        assert!(p99 > 50.0, "p99 {p99} should sit near 100ms");
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+    }
+
+    #[test]
+    fn sub_microsecond_clamps_to_first_bucket() {
+        let h = LatencyHistogram::new();
+        h.record_ms(0.0);
+        h.record_ms(1e-9);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile_ms(1.0) < 0.01);
+    }
+
+    #[test]
+    fn snapshot_and_totals() {
+        let m = ServerMetrics::new(2);
+        m.shards[0].probes.fetch_add(2, Ordering::Relaxed);
+        m.shards[1].probes.fetch_add(1, Ordering::Relaxed);
+        m.shards[1].requests.fetch_add(5, Ordering::Relaxed);
+        m.shards[1].latency.record_ms(3.0);
+        assert_eq!(m.total_probes(), 3);
+        assert_eq!(m.total_requests(), 5);
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].shard, 0);
+        assert_eq!(snap[1].probes, 1);
+        assert!(snap[1].p50_ms > 0.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Concurrent serving subsystem — the ROADMAP's production-scale
+//! deployment shape for the paper's scheduler (§4.2, §8.6: probe cost
+//! amortizes across a request stream through the persistent cache).
+//!
+//! Pieces:
+//! * [`pool`] — sharded worker pool: K workers, each owning its own
+//!   backend, requests routed by graph-signature hash, bounded
+//!   per-shard queues with backpressure, and same-`(graph, op, F)`
+//!   request coalescing inside a batching window.
+//! * [`shared_cache`] — pool-wide thread-safe schedule cache with
+//!   single-flight probe deduplication: N concurrent misses on one key
+//!   pay for ONE probe.
+//! * [`metrics`] — per-shard throughput/error/queue counters and
+//!   latency histograms (p50/p95/p99), exported through `telemetry`.
+//! * [`loadgen`] — the `autosage serve-bench` harness: multi-threaded
+//!   clients, mixed op/preset request streams, oracle verification.
+//!
+//! The legacy single-worker `coordinator::ServiceHandle` is a thin
+//! compatibility wrapper over [`pool::ServerPool`].
+
+pub mod loadgen;
+pub mod metrics;
+pub mod pool;
+pub mod shared_cache;
+
+pub use loadgen::{run_load, LoadReport, LoadSpec};
+pub use metrics::{LatencyHistogram, ServerMetrics, ShardMetrics};
+pub use pool::{ServeResponse, ServerPool, SubmitError};
+pub use shared_cache::{Lookup, ProbeTicket, SharedScheduleCache};

@@ -1,0 +1,513 @@
+//! Sharded worker pool: the concurrent serving engine.
+//!
+//! K worker threads, each owning its own execution backend (PJRT
+//! handles are thread-bound; native backends are simply constructed
+//! where they run). Requests are routed by `graph_sig` hash so one
+//! graph's schedule locality stays on one shard, while the probed
+//! decisions themselves live in a pool-wide [`SharedScheduleCache`]
+//! with single-flight deduplication — a decision probed on any shard is
+//! replayed by every shard.
+//!
+//! Each shard has a *bounded* queue: `try_submit` returns
+//! [`SubmitError::QueueFull`] instead of growing unboundedly
+//! (backpressure), `submit` blocks until the shard has room. Workers
+//! drain their queue in batches (up to `serve_batch_max`, waiting up to
+//! `serve_batch_window_us` for stragglers) and coalesce same
+//! `(graph, op, F)` requests under one scheduling decision.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Config;
+use crate::coordinator::AutoSage;
+use crate::graph::signature::{graph_signature, Fnv1a};
+use crate::graph::Csr;
+use crate::scheduler::{cache_key, CachedChoice, DecisionSource, Op};
+use crate::telemetry::ServeShardStats;
+
+use super::metrics::{ServerMetrics, ShardMetrics};
+use super::shared_cache::{Lookup, SharedScheduleCache};
+
+/// Operator result + how it was scheduled and served.
+pub struct ServeResponse {
+    pub result: Result<Vec<f32>>,
+    /// Chosen kernel variant id ("" when scheduling itself failed).
+    pub variant: String,
+    /// Decision replayed from the (shared or worker-local) cache.
+    pub from_cache: bool,
+    pub shard: usize,
+    /// Number of same-key requests that executed under this decision.
+    pub batch_size: usize,
+    /// Time spent queued before the worker started executing it.
+    pub queue_ms: f64,
+    /// End-to-end enqueue → response time.
+    pub total_ms: f64,
+}
+
+/// Why a submission was not accepted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The target shard's bounded queue is full (backpressure); retry
+    /// later or use the blocking `submit`.
+    QueueFull,
+    /// The pool has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "shard queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "server pool shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+struct QueuedRequest {
+    op: Op,
+    graph: Csr,
+    f: usize,
+    operands: Vec<(String, Vec<f32>)>,
+    respond: mpsc::Sender<ServeResponse>,
+    /// Structural graph signature (computed once at submit; also the
+    /// routing key).
+    sig: String,
+    enqueued: Instant,
+}
+
+struct Shard {
+    tx: SyncSender<QueuedRequest>,
+    join: JoinHandle<()>,
+}
+
+/// Handle to the running pool. Dropping it shuts the workers down and
+/// surfaces any worker panic (satellite: a crashed worker is not
+/// silent).
+pub struct ServerPool {
+    shards: Vec<Shard>,
+    metrics: Arc<ServerMetrics>,
+    shared: Arc<SharedScheduleCache>,
+    /// Configured per-shard queue bound (`max_queue_depth` clamp: the
+    /// depth counter transiently includes in-flight submitters, but
+    /// actual occupancy can never exceed this).
+    queue_bound: u64,
+}
+
+/// Route a graph signature to a shard.
+fn shard_of(sig: &str, n_shards: usize) -> usize {
+    let mut h = Fnv1a::new();
+    h.write(sig.as_bytes());
+    (h.finish() % n_shards as u64) as usize
+}
+
+impl ServerPool {
+    /// Spawn `cfg.serve_workers` shard workers. Each worker constructs
+    /// its own backend on its own thread; the schedule cache (path from
+    /// `cfg.cache_path`) is loaded once and shared across shards.
+    pub fn spawn(artifacts_dir: PathBuf, cfg: Config) -> Result<ServerPool> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let n = cfg.serve_workers.max(1);
+        let shared = Arc::new(SharedScheduleCache::load(&cfg.cache_path)?);
+        let metrics = Arc::new(ServerMetrics::new(n));
+        // Workers keep their scheduler caches in-memory: the shared
+        // layer owns cross-shard visibility and persistence.
+        let mut worker_cfg = cfg.clone();
+        worker_cfg.cache_path = String::new();
+        let mut shards = Vec::with_capacity(n);
+        for shard_id in 0..n {
+            let (tx, rx) = mpsc::sync_channel(cfg.serve_queue_depth.max(1));
+            let dir = artifacts_dir.clone();
+            let wcfg = worker_cfg.clone();
+            let sh = Arc::clone(&shared);
+            let m = Arc::clone(&metrics);
+            let join = std::thread::Builder::new()
+                .name(format!("autosage-shard-{shard_id}"))
+                .spawn(move || worker_loop(shard_id, rx, dir, wcfg, sh, m))
+                .with_context(|| format!("spawning shard {shard_id} worker"))?;
+            shards.push(Shard { tx, join });
+        }
+        Ok(ServerPool {
+            shards,
+            metrics,
+            shared,
+            queue_bound: cfg.serve_queue_depth.max(1) as u64,
+        })
+    }
+
+    /// Non-blocking submit: rejects with [`SubmitError::QueueFull`]
+    /// when the target shard's bounded queue has no room.
+    pub fn try_submit(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+    ) -> Result<Receiver<ServeResponse>, SubmitError> {
+        let (qr, shard, rx) = self.package(op, graph, f, operands);
+        let sm = &self.metrics.shards[shard];
+        // Count depth *before* the send so the worker's decrement can
+        // never observe (and wrap below) zero.
+        let d = sm.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        match self.shards[shard].tx.try_send(qr) {
+            Ok(()) => {
+                self.note_depth(sm, d);
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                sm.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                sm.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                sm.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Closed)
+            }
+        }
+    }
+
+    /// Blocking submit: waits for queue room instead of rejecting.
+    pub fn submit(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+    ) -> Result<Receiver<ServeResponse>, SubmitError> {
+        let (qr, shard, rx) = self.package(op, graph, f, operands);
+        let sm = &self.metrics.shards[shard];
+        let d = sm.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        match self.shards[shard].tx.send(qr) {
+            Ok(()) => {
+                self.note_depth(sm, d);
+                Ok(rx)
+            }
+            Err(_) => {
+                sm.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Closed)
+            }
+        }
+    }
+
+    /// Convenience: blocking submit + wait for the response.
+    pub fn call(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+    ) -> Result<ServeResponse> {
+        let rx = self
+            .submit(op, graph, f, operands)
+            .map_err(|e| anyhow!("serve submit failed: {e}"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped the request"))
+    }
+
+    fn package(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+    ) -> (QueuedRequest, usize, Receiver<ServeResponse>) {
+        let sig = graph_signature(&graph);
+        let shard = shard_of(&sig, self.shards.len());
+        let (respond, rx) = mpsc::channel();
+        let qr = QueuedRequest {
+            op,
+            graph,
+            f,
+            operands,
+            respond,
+            sig,
+            enqueued: Instant::now(),
+        };
+        (qr, shard, rx)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    pub fn snapshot(&self) -> Vec<ServeShardStats> {
+        self.metrics.snapshot()
+    }
+
+    /// (hits, misses, entries) of the shared schedule cache.
+    pub fn cache_stats(&self) -> (usize, usize, usize) {
+        self.shared.stats()
+    }
+
+    /// Record the observed queue depth after a SUCCESSFUL enqueue only
+    /// (rejected/blocked submissions must not inflate the high-water
+    /// mark), clamped to the configured bound since the raw counter
+    /// transiently includes concurrent in-flight submitters.
+    fn note_depth(&self, sm: &ShardMetrics, depth: u64) {
+        sm.max_queue_depth
+            .fetch_max(depth.min(self.queue_bound), Ordering::Relaxed);
+    }
+}
+
+impl Drop for ServerPool {
+    fn drop(&mut self) {
+        // Close every shard queue first so all workers wind down in
+        // parallel, then join and surface panics.
+        let shards = std::mem::take(&mut self.shards);
+        let mut joins = Vec::with_capacity(shards.len());
+        for s in shards {
+            drop(s.tx);
+            joins.push(s.join);
+        }
+        for (i, j) in joins.into_iter().enumerate() {
+            if let Err(panic) = j.join() {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| (*s).to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic payload".to_string());
+                eprintln!("autosage: server shard {i} worker panicked: {msg}");
+                debug_assert!(false, "server shard {i} worker panicked: {msg}");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- worker
+
+fn worker_loop(
+    shard: usize,
+    rx: Receiver<QueuedRequest>,
+    artifacts_dir: PathBuf,
+    cfg: Config,
+    shared: Arc<SharedScheduleCache>,
+    metrics: Arc<ServerMetrics>,
+) {
+    let batch_max = cfg.serve_batch_max.max(1);
+    let window = Duration::from_micros(cfg.serve_batch_window_us as u64);
+    let mut sage = match AutoSage::new(&artifacts_dir, cfg, None) {
+        Ok(s) => s,
+        Err(e) => {
+            // Fail every request with the construction error.
+            let msg = format!("shard {shard} init failed: {e:#}");
+            let sm = &metrics.shards[shard];
+            for req in rx {
+                sm.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                sm.requests.fetch_add(1, Ordering::Relaxed);
+                sm.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(ServeResponse {
+                    result: Err(anyhow!("{msg}")),
+                    variant: String::new(),
+                    from_cache: false,
+                    shard,
+                    batch_size: 0,
+                    queue_ms: 0.0,
+                    total_ms: 0.0,
+                });
+            }
+            return;
+        }
+    };
+    while let Ok(first) = rx.recv() {
+        let batch = collect_batch(&rx, first, batch_max, window);
+        let sm = &metrics.shards[shard];
+        sm.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
+        sm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        sm.batches.fetch_add(1, Ordering::Relaxed);
+        serve_batch(shard, &mut sage, &shared, sm, batch);
+    }
+}
+
+/// Drain up to `batch_max` requests, waiting at most `window` past the
+/// first one for stragglers (window 0 = drain whatever is queued now).
+fn collect_batch(
+    rx: &Receiver<QueuedRequest>,
+    first: QueuedRequest,
+    batch_max: usize,
+    window: Duration,
+) -> Vec<QueuedRequest> {
+    let mut batch = vec![first];
+    let opened = Instant::now();
+    while batch.len() < batch_max {
+        let elapsed = opened.elapsed();
+        if elapsed >= window {
+            match rx.try_recv() {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv_timeout(window - elapsed) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    }
+    batch
+}
+
+/// Group a batch by coalescing key (graph signature, op, F) preserving
+/// arrival order, then schedule each group ONCE and execute its members
+/// under that decision.
+fn serve_batch(
+    shard: usize,
+    sage: &mut AutoSage,
+    shared: &SharedScheduleCache,
+    sm: &ShardMetrics,
+    batch: Vec<QueuedRequest>,
+) {
+    let mut groups: Vec<(String, Vec<QueuedRequest>)> = Vec::new();
+    for qr in batch {
+        let gk = format!("{}|{}|F{}", qr.sig, qr.op.as_str(), qr.f);
+        match groups.iter_mut().find(|(k, _)| *k == gk) {
+            Some((_, members)) => members.push(qr),
+            None => groups.push((gk, vec![qr])),
+        }
+    }
+    for (_, group) in groups {
+        let batch_size = group.len();
+        if batch_size > 1 {
+            sm.coalesced.fetch_add(batch_size as u64 - 1, Ordering::Relaxed);
+        }
+        let leader = &group[0];
+        match decide_for(sage, shared, sm, leader) {
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for qr in group {
+                    sm.errors.fetch_add(1, Ordering::Relaxed);
+                    let total_ms = ms_since(qr.enqueued);
+                    sm.latency.record_ms(total_ms);
+                    let _ = qr.respond.send(ServeResponse {
+                        result: Err(anyhow!("{msg}")),
+                        variant: String::new(),
+                        from_cache: false,
+                        shard,
+                        batch_size,
+                        queue_ms: total_ms,
+                        total_ms,
+                    });
+                }
+            }
+            Ok((variant, from_cache)) => {
+                for qr in group {
+                    let queue_ms = ms_since(qr.enqueued);
+                    let result = execute_one(sage, &qr, &variant);
+                    match &result {
+                        Ok(_) => sm.completed.fetch_add(1, Ordering::Relaxed),
+                        Err(_) => sm.errors.fetch_add(1, Ordering::Relaxed),
+                    };
+                    let total_ms = ms_since(qr.enqueued);
+                    sm.latency.record_ms(total_ms);
+                    let _ = qr.respond.send(ServeResponse {
+                        result,
+                        variant: variant.clone(),
+                        from_cache,
+                        shard,
+                        batch_size,
+                        queue_ms,
+                        total_ms,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Schedule one coalescing group: shared-cache lookup with
+/// single-flight — concurrent misses on the same key across shards
+/// block on ONE probe instead of probing K times.
+fn decide_for(
+    sage: &mut AutoSage,
+    shared: &SharedScheduleCache,
+    sm: &ShardMetrics,
+    leader: &QueuedRequest,
+) -> Result<(String, bool)> {
+    let key = cache_key(
+        &sage.backend_signature(),
+        &leader.sig,
+        if leader.op.has_f() { leader.f } else { 0 },
+        leader.op.as_str(),
+    );
+    match shared.lookup(&key) {
+        Lookup::Hit(c) => {
+            sm.cache_hits.fetch_add(1, Ordering::Relaxed);
+            Ok((c.variant, true))
+        }
+        Lookup::Probe(ticket) => {
+            // On error the ticket drops unresolved, handing the probe
+            // to a waiter instead of wedging the key.
+            let d = sage.decide(&leader.graph, leader.op, leader.f)?;
+            if d.source == DecisionSource::Probe {
+                sm.probes.fetch_add(1, Ordering::Relaxed);
+            }
+            ticket.resolve(CachedChoice {
+                variant: d.choice.variant().to_string(),
+                t_baseline_ms: d.t_baseline_ms,
+                t_star_ms: d.t_star_ms,
+                alpha: sage.config().alpha,
+            })?;
+            Ok((
+                d.choice.variant().to_string(),
+                d.source == DecisionSource::Cache,
+            ))
+        }
+    }
+}
+
+fn execute_one(sage: &mut AutoSage, qr: &QueuedRequest, variant: &str) -> Result<Vec<f32>> {
+    let get = |name: &str| -> Result<&Vec<f32>> {
+        qr.operands
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow!("request missing operand {name:?}"))
+    };
+    match qr.op {
+        Op::Spmm => sage.spmm_with(&qr.graph, get("b")?, qr.f, variant),
+        Op::Sddmm => sage.sddmm_with(&qr.graph, get("x")?, get("y")?, qr.f, variant),
+        Op::Softmax => sage.softmax_with(&qr.graph, get("val")?, variant),
+        Op::Attention => sage.attention_with(
+            &qr.graph,
+            get("q")?,
+            get("k")?,
+            get("v")?,
+            qr.f,
+            variant,
+        ),
+    }
+}
+
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_routing_stable_and_bounded() {
+        for n in 1..9 {
+            let s = shard_of("abc123ff00", n);
+            assert!(s < n);
+            assert_eq!(s, shard_of("abc123ff00", n), "routing must be pure");
+        }
+        assert_eq!(shard_of("anything", 1), 0);
+    }
+
+    #[test]
+    fn submit_error_display() {
+        assert!(SubmitError::QueueFull.to_string().contains("full"));
+        assert!(SubmitError::Closed.to_string().contains("shut down"));
+        assert_ne!(SubmitError::QueueFull, SubmitError::Closed);
+    }
+}

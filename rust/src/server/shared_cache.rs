@@ -1,0 +1,230 @@
+//! Thread-safe schedule cache with single-flight probe deduplication.
+//!
+//! The paper's deployment story (§4.2, §8.6) amortizes probe cost across
+//! a request stream through the persistent cache. Under concurrency that
+//! only works if N simultaneous misses on one `(device, graph, F, op)`
+//! key collapse into ONE probe: the first caller gets a [`ProbeTicket`]
+//! and runs the probe; everyone else blocks on a condvar and wakes up to
+//! a cache hit. Resolved decisions are immediately visible to every
+//! shard of the worker pool.
+//!
+//! Crash/panic safety: a ticket dropped without [`ProbeTicket::resolve`]
+//! (probe error, worker panic unwinding) removes the in-flight marker
+//! and wakes the waiters, one of which inherits the probe — no key can
+//! be wedged by a failed prober.
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+use anyhow::Result;
+
+use crate::scheduler::{CachedChoice, ScheduleCache};
+
+/// Shared, thread-safe wrapper around the persistent [`ScheduleCache`].
+pub struct SharedScheduleCache {
+    state: Mutex<State>,
+    resolved: Condvar,
+}
+
+struct State {
+    cache: ScheduleCache,
+    /// Keys currently being probed by exactly one caller each.
+    in_flight: HashSet<String>,
+}
+
+/// Outcome of [`SharedScheduleCache::lookup`].
+pub enum Lookup<'a> {
+    /// Resolved decision (either pre-existing or probed by another
+    /// caller while we waited).
+    Hit(CachedChoice),
+    /// This caller owns the probe for the key; it must call
+    /// [`ProbeTicket::resolve`] (or drop the ticket to abandon).
+    Probe(ProbeTicket<'a>),
+}
+
+/// Exclusive right to probe one cache key. Dropping the ticket without
+/// resolving abandons the probe and unblocks waiting callers.
+pub struct ProbeTicket<'a> {
+    owner: &'a SharedScheduleCache,
+    key: String,
+    done: bool,
+}
+
+impl SharedScheduleCache {
+    pub fn new(cache: ScheduleCache) -> SharedScheduleCache {
+        SharedScheduleCache {
+            state: Mutex::new(State { cache, in_flight: HashSet::new() }),
+            resolved: Condvar::new(),
+        }
+    }
+
+    /// Load from `cache_path`; an empty path means in-memory only (the
+    /// same convention as `AUTOSAGE_CACHE=""`).
+    pub fn load(cache_path: &str) -> Result<SharedScheduleCache> {
+        let cache = if cache_path.is_empty() {
+            ScheduleCache::in_memory()
+        } else {
+            ScheduleCache::load(Path::new(cache_path))?
+        };
+        Ok(SharedScheduleCache::new(cache))
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State> {
+        // A poisoned lock only means another worker panicked mid-update;
+        // the map itself is always in a consistent state (single-field
+        // inserts), so serving continues.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Cache lookup with single-flight semantics. Blocks while another
+    /// caller probes the same key; at most one caller at a time receives
+    /// [`Lookup::Probe`] for a given key.
+    pub fn lookup(&self, key: &str) -> Lookup<'_> {
+        let mut st = self.lock();
+        if let Some(hit) = st.cache.peek(key).cloned() {
+            st.cache.hits += 1;
+            return Lookup::Hit(hit);
+        }
+        // One miss per lookup, even if we then wait on another prober:
+        // waiters are exactly the probes single-flight saved.
+        st.cache.misses += 1;
+        while st.in_flight.contains(key) {
+            st = self
+                .resolved
+                .wait(st)
+                .unwrap_or_else(|p| p.into_inner());
+            if let Some(hit) = st.cache.peek(key).cloned() {
+                return Lookup::Hit(hit);
+            }
+        }
+        st.in_flight.insert(key.to_string());
+        Lookup::Probe(ProbeTicket {
+            owner: self,
+            key: key.to_string(),
+            done: false,
+        })
+    }
+
+    /// (hits, misses, entries) — lifetime counters of the underlying
+    /// cache plus its current size.
+    pub fn stats(&self) -> (usize, usize, usize) {
+        let st = self.lock();
+        (st.cache.hits, st.cache.misses, st.cache.len())
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl ProbeTicket<'_> {
+    /// Publish the probed decision: insert, persist, wake all waiters.
+    pub fn resolve(mut self, choice: CachedChoice) -> Result<()> {
+        self.done = true;
+        let mut st = self.owner.lock();
+        st.cache.insert(self.key.clone(), choice);
+        let saved = st.cache.save();
+        st.in_flight.remove(&self.key);
+        drop(st);
+        self.owner.resolved.notify_all();
+        saved
+    }
+}
+
+impl Drop for ProbeTicket<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            let mut st = self.owner.lock();
+            st.in_flight.remove(&self.key);
+            drop(st);
+            self.owner.resolved.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn choice(v: &str) -> CachedChoice {
+        CachedChoice {
+            variant: v.into(),
+            t_baseline_ms: 1.0,
+            t_star_ms: 0.5,
+            alpha: 0.95,
+        }
+    }
+
+    #[test]
+    fn miss_then_resolve_then_hit() {
+        let sc = SharedScheduleCache::new(ScheduleCache::in_memory());
+        match sc.lookup("k") {
+            Lookup::Probe(t) => t.resolve(choice("ell_r8_f32")).unwrap(),
+            Lookup::Hit(_) => panic!("empty cache cannot hit"),
+        }
+        match sc.lookup("k") {
+            Lookup::Hit(c) => assert_eq!(c.variant, "ell_r8_f32"),
+            Lookup::Probe(_) => panic!("must hit after resolve"),
+        }
+        let (hits, misses, len) = sc.stats();
+        assert_eq!((hits, misses, len), (1, 1, 1));
+    }
+
+    #[test]
+    fn concurrent_lookups_yield_exactly_one_probe() {
+        let sc = Arc::new(SharedScheduleCache::new(ScheduleCache::in_memory()));
+        let probes = Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let sc = Arc::clone(&sc);
+            let probes = Arc::clone(&probes);
+            joins.push(std::thread::spawn(move || match sc.lookup("key") {
+                Lookup::Probe(t) => {
+                    probes.fetch_add(1, Ordering::SeqCst);
+                    // Hold the probe long enough that every other thread
+                    // reaches lookup() and has to wait on the condvar.
+                    std::thread::sleep(Duration::from_millis(30));
+                    t.resolve(choice("ell_r8_f32")).unwrap();
+                    "ell_r8_f32".to_string()
+                }
+                Lookup::Hit(c) => c.variant,
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), "ell_r8_f32");
+        }
+        assert_eq!(probes.load(Ordering::SeqCst), 1, "single-flight violated");
+    }
+
+    #[test]
+    fn abandoned_probe_hands_off_to_a_waiter() {
+        let sc = Arc::new(SharedScheduleCache::new(ScheduleCache::in_memory()));
+        let ticket = match sc.lookup("k") {
+            Lookup::Probe(t) => t,
+            Lookup::Hit(_) => panic!("empty cache cannot hit"),
+        };
+        let sc2 = Arc::clone(&sc);
+        let waiter = std::thread::spawn(move || match sc2.lookup("k") {
+            Lookup::Probe(t) => {
+                t.resolve(choice("hub_r8_f32")).unwrap();
+                true
+            }
+            Lookup::Hit(_) => false,
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(ticket); // probe "failed" — waiters must not be wedged
+        assert!(waiter.join().unwrap(), "waiter must inherit the probe");
+        match sc.lookup("k") {
+            Lookup::Hit(c) => assert_eq!(c.variant, "hub_r8_f32"),
+            Lookup::Probe(_) => panic!("resolved key must hit"),
+        }
+    }
+}

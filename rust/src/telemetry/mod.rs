@@ -101,6 +101,90 @@ impl Telemetry {
     }
 }
 
+// ----------------------------------------------------------- serving
+
+/// One shard's serving statistics — the snapshot shape produced by
+/// `server::metrics::ServerMetrics` and rendered by `serve-bench`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeShardStats {
+    pub shard: usize,
+    pub requests: u64,
+    pub batches: u64,
+    pub coalesced: u64,
+    pub probes: u64,
+    pub cache_hits: u64,
+    pub errors: u64,
+    pub rejected: u64,
+    pub max_queue_depth: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+pub const SERVING_HEADER: &[&str] = &[
+    "shard", "requests", "batches", "coalesced", "probes", "cache_hits",
+    "errors", "rejected", "max_queue_depth", "p50_ms", "p95_ms", "p99_ms",
+];
+
+/// Per-shard serving metrics → CSV with a trailing `total` row (counter
+/// sums; quantiles/depths take the per-shard max as the conservative
+/// aggregate).
+pub fn serving_table(shards: &[ServeShardStats]) -> CsvTable {
+    fn push(t: &mut CsvTable, label: String, s: &ServeShardStats) {
+        t.push(vec![
+            label,
+            s.requests.to_string(),
+            s.batches.to_string(),
+            s.coalesced.to_string(),
+            s.probes.to_string(),
+            s.cache_hits.to_string(),
+            s.errors.to_string(),
+            s.rejected.to_string(),
+            s.max_queue_depth.to_string(),
+            format!("{:.3}", s.p50_ms),
+            format!("{:.3}", s.p95_ms),
+            format!("{:.3}", s.p99_ms),
+        ]);
+    }
+    let mut t = CsvTable::new(SERVING_HEADER);
+    let mut total = ServeShardStats::default();
+    for s in shards {
+        push(&mut t, s.shard.to_string(), s);
+        total.requests += s.requests;
+        total.batches += s.batches;
+        total.coalesced += s.coalesced;
+        total.probes += s.probes;
+        total.cache_hits += s.cache_hits;
+        total.errors += s.errors;
+        total.rejected += s.rejected;
+        total.max_queue_depth = total.max_queue_depth.max(s.max_queue_depth);
+        total.p50_ms = total.p50_ms.max(s.p50_ms);
+        total.p95_ms = total.p95_ms.max(s.p95_ms);
+        total.p99_ms = total.p99_ms.max(s.p99_ms);
+    }
+    push(&mut t, "total".into(), &total);
+    t
+}
+
+/// Write any CSV in the repo's standard artifact convention:
+/// `<stem>.csv` + `<stem>.csv.meta.json` sidecar. Returns the CSV path.
+pub fn write_csv_with_sidecar(
+    dir: &Path,
+    stem: &str,
+    csv: &CsvTable,
+    device_sig: &str,
+    cfg: &Config,
+) -> Result<PathBuf> {
+    fs::create_dir_all(dir)?;
+    let csv_path = dir.join(format!("{stem}.csv"));
+    csv.write_to(&csv_path)?;
+    fs::write(
+        dir.join(format!("{stem}.csv.meta.json")),
+        meta_sidecar(device_sig, cfg).pretty(),
+    )?;
+    Ok(csv_path)
+}
+
 /// The `.meta.json` sidecar content (paper §10: "GPU/SM, Torch/CUDA
 /// versions, and env vars" → here: device/backend signature, runtime
 /// identity, and all AUTOSAGE_* toggles).
@@ -170,6 +254,52 @@ mod tests {
         let meta = Json::parse(&meta_raw).unwrap();
         assert_eq!(meta.get("device_sig").as_str(), Some("devsig"));
         assert_eq!(meta.get("alpha").as_f64(), Some(0.95));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serving_table_has_per_shard_and_total_rows() {
+        let shards = vec![
+            ServeShardStats {
+                shard: 0,
+                requests: 10,
+                probes: 2,
+                p99_ms: 4.0,
+                ..Default::default()
+            },
+            ServeShardStats {
+                shard: 1,
+                requests: 5,
+                probes: 1,
+                p99_ms: 9.0,
+                ..Default::default()
+            },
+        ];
+        let t = serving_table(&shards);
+        assert_eq!(t.header().len(), SERVING_HEADER.len());
+        assert_eq!(t.n_rows(), 3);
+        let total = &t.rows()[2];
+        assert_eq!(total[0], "total");
+        assert_eq!(total[1], "15"); // requests sum
+        assert_eq!(total[4], "3"); // probes sum
+        assert_eq!(total[11], "9.000"); // p99 max
+    }
+
+    #[test]
+    fn csv_with_sidecar_roundtrip() {
+        let dir = std::env::temp_dir().join("autosage_serving_sidecar_test");
+        let _ = fs::remove_dir_all(&dir);
+        let t = serving_table(&[ServeShardStats::default()]);
+        let path =
+            write_csv_with_sidecar(&dir, "serve_bench", &t, "devsig", &Config::default())
+                .unwrap();
+        assert!(path.exists());
+        let meta_raw =
+            fs::read_to_string(dir.join("serve_bench.csv.meta.json")).unwrap();
+        assert_eq!(
+            Json::parse(&meta_raw).unwrap().get("device_sig").as_str(),
+            Some("devsig")
+        );
         let _ = fs::remove_dir_all(&dir);
     }
 

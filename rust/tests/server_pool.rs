@@ -1,0 +1,180 @@
+//! Integration: the concurrent serving subsystem — sharded worker
+//! pool, shared single-flight schedule cache, request coalescing, and
+//! bounded queues with backpressure. Runs on the native backend, so no
+//! artifacts are needed.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use autosage::config::Config;
+use autosage::gen::preset;
+use autosage::ops::reference;
+use autosage::scheduler::Op;
+use autosage::server::{run_load, LoadSpec, ServerPool, SubmitError};
+
+fn cfg(workers: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
+    cfg.cache_path = String::new();
+    // Keep debug-mode probes on 512-row subgraphs and short loops.
+    cfg.probe_full_max_rows = 512;
+    cfg.probe_iters = 2;
+    cfg.probe_cap_ms = 200.0;
+    cfg.serve_workers = workers;
+    cfg
+}
+
+fn pool_with(c: Config) -> Arc<ServerPool> {
+    Arc::new(ServerPool::spawn(PathBuf::from("artifacts"), c).unwrap())
+}
+
+/// Many clients, mixed ops, 4 shards: every response matches the
+/// single-thread oracle, and each unique (graph, op, F) key is probed
+/// exactly once across the whole pool (single-flight + shared cache).
+#[test]
+fn concurrent_mixed_workload_matches_oracle_with_one_probe_per_key() {
+    let pool = pool_with(cfg(4));
+    let spec = LoadSpec {
+        clients: 8,
+        requests_per_client: 2,
+        f: 64,
+        presets: vec!["er_s".into()],
+        ops: vec![Op::Spmm, Op::Sddmm, Op::Attention],
+        seed: 42,
+        verify: true,
+    };
+    let report = run_load(Arc::clone(&pool), &spec).unwrap();
+    assert_eq!(report.total, 16);
+    assert_eq!(report.errors, 0, "{}", report.text);
+    assert_eq!(report.mismatches, 0, "{}", report.text);
+    assert_eq!(report.unique_keys, 3);
+    assert_eq!(report.probes, 3, "{}", report.text);
+    assert_eq!(pool.metrics().total_requests(), 16);
+}
+
+/// N concurrent misses on ONE key → exactly one probe recorded in the
+/// serving metrics; all requests share the one probed decision.
+#[test]
+fn single_flight_concurrent_misses_probe_once() {
+    let pool = pool_with(cfg(4));
+    let (g, _) = preset("er_s", 7);
+    let f = 64;
+    let b: Vec<f32> = (0..g.n_rows * f).map(|i| (i % 17) as f32 * 0.05).collect();
+    let want = reference::spmm(&g, &b, f);
+    let mut joins = Vec::new();
+    for _ in 0..8 {
+        let pool = Arc::clone(&pool);
+        let g = g.clone();
+        let b = b.clone();
+        joins.push(std::thread::spawn(move || {
+            pool.call(Op::Spmm, g, f, vec![("b".into(), b)]).unwrap()
+        }));
+    }
+    let mut variants = std::collections::BTreeSet::new();
+    for j in joins {
+        let resp = j.join().unwrap();
+        let out = resp.result.unwrap();
+        assert!(reference::max_abs_diff(&out, &want) < 2e-3);
+        variants.insert(resp.variant);
+    }
+    assert_eq!(variants.len(), 1, "all requests must share one decision");
+    assert_eq!(pool.metrics().total_probes(), 1, "single-flight violated");
+}
+
+/// Bounded queues reject (promptly, with `QueueFull`) instead of
+/// growing unboundedly or blocking the submitter.
+#[test]
+fn bounded_queue_rejects_instead_of_blocking() {
+    let mut c = cfg(1);
+    c.serve_queue_depth = 1;
+    c.serve_batch_max = 1;
+    let pool = pool_with(c);
+    let (g, _) = preset("er_s", 9);
+    let f = 64;
+    let b = vec![0.25f32; g.n_rows * f];
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    // The first request sends the worker into a multi-ms probe; the
+    // burst lands while the depth-1 queue is occupied.
+    for _ in 0..24 {
+        match pool.try_submit(Op::Spmm, g.clone(), f, vec![("b".into(), b.clone())]) {
+            Ok(rx) => accepted.push(rx),
+            Err(SubmitError::QueueFull) => rejected += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "bounded queue must reject under burst");
+    assert!(!accepted.is_empty(), "some requests must be accepted");
+    for rx in accepted {
+        assert!(rx.recv().unwrap().result.is_ok());
+    }
+    assert!(pool.metrics().total_rejected() >= rejected);
+}
+
+/// Same-key requests inside the batching window execute under ONE
+/// decision and are drained together.
+#[test]
+fn same_key_requests_coalesce_into_one_batch() {
+    let mut c = cfg(1);
+    c.serve_batch_max = 8;
+    c.serve_batch_window_us = 300_000;
+    let pool = pool_with(c);
+    let (g, _) = preset("er_s", 11);
+    let f = 64;
+    let b: Vec<f32> = (0..g.n_rows * f).map(|i| (i % 7) as f32 * 0.1).collect();
+    let want = reference::spmm(&g, &b, f);
+    let rxs: Vec<_> = (0..8)
+        .map(|_| {
+            pool.submit(Op::Spmm, g.clone(), f, vec![("b".into(), b.clone())])
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(reference::max_abs_diff(&resp.result.unwrap(), &want) < 2e-3);
+        assert!(resp.batch_size >= 1);
+    }
+    let snap = pool.metrics().snapshot();
+    assert_eq!(snap.len(), 1);
+    assert_eq!(pool.metrics().total_probes(), 1);
+    assert!(
+        snap[0].coalesced >= 1,
+        "expected coalesced requests, got {:?}",
+        snap[0]
+    );
+    assert!(snap[0].batches < 8, "8 same-key requests within a 300ms \
+             window must not make 8 batches: {:?}", snap[0]);
+}
+
+/// A bad request errors its own response; the pool keeps serving.
+#[test]
+fn bad_request_errors_and_pool_survives() {
+    let pool = pool_with(cfg(2));
+    let (g, _) = preset("er_s", 13);
+    let f = 64;
+    let resp = pool.call(Op::Spmm, g.clone(), f, vec![]).unwrap();
+    assert!(resp.result.is_err(), "missing operand must error");
+    let b = vec![0.0f32; g.n_rows * f];
+    let resp = pool.call(Op::Spmm, g, f, vec![("b".into(), b)]).unwrap();
+    assert!(resp.result.is_ok(), "pool must survive a bad request");
+    assert!(pool.metrics().total_errors() >= 1);
+}
+
+/// Warm path: a second wave of identical requests replays decisions
+/// from the shared cache (from_cache = true, no new probes).
+#[test]
+fn second_wave_replays_from_shared_cache() {
+    let pool = pool_with(cfg(2));
+    let (g, _) = preset("er_s", 17);
+    let f = 64;
+    let b = vec![0.5f32; g.n_rows * f];
+    let r1 = pool
+        .call(Op::Spmm, g.clone(), f, vec![("b".into(), b.clone())])
+        .unwrap();
+    assert!(!r1.from_cache, "first request must probe");
+    let probes_after_first = pool.metrics().total_probes();
+    let r2 = pool.call(Op::Spmm, g, f, vec![("b".into(), b)]).unwrap();
+    assert!(r2.from_cache, "second request must replay");
+    assert_eq!(r2.variant, r1.variant);
+    assert_eq!(pool.metrics().total_probes(), probes_after_first);
+}
