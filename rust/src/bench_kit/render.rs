@@ -48,6 +48,53 @@ pub fn rows_to_csv(rows: &[BenchRow]) -> CsvTable {
     t
 }
 
+/// One `autosage bench` result row: which layout (original/reordered)
+/// and op produced the decision row.
+pub type GraphBenchRow = (String, String, BenchRow);
+
+/// Render `autosage bench` rows: like the paper tables, plus layout and
+/// op columns so an original-vs-reordered comparison reads side by side.
+pub fn render_graph_bench(title: &str, rows: &[GraphBenchRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!(
+        "{:<10} | {:<9} | {:>5} | {:<9} | {:>13} | {:>11} | {:>7} | {}\n",
+        "layout", "op", "F", "choice", "baseline (ms)", "chosen (ms)", "speedup", "variant"
+    ));
+    out.push_str(&"-".repeat(96));
+    out.push('\n');
+    for (layout, op, r) in rows {
+        out.push_str(&format!(
+            "{:<10} | {:<9} | {:>5} | {:<9} | {:>13.3} | {:>11.3} | {:>7.3} | {}\n",
+            layout, op, r.f, r.choice, r.baseline_ms, r.chosen_ms, r.speedup, r.variant
+        ));
+    }
+    out
+}
+
+/// `autosage bench` rows → CSV (layout/op columns + the table columns).
+pub fn graph_bench_csv(rows: &[GraphBenchRow]) -> CsvTable {
+    let mut t = CsvTable::new(&[
+        "layout", "op", "F", "choice", "variant", "baseline_ms", "chosen_ms",
+        "speedup", "probe_wall_ms", "from_cache",
+    ]);
+    for (layout, op, r) in rows {
+        t.push(vec![
+            layout.clone(),
+            op.clone(),
+            r.f.to_string(),
+            r.choice.clone(),
+            r.variant.clone(),
+            format!("{:.4}", r.baseline_ms),
+            format!("{:.4}", r.chosen_ms),
+            format!("{:.4}", r.speedup),
+            format!("{:.3}", r.probe_wall_ms),
+            r.from_cache.to_string(),
+        ]);
+    }
+    t
+}
+
 /// ASCII per-shard serving-metrics table (`serve-bench` stdout; the
 /// CSV twin is `telemetry::serving_table`).
 pub fn render_serving_table(title: &str, shards: &[ServeShardStats]) -> String {
@@ -181,6 +228,21 @@ mod tests {
     #[test]
     fn figure_empty_ok() {
         assert!(render_speedup_figure("fig", &[]).contains("empty"));
+    }
+
+    #[test]
+    fn graph_bench_table_and_csv_carry_layout_column() {
+        let rows = vec![
+            ("original".to_string(), "spmm".to_string(), row(64, 2.0, 1.0)),
+            ("reordered".to_string(), "spmm".to_string(), row(64, 2.0, 0.8)),
+        ];
+        let s = render_graph_bench("bench skewed", &rows);
+        assert!(s.contains("original"), "{s}");
+        assert!(s.contains("reordered"), "{s}");
+        assert!(s.contains("layout"), "{s}");
+        let t = graph_bench_csv(&rows);
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(t.header()[0], "layout");
     }
 
     #[test]

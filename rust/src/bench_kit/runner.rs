@@ -52,6 +52,39 @@ pub fn decision_row(
     })
 }
 
+/// Rows for `autosage bench`: every op on the original layout, plus —
+/// when a reordered twin is given — the same ops on that layout, so
+/// the rendered table shows whether the reorder changed the chosen
+/// variant or its measured time. Row tag = (layout, op, row).
+pub fn graph_bench_rows(
+    sage: &mut AutoSage,
+    g: &Csr,
+    reordered: Option<&Csr>,
+    ops: &[Op],
+    f: usize,
+    iters: usize,
+    cap_ms: f64,
+) -> Result<Vec<(String, String, BenchRow)>> {
+    let mut rows = Vec::new();
+    for &op in ops {
+        rows.push((
+            "original".to_string(),
+            op.as_str().to_string(),
+            decision_row(sage, g, op, f, iters, cap_ms)?,
+        ));
+    }
+    if let Some(rg) = reordered {
+        for &op in ops {
+            rows.push((
+                "reordered".to_string(),
+                op.as_str().to_string(),
+                decision_row(sage, rg, op, f, iters, cap_ms)?,
+            ));
+        }
+    }
+    Ok(rows)
+}
+
 /// A feature-width sweep (one paper table = one sweep).
 pub fn decision_sweep(
     sage: &mut AutoSage,

@@ -57,6 +57,13 @@ impl AutoSage {
         self.backend.signature()
     }
 
+    /// Resolve a graph spec — a preset name or `file:PATH` (`.asg`,
+    /// `.mtx`, edge list) — through the data subsystem, so facade
+    /// callers accept loader-backed graphs everywhere presets work.
+    pub fn graph_from_spec(&self, spec: &str, seed: u64) -> Result<Csr> {
+        Ok(crate::data::load_graph_spec(spec, seed)?.0)
+    }
+
     /// Schedule an op for a graph (cache → probe → guardrail), with
     /// telemetry. Returns the decision (see paper §4.2).
     pub fn decide(&mut self, g: &Csr, op: Op, f: usize) -> Result<Decision> {

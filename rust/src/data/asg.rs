@@ -1,0 +1,326 @@
+//! `.asg` — the compact binary CSR snapshot format.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    8 B   b"ASGSNAP1"
+//! version  u32   ASG_VERSION (load rejects anything else)
+//! flags    u32   bit 0: a row permutation follows the payload
+//! n_rows   u64
+//! n_cols   u64
+//! nnz      u64
+//! rowptr   (n_rows + 1) x u64
+//! colind   nnz x u32
+//! val      nnz x f32 (IEEE-754 bits)
+//! perm     n_rows x u32          (only when flags bit 0 is set;
+//!                                 perm[new_row] = original row id)
+//! checksum u64   FNV-1a over every preceding byte
+//! ```
+//!
+//! Writes go through a sibling temp file + rename (the schedule-cache
+//! crash-safety pattern); loads verify magic, version, exact length,
+//! and checksum before handing out a validated [`Csr`]. The optional
+//! permutation is what lets a reordered snapshot be un-permuted back to
+//! original row ids (`data::reorder`).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::graph::signature::Fnv1a;
+use crate::graph::Csr;
+
+pub const ASG_MAGIC: &[u8; 8] = b"ASGSNAP1";
+pub const ASG_VERSION: u32 = 1;
+const FLAG_PERM: u32 = 1;
+
+/// A loaded snapshot: the graph plus, for reordered snapshots, the row
+/// permutation back to the original id space (`perm[new] = old`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AsgSnapshot {
+    pub csr: Csr,
+    pub perm: Option<Vec<u32>>,
+}
+
+/// Serialize `g` (and optionally a row permutation) to `path`,
+/// crash-safely (temp file + rename).
+pub fn write_asg(path: &Path, g: &Csr, perm: Option<&[u32]>) -> Result<()> {
+    g.validate()
+        .map_err(|e| anyhow!("refusing to snapshot invalid CSR: {e}"))?;
+    if let Some(p) = perm {
+        if p.len() != g.n_rows {
+            return Err(anyhow!(
+                "perm length {} != n_rows {}",
+                p.len(),
+                g.n_rows
+            ));
+        }
+    }
+    let nnz = g.nnz();
+    let mut buf: Vec<u8> = Vec::with_capacity(
+        8 + 4 + 4
+            + 24
+            + 8 * (g.n_rows + 1)
+            + 4 * nnz
+            + 4 * nnz
+            + perm.map_or(0, |p| 4 * p.len())
+            + 8,
+    );
+    buf.extend_from_slice(ASG_MAGIC);
+    buf.extend_from_slice(&ASG_VERSION.to_le_bytes());
+    let flags: u32 = if perm.is_some() { FLAG_PERM } else { 0 };
+    buf.extend_from_slice(&flags.to_le_bytes());
+    buf.extend_from_slice(&(g.n_rows as u64).to_le_bytes());
+    buf.extend_from_slice(&(g.n_cols as u64).to_le_bytes());
+    buf.extend_from_slice(&(nnz as u64).to_le_bytes());
+    for &p in &g.rowptr {
+        buf.extend_from_slice(&(p as u64).to_le_bytes());
+    }
+    for &c in &g.colind {
+        buf.extend_from_slice(&c.to_le_bytes());
+    }
+    for &v in &g.val {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    if let Some(p) = perm {
+        for &r in p {
+            buf.extend_from_slice(&r.to_le_bytes());
+        }
+    }
+    let mut h = Fnv1a::new();
+    h.write(&buf);
+    buf.extend_from_slice(&h.finish().to_le_bytes());
+
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        fs::create_dir_all(dir).ok();
+    }
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "snapshot.asg".to_string());
+    let tmp = path.with_file_name(format!("{file_name}.tmp"));
+    fs::write(&tmp, &buf)
+        .with_context(|| format!("writing snapshot temp file {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming snapshot over {}", path.display()))
+}
+
+fn rd_u32(buf: &[u8], off: &mut usize) -> u32 {
+    let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().expect("4 bytes"));
+    *off += 4;
+    v
+}
+
+fn rd_u64(buf: &[u8], off: &mut usize) -> u64 {
+    let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().expect("8 bytes"));
+    *off += 8;
+    v
+}
+
+/// Load and fully verify a snapshot from `path`.
+pub fn read_asg(path: &Path) -> Result<AsgSnapshot> {
+    let buf = fs::read(path)
+        .with_context(|| format!("reading snapshot {}", path.display()))?;
+    let name = path.display();
+    if buf.len() < 8 + 4 + 4 + 24 + 8 + 8 {
+        return Err(anyhow!("{name}: truncated snapshot ({} bytes)", buf.len()));
+    }
+    if &buf[..8] != ASG_MAGIC {
+        return Err(anyhow!("{name}: not an .asg snapshot (bad magic)"));
+    }
+    let mut off = 8usize;
+    let version = rd_u32(&buf, &mut off);
+    if version != ASG_VERSION {
+        return Err(anyhow!(
+            "{name}: unsupported snapshot version {version} (expected {ASG_VERSION})"
+        ));
+    }
+    let flags = rd_u32(&buf, &mut off);
+    let n_rows = rd_u64(&buf, &mut off) as usize;
+    let n_cols = rd_u64(&buf, &mut off) as usize;
+    let nnz = rd_u64(&buf, &mut off) as usize;
+    let has_perm = flags & FLAG_PERM != 0;
+    // u128 math: header fields are untrusted, so the size formula must
+    // not overflow before the length check rejects the file.
+    let expect = off as u128
+        + 8 * (n_rows as u128 + 1)
+        + 4 * nnz as u128
+        + 4 * nnz as u128
+        + if has_perm { 4 * n_rows as u128 } else { 0 }
+        + 8;
+    if buf.len() as u128 != expect {
+        return Err(anyhow!(
+            "{name}: length {} != expected {expect} for {n_rows} rows / {nnz} nnz",
+            buf.len()
+        ));
+    }
+    let mut h = Fnv1a::new();
+    h.write(&buf[..buf.len() - 8]);
+    let mut coff = buf.len() - 8;
+    let stored = rd_u64(&buf, &mut coff);
+    if h.finish() != stored {
+        return Err(anyhow!(
+            "{name}: checksum mismatch (file corrupt or truncated mid-write)"
+        ));
+    }
+    let mut rowptr = Vec::with_capacity(n_rows + 1);
+    for _ in 0..n_rows + 1 {
+        rowptr.push(rd_u64(&buf, &mut off) as usize);
+    }
+    let mut colind = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        colind.push(rd_u32(&buf, &mut off));
+    }
+    let mut val = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        val.push(f32::from_bits(rd_u32(&buf, &mut off)));
+    }
+    let perm = if has_perm {
+        let mut p = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            p.push(rd_u32(&buf, &mut off));
+        }
+        // A permutation must be a bijection on 0..n_rows.
+        let mut seen = vec![false; n_rows];
+        for &r in &p {
+            if r as usize >= n_rows || seen[r as usize] {
+                return Err(anyhow!("{name}: stored perm is not a permutation"));
+            }
+            seen[r as usize] = true;
+        }
+        Some(p)
+    } else {
+        None
+    };
+    let csr = Csr { n_rows, n_cols, rowptr, colind, val };
+    csr.validate()
+        .map_err(|e| anyhow!("{name}: invalid CSR payload: {e}"))?;
+    Ok(AsgSnapshot { csr, perm })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("autosage_asg_tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> Csr {
+        Csr::from_rows(
+            4,
+            vec![
+                vec![(1, 1.5), (3, -2.0)],
+                vec![],
+                vec![(0, 0.25)],
+                vec![(2, 7.0), (0, 1.0)],
+            ],
+        )
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let path = tmpfile("roundtrip.asg");
+        let g = sample();
+        write_asg(&path, &g, None).unwrap();
+        let snap = read_asg(&path).unwrap();
+        assert_eq!(snap.csr, g);
+        assert_eq!(snap.perm, None);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn roundtrip_with_perm() {
+        let path = tmpfile("perm.asg");
+        let g = sample();
+        let perm = vec![3u32, 0, 2, 1];
+        write_asg(&path, &g, Some(&perm)).unwrap();
+        let snap = read_asg(&path).unwrap();
+        assert_eq!(snap.perm, Some(perm));
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn write_is_atomic_and_leaves_no_temp() {
+        let path = tmpfile("atomic.asg");
+        write_asg(&path, &sample(), None).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_file_name("atomic.asg.tmp").exists());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let path = tmpfile("corrupt.asg");
+        write_asg(&path, &sample(), None).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        let err = read_asg(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("checksum") || msg.contains("invalid"),
+            "{msg}"
+        );
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn detects_truncation_and_bad_magic() {
+        let path = tmpfile("trunc.asg");
+        write_asg(&path, &sample(), None).unwrap();
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(read_asg(&path).is_err());
+        fs::write(&path, vec![b'X'; 64]).unwrap();
+        let err = read_asg(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_future_version() {
+        let path = tmpfile("futver.asg");
+        write_asg(&path, &sample(), None).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[8] = 99; // version field
+        // Re-stamp the checksum so only the version is wrong.
+        let mut h = Fnv1a::new();
+        let n = bytes.len();
+        h.write(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&h.finish().to_le_bytes());
+        fs::write(&path, &bytes).unwrap();
+        let err = read_asg(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bogus_perm() {
+        let path = tmpfile("badperm.asg");
+        let g = sample();
+        assert!(write_asg(&path, &g, Some(&[0u32, 1][..])).is_err()); // wrong len
+        // write_asg only length-checks the perm; bijectivity is the
+        // loader's job (it must distrust any file it is handed).
+        write_asg(&path, &g, Some(&[0u32, 0, 2, 3][..])).unwrap();
+        let err = read_asg(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("permutation"), "{err:#}");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn empty_graph_roundtrips() {
+        let path = tmpfile("empty.asg");
+        let g = Csr::from_rows(0, vec![]);
+        write_asg(&path, &g, None).unwrap();
+        let snap = read_asg(&path).unwrap();
+        assert_eq!(snap.csr.n_rows, 0);
+        assert_eq!(snap.csr.nnz(), 0);
+        let _ = fs::remove_file(&path);
+    }
+}

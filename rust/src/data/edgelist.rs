@@ -1,0 +1,152 @@
+//! Streaming edge-list (`.txt` / `.csv`) loader.
+//!
+//! One edge per line — `src dst [weight]` — separated by whitespace,
+//! commas, or semicolons. Ids are 0-based node ids in one shared id
+//! space (the node count is `max id + 1`, squared by normalization).
+//! Comment lines (`#`, `%`, `//`) and a leading non-numeric CSV header
+//! are skipped. Missing weights default to 1.0.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::normalize::{normalize, NormOptions};
+use super::{CsrGraph, GraphFormat, GraphMeta};
+
+/// Load an edge-list file from disk.
+pub fn load_edgelist(path: &Path) -> Result<CsrGraph> {
+    let file = File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    parse_edgelist(BufReader::new(file), &path.display().to_string())
+}
+
+/// Parse edge-list text from any buffered reader.
+pub fn parse_edgelist<R: BufRead>(reader: R, source: &str) -> Result<CsrGraph> {
+    let mut entries: Vec<(u32, u32, f32)> = Vec::new();
+    let mut max_id = 0u32;
+    let mut lineno = 0usize;
+    let mut content_lines = 0usize;
+    for line in reader.lines() {
+        lineno += 1;
+        let line = line.with_context(|| format!("reading {source}"))?;
+        let t = line.trim();
+        if t.is_empty()
+            || t.starts_with('#')
+            || t.starts_with('%')
+            || t.starts_with("//")
+        {
+            continue;
+        }
+        content_lines += 1;
+        let fields: Vec<&str> = t
+            .split(|c: char| c == ',' || c == ';' || c.is_whitespace())
+            .filter(|f| !f.is_empty())
+            .collect();
+        if fields.len() < 2 || fields.len() > 3 {
+            return Err(anyhow!(
+                "{source}:{lineno}: expected `src dst [weight]`, got {t:?}"
+            ));
+        }
+        let src: u32 = match fields[0].parse() {
+            Ok(v) => v,
+            // Only the FIRST content line may be a CSV header
+            // ("src,dst,w"); any later unparsable line is an error, not
+            // a silent skip.
+            Err(_) if content_lines == 1 => continue,
+            Err(_) => {
+                return Err(anyhow!(
+                    "{source}:{lineno}: bad node id {:?}",
+                    fields[0]
+                ))
+            }
+        };
+        let dst: u32 = fields[1].parse().map_err(|_| {
+            anyhow!("{source}:{lineno}: bad node id {:?}", fields[1])
+        })?;
+        let w: f32 = match fields.get(2) {
+            None => 1.0,
+            Some(f) => f.parse().map_err(|_| {
+                anyhow!("{source}:{lineno}: bad weight {:?}", f)
+            })?,
+        };
+        max_id = max_id.max(src).max(dst);
+        entries.push((src, dst, w));
+    }
+    let n = if entries.is_empty() {
+        0
+    } else {
+        max_id as usize + 1
+    };
+    let opts = NormOptions {
+        make_square: true,
+        ..NormOptions::default()
+    };
+    let (csr, norm) = normalize(n, n, entries, opts)
+        .with_context(|| format!("normalizing {source}"))?;
+    Ok(CsrGraph {
+        csr,
+        meta: GraphMeta {
+            source: source.to_string(),
+            format: GraphFormat::EdgeList,
+            norm,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<CsrGraph> {
+        parse_edgelist(text.as_bytes(), "<test>")
+    }
+
+    #[test]
+    fn whitespace_and_weights() {
+        let g = parse("0 1 2.5\n1\t2\n2 0 0.5\n").unwrap();
+        assert_eq!(g.csr.n_rows, 3);
+        assert_eq!(g.csr.nnz(), 3);
+        assert_eq!(g.csr.row(1), (&[2u32][..], &[1.0f32][..])); // default w
+        assert_eq!(g.meta.format, GraphFormat::EdgeList);
+    }
+
+    #[test]
+    fn csv_with_header_and_comments() {
+        let g = parse("# graph\nsrc,dst,w\n0,3,1.0\n3,0,2.0\n% tail\n").unwrap();
+        assert_eq!(g.csr.n_rows, 4); // squared to max id + 1
+        assert_eq!(g.csr.n_cols, 4);
+        assert_eq!(g.csr.nnz(), 2);
+    }
+
+    #[test]
+    fn duplicate_edges_merge() {
+        let g = parse("0 1 1.0\n0 1 2.0\n").unwrap();
+        assert_eq!(g.csr.nnz(), 1);
+        assert_eq!(g.csr.row(0).1, &[3.0]);
+        assert_eq!(g.meta.norm.dups_merged, 1);
+    }
+
+    #[test]
+    fn empty_file_is_empty_graph() {
+        let g = parse("# nothing\n").unwrap();
+        assert_eq!(g.csr.n_rows, 0);
+        assert_eq!(g.csr.nnz(), 0);
+    }
+
+    #[test]
+    fn rejects_garbage_rows() {
+        assert!(parse("0 1\nnope nope\n").is_err()); // header only valid first
+        assert!(parse("0\n").is_err());
+        assert!(parse("0 1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn non_numeric_file_errors_instead_of_parsing_empty() {
+        // Only the first content line is header-eligible; a name-based
+        // edge list must fail loudly, not load as an empty graph.
+        assert!(parse("alice bob\ncarol dave\n").is_err());
+        assert!(parse("# c\nsrc dst\nalice bob\n").is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! Dataset ingestion & degree-aware reordering — the layer that puts
+//! *real* graphs in front of the scheduler instead of only `gen/`
+//! synthetics (the paper evaluates on Reddit/OGBN-Products; DA-SpMM
+//! shows input dynamics dominate kernel choice, so the inputs must be
+//! real).
+//!
+//! Pipeline: **load** (`.mtx` Matrix Market, `.txt`/`.csv` edge lists,
+//! `.asg` binary snapshots) → **normalize** (sorted rows, merged
+//! duplicates, self-loop policy — one canonical [`Csr`] whatever the
+//! source) → **reorder** (composable degree-aware row permutations with
+//! a [`ReorderReport`](reorder::ReorderReport) of layout deltas) →
+//! **snapshot** (`.asg` with the permutation stored, checksummed,
+//! written crash-safely).
+//!
+//! [`spec`] makes any of it addressable by one string (`"reddit_s"` or
+//! `"file:graph.asg"`) everywhere presets were accepted before: the
+//! CLI, the bench runner, the serve-bench load generator, the facade.
+
+pub mod asg;
+pub mod edgelist;
+pub mod mtx;
+pub mod normalize;
+pub mod reorder;
+pub mod spec;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::Csr;
+
+pub use asg::{read_asg, write_asg, AsgSnapshot};
+pub use normalize::{normalize, NormOptions, NormReport};
+pub use reorder::{parse_passes, reorder, ReorderPass, ReorderReport, Reordered};
+pub use spec::{load_graph_spec, GraphSpec};
+
+/// Source format of a loaded graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphFormat {
+    MatrixMarket,
+    EdgeList,
+    AsgSnapshot,
+}
+
+impl GraphFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GraphFormat::MatrixMarket => "mtx",
+            GraphFormat::EdgeList => "edgelist",
+            GraphFormat::AsgSnapshot => "asg",
+        }
+    }
+
+    /// Pick a format from a file extension. Unknown extensions parse as
+    /// edge lists (the loosest format).
+    pub fn from_path(path: &Path) -> GraphFormat {
+        match path
+            .extension()
+            .map(|e| e.to_string_lossy().to_ascii_lowercase())
+            .as_deref()
+        {
+            Some("asg") => GraphFormat::AsgSnapshot,
+            Some("mtx") | Some("mm") => GraphFormat::MatrixMarket,
+            _ => GraphFormat::EdgeList,
+        }
+    }
+}
+
+/// Provenance of a loaded graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphMeta {
+    /// Where the graph came from (path or `<test>` tag).
+    pub source: String,
+    pub format: GraphFormat,
+    /// What normalization observed/did (zeroed for `.asg` snapshots,
+    /// which are normalized by construction).
+    pub norm: NormReport,
+}
+
+/// A canonical CSR graph plus its ingestion provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrGraph {
+    pub csr: Csr,
+    pub meta: GraphMeta,
+}
+
+impl CsrGraph {
+    /// Load any supported on-disk format, dispatching on the extension.
+    pub fn load(path: &Path) -> Result<CsrGraph> {
+        Ok(Self::load_with_perm(path)?.0)
+    }
+
+    /// Like [`CsrGraph::load`], also surfacing the stored row
+    /// permutation of reordered `.asg` snapshots (one read — large
+    /// snapshots must not be read and checksummed twice).
+    pub fn load_with_perm(path: &Path) -> Result<(CsrGraph, Option<Vec<u32>>)> {
+        match GraphFormat::from_path(path) {
+            GraphFormat::MatrixMarket => Ok((mtx::load_mtx(path)?, None)),
+            GraphFormat::EdgeList => Ok((edgelist::load_edgelist(path)?, None)),
+            GraphFormat::AsgSnapshot => {
+                let snap = read_asg(path)?;
+                Ok((
+                    CsrGraph {
+                        csr: snap.csr,
+                        meta: GraphMeta {
+                            source: path.display().to_string(),
+                            format: GraphFormat::AsgSnapshot,
+                            norm: NormReport::default(),
+                        },
+                    },
+                    snap.perm,
+                ))
+            }
+        }
+    }
+}
+
+/// Convert any loadable graph file to an `.asg` snapshot (an
+/// already-reordered snapshot keeps its stored permutation). Returns
+/// the loaded graph for inspection/logging.
+pub fn convert_to_asg(input: &Path, output: &Path) -> Result<CsrGraph> {
+    if GraphFormat::from_path(output) != GraphFormat::AsgSnapshot {
+        return Err(anyhow!(
+            "convert target {} must end in .asg",
+            output.display()
+        ));
+    }
+    let (loaded, perm) = CsrGraph::load_with_perm(input)?;
+    write_asg(output, &loaded.csr, perm.as_deref())?;
+    Ok(loaded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_dispatch_by_extension() {
+        assert_eq!(
+            GraphFormat::from_path(Path::new("a/b.asg")),
+            GraphFormat::AsgSnapshot
+        );
+        assert_eq!(
+            GraphFormat::from_path(Path::new("g.MTX")),
+            GraphFormat::MatrixMarket
+        );
+        assert_eq!(
+            GraphFormat::from_path(Path::new("edges.csv")),
+            GraphFormat::EdgeList
+        );
+        assert_eq!(
+            GraphFormat::from_path(Path::new("noext")),
+            GraphFormat::EdgeList
+        );
+    }
+
+    #[test]
+    fn convert_rejects_non_asg_target() {
+        let err =
+            convert_to_asg(Path::new("/tmp/x.mtx"), Path::new("/tmp/y.mtx"))
+                .unwrap_err();
+        assert!(format!("{err:#}").contains(".asg"), "{err:#}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Streaming Matrix Market (`.mtx`) loader.
+//!
+//! Supports the coordinate format with `real`/`double`/`integer`/
+//! `pattern` fields and `general`/`symmetric` symmetry — the subset the
+//! paper's evaluation graphs (SuiteSparse exports of Reddit-like
+//! matrices) actually use. The file is read line-by-line through a
+//! `BufRead`, never materialized as one string; entries funnel through
+//! [`normalize`](super::normalize::normalize) (symmetric sources are
+//! mirrored there).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::normalize::{normalize, NormOptions};
+use super::{CsrGraph, GraphFormat, GraphMeta};
+
+/// Load a `.mtx` file from disk.
+pub fn load_mtx(path: &Path) -> Result<CsrGraph> {
+    let file = File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    parse_mtx(BufReader::new(file), &path.display().to_string())
+}
+
+/// Parse Matrix Market text from any buffered reader.
+pub fn parse_mtx<R: BufRead>(reader: R, source: &str) -> Result<CsrGraph> {
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow!("{source}: empty file"))?
+        .with_context(|| format!("reading {source}"))?;
+    let toks: Vec<String> = header
+        .split_whitespace()
+        .map(|t| t.to_ascii_lowercase())
+        .collect();
+    if toks.len() < 5 || !toks[0].starts_with("%%matrixmarket") {
+        return Err(anyhow!(
+            "{source}: not a MatrixMarket header: {header:?}"
+        ));
+    }
+    if toks[1] != "matrix" || toks[2] != "coordinate" {
+        return Err(anyhow!(
+            "{source}: only `matrix coordinate` is supported, got `{} {}`",
+            toks[1],
+            toks[2]
+        ));
+    }
+    let pattern = match toks[3].as_str() {
+        "real" | "double" | "integer" => false,
+        "pattern" => true,
+        other => {
+            return Err(anyhow!("{source}: unsupported field type {other:?}"))
+        }
+    };
+    let symmetric = match toks[4].as_str() {
+        "general" => false,
+        "symmetric" => true,
+        other => {
+            return Err(anyhow!("{source}: unsupported symmetry {other:?}"))
+        }
+    };
+
+    // Size line: first non-comment, non-blank line after the header.
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut entries: Vec<(u32, u32, f32)> = Vec::new();
+    let mut lineno = 1usize;
+    for line in lines {
+        lineno += 1;
+        let line = line.with_context(|| format!("reading {source}"))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let fields: Vec<&str> = t.split_whitespace().collect();
+        match dims {
+            None => {
+                if fields.len() != 3 {
+                    return Err(anyhow!(
+                        "{source}:{lineno}: size line needs `rows cols nnz`, got {t:?}"
+                    ));
+                }
+                let d: Vec<usize> = fields
+                    .iter()
+                    .map(|f| {
+                        f.parse().map_err(|_| {
+                            anyhow!("{source}:{lineno}: bad size value {f:?}")
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                dims = Some((d[0], d[1], d[2]));
+                // Untrusted header: cap the pre-allocation.
+                entries.reserve(d[2].min(1 << 24));
+            }
+            Some((n_rows, n_cols, _)) => {
+                let want = if pattern { 2 } else { 3 };
+                if fields.len() < want {
+                    return Err(anyhow!(
+                        "{source}:{lineno}: entry needs {want} fields, got {t:?}"
+                    ));
+                }
+                let i: usize = fields[0].parse().map_err(|_| {
+                    anyhow!("{source}:{lineno}: bad row id {:?}", fields[0])
+                })?;
+                let j: usize = fields[1].parse().map_err(|_| {
+                    anyhow!("{source}:{lineno}: bad col id {:?}", fields[1])
+                })?;
+                // Matrix Market is 1-based.
+                if i == 0 || j == 0 || i > n_rows || j > n_cols {
+                    return Err(anyhow!(
+                        "{source}:{lineno}: entry ({i}, {j}) outside {n_rows}x{n_cols}"
+                    ));
+                }
+                let v: f32 = if pattern {
+                    1.0
+                } else {
+                    fields[2].parse().map_err(|_| {
+                        anyhow!("{source}:{lineno}: bad value {:?}", fields[2])
+                    })?
+                };
+                entries.push(((i - 1) as u32, (j - 1) as u32, v));
+            }
+        }
+    }
+    let (n_rows, n_cols, nnz_decl) =
+        dims.ok_or_else(|| anyhow!("{source}: missing size line"))?;
+    if entries.len() != nnz_decl {
+        return Err(anyhow!(
+            "{source}: header declares {nnz_decl} entries, file has {}",
+            entries.len()
+        ));
+    }
+    let opts = NormOptions {
+        symmetrize: symmetric,
+        ..NormOptions::default()
+    };
+    let (csr, norm) = normalize(n_rows, n_cols, entries, opts)
+        .with_context(|| format!("normalizing {source}"))?;
+    Ok(CsrGraph {
+        csr,
+        meta: GraphMeta {
+            source: source.to_string(),
+            format: GraphFormat::MatrixMarket,
+            norm,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<CsrGraph> {
+        parse_mtx(text.as_bytes(), "<test>")
+    }
+
+    #[test]
+    fn parses_general_real() {
+        let g = parse(
+            "%%MatrixMarket matrix coordinate real general\n\
+             % a comment\n\
+             3 3 4\n\
+             1 2 1.5\n\
+             2 1 2.0\n\
+             3 3 -1.0\n\
+             1 1 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(g.csr.n_rows, 3);
+        assert_eq!(g.csr.nnz(), 4);
+        assert_eq!(g.csr.row(0).0, &[0, 1]); // sorted by column
+        assert_eq!(g.meta.norm.self_loops, 2);
+        assert_eq!(g.meta.format, GraphFormat::MatrixMarket);
+    }
+
+    #[test]
+    fn pattern_entries_get_unit_values() {
+        let g = parse(
+            "%%MatrixMarket matrix coordinate pattern general\n\
+             2 2 2\n\
+             1 2\n\
+             2 1\n",
+        )
+        .unwrap();
+        assert_eq!(g.csr.val, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn symmetric_mirrors_lower_triangle() {
+        let g = parse(
+            "%%MatrixMarket matrix coordinate real symmetric\n\
+             3 3 3\n\
+             2 1 5.0\n\
+             3 1 6.0\n\
+             2 2 7.0\n",
+        )
+        .unwrap();
+        // (1,0) and (2,0) mirrored; diagonal (1,1) not.
+        assert_eq!(g.csr.nnz(), 5);
+        assert_eq!(g.csr.row(0).0, &[1, 2]);
+        assert_eq!(g.csr.row(0).1, &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn rejects_bad_headers_and_bounds() {
+        assert!(parse("1 2 3\n").is_err());
+        assert!(parse("%%MatrixMarket matrix array real general\n2 2\n").is_err());
+        assert!(parse(
+            "%%MatrixMarket matrix coordinate complex general\n1 1 0\n"
+        )
+        .is_err());
+        assert!(parse(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n"
+        )
+        .is_err());
+        // 0-based ids are invalid in 1-based MatrixMarket.
+        assert!(parse(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_nnz_mismatch() {
+        assert!(parse(
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n"
+        )
+        .is_err());
+    }
+}

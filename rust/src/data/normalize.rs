@@ -1,0 +1,203 @@
+//! Deterministic normalization of raw edge triplets into [`Csr`].
+//!
+//! Every loader funnels through [`normalize`] so all ingestion paths
+//! agree on one canonical form: rows sorted by column, duplicate edges
+//! merged by summing their values (in sorted order, so the sum order is
+//! deterministic), self-loops counted and optionally dropped, and
+//! symmetric sources mirrored before the sort. The [`NormReport`]
+//! records what the pass did — it is part of the graph's provenance
+//! (`autosage data inspect`).
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::Csr;
+
+/// Normalization switches. Loaders pick the policy that matches their
+/// format's semantics; the defaults are the least surprising ones for
+/// an explicit-dimension source (Matrix Market `general`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NormOptions {
+    /// Mirror every off-diagonal `(i, j)` as `(j, i)` before building
+    /// (Matrix Market `symmetric` stores one triangle only).
+    pub symmetrize: bool,
+    /// Drop `(i, i)` entries instead of keeping them as ordinary
+    /// nonzeros (kernels treat self-loops as normal edges, so the
+    /// default keeps them).
+    pub drop_self_loops: bool,
+    /// Grow the node space to `max(n_rows, n_cols)` on both axes —
+    /// edge lists describe one node id space, not a rectangular matrix.
+    pub make_square: bool,
+}
+
+/// What one normalization pass observed and did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct NormReport {
+    /// Entries as read from the source (after symmetric mirroring).
+    pub n_raw: usize,
+    /// Duplicate `(i, j)` entries merged into their predecessor (sum).
+    pub dups_merged: usize,
+    /// Self-loop entries observed in the source.
+    pub self_loops: usize,
+    /// Self-loops removed (0 unless `drop_self_loops`).
+    pub self_loops_dropped: usize,
+}
+
+/// Build a canonical CSR from raw `(row, col, val)` triplets.
+///
+/// Deterministic: the output depends only on the entry multiset and the
+/// options, never on source order (entries are sorted before merging).
+pub fn normalize(
+    n_rows: usize,
+    n_cols: usize,
+    mut entries: Vec<(u32, u32, f32)>,
+    opts: NormOptions,
+) -> Result<(Csr, NormReport)> {
+    let (n_rows, n_cols) = if opts.make_square {
+        let n = n_rows.max(n_cols);
+        (n, n)
+    } else {
+        (n_rows, n_cols)
+    };
+    if opts.symmetrize {
+        let mirrored: Vec<(u32, u32, f32)> = entries
+            .iter()
+            .filter(|(r, c, _)| r != c)
+            .map(|&(r, c, v)| (c, r, v))
+            .collect();
+        entries.extend(mirrored);
+    }
+    let mut report = NormReport {
+        n_raw: entries.len(),
+        ..NormReport::default()
+    };
+    for &(r, c, _) in &entries {
+        if r as usize >= n_rows {
+            return Err(anyhow!("row id {r} out of range (n_rows {n_rows})"));
+        }
+        if c as usize >= n_cols {
+            return Err(anyhow!("col id {c} out of range (n_cols {n_cols})"));
+        }
+        if r == c {
+            report.self_loops += 1;
+        }
+    }
+    if opts.drop_self_loops {
+        let before = entries.len();
+        entries.retain(|(r, c, _)| r != c);
+        report.self_loops_dropped = before - entries.len();
+    }
+    // Sort by (row, col); merging adjacent duplicates in sorted order
+    // makes the value sum deterministic regardless of source order.
+    entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+    let mut rowptr = vec![0usize; n_rows + 1];
+    let mut colind: Vec<u32> = Vec::with_capacity(entries.len());
+    let mut val: Vec<f32> = Vec::with_capacity(entries.len());
+    let mut rows_seen: Vec<usize> = Vec::with_capacity(entries.len());
+    for &(r, c, v) in &entries {
+        if let (Some(&lr), Some(&lc)) = (rows_seen.last(), colind.last()) {
+            if lr == r as usize && lc == c {
+                *val.last_mut().expect("val tracks colind") += v;
+                report.dups_merged += 1;
+                continue;
+            }
+        }
+        rows_seen.push(r as usize);
+        colind.push(c);
+        val.push(v);
+        rowptr[r as usize + 1] += 1;
+    }
+    for i in 0..n_rows {
+        rowptr[i + 1] += rowptr[i];
+    }
+    let g = Csr {
+        n_rows,
+        n_cols,
+        rowptr,
+        colind,
+        val,
+    };
+    g.validate().map_err(|e| anyhow!("normalized CSR invalid: {e}"))?;
+    Ok((g, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorts_rows_and_merges_duplicates() {
+        let entries = vec![(1, 3, 1.0), (0, 2, 2.0), (1, 3, 0.5), (1, 0, 4.0)];
+        let (g, rep) = normalize(2, 4, entries, NormOptions::default()).unwrap();
+        assert_eq!(g.nnz(), 3);
+        assert_eq!(rep.dups_merged, 1);
+        let (cols, vals) = g.row(1);
+        assert_eq!(cols, &[0, 3]);
+        assert_eq!(vals, &[4.0, 1.5]);
+    }
+
+    #[test]
+    fn order_independent() {
+        let a = vec![(0, 1, 1.0), (2, 0, 2.0), (1, 1, 3.0)];
+        let mut b = a.clone();
+        b.reverse();
+        let (ga, _) = normalize(3, 3, a, NormOptions::default()).unwrap();
+        let (gb, _) = normalize(3, 3, b, NormOptions::default()).unwrap();
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn self_loop_policy() {
+        let entries = vec![(0, 0, 1.0), (1, 0, 2.0), (1, 1, 3.0)];
+        let keep = NormOptions::default();
+        let (g, rep) = normalize(2, 2, entries.clone(), keep).unwrap();
+        assert_eq!(g.nnz(), 3);
+        assert_eq!(rep.self_loops, 2);
+        assert_eq!(rep.self_loops_dropped, 0);
+
+        let drop = NormOptions {
+            drop_self_loops: true,
+            ..NormOptions::default()
+        };
+        let (g, rep) = normalize(2, 2, entries, drop).unwrap();
+        assert_eq!(g.nnz(), 1);
+        assert_eq!(rep.self_loops_dropped, 2);
+    }
+
+    #[test]
+    fn symmetrize_mirrors_off_diagonal_only() {
+        let entries = vec![(0, 1, 1.0), (1, 1, 5.0)];
+        let opts = NormOptions {
+            symmetrize: true,
+            ..NormOptions::default()
+        };
+        let (g, rep) = normalize(2, 2, entries, opts).unwrap();
+        assert_eq!(rep.n_raw, 3); // (0,1) mirrored, diagonal not
+        assert_eq!(g.nnz(), 3);
+        assert_eq!(g.row(1).0, &[0, 1]);
+    }
+
+    #[test]
+    fn make_square_grows_both_axes() {
+        let entries = vec![(0, 4, 1.0)];
+        let opts = NormOptions {
+            make_square: true,
+            ..NormOptions::default()
+        };
+        let (g, _) = normalize(1, 5, entries, opts).unwrap();
+        assert_eq!((g.n_rows, g.n_cols), (5, 5));
+    }
+
+    #[test]
+    fn rejects_out_of_range_ids() {
+        assert!(normalize(2, 2, vec![(2, 0, 1.0)], NormOptions::default()).is_err());
+        assert!(normalize(2, 2, vec![(0, 2, 1.0)], NormOptions::default()).is_err());
+    }
+
+    #[test]
+    fn empty_input_is_valid() {
+        let (g, rep) = normalize(3, 3, vec![], NormOptions::default()).unwrap();
+        assert_eq!(g.nnz(), 0);
+        assert_eq!(g.n_rows, 3);
+        assert_eq!(rep.n_raw, 0);
+    }
+}

@@ -1,0 +1,453 @@
+//! Degree-aware row reordering (the preprocessing lever from cache-first
+//! edge sampling: *where* a row sits changes tile fill and locality even
+//! though per-row work is fixed).
+//!
+//! All passes are pure **row** permutations — columns are untouched — so
+//! kernel results are bit-for-bit permutation-invariant: row `i` of the
+//! reordered output is row `perm[i]` of the original, with identical
+//! slot order and therefore identical f32 summation order. The
+//! [`Reordered`] handle carries the composed permutation and its
+//! inverse, plus helpers to (un)permute row-indexed dense operands and
+//! per-edge outputs, so callers can always map results back to original
+//! node ids.
+//!
+//! Each run emits a [`ReorderReport`] of layout metrics before/after
+//! (bandwidth, head-block density, per-tile ELL fill) — the quantities
+//! that feed `scheduler::features` and `graph::signature::layout_digest`.
+
+use std::fmt;
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::Csr;
+
+/// One composable reordering pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReorderPass {
+    /// Stable sort rows by descending degree: hubs pack to the top,
+    /// giving the hub-split variants one dense head block.
+    HubPack,
+    /// Stable counting sort by log2-degree bucket (descending): rows
+    /// with similar widths become neighbors — evening out per-tile ELL
+    /// widths — while original order inside each bucket preserves
+    /// whatever locality the source ids had.
+    SegmentSort,
+    /// Reverse row order. Useless for performance; invaluable for
+    /// testing composition and un-permutation.
+    Reverse,
+}
+
+impl ReorderPass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ReorderPass::HubPack => "hub-pack",
+            ReorderPass::SegmentSort => "segment-sort",
+            ReorderPass::Reverse => "reverse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ReorderPass> {
+        match s.trim() {
+            "hub-pack" | "hubpack" => Some(ReorderPass::HubPack),
+            "segment-sort" | "segsort" => Some(ReorderPass::SegmentSort),
+            "reverse" => Some(ReorderPass::Reverse),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a comma-separated pass list (`"hub-pack,segment-sort"`).
+pub fn parse_passes(spec: &str) -> Result<Vec<ReorderPass>> {
+    let mut passes = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        passes.push(ReorderPass::parse(tok).ok_or_else(|| {
+            anyhow!(
+                "unknown reorder pass {tok:?} (valid: hub-pack, segment-sort, reverse)"
+            )
+        })?);
+    }
+    if passes.is_empty() {
+        return Err(anyhow!("empty reorder pass list {spec:?}"));
+    }
+    Ok(passes)
+}
+
+pub use crate::graph::csr::METRIC_TILE_ROWS;
+
+/// Layout-sensitive metrics of one CSR row order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayoutMetrics {
+    /// Mean |row - col| over stored edges, normalized by the node span
+    /// (0 = diagonal, → 1 = anti-diagonal scatter).
+    pub bandwidth: f64,
+    /// Fraction of nnz owned by the first ceil(1%) of rows — the
+    /// "hub-block density" a packed layout maximizes.
+    pub head_nnz_frac: f64,
+    /// nnz / padded slots when rows are tiled in groups of
+    /// [`METRIC_TILE_ROWS`] with per-tile width = tile max degree
+    /// (1.0 = no padding waste).
+    pub tile_fill: f64,
+}
+
+impl LayoutMetrics {
+    pub fn measure(g: &Csr) -> LayoutMetrics {
+        LayoutMetrics {
+            bandwidth: g.bandwidth_frac(),
+            head_nnz_frac: g.head_nnz_frac(),
+            tile_fill: g.tile_fill(METRIC_TILE_ROWS),
+        }
+    }
+}
+
+/// Before/after layout metrics for one reorder run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReorderReport {
+    pub passes: Vec<ReorderPass>,
+    pub before: LayoutMetrics,
+    pub after: LayoutMetrics,
+}
+
+impl fmt::Display for ReorderReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let names: Vec<&str> = self.passes.iter().map(|p| p.as_str()).collect();
+        writeln!(f, "reorder [{}]:", names.join(","))?;
+        let row = |f: &mut fmt::Formatter<'_>, name: &str, b: f64, a: f64| {
+            writeln!(
+                f,
+                "  {name:<14} {b:>8.4} -> {a:>8.4}  ({:+.4})",
+                a - b
+            )
+        };
+        row(f, "bandwidth", self.before.bandwidth, self.after.bandwidth)?;
+        row(
+            f,
+            "head-nnz-frac",
+            self.before.head_nnz_frac,
+            self.after.head_nnz_frac,
+        )?;
+        row(f, "tile-fill", self.before.tile_fill, self.after.tile_fill)
+    }
+}
+
+/// A reordered graph plus the bookkeeping to undo it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reordered {
+    /// The row-permuted graph.
+    pub graph: Csr,
+    /// `perm[new_row] = original_row` (composed over all passes).
+    pub perm: Vec<u32>,
+    pub report: ReorderReport,
+}
+
+/// Permute rows of `g`: row `i` of the result is row `perm[i]` of `g`.
+/// Columns (and per-row slot order) are untouched.
+pub fn permute_rows(g: &Csr, perm: &[usize]) -> Csr {
+    debug_assert_eq!(perm.len(), g.n_rows);
+    let mut rowptr = Vec::with_capacity(g.n_rows + 1);
+    let mut colind = Vec::with_capacity(g.nnz());
+    let mut val = Vec::with_capacity(g.nnz());
+    rowptr.push(0);
+    for &old in perm {
+        let (cols, vals) = g.row(old);
+        colind.extend_from_slice(cols);
+        val.extend_from_slice(vals);
+        rowptr.push(colind.len());
+    }
+    Csr {
+        n_rows: g.n_rows,
+        n_cols: g.n_cols,
+        rowptr,
+        colind,
+        val,
+    }
+}
+
+fn pass_perm(g: &Csr, pass: ReorderPass) -> Vec<usize> {
+    let n = g.n_rows;
+    let mut idx: Vec<usize> = (0..n).collect();
+    match pass {
+        ReorderPass::HubPack => {
+            let degs = g.degrees();
+            idx.sort_by_key(|&i| (std::cmp::Reverse(degs[i]), i));
+        }
+        ReorderPass::SegmentSort => {
+            let degs = g.degrees();
+            // log2 bucket: 0 for empty rows, else floor(log2(d)) + 1.
+            let bucket = |d: usize| -> u32 {
+                if d == 0 {
+                    0
+                } else {
+                    usize::BITS - d.leading_zeros()
+                }
+            };
+            idx.sort_by_key(|&i| (std::cmp::Reverse(bucket(degs[i])), i));
+        }
+        ReorderPass::Reverse => idx.reverse(),
+    }
+    idx
+}
+
+/// Run `passes` left-to-right over `g`, composing their permutations.
+pub fn reorder(g: &Csr, passes: &[ReorderPass]) -> Reordered {
+    let before = LayoutMetrics::measure(g);
+    let mut perm: Vec<usize> = (0..g.n_rows).collect();
+    let mut cur = g.clone();
+    for &pass in passes {
+        let p = pass_perm(&cur, pass);
+        cur = permute_rows(&cur, &p);
+        perm = p.iter().map(|&np| perm[np]).collect();
+    }
+    let after = LayoutMetrics::measure(&cur);
+    Reordered {
+        graph: cur,
+        perm: perm.into_iter().map(|v| v as u32).collect(),
+        report: ReorderReport {
+            passes: passes.to_vec(),
+            before,
+            after,
+        },
+    }
+}
+
+/// Rebuild a [`Reordered`] handle from a snapshot that stored its
+/// permutation (`data::asg`): `graph` is the permuted graph as loaded,
+/// `perm[new] = original`. Metrics are measured on the permuted graph
+/// for both sides (the original is not available), passes are empty.
+pub fn from_stored_perm(graph: Csr, perm: Vec<u32>) -> Result<Reordered> {
+    if perm.len() != graph.n_rows {
+        return Err(anyhow!(
+            "stored perm length {} != n_rows {}",
+            perm.len(),
+            graph.n_rows
+        ));
+    }
+    let m = LayoutMetrics::measure(&graph);
+    Ok(Reordered {
+        graph,
+        perm,
+        report: ReorderReport {
+            passes: vec![],
+            before: m,
+            after: m,
+        },
+    })
+}
+
+impl Reordered {
+    /// `inv[original_row] = new_row`.
+    pub fn inverse(&self) -> Vec<u32> {
+        let mut inv = vec![0u32; self.perm.len()];
+        for (new, &old) in self.perm.iter().enumerate() {
+            inv[old as usize] = new as u32;
+        }
+        inv
+    }
+
+    /// Permute a row-indexed dense operand (`f` values per row) into the
+    /// reordered row space: row `i` of the result is row `perm[i]`.
+    pub fn permute_rowwise(&self, x: &[f32], f: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.perm.len() * f);
+        let mut out = Vec::with_capacity(x.len());
+        for &old in &self.perm {
+            let o = old as usize * f;
+            out.extend_from_slice(&x[o..o + f]);
+        }
+        out
+    }
+
+    /// Undo [`permute_rowwise`] on a row-indexed output.
+    pub fn unpermute_rowwise(&self, y: &[f32], f: usize) -> Vec<f32> {
+        debug_assert_eq!(y.len(), self.perm.len() * f);
+        let mut out = vec![0.0f32; y.len()];
+        for (new, &old) in self.perm.iter().enumerate() {
+            out[old as usize * f..old as usize * f + f]
+                .copy_from_slice(&y[new * f..new * f + f]);
+        }
+        out
+    }
+
+    /// Map per-edge values (CSR slot order of the *reordered* graph)
+    /// back to the original graph's slot order.
+    pub fn unpermute_edges(&self, vals: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(vals.len(), self.graph.nnz());
+        let inv = self.inverse();
+        let mut out = Vec::with_capacity(vals.len());
+        // `inv` is walked in original-row order, so segments append in
+        // the original slot order.
+        for &new in &inv {
+            let new = new as usize;
+            let (a, b) = (self.graph.rowptr[new], self.graph.rowptr[new + 1]);
+            out.extend_from_slice(&vals[a..b]);
+        }
+        out
+    }
+
+    /// Reconstruct the original graph (bit-for-bit) by applying the
+    /// inverse permutation.
+    pub fn restore_graph(&self) -> Csr {
+        let inv: Vec<usize> =
+            self.inverse().into_iter().map(|v| v as usize).collect();
+        permute_rows(&self.graph, &inv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::hub_skew;
+    use crate::graph::signature::graph_signature;
+
+    fn skewed() -> Csr {
+        hub_skew(256, 3, 0.1, 24, 7)
+    }
+
+    #[test]
+    fn parse_pass_lists() {
+        assert_eq!(
+            parse_passes("hub-pack,segment-sort").unwrap(),
+            vec![ReorderPass::HubPack, ReorderPass::SegmentSort]
+        );
+        assert_eq!(
+            parse_passes(" segsort , reverse ").unwrap(),
+            vec![ReorderPass::SegmentSort, ReorderPass::Reverse]
+        );
+        assert!(parse_passes("nope").is_err());
+        assert!(parse_passes("").is_err());
+        for p in [ReorderPass::HubPack, ReorderPass::SegmentSort, ReorderPass::Reverse] {
+            assert_eq!(ReorderPass::parse(p.as_str()), Some(p));
+        }
+    }
+
+    #[test]
+    fn hub_pack_sorts_degrees_descending() {
+        let g = skewed();
+        let r = reorder(&g, &[ReorderPass::HubPack]);
+        let degs = r.graph.degrees();
+        for w in degs.windows(2) {
+            assert!(w[0] >= w[1], "degrees not descending: {:?}", w);
+        }
+        // Head-block density must improve on a skewed graph.
+        assert!(
+            r.report.after.head_nnz_frac > r.report.before.head_nnz_frac,
+            "{:?}",
+            r.report
+        );
+    }
+
+    #[test]
+    fn segment_sort_improves_tile_fill_on_skew() {
+        let g = skewed();
+        let r = reorder(&g, &[ReorderPass::SegmentSort]);
+        assert!(
+            r.report.after.tile_fill > r.report.before.tile_fill,
+            "tile fill {:.3} -> {:.3}",
+            r.report.before.tile_fill,
+            r.report.after.tile_fill
+        );
+        // Stable within buckets: empty/low rows keep relative order.
+        let degs = g.degrees();
+        let picked: Vec<usize> = r
+            .perm
+            .iter()
+            .map(|&o| degs[o as usize])
+            .collect();
+        let bucket = |d: usize| if d == 0 { 0 } else { usize::BITS - d.leading_zeros() };
+        for w in picked.windows(2) {
+            assert!(bucket(w[0]) >= bucket(w[1]));
+        }
+    }
+
+    #[test]
+    fn restore_is_bit_exact_and_signature_stable() {
+        let g = skewed();
+        for passes in [
+            vec![ReorderPass::HubPack],
+            vec![ReorderPass::SegmentSort],
+            vec![ReorderPass::HubPack, ReorderPass::SegmentSort],
+            vec![ReorderPass::Reverse, ReorderPass::HubPack, ReorderPass::Reverse],
+        ] {
+            let r = reorder(&g, &passes);
+            assert_eq!(r.restore_graph(), g, "{passes:?}");
+            assert_eq!(
+                graph_signature(&r.restore_graph()),
+                graph_signature(&g),
+                "{passes:?}"
+            );
+        }
+        // A real permutation must change the signature.
+        let r = reorder(&g, &[ReorderPass::Reverse]);
+        assert_ne!(graph_signature(&r.graph), graph_signature(&g));
+    }
+
+    #[test]
+    fn rowwise_permute_roundtrip() {
+        let g = skewed();
+        let r = reorder(&g, &[ReorderPass::HubPack, ReorderPass::Reverse]);
+        let f = 3;
+        let x: Vec<f32> = (0..g.n_rows * f).map(|i| i as f32).collect();
+        let px = r.permute_rowwise(&x, f);
+        assert_eq!(r.unpermute_rowwise(&px, f), x);
+        // Row new of px holds row perm[new] of x.
+        let new0_old = r.perm[0] as usize;
+        assert_eq!(&px[..f], &x[new0_old * f..new0_old * f + f]);
+    }
+
+    #[test]
+    fn edge_unpermute_matches_slot_order() {
+        let g = skewed();
+        let r = reorder(&g, &[ReorderPass::SegmentSort]);
+        // Edge values of the reordered graph, mapped back, must equal
+        // the original value array exactly (columns untouched per row).
+        assert_eq!(r.unpermute_edges(&r.graph.val), g.val);
+    }
+
+    #[test]
+    fn composition_matches_sequential_application() {
+        let g = skewed();
+        let r2 = reorder(&g, &[ReorderPass::HubPack, ReorderPass::Reverse]);
+        let step1 = reorder(&g, &[ReorderPass::HubPack]);
+        let step2 = reorder(&step1.graph, &[ReorderPass::Reverse]);
+        assert_eq!(r2.graph, step2.graph);
+        // Composed perm maps straight to the original graph.
+        let via: Vec<u32> = step2
+            .perm
+            .iter()
+            .map(|&m| step1.perm[m as usize])
+            .collect();
+        assert_eq!(r2.perm, via);
+    }
+
+    #[test]
+    fn stored_perm_rejects_bad_length() {
+        let g = skewed();
+        assert!(from_stored_perm(g.clone(), vec![0, 1]).is_err());
+        let r = reorder(&g, &[ReorderPass::HubPack]);
+        let again = from_stored_perm(r.graph.clone(), r.perm.clone()).unwrap();
+        assert_eq!(again.restore_graph(), g);
+    }
+
+    #[test]
+    fn empty_and_tiny_graphs_survive() {
+        let empty = Csr::from_rows(0, vec![]);
+        let r = reorder(&empty, &[ReorderPass::HubPack, ReorderPass::SegmentSort]);
+        assert_eq!(r.graph.n_rows, 0);
+        assert_eq!(r.restore_graph(), empty);
+        let one = Csr::from_rows(1, vec![vec![(0, 1.0)]]);
+        let r = reorder(&one, &[ReorderPass::Reverse]);
+        assert_eq!(r.restore_graph(), one);
+    }
+
+    #[test]
+    fn report_renders_deltas() {
+        let g = skewed();
+        let r = reorder(&g, &[ReorderPass::HubPack, ReorderPass::SegmentSort]);
+        let text = format!("{}", r.report);
+        assert!(text.contains("hub-pack,segment-sort"), "{text}");
+        assert!(text.contains("tile-fill"), "{text}");
+        assert!(text.contains("bandwidth"), "{text}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Graph-spec resolution: one string names a graph everywhere a preset
+//! was accepted before.
+//!
+//! * `"reddit_s"` (any name in [`preset_names`]) — a synthetic preset,
+//!   generated from the spec seed.
+//! * `"file:PATH"` — a loaded dataset; the format is picked from the
+//!   extension (`.asg` snapshot, `.mtx` Matrix Market, anything else is
+//!   parsed as an edge list). Seeds are ignored for files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::gen::{preset, preset_names};
+use crate::graph::Csr;
+
+use super::CsrGraph;
+
+/// A parsed graph spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphSpec {
+    Preset(String),
+    File(PathBuf),
+}
+
+impl GraphSpec {
+    pub fn parse(s: &str) -> Result<GraphSpec> {
+        if let Some(p) = s.strip_prefix("file:") {
+            if p.is_empty() {
+                return Err(anyhow!("empty path in graph spec {s:?}"));
+            }
+            return Ok(GraphSpec::File(PathBuf::from(p)));
+        }
+        if preset_names().contains(&s) {
+            return Ok(GraphSpec::Preset(s.to_string()));
+        }
+        Err(anyhow!(
+            "unknown graph spec {s:?}: use a preset ({}) or file:PATH",
+            preset_names().join("|")
+        ))
+    }
+
+    /// Resolve to a graph + a human-readable label.
+    pub fn load(&self, seed: u64) -> Result<(Csr, String)> {
+        match self {
+            GraphSpec::Preset(name) => {
+                let (g, spec) = preset(name, seed);
+                Ok((g, format!("{name} ({})", spec.paper_name)))
+            }
+            GraphSpec::File(path) => {
+                let loaded = CsrGraph::load(path)?;
+                let label = format!(
+                    "{} [{}]",
+                    file_stem(path),
+                    loaded.meta.format.as_str()
+                );
+                Ok((loaded.csr, label))
+            }
+        }
+    }
+}
+
+fn file_stem(path: &Path) -> String {
+    path.file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.display().to_string())
+}
+
+/// One-shot convenience: parse + load.
+pub fn load_graph_spec(s: &str, seed: u64) -> Result<(Csr, String)> {
+    GraphSpec::parse(s)?.load(seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_presets_and_files() {
+        assert_eq!(
+            GraphSpec::parse("er_s").unwrap(),
+            GraphSpec::Preset("er_s".into())
+        );
+        assert_eq!(
+            GraphSpec::parse("file:/tmp/x.asg").unwrap(),
+            GraphSpec::File(PathBuf::from("/tmp/x.asg"))
+        );
+        assert!(GraphSpec::parse("no_such_preset").is_err());
+        assert!(GraphSpec::parse("file:").is_err());
+    }
+
+    #[test]
+    fn preset_specs_load_seeded() {
+        let (a, label) = load_graph_spec("er_s", 7).unwrap();
+        let (b, _) = load_graph_spec("er_s", 7).unwrap();
+        assert_eq!(a, b);
+        assert!(label.contains("er_s"), "{label}");
+        let (c, _) = load_graph_spec("er_s", 8).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn missing_file_is_a_clean_error() {
+        let err = load_graph_spec("file:/nonexistent/g.asg", 0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("/nonexistent/g.asg"), "{msg}");
+    }
+}

@@ -3,6 +3,13 @@
 //! All are deterministic in (parameters, seed) and emit sorted CSR rows
 //! with uniform [0,1) edge values. Self-loops are allowed (they are
 //! ordinary nonzeros to a kernel); duplicate columns within a row are not.
+//!
+//! Seeding: each row draws from its own [`Rng::for_stream`] stream
+//! `(seed, row)`, never from one shared generator. Row `i`'s content is
+//! therefore a pure function of `(params, seed, i)` — it cannot shift
+//! because an earlier row consumed a different number of draws — which
+//! is what keeps serve-bench load mixes bit-reproducible run-to-run
+//! under a single `--seed`.
 
 use crate::graph::Csr;
 use crate::util::rng::Rng;
@@ -11,9 +18,9 @@ use crate::util::rng::Rng;
 /// matching the paper's "ER N=200k, p=2e-5" stressor regime (tiny rows).
 /// Degrees are clamped to `cap`.
 pub fn erdos_renyi(n: usize, avg_deg: f64, cap: usize, seed: u64) -> Csr {
-    let mut rng = Rng::new(seed);
     let rows = (0..n)
-        .map(|_| {
+        .map(|i| {
+            let mut rng = Rng::for_stream(seed, i as u64);
             let d = rng.poisson(avg_deg).min(cap).min(n);
             rng.sample_distinct(n, d)
                 .into_iter()
@@ -27,10 +34,9 @@ pub fn erdos_renyi(n: usize, avg_deg: f64, cap: usize, seed: u64) -> Csr {
 /// Hub-skew: every row has base degree `k`; a fraction `h` of rows are
 /// hubs with degree `hub_deg` (paper: N=200k, k=4, h=0.15).
 pub fn hub_skew(n: usize, k: usize, h: f64, hub_deg: usize, seed: u64) -> Csr {
-    let mut rng = Rng::new(seed);
     let n_hubs = ((n as f64) * h).round() as usize;
-    // Deterministic hub placement: spread hubs evenly, then shuffle row
-    // order decisions through the RNG for value diversity.
+    // Deterministic hub placement: spread hubs evenly; each row's
+    // adjacency then comes from its own (seed, row) stream.
     let mut is_hub = vec![false; n];
     if n_hubs > 0 {
         let stride = n as f64 / n_hubs as f64;
@@ -40,6 +46,7 @@ pub fn hub_skew(n: usize, k: usize, h: f64, hub_deg: usize, seed: u64) -> Csr {
     }
     let rows = (0..n)
         .map(|i| {
+            let mut rng = Rng::for_stream(seed, i as u64);
             let d = if is_hub[i] { hub_deg } else { k }.min(n);
             rng.sample_distinct(n, d)
                 .into_iter()
@@ -54,9 +61,9 @@ pub fn hub_skew(n: usize, k: usize, h: f64, hub_deg: usize, seed: u64) -> Csr {
 /// clamped to `[1, cap]` — the heavy-tailed model for Reddit/Products-like
 /// graphs. `cap` doubles as the preset's `w_plain` contract.
 pub fn power_law(n: usize, x_min: f64, alpha: f64, cap: usize, seed: u64) -> Csr {
-    let mut rng = Rng::new(seed);
     let rows = (0..n)
-        .map(|_| {
+        .map(|i| {
+            let mut rng = Rng::for_stream(seed, i as u64);
             let d = rng.pareto_deg(x_min, alpha, cap).min(n);
             rng.sample_distinct(n, d)
                 .into_iter()

@@ -6,6 +6,12 @@
 use crate::util::rng::Rng;
 use crate::util::stats;
 
+/// Row-tile size the layout metrics model (matches the r=8 row tiles
+/// the ELL kernels use). One shared constant so `scheduler::features`,
+/// `signature::layout_digest`, and the `data::reorder` report can never
+/// desynchronize on the tile width they measure.
+pub const METRIC_TILE_ROWS: usize = 8;
+
 /// CSR adjacency: row `i` owns `colind[rowptr[i]..rowptr[i+1]]`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
@@ -122,6 +128,64 @@ impl Csr {
         Csr::from_rows(k, rows)
     }
 
+    // ------------------------------------------------ layout metrics
+    // Row-order-sensitive structure queries: unlike degrees/quantiles
+    // they change under row permutation, which makes them the scorecard
+    // for `data::reorder` passes and layout features for the scheduler.
+
+    /// Mean |row - col| over stored edges, normalized by the node span
+    /// (0 = diagonal band, → 1 = anti-diagonal scatter).
+    pub fn bandwidth_frac(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            return 0.0;
+        }
+        let span = self.n_rows.max(self.n_cols).saturating_sub(1).max(1) as f64;
+        let mut sum = 0.0f64;
+        for i in 0..self.n_rows {
+            let (cols, _) = self.row(i);
+            for &c in cols {
+                sum += ((i as f64) - (c as f64)).abs();
+            }
+        }
+        sum / nnz as f64 / span
+    }
+
+    /// Fraction of nnz owned by the first ceil(1%) of rows — the
+    /// head/hub-block density that degree-packing reorders maximize.
+    pub fn head_nnz_frac(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 || self.n_rows == 0 {
+            return 0.0;
+        }
+        let k = self.n_rows.div_ceil(100).min(self.n_rows);
+        let head: usize = (0..k).map(|i| self.degree(i)).sum();
+        head as f64 / nnz as f64
+    }
+
+    /// ELL fill when rows are tiled in groups of `r` with per-tile
+    /// width = tile max degree: `nnz / padded slots` (1.0 = no waste).
+    /// The quantity degree-bucket segment sort improves.
+    pub fn tile_fill(&self, r: usize) -> f64 {
+        if self.n_rows == 0 || self.nnz() == 0 {
+            return 1.0;
+        }
+        let r = r.max(1);
+        let mut padded = 0usize;
+        let mut i = 0;
+        while i < self.n_rows {
+            let end = (i + r).min(self.n_rows);
+            let wmax = (i..end).map(|j| self.degree(j)).max().unwrap_or(0);
+            padded += (end - i) * wmax;
+            i = end;
+        }
+        if padded == 0 {
+            1.0
+        } else {
+            self.nnz() as f64 / padded as f64
+        }
+    }
+
     /// Dense row-major materialization (test oracle only; O(n^2)).
     pub fn to_dense(&self) -> Vec<Vec<f32>> {
         let mut out = vec![vec![0.0; self.n_cols]; self.n_rows];
@@ -218,6 +282,43 @@ mod tests {
         assert_ne!(a, c);
         assert_eq!(a.n_rows, 10);
         assert!(a.colind.iter().all(|&c| c < 10));
+    }
+
+    #[test]
+    fn layout_metrics_respond_to_row_order() {
+        // 16 rows: row 0 is wide, the rest have one diagonal edge.
+        let mut rows: Vec<Vec<(u32, f32)>> =
+            (0..16).map(|i| vec![(i as u32, 1.0)]).collect();
+        rows[15] = (0..8).map(|c| (c as u32, 1.0)).collect();
+        let g = Csr::from_rows(16, rows.clone());
+        // Hub at the bottom: head (1 row) owns 1/23 of nnz.
+        assert!(g.head_nnz_frac() < 0.1, "{}", g.head_nnz_frac());
+        // Same rows with the hub first.
+        rows.rotate_right(1);
+        let packed = Csr::from_rows(16, rows);
+        assert!(packed.head_nnz_frac() > 0.3, "{}", packed.head_nnz_frac());
+        assert_eq!(g.nnz(), packed.nnz());
+        // Tile fill: hub row inflates its 8-row tile either way, but
+        // the metric must be a valid ratio and move with the layout.
+        let (a, b) = (g.tile_fill(8), packed.tile_fill(8));
+        assert!((0.0..=1.0).contains(&a) && (0.0..=1.0).contains(&b));
+        // Bandwidth: diagonal rows are 0-distance; the hub contributes
+        // more distance sitting at row 15 than at row 0... both valid.
+        assert!((0.0..=1.0).contains(&g.bandwidth_frac()));
+    }
+
+    #[test]
+    fn layout_metrics_degenerate_inputs() {
+        let empty = Csr::from_rows(0, vec![]);
+        assert_eq!(empty.bandwidth_frac(), 0.0);
+        assert_eq!(empty.head_nnz_frac(), 0.0);
+        assert_eq!(empty.tile_fill(8), 1.0);
+        let no_edges = Csr::from_rows(3, vec![vec![], vec![], vec![]]);
+        assert_eq!(no_edges.head_nnz_frac(), 0.0);
+        assert_eq!(no_edges.tile_fill(0), 1.0); // edgeless: no waste
+        let diag = Csr::from_rows(4, (0..4).map(|i| vec![(i as u32, 1.0)]).collect());
+        assert_eq!(diag.bandwidth_frac(), 0.0);
+        assert_eq!(diag.tile_fill(2), 1.0);
     }
 
     #[test]

@@ -38,7 +38,26 @@ impl Default for Fnv1a {
     }
 }
 
-/// Structural signature of a graph, hex-encoded.
+/// Compact row-layout fingerprint: quantized bandwidth, head-block
+/// density, and per-tile ELL fill (`METRIC_TILE_ROWS` tiles). NOT
+/// folded into [`graph_signature`] — the full structure hash there
+/// already separates any two row orders, and the signature runs in the
+/// serving hot path where two extra O(nnz) passes would double its
+/// cost. This digest exists for telemetry, `autosage data inspect`,
+/// and as the layout key any future *sampled* signature must re-fold.
+pub fn layout_digest(g: &Csr) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write_u64((g.bandwidth_frac() * 1e6).round() as u64);
+    h.write_u64((g.head_nnz_frac() * 1e6).round() as u64);
+    h.write_u64((g.tile_fill(crate::graph::csr::METRIC_TILE_ROWS) * 1e6).round() as u64);
+    h.finish()
+}
+
+/// Structural signature of a graph, hex-encoded. Covers dimensions and
+/// the full rowptr/colind structure — which makes it row-LAYOUT
+/// sensitive: a reordered layout (`data::reorder`) keys its own
+/// schedule cache entries, and a reorder round-trip restores the
+/// original key (tested below).
 pub fn graph_signature(g: &Csr) -> String {
     let mut h = Fnv1a::new();
     h.write_u64(g.n_rows as u64);
@@ -103,6 +122,68 @@ mod tests {
         let mut h = Fnv1a::new();
         h.write(b"a");
         assert_eq!(h.finish(), 0xaf63dc4c8601ec8c);
+    }
+
+    #[test]
+    fn empty_graph_signature_stable_and_distinct() {
+        let empty = Csr::from_rows(0, vec![]);
+        let s = graph_signature(&empty);
+        assert_eq!(s, graph_signature(&empty));
+        assert_eq!(s.len(), 16);
+        // A 1-row edgeless graph is structurally different.
+        let one = Csr::from_rows(1, vec![vec![]]);
+        assert_ne!(s, graph_signature(&one));
+    }
+
+    #[test]
+    fn all_self_loop_graph_signature() {
+        let loops =
+            Csr::from_rows(8, (0..8).map(|i| vec![(i as u32, 1.0)]).collect());
+        let s = graph_signature(&loops);
+        assert_eq!(s, graph_signature(&loops));
+        // Shifting every loop off the diagonal changes the signature.
+        let shifted = Csr::from_rows(
+            8,
+            (0..8).map(|i| vec![(((i + 1) % 8) as u32, 1.0)]).collect(),
+        );
+        assert_ne!(s, graph_signature(&shifted));
+    }
+
+    #[test]
+    fn single_mega_hub_signature_sensitive_to_hub_position() {
+        let hub_row = |at: usize| -> Csr {
+            let rows = (0..16)
+                .map(|i| {
+                    if i == at {
+                        (0..16).map(|c| (c as u32, 1.0)).collect()
+                    } else {
+                        vec![]
+                    }
+                })
+                .collect();
+            Csr::from_rows(16, rows)
+        };
+        // Same degree multiset, different row layout → different key.
+        assert_ne!(
+            graph_signature(&hub_row(0)),
+            graph_signature(&hub_row(15))
+        );
+        assert_eq!(graph_signature(&hub_row(3)), graph_signature(&hub_row(3)));
+    }
+
+    #[test]
+    fn signature_stable_across_reorder_roundtrip() {
+        use crate::data::reorder::{reorder, ReorderPass};
+        let g = crate::gen::hub_skew(128, 3, 0.1, 16, 5);
+        let sig = graph_signature(&g);
+        let r = reorder(&g, &[ReorderPass::HubPack, ReorderPass::SegmentSort]);
+        // The reordered layout must key differently…
+        assert_ne!(graph_signature(&r.graph), sig);
+        // …and the round-trip must restore the exact original key.
+        assert_eq!(graph_signature(&r.restore_graph()), sig);
+        let digest = layout_digest(&g);
+        assert_ne!(layout_digest(&r.graph), digest);
+        assert_eq!(layout_digest(&r.restore_graph()), digest);
     }
 
     #[test]

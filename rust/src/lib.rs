@@ -12,6 +12,10 @@
 //! * [`util`] — substrates built from scratch (JSON, RNG, stats, CSV, env).
 //! * [`graph`] — CSR/ELL formats, bucketing, signatures.
 //! * [`gen`] — synthetic workload generators (paper presets, scaled).
+//! * [`data`] — dataset ingestion (Matrix Market / edge lists / `.asg`
+//!   binary snapshots), canonical normalization, degree-aware row
+//!   reordering with un-permutation, and the graph-spec grammar
+//!   (`"preset"` | `"file:PATH"`) every surface accepts.
 //! * [`runtime`] — kernel manifest (parsed from `artifacts/manifest.json`
 //!   or synthesized natively), host tensors, and — behind the `pjrt`
 //!   feature — the PJRT client for AOT artifacts.
@@ -32,6 +36,7 @@ pub mod backend;
 pub mod bench_kit;
 pub mod config;
 pub mod coordinator;
+pub mod data;
 pub mod gen;
 pub mod graph;
 pub mod ops;

@@ -2,18 +2,26 @@
 //!
 //! ```text
 //! autosage backends
-//! autosage gen     --preset reddit_s [--seed 42]
-//! autosage decide  --preset er_s --op spmm --f 64 [--alpha 0.95]
-//! autosage run     --preset er_s --op spmm --f 64
+//! autosage gen     --graph reddit_s [--seed 42]
+//! autosage decide  --graph er_s --op spmm --f 64 [--alpha 0.95]
+//! autosage run     --graph file:g.asg --op spmm --f 64
+//! autosage bench   --graph file:g.asg [--ops spmm,sddmm] [--f 64]
+//!                  [--reorder hub-pack,segment-sort] [--out results]
+//! autosage data    convert <in> <out.asg> | inspect <path>
+//!                  | reorder <in> [out.asg] --pass hub-pack,segment-sort
 //! autosage table   <2..12> [--iters 7] [--cap-ms 1500] [--out results]
 //! autosage figure  <1..7>  [--iters 7] [--cap-ms 1500] [--out results]
 //! autosage all     [--out results]
 //! autosage cache   dump|clear|stats [--path autosage_cache.json]
 //! autosage serve-bench [--smoke] [--workers 4] [--clients 8] [--requests 8]
-//!                      [--presets er_s,products_s] [--ops spmm,sddmm,attention]
+//!                      [--presets er_s,file:g.asg] [--ops spmm,sddmm,attention]
 //! ```
 //!
-//! `decide`/`run`/`table`/`figure`/`all` honor `--backend
+//! Everywhere a graph is named, the spec grammar is `PRESET` or
+//! `file:PATH` (`.asg` snapshot, `.mtx` Matrix Market, else edge list);
+//! `--preset` stays as an alias of `--graph` for presets.
+//!
+//! `decide`/`run`/`bench`/`table`/`figure`/`all` honor `--backend
 //! auto|native|pjrt` (default: `AUTOSAGE_BACKEND`, then auto). Other
 //! env toggles (AUTOSAGE_ALPHA, AUTOSAGE_PROBE_*, AUTOSAGE_VEC,
 //! AUTOSAGE_CACHE, AUTOSAGE_REPLAY_ONLY, ...) apply everywhere; see
@@ -28,8 +36,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use autosage::bench_kit::tables::{run_figure, run_table, table_ids};
 use autosage::config::Config;
 use autosage::coordinator::AutoSage;
-use autosage::gen::{preset, preset_names};
-use autosage::graph::signature::graph_signature;
+use autosage::data;
+use autosage::gen::preset_names;
+use autosage::graph::signature::{graph_signature, layout_digest};
+use autosage::graph::Csr;
 use autosage::scheduler::{probe, InputFeatures, Op, ScheduleCache};
 use autosage::telemetry::meta_sidecar;
 use autosage::util::stats;
@@ -111,6 +121,8 @@ fn real_main() -> Result<()> {
         "gen" => cmd_gen(&args),
         "decide" => cmd_decide(&args),
         "run" => cmd_run(&args),
+        "bench" => cmd_bench(&args),
+        "data" => cmd_data(&args),
         "table" => cmd_table(&args),
         "figure" => cmd_figure(&args),
         "all" => cmd_all(&args),
@@ -129,9 +141,15 @@ fn print_usage() {
         "autosage — input-aware scheduling for sparse GNN aggregation\n\
          commands:\n\
          \x20 backends  (list execution backends + signatures)\n\
-         \x20 gen     --preset <{presets}> [--seed N]\n\
-         \x20 decide  --preset P --op <spmm|sddmm|attention> --f F [--alpha A]\n\
-         \x20 run     --preset P --op <spmm|sddmm|attention> --f F\n\
+         \x20 gen     --graph G [--seed N]\n\
+         \x20 decide  --graph G --op <spmm|sddmm|attention> --f F [--alpha A]\n\
+         \x20 run     --graph G --op <spmm|sddmm|attention> --f F\n\
+         \x20 bench   --graph G [--ops spmm,sddmm,attention] [--f F]\n\
+         \x20         [--reorder hub-pack,segment-sort] [--iters N]\n\
+         \x20         [--cap-ms MS] [--out DIR]\n\
+         \x20 data    convert <in> <out.asg>\n\
+         \x20         inspect <path>\n\
+         \x20         reorder <in> [out.asg] --pass hub-pack,segment-sort\n\
          \x20 table   <2..12> [--iters N] [--cap-ms MS] [--out DIR]\n\
          \x20 figure  <1..7>  [--iters N] [--cap-ms MS] [--out DIR]\n\
          \x20 all     [--out DIR]\n\
@@ -139,10 +157,23 @@ fn print_usage() {
          \x20 serve-bench [--smoke] [--workers K] [--clients N] [--requests M]\n\
          \x20             [--presets a,b] [--ops spmm,sddmm,attention] [--f F]\n\
          \x20             [--seed N] [--cache FILE] [--out DIR]\n\
+         graph specs G: a preset <{presets}>\n\
+         \x20             or file:PATH (.asg | .mtx | edge list .txt/.csv);\n\
+         \x20             --preset NAME remains an alias for presets\n\
          flags: --backend <auto|native|pjrt> (default: AUTOSAGE_BACKEND or auto)\n\
          \x20      --artifacts DIR (default: artifacts; pjrt backend only)",
         presets = preset_names().join("|")
     );
+}
+
+/// Resolve the `--graph SPEC` flag (preset name or `file:PATH`),
+/// accepting `--preset NAME` as the legacy alias.
+fn graph_arg(args: &Args, seed: u64) -> Result<(Csr, String)> {
+    let spec = args
+        .get("graph")
+        .or_else(|| args.get("preset"))
+        .context("--graph <preset|file:PATH> (or --preset) required")?;
+    data::load_graph_spec(spec, seed)
 }
 
 fn cmd_backends(args: &Args) -> Result<()> {
@@ -158,11 +189,10 @@ fn cmd_backends(args: &Args) -> Result<()> {
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
-    let name = args.get("preset").context("--preset required")?;
     let seed = args.get_parse("seed", 42u64)?;
-    let (g, spec) = preset(name, seed);
+    let (g, label) = graph_arg(args, seed)?;
     let feats = InputFeatures::extract(&g, 0);
-    println!("preset {name} (stand-in for: {})", spec.paper_name);
+    println!("graph {label}");
     println!(
         "  rows {}  nnz {}  signature {}",
         g.n_rows,
@@ -174,6 +204,12 @@ fn cmd_gen(args: &Args) -> Result<()> {
         feats.avg_deg, feats.p50_deg, feats.p90_deg, feats.p99_deg, feats.max_deg
     );
     println!("  skew: gini {:.3}  cv {:.3}", feats.gini, feats.cv);
+    println!(
+        "  layout: bandwidth {:.4}  head-nnz {:.4}  tile-fill {:.4}",
+        feats.band_frac,
+        g.head_nnz_frac(),
+        feats.tile_fill
+    );
     println!("  degree histogram (log2 buckets):");
     let degs: Vec<f64> = g.degrees().iter().map(|&d| d as f64).collect();
     let mut hist = [0usize; 12];
@@ -212,13 +248,13 @@ fn sage_from(args: &Args) -> Result<AutoSage> {
 }
 
 fn cmd_decide(args: &Args) -> Result<()> {
-    let name = args.get("preset").context("--preset required")?;
     let f = args.get_parse("f", 64usize)?;
     let op = parse_op(args)?;
     let seed = args.get_parse("seed", 42u64)?;
-    let (g, _) = preset(name, seed);
+    let (g, label) = graph_arg(args, seed)?;
     let mut sage = sage_from(args)?;
     let d = sage.decide(&g, op, f)?;
+    println!("graph   : {label}");
     println!("backend : {} ({})", sage.backend_name(), sage.backend_signature());
     println!("key     : {}", d.key);
     println!("choice  : {} ({})", d.choice_label(), d.choice.variant());
@@ -231,11 +267,10 @@ fn cmd_decide(args: &Args) -> Result<()> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let name = args.get("preset").context("--preset required")?;
     let f = args.get_parse("f", 64usize)?;
     let op = parse_op(args)?;
     let seed = args.get_parse("seed", 42u64)?;
-    let (g, _) = preset(name, seed);
+    let (g, label) = graph_arg(args, seed)?;
     let mut sage = sage_from(args)?;
     let data = probe::synth_operands(op, g.n_rows, f, seed);
     let get = |n: &str| data.dense.get(n).unwrap().as_slice();
@@ -249,7 +284,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let total = sw.ms();
     let sum: f64 = out.iter().map(|&x| x as f64).sum();
     println!(
-        "op={} preset={name} F={f} backend={}: {} outputs, checksum {:.4}, end-to-end {:.2}ms",
+        "op={} graph={label} F={f} backend={}: {} outputs, checksum {:.4}, end-to-end {:.2}ms",
         op.as_str(),
         sage.backend_name(),
         out.len(),
@@ -271,6 +306,193 @@ fn bench_params(args: &Args) -> Result<(usize, f64)> {
         args.get_parse("iters", 7usize)?,
         args.get_parse("cap-ms", 1500.0f64)?,
     ))
+}
+
+/// `autosage bench`: one decision+timing table for any graph spec, with
+/// an optional reordered-layout comparison (`--reorder pass,pass`) whose
+/// `ReorderReport` deltas render under the table.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use autosage::bench_kit::render::{graph_bench_csv, render_graph_bench};
+    use autosage::bench_kit::runner::graph_bench_rows;
+    let seed = args.get_parse("seed", 42u64)?;
+    let (g, label) = graph_arg(args, seed)?;
+    let f = args.get_parse("f", 64usize)?;
+    let (iters, cap) = bench_params(args)?;
+    let ops: Vec<Op> = match args.get("ops") {
+        Some(list) => list
+            .split(',')
+            .map(|s| Op::parse(s).ok_or_else(|| anyhow!("unknown op {s:?}")))
+            .collect::<Result<Vec<_>>>()?,
+        None => vec![parse_op(args)?],
+    };
+    if ops.iter().any(|&o| o == Op::Softmax) {
+        bail!("softmax runs inside the attention pipeline; bench spmm|sddmm|attention");
+    }
+    let mut sage = sage_from(args)?;
+    let mut report_text = String::new();
+    let reordered = match args.get("reorder") {
+        None => None,
+        Some(pass_spec) => {
+            let passes = data::parse_passes(pass_spec)?;
+            let r = data::reorder(&g, &passes);
+            report_text = format!(
+                "{}signatures: {} -> {}\n",
+                r.report,
+                graph_signature(&g),
+                graph_signature(&r.graph)
+            );
+            Some(r)
+        }
+    };
+    let rows = graph_bench_rows(
+        &mut sage,
+        &g,
+        reordered.as_ref().map(|r| &r.graph),
+        &ops,
+        f,
+        iters,
+        cap,
+    )?;
+    let title = format!(
+        "bench {label} | F={f} | backend={} | iters={iters}",
+        sage.backend_name()
+    );
+    let mut text = render_graph_bench(&title, &rows);
+    if !report_text.is_empty() {
+        text.push('\n');
+        text.push_str(&report_text);
+    }
+    write_output(
+        args.get("out"),
+        &backend_label(args),
+        "bench",
+        &text,
+        &graph_bench_csv(&rows),
+    )
+}
+
+/// `autosage data`: dataset ingestion verbs (convert | inspect | reorder).
+fn cmd_data(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .context("data action: convert|inspect|reorder")?;
+    match action.as_str() {
+        "convert" => {
+            let inp = args
+                .positional
+                .get(1)
+                .context("usage: data convert <in> <out.asg>")?;
+            let out = args
+                .positional
+                .get(2)
+                .context("usage: data convert <in> <out.asg>")?;
+            let loaded = data::convert_to_asg(Path::new(inp), Path::new(out))?;
+            let g = &loaded.csr;
+            let n = &loaded.meta.norm;
+            println!(
+                "converted {inp} [{}] -> {out}: {} rows, {} cols, {} nnz",
+                loaded.meta.format.as_str(),
+                g.n_rows,
+                g.n_cols,
+                g.nnz()
+            );
+            println!(
+                "  normalization: {} raw entries, {} dups merged, {} self-loops ({} dropped)",
+                n.n_raw, n.dups_merged, n.self_loops, n.self_loops_dropped
+            );
+            println!("  signature {}", graph_signature(g));
+            Ok(())
+        }
+        "inspect" => {
+            let p = args
+                .positional
+                .get(1)
+                .context("usage: data inspect <path>")?;
+            let path = Path::new(p);
+            let (loaded, stored_perm) = data::CsrGraph::load_with_perm(path)?;
+            let g = &loaded.csr;
+            let feats = InputFeatures::extract(g, 0);
+            println!("{p} [{}]", loaded.meta.format.as_str());
+            println!("  rows {}  cols {}  nnz {}", g.n_rows, g.n_cols, g.nnz());
+            println!(
+                "  signature {}  layout-digest {:016x}",
+                graph_signature(g),
+                layout_digest(g)
+            );
+            println!(
+                "  degree: avg {:.2}  p50 {:.0}  p90 {:.0}  p99 {:.0}  max {}",
+                feats.avg_deg, feats.p50_deg, feats.p90_deg, feats.p99_deg, feats.max_deg
+            );
+            println!("  skew: gini {:.3}  cv {:.3}", feats.gini, feats.cv);
+            println!(
+                "  layout: bandwidth {:.4}  head-nnz {:.4}  tile-fill {:.4}",
+                feats.band_frac,
+                g.head_nnz_frac(),
+                feats.tile_fill
+            );
+            if let Some(perm) = stored_perm {
+                println!(
+                    "  reordered snapshot: row permutation stored ({} rows, un-permutable)",
+                    perm.len()
+                );
+            } else if loaded.meta.format != data::GraphFormat::AsgSnapshot {
+                let n = &loaded.meta.norm;
+                println!(
+                    "  normalization: {} raw entries, {} dups merged, {} self-loops ({} dropped)",
+                    n.n_raw, n.dups_merged, n.self_loops, n.self_loops_dropped
+                );
+            }
+            Ok(())
+        }
+        "reorder" => {
+            let inp = args
+                .positional
+                .get(1)
+                .context("usage: data reorder <in> [out.asg] --pass p1,p2")?;
+            let out = args
+                .positional
+                .get(2)
+                .map(String::as_str)
+                .unwrap_or(inp.as_str());
+            // Snapshots may be reordered in place; never overwrite a
+            // source-format file (.mtx/edge list) with binary .asg.
+            if data::GraphFormat::from_path(Path::new(out))
+                != data::GraphFormat::AsgSnapshot
+            {
+                bail!(
+                    "reorder output {out:?} must end in .asg (pass an explicit \
+                     out.asg to avoid overwriting the source format)"
+                );
+            }
+            let passes =
+                data::parse_passes(args.get("pass").unwrap_or("hub-pack,segment-sort"))?;
+            let inp_path = Path::new(inp.as_str());
+            // Snapshots carry their permutation through recomposition;
+            // other formats start from identity.
+            let (loaded, prior) = data::CsrGraph::load_with_perm(inp_path)?;
+            let g = loaded.csr;
+            let r = data::reorder(&g, &passes);
+            let total: Vec<u32> = match &prior {
+                Some(p0) => r.perm.iter().map(|&np| p0[np as usize]).collect(),
+                None => r.perm.clone(),
+            };
+            data::write_asg(Path::new(out), &r.graph, Some(&total))?;
+            print!("{}", r.report);
+            println!(
+                "signatures: {} -> {}",
+                graph_signature(&g),
+                graph_signature(&r.graph)
+            );
+            println!(
+                "written {out}: {} rows, {} nnz, row permutation stored",
+                r.graph.n_rows,
+                r.graph.nnz()
+            );
+            Ok(())
+        }
+        other => bail!("unknown data action {other:?} (convert|inspect|reorder)"),
+    }
 }
 
 /// The backend label for output sidecars: the RESOLVED engine

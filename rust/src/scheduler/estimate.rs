@@ -11,6 +11,70 @@ use crate::runtime::manifest::ArtifactEntry;
 
 use super::features::InputFeatures;
 
+/// Typed rejection of degenerate scheduling inputs (0 rows, 0 nnz,
+/// F = 0). Without the gate these produce NaN / divide-by-zero roofline
+/// terms and an unprobeable empty subgraph; the scheduler fails fast
+/// with one of these instead.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EstimateError {
+    /// The graph has no rows or no stored edges.
+    EmptyGraph { n_rows: usize, nnz: usize },
+    /// The op consumes dense features but F = 0.
+    ZeroFeatureDim,
+    /// The device model has a non-positive bandwidth or peak rate.
+    DegenerateDevice { mem_bw_gbps: f64, peak_gflops: f64 },
+}
+
+impl std::fmt::Display for EstimateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EstimateError::EmptyGraph { n_rows, nnz } => write!(
+                f,
+                "degenerate scheduling input: {n_rows} rows / {nnz} stored \
+                 edges (both must be nonzero)"
+            ),
+            EstimateError::ZeroFeatureDim => {
+                write!(f, "degenerate scheduling input: feature width F = 0")
+            }
+            EstimateError::DegenerateDevice { mem_bw_gbps, peak_gflops } => {
+                write!(
+                    f,
+                    "degenerate device model: bw {mem_bw_gbps} GB/s, peak \
+                     {peak_gflops} GFLOP/s (both must be positive)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for EstimateError {}
+
+/// Gate the roofline inputs. `requires_f` is `Op::has_f()` — softmax
+/// legitimately schedules at F = 0.
+pub fn validate_input(
+    feats: &InputFeatures,
+    requires_f: bool,
+    dev: &DeviceModel,
+) -> Result<(), EstimateError> {
+    if feats.n_rows == 0 || feats.nnz == 0 {
+        return Err(EstimateError::EmptyGraph {
+            n_rows: feats.n_rows,
+            nnz: feats.nnz,
+        });
+    }
+    if requires_f && feats.f == 0 {
+        return Err(EstimateError::ZeroFeatureDim);
+    }
+    let bad = |v: f64| !v.is_finite() || v <= 0.0;
+    if bad(dev.mem_bw_gbps) || bad(dev.peak_gflops) {
+        return Err(EstimateError::DegenerateDevice {
+            mem_bw_gbps: dev.mem_bw_gbps,
+            peak_gflops: dev.peak_gflops,
+        });
+    }
+    Ok(())
+}
+
 /// Modeled traffic/compute for one candidate on one input.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Estimate {
@@ -183,6 +247,11 @@ pub fn estimate_entry(
     let score = (bytes / (dev.mem_bw_gbps * 1e9))
         .max(flops / (dev.peak_gflops * 1e9))
         + steps * dev.step_us * 1e-6;
+    // Belt-and-braces behind `validate_input`: a non-finite score would
+    // poison the sort in `shortlist` (partial_cmp unwrap) downstream.
+    if !score.is_finite() {
+        return None;
+    }
     Some(Estimate {
         entry_name: entry.name.clone(),
         variant: entry.variant.clone(),
@@ -259,6 +328,8 @@ mod tests {
             gini: 0.8,
             cv: 2.0,
             vec_aligned: false,
+            tile_fill: 0.25,
+            band_frac: 0.4,
         }
     }
 
@@ -302,6 +373,62 @@ mod tests {
         // AUTOSAGE_VEC=0 disables even when aligned.
         let top = shortlist(&entries, &aligned, &dev, false, 10);
         assert!(top.iter().all(|(e, _)| !e.variant.contains("_f128")));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_inputs_typed() {
+        let dev = DeviceModel::default();
+        let ok = skewed_feats();
+        assert!(validate_input(&ok, true, &dev).is_ok());
+        assert!(validate_input(&ok, false, &dev).is_ok());
+
+        let mut empty = skewed_feats();
+        empty.n_rows = 0;
+        assert_eq!(
+            validate_input(&empty, true, &dev),
+            Err(EstimateError::EmptyGraph { n_rows: 0, nnz: empty.nnz })
+        );
+        let mut no_edges = skewed_feats();
+        no_edges.nnz = 0;
+        assert!(matches!(
+            validate_input(&no_edges, true, &dev),
+            Err(EstimateError::EmptyGraph { .. })
+        ));
+
+        let mut f0 = skewed_feats();
+        f0.f = 0;
+        assert_eq!(
+            validate_input(&f0, true, &dev),
+            Err(EstimateError::ZeroFeatureDim)
+        );
+        // Softmax-style ops (no F parameter) accept F = 0.
+        assert!(validate_input(&f0, false, &dev).is_ok());
+
+        let dead = DeviceModel { mem_bw_gbps: 0.0, ..DeviceModel::default() };
+        assert!(matches!(
+            validate_input(&ok, true, &dead),
+            Err(EstimateError::DegenerateDevice { .. })
+        ));
+        // Errors render actionable messages.
+        let msg = format!("{}", EstimateError::ZeroFeatureDim);
+        assert!(msg.contains("F = 0"), "{msg}");
+    }
+
+    #[test]
+    fn non_finite_scores_are_dropped_not_sorted() {
+        // A zero-bandwidth device would make every score infinite; the
+        // entry estimator must drop such candidates instead of handing
+        // `shortlist` a NaN/inf to sort on.
+        let m = fake_manifest();
+        let dev = DeviceModel {
+            mem_bw_gbps: 0.0,
+            peak_gflops: 0.0,
+            ..DeviceModel::default()
+        };
+        assert_eq!(
+            estimate_entry(m.by_name("ell32").unwrap(), &skewed_feats(), &dev),
+            None
+        );
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! F, device caps"). These drive the roofline shortlist; the cache key
 //! uses the graph signature, not these floats.
 
+use crate::graph::csr::METRIC_TILE_ROWS;
 use crate::graph::Csr;
 use crate::util::stats;
 
@@ -22,6 +23,12 @@ pub struct InputFeatures {
     pub cv: f64,
     /// Wide-lane ("vec") alignment: F % 128 == 0 (paper: F % 4 == 0).
     pub vec_aligned: bool,
+    /// Per-tile (r=8) ELL fill ratio — row-LAYOUT-sensitive, unlike the
+    /// degree stats above: `data::reorder` passes raise it, and cached
+    /// schedules key on the reordered layout through the signature.
+    pub tile_fill: f64,
+    /// Normalized mean |row - col| edge distance (layout bandwidth).
+    pub band_frac: f64,
 }
 
 impl InputFeatures {
@@ -46,6 +53,8 @@ impl InputFeatures {
             gini: stats::gini(&degs),
             cv: stats::cv(&degs),
             vec_aligned: f % 128 == 0,
+            tile_fill: g.tile_fill(METRIC_TILE_ROWS),
+            band_frac: g.bandwidth_frac(),
         }
     }
 
@@ -89,5 +98,26 @@ mod tests {
         let g = hub_skew(1000, 4, 0.15, 64, 3);
         let hf = InputFeatures::heavy_fraction(&g, 32);
         assert!((hf - 0.15).abs() < 0.01);
+    }
+
+    #[test]
+    fn layout_features_move_under_reorder_degree_features_dont() {
+        use crate::data::reorder::{reorder, ReorderPass};
+        let g = hub_skew(512, 3, 0.1, 32, 3);
+        let r = reorder(&g, &[ReorderPass::SegmentSort]);
+        let a = InputFeatures::extract(&g, 64);
+        let b = InputFeatures::extract(&r.graph, 64);
+        // Degree statistics are permutation-invariant…
+        assert_eq!(a.nnz, b.nnz);
+        assert_eq!(a.max_deg, b.max_deg);
+        assert!((a.gini - b.gini).abs() < 1e-12);
+        // …the layout features are not.
+        assert!(
+            b.tile_fill > a.tile_fill,
+            "tile fill {} -> {}",
+            a.tile_fill,
+            b.tile_fill
+        );
+        assert!((0.0..=1.0).contains(&a.band_frac));
     }
 }

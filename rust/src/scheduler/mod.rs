@@ -17,7 +17,7 @@ use crate::graph::Csr;
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
 
 pub use cache::{cache_key, CachedChoice, ScheduleCache};
-pub use estimate::DeviceModel;
+pub use estimate::{DeviceModel, EstimateError};
 pub use features::InputFeatures;
 pub use guardrail::Choice;
 pub use probe::ProbeReport;
@@ -251,7 +251,13 @@ impl Scheduler {
             ));
         }
 
-        // 3. Shortlist by estimating the FULL-size candidates (their
+        // 3. Reject degenerate inputs with a typed error before any
+        //    roofline math: 0 rows / 0 nnz / F=0 would otherwise surface
+        //    as NaN scores or an unprobeable empty subgraph downstream.
+        let feats = InputFeatures::extract(g, f);
+        estimate::validate_input(&feats, op.has_f(), &self.dev_model)?;
+
+        //    Shortlist by estimating the FULL-size candidates (their
         //    cost is what the decision commits to — grid kernels have
         //    per-step costs that grow with n_pad, so scoring the probe
         //    bucket would not extrapolate), then probe each winner's
@@ -280,7 +286,6 @@ impl Scheduler {
                     sub.n_rows
                 )
             })?;
-        let feats = InputFeatures::extract(g, f);
         let full_cands: Vec<&ArtifactEntry> = manifest
             .candidates(op.as_str(), fq, false)
             .into_iter()

@@ -11,12 +11,13 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::bench_kit::render::render_serving_table;
-use crate::gen::{preset, preset_names};
+use crate::data::load_graph_spec;
 use crate::graph::Csr;
 use crate::ops::reference;
 use crate::scheduler::{probe, Op};
 use crate::telemetry::{serving_table, ServeShardStats};
 use crate::util::csv::CsvTable;
+use crate::util::rng::Rng;
 use crate::util::stats;
 
 use super::pool::ServerPool;
@@ -29,6 +30,8 @@ pub struct LoadSpec {
     /// Feature width for every request (the synthetic catalog carries
     /// SDDMM/attention buckets at F ∈ {64, 128} on er_s/products_s).
     pub f: usize,
+    /// Graph specs (`data::spec` grammar): preset names or
+    /// `file:PATH` loader-backed datasets.
     pub presets: Vec<String>,
     pub ops: Vec<Op>,
     pub seed: u64,
@@ -104,13 +107,7 @@ fn build_combos(spec: &LoadSpec) -> Result<Vec<Combo>> {
     }
     let mut combos = Vec::new();
     for (pi, name) in spec.presets.iter().enumerate() {
-        if !preset_names().contains(&name.as_str()) {
-            bail!(
-                "unknown preset {name:?} (valid: {})",
-                preset_names().join(", ")
-            );
-        }
-        let (g, _) = preset(name, spec.seed.wrapping_add(pi as u64));
+        let (g, _label) = load_graph_spec(name, spec.seed.wrapping_add(pi as u64))?;
         for (oi, &op) in spec.ops.iter().enumerate() {
             if op == Op::Softmax {
                 bail!("softmax is served inside the attention pipeline; mix spmm|sddmm|attention");
@@ -139,26 +136,55 @@ fn build_combos(spec: &LoadSpec) -> Result<Vec<Combo>> {
     Ok(combos)
 }
 
-/// Run the load against `pool` and aggregate a report. Clients walk the
-/// combo list round-robin (offset by client id so the mix interleaves)
-/// using the blocking submit path.
+/// Deterministic per-client request mix: a round-robin base (offset by
+/// client id so every client covers every combo) shuffled by a
+/// per-client [`Rng::for_stream`] stream of `seed`. Two runs with the
+/// same seed replay the identical interleaving; changing the seed
+/// reshuffles the mix — this is what makes serve-bench A/B comparisons
+/// repeatable instead of racing on arrival order alone.
+pub fn request_schedule(
+    n_combos: usize,
+    clients: usize,
+    requests_per_client: usize,
+    seed: u64,
+) -> Vec<Vec<usize>> {
+    (0..clients)
+        .map(|c| {
+            let mut rng = Rng::for_stream(seed, c as u64);
+            let mut idx: Vec<usize> = (0..requests_per_client)
+                .map(|r| (c + r) % n_combos.max(1))
+                .collect();
+            rng.shuffle(&mut idx);
+            idx
+        })
+        .collect()
+}
+
+/// Run the load against `pool` and aggregate a report. Clients walk a
+/// seeded [`request_schedule`] over the combo list using the blocking
+/// submit path.
 pub fn run_load(pool: Arc<ServerPool>, spec: &LoadSpec) -> Result<LoadReport> {
     let combos = Arc::new(build_combos(spec)?);
     let unique_keys = combos.len();
+    let schedule = request_schedule(
+        combos.len(),
+        spec.clients,
+        spec.requests_per_client,
+        spec.seed,
+    );
     let sw = Instant::now();
     let mut handles = Vec::new();
-    for c in 0..spec.clients {
+    for (c, mix) in schedule.into_iter().enumerate() {
         let pool = Arc::clone(&pool);
         let combos = Arc::clone(&combos);
-        let rpc = spec.requests_per_client;
         let verify = spec.verify;
         let handle = std::thread::Builder::new()
             .name(format!("loadgen-client-{c}"))
             .spawn(move || -> (Vec<f64>, usize, usize, usize) {
                 let mut lat = Vec::new();
                 let (mut ok, mut errors, mut mismatches) = (0usize, 0usize, 0usize);
-                for r in 0..rpc {
-                    let combo = &combos[(c + r) % combos.len()];
+                for &ci in &mix {
+                    let combo = &combos[ci];
                     let t0 = Instant::now();
                     let rx = match pool.submit(
                         combo.op,
@@ -301,6 +327,60 @@ mod tests {
         let mut spec = LoadSpec::smoke();
         spec.clients = 0;
         assert!(build_combos(&spec).is_err());
+    }
+
+    #[test]
+    fn request_schedule_reproducible_under_seed() {
+        let a = request_schedule(6, 8, 16, 42);
+        let b = request_schedule(6, 8, 16, 42);
+        assert_eq!(a, b, "same seed must replay the same mix");
+        let c = request_schedule(6, 8, 16, 43);
+        assert_ne!(a, c, "a different seed must reshuffle the mix");
+        // The shuffle only reorders: every client still covers the
+        // round-robin multiset, so totals per combo are unchanged.
+        for (mix_a, mix_c) in a.iter().zip(&c) {
+            let mut sa = mix_a.clone();
+            let mut sc = mix_c.clone();
+            sa.sort_unstable();
+            sc.sort_unstable();
+            assert_eq!(sa, sc);
+        }
+        // Every combo appears in every client's mix (16 reqs, 6 combos).
+        for mix in &a {
+            for combo in 0..6 {
+                assert!(mix.contains(&combo));
+            }
+        }
+    }
+
+    #[test]
+    fn request_schedule_survives_degenerate_shapes() {
+        assert_eq!(request_schedule(0, 2, 3, 1).len(), 2); // n_combos clamped
+        assert!(request_schedule(4, 0, 3, 1).is_empty());
+        assert_eq!(request_schedule(4, 2, 0, 1), vec![vec![], vec![]]);
+    }
+
+    #[test]
+    fn file_specs_are_accepted_by_build_combos() {
+        use crate::data::write_asg;
+        let dir = std::env::temp_dir().join("autosage_loadgen_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("combo.asg");
+        let (g, _) = crate::data::load_graph_spec("er_s", 9).unwrap();
+        write_asg(&path, &g, None).unwrap();
+        let spec = LoadSpec {
+            clients: 1,
+            requests_per_client: 1,
+            f: 64,
+            presets: vec![format!("file:{}", path.display())],
+            ops: vec![Op::Spmm],
+            seed: 7,
+            verify: false,
+        };
+        let combos = build_combos(&spec).unwrap();
+        assert_eq!(combos.len(), 1);
+        assert_eq!(combos[0].graph, g);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -277,7 +277,13 @@ impl Drop for ServerPool {
                     .or_else(|| panic.downcast_ref::<String>().cloned())
                     .unwrap_or_else(|| "opaque panic payload".to_string());
                 eprintln!("autosage: server shard {i} worker panicked: {msg}");
-                debug_assert!(false, "server shard {i} worker panicked: {msg}");
+                // Never panic inside Drop while already unwinding — a
+                // double panic aborts the test binary and masks the
+                // original failure.
+                debug_assert!(
+                    std::thread::panicking(),
+                    "server shard {i} worker panicked: {msg}"
+                );
             }
         }
     }

@@ -1,0 +1,222 @@
+//! End-to-end tests of the dataset ingestion & reorder subsystem: the
+//! checked-in `.mtx` fixture converts to a checksummed `.asg` snapshot,
+//! reorders losslessly (round-trip bit-exact), and — the oracle
+//! acceptance — SpMM/SDDMM/attention outputs on the reordered layout
+//! match the un-permuted baseline **bit for bit** after un-permutation
+//! (row-only permutations preserve per-row slot order, hence f32
+//! summation order).
+
+use std::path::{Path, PathBuf};
+
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::data::{
+    self, parse_passes, read_asg, reorder, write_asg, ReorderPass,
+};
+use autosage::graph::signature::graph_signature;
+use autosage::graph::Csr;
+use autosage::ops::reference;
+use autosage::scheduler::Op;
+
+fn fixture_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/skewed.mtx")
+}
+
+fn tmpdir() -> PathBuf {
+    let dir = std::env::temp_dir().join("autosage_data_pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fixture_graph() -> Csr {
+    data::CsrGraph::load(&fixture_path()).unwrap().csr
+}
+
+fn native_cfg() -> Config {
+    Config {
+        backend: "native".to_string(),
+        cache_path: String::new(),
+        probe_iters: 3,
+        probe_cap_ms: 300.0,
+        ..Config::default()
+    }
+}
+
+/// Deterministic dense operand (row-major [n, f]).
+fn dense(n: usize, f: usize, salt: u32) -> Vec<f32> {
+    (0..n * f)
+        .map(|i| {
+            let x = (i as u32).wrapping_mul(2654435761).wrapping_add(salt);
+            ((x % 1000) as f32) / 500.0 - 1.0
+        })
+        .collect()
+}
+
+#[test]
+fn mtx_fixture_loads_skewed_and_normalized() {
+    let loaded = data::CsrGraph::load(&fixture_path()).unwrap();
+    let g = &loaded.csr;
+    g.validate().unwrap();
+    assert_eq!(g.n_rows, 96);
+    assert_eq!(g.n_cols, 96);
+    assert_eq!(g.nnz(), 313);
+    assert_eq!(g.max_degree(), 16);
+    let hubs = g.degrees().iter().filter(|&&d| d == 16).count();
+    assert_eq!(hubs, 6, "fixture must stay degree-skewed");
+    // Light rows fit the micro hub bucket's light width.
+    assert!(g.degrees().iter().all(|&d| d == 16 || d <= 4));
+}
+
+#[test]
+fn convert_mtx_to_asg_is_lossless_and_checksummed() {
+    let out = tmpdir().join("convert.asg");
+    let loaded = data::convert_to_asg(&fixture_path(), &out).unwrap();
+    let snap = read_asg(&out).unwrap();
+    assert_eq!(snap.csr, loaded.csr);
+    assert_eq!(snap.perm, None);
+    assert_eq!(
+        graph_signature(&snap.csr),
+        graph_signature(&fixture_graph())
+    );
+    // Corrupting any byte must be caught by the checksum, not served.
+    let mut bytes = std::fs::read(&out).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&out, &bytes).unwrap();
+    assert!(read_asg(&out).is_err());
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn reorder_snapshot_roundtrip_is_bit_exact() {
+    // The CLI flow: convert → reorder (perm stored) → load → restore.
+    let dir = tmpdir();
+    let plain = dir.join("plain.asg");
+    let packed = dir.join("packed.asg");
+    let g = fixture_graph();
+    write_asg(&plain, &g, None).unwrap();
+
+    let passes = parse_passes("hub-pack,segment-sort").unwrap();
+    let snap = read_asg(&plain).unwrap();
+    let r = reorder(&snap.csr, &passes);
+    write_asg(&packed, &r.graph, Some(&r.perm)).unwrap();
+
+    let back = read_asg(&packed).unwrap();
+    let restored = data::reorder::from_stored_perm(
+        back.csr.clone(),
+        back.perm.expect("reordered snapshot stores its perm"),
+    )
+    .unwrap();
+    assert_eq!(restored.restore_graph(), g, "round-trip must be lossless");
+    assert_eq!(graph_signature(&restored.restore_graph()), graph_signature(&g));
+    assert_ne!(graph_signature(&back.csr), graph_signature(&g));
+    // Hub packing on the skewed fixture must visibly improve layout.
+    assert!(r.report.after.head_nnz_frac > r.report.before.head_nnz_frac);
+    assert!(r.report.after.tile_fill > r.report.before.tile_fill);
+    let _ = std::fs::remove_file(&plain);
+    let _ = std::fs::remove_file(&packed);
+}
+
+#[test]
+fn oracle_outputs_permutation_invariant_bit_for_bit() {
+    let g = fixture_graph();
+    let f = 16;
+    let r = reorder(&g, &[ReorderPass::HubPack, ReorderPass::SegmentSort]);
+
+    // SpMM: B is column-indexed (untouched); outputs are row-indexed.
+    let b = dense(g.n_rows, f, 1);
+    let base = reference::spmm(&g, &b, f);
+    let re = reference::spmm(&r.graph, &b, f);
+    assert_eq!(r.unpermute_rowwise(&re, f), base, "spmm not bit-identical");
+
+    // SDDMM: X row-indexed (permute), Y column-indexed (untouched);
+    // outputs are per-edge in slot order.
+    let x = dense(g.n_rows, f, 2);
+    let y = dense(g.n_rows, f, 3);
+    let base = reference::sddmm(&g, &x, &y, f);
+    let px = r.permute_rowwise(&x, f);
+    let re = reference::sddmm(&r.graph, &px, &y, f);
+    assert_eq!(r.unpermute_edges(&re), base, "sddmm not bit-identical");
+
+    // Attention: Q row-indexed (permute), K/V column-indexed.
+    let q = dense(g.n_rows, f, 4);
+    let k = dense(g.n_rows, f, 5);
+    let v = dense(g.n_rows, f, 6);
+    let base = reference::csr_attention(&g, &q, &k, &v, f);
+    let pq = r.permute_rowwise(&q, f);
+    let re = reference::csr_attention(&r.graph, &pq, &k, &v, f);
+    assert_eq!(
+        r.unpermute_rowwise(&re, f),
+        base,
+        "attention not bit-identical"
+    );
+}
+
+#[test]
+fn native_backend_matches_oracle_on_loaded_graph_both_layouts() {
+    let g = fixture_graph();
+    let f = 64;
+    let mut sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let b = dense(g.n_rows, f, 7);
+    let oracle = reference::spmm(&g, &b, f);
+    // Fixed-variant execution on the loaded graph matches the oracle…
+    let out = sage.spmm_with(&g, &b, f, "baseline").unwrap();
+    assert_eq!(
+        reference::max_abs_diff(&out, &oracle),
+        0.0,
+        "native baseline must be bit-exact vs oracle on the fixture"
+    );
+    // …and the reordered layout un-permutes to the same bits.
+    let r = reorder(&g, &[ReorderPass::HubPack, ReorderPass::SegmentSort]);
+    let out_r = sage.spmm_with(&r.graph, &b, f, "baseline").unwrap();
+    assert_eq!(
+        reference::max_abs_diff(&r.unpermute_rowwise(&out_r, f), &oracle),
+        0.0,
+        "reordered layout must un-permute bit-exactly"
+    );
+}
+
+#[test]
+fn scheduler_runs_end_to_end_on_reordered_fixture() {
+    // The acceptance bench flow: decisions succeed on both layouts and
+    // key separate cache entries (the layouts have different signatures).
+    let g = fixture_graph();
+    let r = reorder(&g, &[ReorderPass::HubPack, ReorderPass::SegmentSort]);
+    let mut sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let d0 = sage.decide(&g, Op::Spmm, 64).unwrap();
+    let d1 = sage.decide(&r.graph, Op::Spmm, 64).unwrap();
+    assert_ne!(d0.key, d1.key, "layouts must key separate schedule entries");
+    assert!(d0.t_baseline_ms > 0.0);
+    assert!(d1.t_baseline_ms > 0.0);
+}
+
+#[test]
+fn scheduler_rejects_degenerate_inputs_typed() {
+    let mut sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let empty = Csr::from_rows(0, vec![]);
+    let err = sage.decide(&empty, Op::Spmm, 64).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("degenerate"),
+        "want typed degenerate-input error, got: {err:#}"
+    );
+    let g = fixture_graph();
+    let err = sage.decide(&g, Op::Spmm, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("F = 0"), "{err:#}");
+}
+
+#[test]
+fn facade_accepts_graph_specs() {
+    let dir = tmpdir();
+    let path = dir.join("facade.asg");
+    let g = fixture_graph();
+    write_asg(&path, &g, None).unwrap();
+    let sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let via_file = sage
+        .graph_from_spec(&format!("file:{}", path.display()), 0)
+        .unwrap();
+    assert_eq!(via_file, g);
+    let via_preset = sage.graph_from_spec("er_s", 42).unwrap();
+    assert_eq!(via_preset.n_rows, 4096);
+    assert!(sage.graph_from_spec("not_a_spec", 0).is_err());
+    let _ = std::fs::remove_file(&path);
+}
