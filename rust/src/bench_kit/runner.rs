@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::coordinator::AutoSage;
 use crate::graph::Csr;
+use crate::obs::perf::{Direction, PerfProfile};
 use crate::scheduler::{DecisionSource, Op};
 
 /// One table row.
@@ -83,6 +84,21 @@ pub fn graph_bench_rows(
         }
     }
     Ok(rows)
+}
+
+/// Gateable perf metrics for a set of bench rows. Keys are
+/// `{layout}_{op}_chosen_ms` (lower is better, very wide tolerance —
+/// the gate targets order-of-magnitude slowdowns, not runner jitter)
+/// and `{layout}_{op}_speedup` (higher is better; the guardrail keeps
+/// this ≥ ~1, so a large drop means a scheduling regression).
+pub fn perf_profile(rows: &[(String, String, BenchRow)]) -> PerfProfile {
+    let mut p = PerfProfile::new("bench");
+    for (layout, op, row) in rows {
+        let k = format!("{layout}_{op}");
+        p.push(&format!("{k}_chosen_ms"), row.chosen_ms, Direction::Lower, 49.0);
+        p.push(&format!("{k}_speedup"), row.speedup, Direction::Higher, 0.9);
+    }
+    p
 }
 
 /// A feature-width sweep (one paper table = one sweep).

@@ -19,6 +19,7 @@
 //! | `AUTOSAGE_SERVE_QUEUE`  | bounded per-shard queue depth (submit rejects with `QueueFull` beyond it) | 64 |
 //! | `AUTOSAGE_SERVE_BATCH`  | max requests drained per batch         | 16      |
 //! | `AUTOSAGE_SERVE_WINDOW_US` | batching window: how long a worker waits past the first request for coalescable stragglers (µs; 0 = drain-only) | 0 |
+//! | `AUTOSAGE_CACHE_FLUSH_MS` | serving pool schedule-cache flush throttle: dirty entries/counters persist at most once per this many ms (and always at shutdown) | 2000 |
 
 use crate::util::envcfg::{env_bool, env_f64, env_string, env_usize};
 
@@ -57,6 +58,11 @@ pub struct Config {
     /// (0 = only drain what is already queued). Env:
     /// `AUTOSAGE_SERVE_WINDOW_US`.
     pub serve_batch_window_us: usize,
+    /// Serving pool schedule-cache flush throttle (ms): dirty cache
+    /// state persists at most once per interval off the request path,
+    /// plus unconditionally at pool shutdown. Env:
+    /// `AUTOSAGE_CACHE_FLUSH_MS`.
+    pub cache_flush_ms: usize,
 }
 
 impl Default for Config {
@@ -80,6 +86,7 @@ impl Default for Config {
             serve_queue_depth: 64,
             serve_batch_max: 16,
             serve_batch_window_us: 0,
+            cache_flush_ms: 2000,
         }
     }
 }
@@ -113,6 +120,7 @@ impl Config {
                 "AUTOSAGE_SERVE_WINDOW_US",
                 d.serve_batch_window_us,
             )?,
+            cache_flush_ms: env_usize("AUTOSAGE_CACHE_FLUSH_MS", d.cache_flush_ms)?,
         })
     }
 

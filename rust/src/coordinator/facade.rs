@@ -47,6 +47,20 @@ impl AutoSage {
         &self.scheduler.cfg
     }
 
+    /// Attach (or detach) a flight recorder: subsequent `decide` calls
+    /// emit estimate/probe/guardrail spans and cache hit/miss events.
+    pub fn set_recorder(&mut self, r: Option<std::sync::Arc<crate::obs::trace::Recorder>>) {
+        self.scheduler.tracer = r;
+    }
+
+    /// Set the (trace, parent span) the next `decide` call belongs to.
+    pub fn set_trace_ctx(
+        &mut self,
+        ctx: Option<(crate::obs::trace::TraceId, crate::obs::trace::SpanId)>,
+    ) {
+        self.scheduler.trace_ctx = ctx;
+    }
+
     /// Short id of the active backend ("native" | "pjrt").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()

@@ -30,6 +30,9 @@
 //! * [`server`] — the concurrent serving subsystem: sharded worker
 //!   pool, shared single-flight schedule cache, request coalescing,
 //!   bounded queues with backpressure, serving metrics, load generator.
+//! * [`obs`] — flight recorder: structured trace spans (JSONL), versioned
+//!   run manifests with artifact checksums, and perf-profile comparison
+//!   with noise-aware regression gating.
 //! * [`bench_kit`] — criterion-replacement harness + table/figure output.
 
 pub mod backend;
@@ -39,6 +42,7 @@ pub mod coordinator;
 pub mod data;
 pub mod gen;
 pub mod graph;
+pub mod obs;
 pub mod ops;
 pub mod runtime;
 pub mod scheduler;

@@ -15,6 +15,8 @@
 //! autosage cache   dump|clear|stats [--path autosage_cache.json]
 //! autosage serve-bench [--smoke] [--workers 4] [--clients 8] [--requests 8]
 //!                      [--presets er_s,file:g.asg] [--ops spmm,sddmm,attention]
+//! autosage manifest validate <manifest.json>
+//! autosage perf     compare <baseline.json> <candidate.json>
 //! ```
 //!
 //! Everywhere a graph is named, the spec grammar is `PRESET` or
@@ -40,6 +42,7 @@ use autosage::data;
 use autosage::gen::preset_names;
 use autosage::graph::signature::{graph_signature, layout_digest};
 use autosage::graph::Csr;
+use autosage::obs;
 use autosage::scheduler::{probe, InputFeatures, Op, ScheduleCache};
 use autosage::telemetry::meta_sidecar;
 use autosage::util::stats;
@@ -128,6 +131,8 @@ fn real_main() -> Result<()> {
         "all" => cmd_all(&args),
         "cache" => cmd_cache(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "manifest" => cmd_manifest(&args),
+        "perf" => cmd_perf(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -157,6 +162,9 @@ fn print_usage() {
          \x20 serve-bench [--smoke] [--workers K] [--clients N] [--requests M]\n\
          \x20             [--presets a,b] [--ops spmm,sddmm,attention] [--f F]\n\
          \x20             [--seed N] [--cache FILE] [--out DIR]\n\
+         \x20             (--out also writes trace.jsonl, perf.json, manifest.json)\n\
+         \x20 manifest validate <manifest.json>\n\
+         \x20 perf    compare <baseline.json> <candidate.json>\n\
          graph specs G: a preset <{presets}>\n\
          \x20             or file:PATH (.asg | .mtx | edge list .txt/.csv);\n\
          \x20             --preset NAME remains an alias for presets\n\
@@ -362,13 +370,44 @@ fn cmd_bench(args: &Args) -> Result<()> {
         text.push('\n');
         text.push_str(&report_text);
     }
-    write_output(
-        args.get("out"),
-        &backend_label(args),
-        "bench",
-        &text,
-        &graph_bench_csv(&rows),
-    )
+    let backend = backend_label(args);
+    write_output(args.get("out"), &backend, "bench", &text, &graph_bench_csv(&rows))?;
+    if let Some(dir) = args.get("out") {
+        let dir = Path::new(dir);
+        autosage::bench_kit::runner::perf_profile(&rows).save(&dir.join("perf.json"))?;
+        let spec_str = args
+            .get("graph")
+            .or_else(|| args.get("preset"))
+            .unwrap_or_else(|| label.as_str());
+        let run_id = obs::trace::new_run_id("bench");
+        let cfg = Config::from_env().map_err(|e| anyhow!(e))?;
+        let mut m = obs::RunManifest::new(
+            &run_id,
+            "bench",
+            seed,
+            &backend,
+            meta_sidecar(&backend, &cfg),
+        );
+        m.add_graph(spec_str, &graph_signature(&g), g.n_rows, g.nnz());
+        if let Some(r) = &reordered {
+            m.add_graph(
+                &format!("{spec_str}+reorder"),
+                &graph_signature(&r.graph),
+                r.graph.n_rows,
+                r.graph.nnz(),
+            );
+        }
+        for (layout, op, row) in &rows {
+            m.add_metric(&format!("{layout}_{op}_chosen_ms"), row.chosen_ms);
+            m.add_metric(&format!("{layout}_{op}_speedup"), row.speedup);
+        }
+        for rel in ["bench.csv", "bench.txt", "bench.csv.meta.json", "perf.json"] {
+            m.add_artifact(dir, rel)?;
+        }
+        let mpath = m.write(dir)?;
+        println!("[manifest {}]", mpath.display());
+    }
+    Ok(())
 }
 
 /// `autosage data`: dataset ingestion verbs (convert | inspect | reorder).
@@ -592,7 +631,7 @@ fn cmd_all(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use autosage::server::{run_load, LoadSpec, ServerPool};
+    use autosage::server::{run_load_traced, LoadSpec, ServerPool};
     let smoke = args.get("smoke").map(|v| v != "false").unwrap_or(false);
     let mut cfg = Config::from_env().map_err(|e| anyhow!(e))?;
     if let Some(b) = args.get("backend") {
@@ -616,19 +655,74 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             .map(|s| Op::parse(s).ok_or_else(|| anyhow!("unknown op {s:?}")))
             .collect::<Result<Vec<_>>>()?;
     }
-    let pool =
-        std::sync::Arc::new(ServerPool::spawn(artifacts_dir(args), cfg.clone())?);
-    let report = run_load(std::sync::Arc::clone(&pool), &spec)?;
+    // The flight recorder only runs when the spans have somewhere to
+    // land: `--out DIR` gets trace.jsonl + perf.json + manifest.json
+    // next to the serving CSV.
+    let run_id = obs::trace::new_run_id("serve-bench");
+    let recorder = args
+        .get("out")
+        .map(|_| std::sync::Arc::new(obs::trace::Recorder::new(&run_id)));
+    let pool = std::sync::Arc::new(ServerPool::spawn_traced(
+        artifacts_dir(args),
+        cfg.clone(),
+        recorder.clone(),
+    )?);
+    let report = run_load_traced(std::sync::Arc::clone(&pool), &spec, recorder.clone())?;
     println!("{}", report.text);
     if let Some(dir) = args.get("out") {
-        let path = autosage::telemetry::write_csv_with_sidecar(
-            Path::new(dir),
+        let dir = Path::new(dir);
+        let backend = backend_label(args);
+        autosage::telemetry::write_csv_with_sidecar(
+            dir,
             "serve_bench",
             &report.csv,
-            &backend_label(args),
+            &backend,
             &cfg,
         )?;
-        println!("[written to {}]", path.display());
+        if let Some(rec) = &recorder {
+            rec.flush_jsonl(&dir.join("trace.jsonl"))?;
+        }
+        report.perf_profile().save(&dir.join("perf.json"))?;
+
+        let mut m = obs::RunManifest::new(
+            &run_id,
+            "serve-bench",
+            spec.seed,
+            &backend,
+            meta_sidecar(&backend, &cfg),
+        );
+        for (pi, name) in spec.presets.iter().enumerate() {
+            let (g, _label) =
+                data::load_graph_spec(name, spec.seed.wrapping_add(pi as u64))?;
+            m.add_graph(name, &graph_signature(&g), g.n_rows, g.nnz());
+        }
+        m.add_metric("requests_total", report.total as f64);
+        m.add_metric("ok", report.ok as f64);
+        m.add_metric("errors", report.errors as f64);
+        m.add_metric("oracle_mismatches", report.mismatches as f64);
+        m.add_metric("wall_ms", report.wall_ms);
+        m.add_metric("throughput_rps", report.throughput_rps);
+        m.add_metric("p50_ms", report.p50_ms);
+        m.add_metric("p95_ms", report.p95_ms);
+        m.add_metric("p99_ms", report.p99_ms);
+        m.add_metric("probes", report.probes as f64);
+        m.add_metric("unique_keys", report.unique_keys as f64);
+        for rel in [
+            "serve_bench.csv",
+            "serve_bench.csv.meta.json",
+            "perf.json",
+        ] {
+            m.add_artifact(dir, rel)?;
+        }
+        if recorder.is_some() {
+            m.add_artifact(dir, "trace.jsonl")?;
+        }
+        let mpath = m.write(dir)?;
+        println!(
+            "[written to {}/serve_bench.{{csv,csv.meta.json}} + trace.jsonl, perf.json, {}]",
+            dir.display(),
+            mpath.display()
+        );
     }
     if report.errors > 0 {
         bail!("{} of {} requests failed", report.errors, report.total);
@@ -641,6 +735,62 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `autosage manifest`: run-manifest verbs.
+fn cmd_manifest(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .context("manifest action: validate <manifest.json>")?;
+    match action.as_str() {
+        "validate" => {
+            let p = args
+                .positional
+                .get(1)
+                .context("usage: manifest validate <manifest.json>")?;
+            let rep = obs::manifest::validate(Path::new(p))?;
+            println!(
+                "manifest OK: run {} (kind {}, {} artifacts verified)",
+                rep.run_id, rep.kind, rep.n_artifacts
+            );
+            Ok(())
+        }
+        other => bail!("unknown manifest action {other:?} (validate)"),
+    }
+}
+
+/// `autosage perf`: perf-profile verbs (the CI regression gate).
+fn cmd_perf(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .context("perf action: compare <baseline.json> <candidate.json>")?;
+    match action.as_str() {
+        "compare" => {
+            let b = args
+                .positional
+                .get(1)
+                .context("usage: perf compare <baseline.json> <candidate.json>")?;
+            let c = args
+                .positional
+                .get(2)
+                .context("usage: perf compare <baseline.json> <candidate.json>")?;
+            let base = obs::PerfProfile::load(Path::new(b))?;
+            let cand = obs::PerfProfile::load(Path::new(c))?;
+            let rep = obs::compare(&base, &cand);
+            print!("{}", rep.render(b, c));
+            if !rep.passed() {
+                bail!(
+                    "perf gate failed: {} regressed, {} missing",
+                    rep.regressions,
+                    rep.missing
+                );
+            }
+            Ok(())
+        }
+        other => bail!("unknown perf action {other:?} (compare)"),
+    }
 }
 
 fn cmd_cache(args: &Args) -> Result<()> {

@@ -1,0 +1,327 @@
+//! Versioned run manifests with artifact checksums and a self-hash.
+//!
+//! Every `autosage bench` / `serve-bench` run with `--out` writes a
+//! `manifest.json` next to its artifacts capturing provenance: run id,
+//! kind, seed, device signature, the env-toggle snapshot (the same
+//! object as the `.meta.json` sidecars), graph checksums, per-artifact
+//! sha256 + byte counts, and summary metrics. The manifest carries a
+//! `manifest_sha256` self-hash computed over its *canonical* JSON form —
+//! compact serialization with keys sorted (which the [`Json`] type
+//! guarantees via `BTreeMap`) and the self-hash field removed — so any
+//! edit to the manifest, however the keys are ordered on disk, is
+//! detectable. `autosage manifest validate` re-checks the self-hash and
+//! re-hashes every listed artifact.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::util::sha256::{sha256_file, sha256_hex};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Manifest schema version (semver). Validators accept any 1.x.y.
+pub const MANIFEST_SCHEMA_VERSION: &str = "1.0.0";
+
+/// A graph that participated in the run, identified by its spec string
+/// (`"preset"` | `"file:PATH"`) and structural signature.
+#[derive(Debug, Clone)]
+pub struct GraphRef {
+    pub spec: String,
+    pub signature: String,
+    pub rows: usize,
+    pub nnz: usize,
+}
+
+/// One artifact file written by the run, hashed at manifest-build time.
+#[derive(Debug, Clone)]
+pub struct ArtifactRef {
+    /// Path relative to the manifest's directory.
+    pub path: String,
+    pub sha256: String,
+    pub bytes: u64,
+}
+
+/// Builder + serializer for one run's manifest.
+#[derive(Debug, Clone)]
+pub struct RunManifest {
+    pub run_id: String,
+    /// Run kind: `"bench"` or `"serve-bench"`.
+    pub kind: String,
+    pub timestamp_unix_s: u64,
+    pub seed: u64,
+    pub device_sig: String,
+    /// Env-toggle / config snapshot (same shape as the `.meta.json`
+    /// sidecars from [`crate::telemetry::meta_sidecar`]).
+    pub meta: Json,
+    pub graphs: Vec<GraphRef>,
+    pub artifacts: Vec<ArtifactRef>,
+    pub metrics: BTreeMap<String, f64>,
+}
+
+/// What `validate` found in a good manifest.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub run_id: String,
+    pub kind: String,
+    pub n_artifacts: usize,
+}
+
+impl RunManifest {
+    pub fn new(run_id: &str, kind: &str, seed: u64, device_sig: &str, meta: Json) -> RunManifest {
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        RunManifest {
+            run_id: run_id.to_string(),
+            kind: kind.to_string(),
+            timestamp_unix_s: ts,
+            seed,
+            device_sig: device_sig.to_string(),
+            meta,
+            graphs: Vec::new(),
+            artifacts: Vec::new(),
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    pub fn add_graph(&mut self, spec: &str, signature: &str, rows: usize, nnz: usize) {
+        self.graphs.push(GraphRef {
+            spec: spec.to_string(),
+            signature: signature.to_string(),
+            rows,
+            nnz,
+        });
+    }
+
+    pub fn add_metric(&mut self, key: &str, value: f64) {
+        self.metrics.insert(key.to_string(), value);
+    }
+
+    /// Hash `base/rel` and record it under its manifest-relative path.
+    pub fn add_artifact(&mut self, base: &Path, rel: &str) -> Result<()> {
+        let full = base.join(rel);
+        let (sha, bytes) = sha256_file(&full)
+            .with_context(|| format!("hashing artifact {}", full.display()))?;
+        self.artifacts.push(ArtifactRef { path: rel.to_string(), sha256: sha, bytes });
+        Ok(())
+    }
+
+    /// The manifest as JSON, *without* the `manifest_sha256` self-hash.
+    pub fn to_json(&self) -> Json {
+        let graphs: Vec<Json> = self
+            .graphs
+            .iter()
+            .map(|g| {
+                Json::obj(vec![
+                    ("spec", Json::str(&g.spec)),
+                    ("signature", Json::str(&g.signature)),
+                    ("rows", Json::from(g.rows)),
+                    ("nnz", Json::from(g.nnz)),
+                ])
+            })
+            .collect();
+        let artifacts: Vec<Json> = self
+            .artifacts
+            .iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("path", Json::str(&a.path)),
+                    ("sha256", Json::str(&a.sha256)),
+                    ("bytes", Json::num(a.bytes as f64)),
+                ])
+            })
+            .collect();
+        let metrics: BTreeMap<String, Json> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        Json::obj(vec![
+            ("schema_version", Json::str(MANIFEST_SCHEMA_VERSION)),
+            ("run_id", Json::str(&self.run_id)),
+            ("kind", Json::str(&self.kind)),
+            ("timestamp_unix_s", Json::num(self.timestamp_unix_s as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("device_sig", Json::str(&self.device_sig)),
+            ("meta", self.meta.clone()),
+            ("graphs", Json::Arr(graphs)),
+            ("artifacts", Json::Arr(artifacts)),
+            ("metrics", Json::Obj(metrics)),
+        ])
+    }
+
+    /// Write `manifest.json` (self-hash included) into `dir`.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        let root = self.to_json();
+        let hash = canonical_hash(&root);
+        let mut obj = match root {
+            Json::Obj(o) => o,
+            _ => unreachable!("to_json returns an object"),
+        };
+        obj.insert("manifest_sha256".to_string(), Json::Str(hash));
+        let path = dir.join("manifest.json");
+        let mut text = Json::Obj(obj).pretty();
+        text.push('\n');
+        std::fs::write(&path, &text)
+            .with_context(|| format!("writing manifest {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Self-hash of a manifest value: SHA-256 over the compact serialization
+/// with the `manifest_sha256` field removed. Compact [`Json`] output is
+/// already canonical — object keys sort via `BTreeMap` and separators
+/// are bare `,`/`:` — so on-disk key order and whitespace don't matter.
+pub fn canonical_hash(root: &Json) -> String {
+    let canon = match root {
+        Json::Obj(o) => {
+            let mut c = o.clone();
+            c.remove("manifest_sha256");
+            Json::Obj(c)
+        }
+        other => other.clone(),
+    };
+    sha256_hex(canon.to_string().as_bytes())
+}
+
+/// Validate a manifest file: schema version, required fields, self-hash,
+/// and every listed artifact's sha256 + size (resolved relative to the
+/// manifest's own directory).
+pub fn validate(path: &Path) -> Result<ValidationReport> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    let root = Json::parse(&text)
+        .map_err(|e| anyhow!("{e}"))
+        .with_context(|| format!("parsing manifest {}", path.display()))?;
+    if root.as_obj().is_none() {
+        bail!("manifest root is not a JSON object");
+    }
+
+    let version = root
+        .get("schema_version")
+        .as_str()
+        .context("manifest missing schema_version")?;
+    let major = version.split('.').next().unwrap_or("");
+    if major != "1" {
+        bail!("unsupported manifest schema_version {version} (want 1.x.y)");
+    }
+
+    let run_id = root.get("run_id").as_str().context("manifest missing run_id")?;
+    let kind = root.get("kind").as_str().context("manifest missing kind")?;
+    root.get("device_sig").as_str().context("manifest missing device_sig")?;
+    root.get("seed").as_f64().context("manifest missing seed")?;
+    root.get("metrics").as_obj().context("manifest missing metrics object")?;
+
+    let declared = root
+        .get("manifest_sha256")
+        .as_str()
+        .context("manifest missing manifest_sha256 self-hash")?;
+    let recomputed = canonical_hash(&root);
+    if declared != recomputed {
+        bail!("manifest self-hash mismatch: declared {declared}, recomputed {recomputed}");
+    }
+
+    let base = path.parent().unwrap_or_else(|| Path::new("."));
+    let artifacts = root
+        .get("artifacts")
+        .as_arr()
+        .context("manifest missing artifacts array")?;
+    for a in artifacts {
+        let rel = a.get("path").as_str().context("artifact entry missing path")?;
+        let want_sha = a.get("sha256").as_str().context("artifact entry missing sha256")?;
+        let want_bytes = a
+            .get("bytes")
+            .as_f64()
+            .context("artifact entry missing bytes")? as u64;
+        let full = base.join(rel);
+        let (got_sha, got_bytes) = sha256_file(&full)
+            .with_context(|| format!("hashing artifact {}", full.display()))?;
+        if got_bytes != want_bytes {
+            bail!("artifact {rel}: size mismatch (manifest {want_bytes} B, on disk {got_bytes} B)");
+        }
+        if got_sha != want_sha {
+            bail!("artifact {rel}: sha256 mismatch (manifest {want_sha}, on disk {got_sha})");
+        }
+    }
+
+    Ok(ValidationReport {
+        run_id: run_id.to_string(),
+        kind: kind.to_string(),
+        n_artifacts: artifacts.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("autosage_manifest_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample(dir: &Path) -> RunManifest {
+        std::fs::write(dir.join("out.csv"), "a,b\n1,2\n").unwrap();
+        let mut m = RunManifest::new("run-1", "bench", 42, "native", Json::obj(vec![]));
+        m.add_graph("er_s", "deadbeef00000000", 1000, 8000);
+        m.add_metric("p50_ms", 1.25);
+        m.add_artifact(dir, "out.csv").unwrap();
+        m
+    }
+
+    #[test]
+    fn emit_then_validate() {
+        let dir = tmp_dir("roundtrip");
+        let m = sample(&dir);
+        let p = m.write(&dir).unwrap();
+        let rep = validate(&p).unwrap();
+        assert_eq!(rep.run_id, "run-1");
+        assert_eq!(rep.kind, "bench");
+        assert_eq!(rep.n_artifacts, 1);
+    }
+
+    #[test]
+    fn self_hash_ignores_field_itself() {
+        let dir = tmp_dir("selfhash");
+        let m = sample(&dir);
+        let without = canonical_hash(&m.to_json());
+        let p = m.write(&dir).unwrap();
+        let on_disk = Json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(on_disk.get("manifest_sha256").as_str(), Some(&without[..]));
+        assert_eq!(canonical_hash(&on_disk), without);
+    }
+
+    #[test]
+    fn artifact_tamper_rejected() {
+        let dir = tmp_dir("tamper_artifact");
+        let m = sample(&dir);
+        let p = m.write(&dir).unwrap();
+        std::fs::write(dir.join("out.csv"), "a,b\n1,3\n").unwrap();
+        let err = validate(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("sha256 mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn field_tamper_rejected() {
+        let dir = tmp_dir("tamper_field");
+        let m = sample(&dir);
+        let p = m.write(&dir).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap().replace("run-1", "run-X");
+        std::fs::write(&p, text).unwrap();
+        let err = validate(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("self-hash mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn wrong_major_version_rejected() {
+        let dir = tmp_dir("badversion");
+        let m = sample(&dir);
+        let p = m.write(&dir).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap().replace("\"1.0.0\"", "\"2.0.0\"");
+        std::fs::write(&p, text).unwrap();
+        assert!(validate(&p).is_err());
+    }
+}

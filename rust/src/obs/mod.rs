@@ -1,0 +1,24 @@
+//! Flight recorder: observability for scheduling decisions and runs.
+//!
+//! Three layers, all dependency-free:
+//! * [`trace`] — structured spans (trace id, span id, parent link,
+//!   microsecond offsets from a per-run epoch) recorded in memory and
+//!   flushed as JSONL keyed by `run_id`. Threaded through the serve
+//!   pool (queue wait → coalesce → execute → reply) and the scheduler
+//!   (estimate → probe → guardrail, cache hit/miss).
+//! * [`manifest`] — versioned run manifests: every `bench` /
+//!   `serve-bench` run with `--out` emits `manifest.json` capturing the
+//!   run id, seed, env toggles, device signature, graph checksums,
+//!   per-artifact sha256 and a self-hash over the canonical JSON form.
+//!   `autosage manifest validate` re-checks all of it.
+//! * [`perf`] — perf profiles (`perf.json`) and the noise-aware
+//!   regression gate behind `autosage perf compare`, anchored by the
+//!   checked-in `benchmarks/BENCH_*.json` trajectory.
+
+pub mod manifest;
+pub mod perf;
+pub mod trace;
+
+pub use manifest::{RunManifest, ValidationReport, MANIFEST_SCHEMA_VERSION};
+pub use perf::{compare, CompareReport, Direction, PerfProfile, Verdict};
+pub use trace::{new_run_id, Recorder, SpanRecord, TraceCtx, TraceId};

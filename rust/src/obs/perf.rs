@@ -1,0 +1,395 @@
+//! Perf profiles and the noise-aware regression gate.
+//!
+//! A [`PerfProfile`] is a named set of metrics, each with a value, a
+//! goodness direction and a relative noise tolerance. Runs write one as
+//! `perf.json`; the first profiles are checked in under `benchmarks/`
+//! as `BENCH_*.json` and become the trajectory CI gates against via
+//! `autosage perf compare <baseline> <candidate>`.
+//!
+//! Tolerances are per-metric because noise is: deterministic counters
+//! (request totals, error counts, unique keys) gate exactly at
+//! `tol_rel = 0`, while wall-clock metrics carry wide tolerances so the
+//! gate only fires on order-of-magnitude regressions, not scheduler
+//! jitter or a slow CI runner.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Perf profile schema version (semver).
+pub const PERF_SCHEMA_VERSION: &str = "1.0.0";
+
+/// Which way is better for a metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Bigger is better (throughput, speedup).
+    Higher,
+    /// Smaller is better (latency); growth beyond tolerance regresses.
+    Lower,
+    /// Must match the baseline within tolerance (deterministic counters).
+    Exact,
+}
+
+impl Direction {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+            Direction::Exact => "exact",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Direction> {
+        match s {
+            "higher" => Ok(Direction::Higher),
+            "lower" => Ok(Direction::Lower),
+            "exact" => Ok(Direction::Exact),
+            other => bail!("unknown metric direction '{other}'"),
+        }
+    }
+}
+
+/// One gated metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfMetric {
+    pub value: f64,
+    pub direction: Direction,
+    /// Relative tolerance (0.2 = 20% slack) applied to the baseline.
+    pub tol_rel: f64,
+}
+
+/// A named set of metrics, serializable as `perf.json` / `BENCH_*.json`.
+#[derive(Debug, Clone)]
+pub struct PerfProfile {
+    pub name: String,
+    pub metrics: BTreeMap<String, PerfMetric>,
+}
+
+impl PerfProfile {
+    pub fn new(name: &str) -> PerfProfile {
+        PerfProfile { name: name.to_string(), metrics: BTreeMap::new() }
+    }
+
+    pub fn push(&mut self, key: &str, value: f64, direction: Direction, tol_rel: f64) {
+        self.metrics
+            .insert(key.to_string(), PerfMetric { value, direction, tol_rel });
+    }
+
+    pub fn to_json(&self) -> Json {
+        let metrics: BTreeMap<String, Json> = self
+            .metrics
+            .iter()
+            .map(|(k, m)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("value", Json::Num(m.value)),
+                        ("direction", Json::str(m.direction.as_str())),
+                        ("tol_rel", Json::Num(m.tol_rel)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema_version", Json::str(PERF_SCHEMA_VERSION)),
+            ("name", Json::str(&self.name)),
+            ("metrics", Json::Obj(metrics)),
+        ])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().pretty();
+        text.push('\n');
+        std::fs::write(path, &text)
+            .with_context(|| format!("writing perf profile {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<PerfProfile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading perf profile {}", path.display()))?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| format!("parsing perf profile {}", path.display()))?;
+        let version = root
+            .get("schema_version")
+            .as_str()
+            .context("perf profile missing schema_version")?;
+        if version.split('.').next() != Some("1") {
+            bail!("unsupported perf profile schema_version {version}");
+        }
+        let name = root.get("name").as_str().context("perf profile missing name")?;
+        let metrics_obj = root
+            .get("metrics")
+            .as_obj()
+            .context("perf profile missing metrics object")?;
+        let mut metrics = BTreeMap::new();
+        for (k, v) in metrics_obj {
+            let value = v
+                .get("value")
+                .as_f64()
+                .with_context(|| format!("metric {k} missing value"))?;
+            let direction = Direction::parse(
+                v.get("direction")
+                    .as_str()
+                    .with_context(|| format!("metric {k} missing direction"))?,
+            )?;
+            let tol_rel = v
+                .get("tol_rel")
+                .as_f64()
+                .with_context(|| format!("metric {k} missing tol_rel"))?;
+            metrics.insert(k.clone(), PerfMetric { value, direction, tol_rel });
+        }
+        Ok(PerfProfile { name: name.to_string(), metrics })
+    }
+}
+
+/// Per-metric comparison outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within tolerance of the baseline.
+    Pass,
+    /// Beyond tolerance in the good direction.
+    Improved,
+    /// Beyond tolerance in the bad direction — gate fails.
+    Regressed,
+    /// Baseline metric absent from the candidate — gate fails.
+    Missing,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Improved => "improved",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::Missing => "MISSING",
+        }
+    }
+}
+
+/// One row of a comparison.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub metric: String,
+    pub baseline: f64,
+    pub candidate: Option<f64>,
+    pub verdict: Verdict,
+    /// The threshold the candidate was held to.
+    pub limit: f64,
+}
+
+/// Full comparison result; the gate passes iff no regressions and no
+/// missing metrics.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub rows: Vec<CompareRow>,
+    pub regressions: usize,
+    pub missing: usize,
+}
+
+impl CompareReport {
+    pub fn passed(&self) -> bool {
+        self.regressions == 0 && self.missing == 0
+    }
+
+    /// Human-readable table for CLI / CI logs.
+    pub fn render(&self, baseline_name: &str, candidate_name: &str) -> String {
+        let mut s = format!("perf compare: baseline={baseline_name} candidate={candidate_name}\n");
+        s.push_str(&format!(
+            "{:<28} {:>14} {:>14} {:>14}  verdict\n",
+            "metric", "baseline", "candidate", "limit"
+        ));
+        for r in &self.rows {
+            let cand = match r.candidate {
+                Some(v) => format!("{v:.4}"),
+                None => "-".to_string(),
+            };
+            s.push_str(&format!(
+                "{:<28} {:>14.4} {:>14} {:>14.4}  {}\n",
+                r.metric,
+                r.baseline,
+                cand,
+                r.limit,
+                r.verdict.as_str()
+            ));
+        }
+        s.push_str(&format!(
+            "result: {} ({} regressed, {} missing, {} metrics)\n",
+            if self.passed() { "PASS" } else { "FAIL" },
+            self.regressions,
+            self.missing,
+            self.rows.len()
+        ));
+        s
+    }
+}
+
+/// Compare a candidate profile against a baseline. Directions and
+/// tolerances come from the *baseline* (the checked-in contract);
+/// candidate-only metrics are ignored. A small absolute epsilon keeps
+/// float round-trips from flipping verdicts at exactly the limit.
+pub fn compare(baseline: &PerfProfile, candidate: &PerfProfile) -> CompareReport {
+    const EPS: f64 = 1e-9;
+    let mut rows = Vec::new();
+    let mut regressions = 0usize;
+    let mut missing = 0usize;
+    for (key, base) in &baseline.metrics {
+        let cand = candidate.metrics.get(key).map(|m| m.value);
+        let (verdict, limit) = match cand {
+            None => (Verdict::Missing, base.value),
+            Some(c) => match base.direction {
+                Direction::Lower => {
+                    let limit = base.value * (1.0 + base.tol_rel);
+                    if c > limit + EPS {
+                        (Verdict::Regressed, limit)
+                    } else if c < base.value * (1.0 - base.tol_rel) - EPS {
+                        (Verdict::Improved, limit)
+                    } else {
+                        (Verdict::Pass, limit)
+                    }
+                }
+                Direction::Higher => {
+                    let limit = (base.value * (1.0 - base.tol_rel)).max(0.0);
+                    if c < limit - EPS {
+                        (Verdict::Regressed, limit)
+                    } else if c > base.value * (1.0 + base.tol_rel) + EPS {
+                        (Verdict::Improved, limit)
+                    } else {
+                        (Verdict::Pass, limit)
+                    }
+                }
+                Direction::Exact => {
+                    let slack = base.tol_rel * base.value.abs() + EPS;
+                    if (c - base.value).abs() > slack {
+                        (Verdict::Regressed, base.value)
+                    } else {
+                        (Verdict::Pass, base.value)
+                    }
+                }
+            },
+        };
+        match verdict {
+            Verdict::Regressed => regressions += 1,
+            Verdict::Missing => missing += 1,
+            _ => {}
+        }
+        rows.push(CompareRow {
+            metric: key.clone(),
+            baseline: base.value,
+            candidate: cand,
+            verdict,
+            limit,
+        });
+    }
+    CompareReport { rows, regressions, missing }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> PerfProfile {
+        let mut p = PerfProfile::new("serve_bench");
+        p.push("throughput_rps", 100.0, Direction::Higher, 0.5);
+        p.push("p99_ms", 50.0, Direction::Lower, 1.0);
+        p.push("errors", 0.0, Direction::Exact, 0.0);
+        p
+    }
+
+    #[test]
+    fn identical_profile_passes() {
+        let b = base();
+        let rep = compare(&b, &b.clone());
+        assert!(rep.passed());
+        assert!(rep.rows.iter().all(|r| r.verdict == Verdict::Pass));
+    }
+
+    #[test]
+    fn within_tolerance_passes_beyond_fails() {
+        let b = base();
+        let mut c = base();
+        c.push("throughput_rps", 60.0, Direction::Higher, 0.5); // ≥ 50 ok
+        c.push("p99_ms", 99.0, Direction::Lower, 1.0); // ≤ 100 ok
+        assert!(compare(&b, &c).passed());
+
+        c.push("throughput_rps", 40.0, Direction::Higher, 0.5); // < 50 bad
+        let rep = compare(&b, &c);
+        assert!(!rep.passed());
+        assert_eq!(rep.regressions, 1);
+    }
+
+    #[test]
+    fn exact_counter_must_match() {
+        let b = base();
+        let mut c = base();
+        c.push("errors", 1.0, Direction::Exact, 0.0);
+        let rep = compare(&b, &c);
+        assert_eq!(rep.regressions, 1);
+        assert!(!rep.passed());
+    }
+
+    #[test]
+    fn missing_metric_fails_gate() {
+        let b = base();
+        let mut c = base();
+        c.metrics.remove("p99_ms");
+        let rep = compare(&b, &c);
+        assert_eq!(rep.missing, 1);
+        assert!(!rep.passed());
+    }
+
+    #[test]
+    fn candidate_only_metrics_ignored() {
+        let b = base();
+        let mut c = base();
+        c.push("brand_new_metric", 7.0, Direction::Lower, 0.1);
+        let rep = compare(&b, &c);
+        assert!(rep.passed());
+        assert_eq!(rep.rows.len(), 3);
+    }
+
+    #[test]
+    fn improvements_reported_not_failed() {
+        let b = base();
+        let mut c = base();
+        c.push("p99_ms", 1.0, Direction::Lower, 1.0);
+        c.push("throughput_rps", 400.0, Direction::Higher, 0.5);
+        let rep = compare(&b, &c);
+        assert!(rep.passed());
+        // p99 tol is 1.0 → improvement threshold clamps at 0, so only
+        // throughput (400 > 150) registers as Improved.
+        assert_eq!(
+            rep.rows.iter().filter(|r| r.verdict == Verdict::Improved).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("autosage_perf_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("perf.json");
+        let b = base();
+        b.save(&p).unwrap();
+        let back = PerfProfile::load(&p).unwrap();
+        assert_eq!(back.name, "serve_bench");
+        assert_eq!(back.metrics.len(), 3);
+        assert_eq!(back.metrics["p99_ms"].direction, Direction::Lower);
+        assert_eq!(back.metrics["p99_ms"].value, 50.0);
+        assert!(compare(&b, &back).passed());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn render_mentions_failures() {
+        let b = base();
+        let mut c = base();
+        c.push("p99_ms", 5000.0, Direction::Lower, 1.0);
+        let rep = compare(&b, &c);
+        let text = rep.render("base", "cand");
+        assert!(text.contains("REGRESSED"));
+        assert!(text.contains("FAIL"));
+    }
+}

@@ -1,0 +1,317 @@
+//! Structured tracing with no external deps.
+//!
+//! A [`Recorder`] hands out trace ids (one per logical request) and span
+//! ids (one per unit of work), timestamps spans as microsecond offsets
+//! from its own creation instant (monotonic — wall clock never moves a
+//! span), and buffers [`SpanRecord`]s in memory. At the end of a run the
+//! buffer flushes as JSONL, one span per line, every line carrying the
+//! `run_id` so multiple runs can be concatenated and still separated.
+//!
+//! Span names used by the engine:
+//! * `request` — loadgen root span (client side, submit → reply recv)
+//! * `queue` — shard queue wait (enqueue → batch pickup)
+//! * `schedule` — coalesced-group decision (cache lookup / probe)
+//! * `estimate` / `probe` / `guardrail` — scheduler phases, parented
+//!   under `schedule`
+//! * `cache_hit` / `cache_miss` — zero-duration events under `schedule`
+//! * `execute` — backend kernel execution for one request
+//! * `reply` — zero-duration event when the response is sent
+//! * `warn` — demoted non-fatal errors (e.g. cache persist I/O)
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Identifier shared by every span of one logical request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceId(pub u64);
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// Identifier of a single span within a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SpanId(pub u64);
+
+impl std::fmt::Display for SpanId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:x}", self.0)
+    }
+}
+
+/// Trace context carried across thread boundaries (loadgen → shard →
+/// scheduler): which trace a piece of work belongs to and which span is
+/// its parent.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceCtx {
+    pub trace: TraceId,
+    pub parent: SpanId,
+}
+
+/// One completed span (or zero-duration event).
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub trace: TraceId,
+    pub span: SpanId,
+    pub parent: Option<SpanId>,
+    pub name: String,
+    /// Microseconds since the recorder's epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// String key/value attributes (variant, shard, outcome, ...).
+    pub attrs: Vec<(String, String)>,
+}
+
+/// Thread-safe span sink for one run.
+pub struct Recorder {
+    run_id: String,
+    epoch: Instant,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl Recorder {
+    pub fn new(run_id: &str) -> Recorder {
+        Recorder {
+            run_id: run_id.to_string(),
+            epoch: Instant::now(),
+            next_trace: AtomicU64::new(1),
+            next_span: AtomicU64::new(1),
+            spans: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn run_id(&self) -> &str {
+        &self.run_id
+    }
+
+    /// Allocate a fresh trace id (one per logical request).
+    pub fn new_trace(&self) -> TraceId {
+        TraceId(self.next_trace.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Allocate a span id without recording anything yet — used when the
+    /// parent id must be known before child spans are recorded.
+    pub fn next_span_id(&self) -> SpanId {
+        SpanId(self.next_span.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Microseconds since the recorder epoch, now.
+    pub fn now_us(&self) -> u64 {
+        self.us_of(Instant::now())
+    }
+
+    /// Map an arbitrary `Instant` (e.g. a request's enqueue time) onto
+    /// the recorder epoch; instants before the epoch clamp to 0.
+    pub fn us_of(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<SpanRecord>> {
+        self.spans.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Record a fully-formed span.
+    pub fn record(&self, rec: SpanRecord) {
+        self.lock().push(rec);
+    }
+
+    /// Record a span with a fresh id between two epoch-relative
+    /// microsecond timestamps. Returns the new span's id.
+    pub fn span_between(
+        &self,
+        trace: TraceId,
+        parent: Option<SpanId>,
+        name: &str,
+        start_us: u64,
+        end_us: u64,
+        attrs: Vec<(String, String)>,
+    ) -> SpanId {
+        let span = self.next_span_id();
+        self.record(SpanRecord {
+            trace,
+            span,
+            parent,
+            name: name.to_string(),
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            attrs,
+        });
+        span
+    }
+
+    /// Record a zero-duration event at "now".
+    pub fn event(
+        &self,
+        trace: TraceId,
+        parent: Option<SpanId>,
+        name: &str,
+        attrs: Vec<(String, String)>,
+    ) -> SpanId {
+        let now = self.now_us();
+        self.span_between(trace, parent, name, now, now, attrs)
+    }
+
+    /// Record a demoted warning (non-fatal error) as a `warn` event,
+    /// optionally attached to a trace.
+    pub fn warn(&self, trace: Option<TraceId>, what: &str, msg: &str) {
+        let trace = trace.unwrap_or(TraceId(0));
+        self.event(
+            trace,
+            None,
+            "warn",
+            vec![
+                ("what".to_string(), what.to_string()),
+                ("msg".to_string(), msg.to_string()),
+            ],
+        );
+    }
+
+    pub fn n_spans(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// All recorded spans with the given name, in record order.
+    pub fn spans_of(&self, name: &str) -> Vec<SpanRecord> {
+        self.lock().iter().filter(|s| s.name == name).cloned().collect()
+    }
+
+    /// Copy of all recorded spans, in record order.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        self.lock().clone()
+    }
+
+    /// Flush all spans as JSONL (one object per line, every line keyed
+    /// by `run_id`). Returns the path written.
+    pub fn flush_jsonl(&self, path: &Path) -> Result<PathBuf> {
+        let spans = self.snapshot();
+        let mut out = String::new();
+        for s in &spans {
+            let mut attrs: Vec<(&str, Json)> = Vec::with_capacity(s.attrs.len());
+            for (k, v) in &s.attrs {
+                attrs.push((k.as_str(), Json::str(v)));
+            }
+            let line = Json::obj(vec![
+                ("run_id", Json::str(&self.run_id)),
+                ("trace", Json::str(&s.trace.to_string())),
+                ("span", Json::str(&s.span.to_string())),
+                (
+                    "parent",
+                    match s.parent {
+                        Some(p) => Json::str(&p.to_string()),
+                        None => Json::Null,
+                    },
+                ),
+                ("name", Json::str(&s.name)),
+                ("start_us", Json::num(s.start_us as f64)),
+                ("dur_us", Json::num(s.dur_us as f64)),
+                ("attrs", Json::obj(attrs)),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        std::fs::write(path, &out)
+            .with_context(|| format!("writing trace JSONL {}", path.display()))?;
+        Ok(path.to_path_buf())
+    }
+}
+
+/// Process-unique run id: `{kind}-{unix_secs:x}-{pid:x}-{n:x}`.
+pub fn new_run_id(kind: &str) -> String {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    format!("{kind}-{secs:x}-{pid:x}-{n:x}", pid = std::process::id())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_formatted() {
+        let r = Recorder::new("t-run");
+        let a = r.new_trace();
+        let b = r.new_trace();
+        assert_ne!(a, b);
+        assert_eq!(format!("{}", TraceId(0xab)), "00000000000000ab");
+        assert_eq!(format!("{}", SpanId(0xab)), "ab");
+        assert_ne!(r.next_span_id(), r.next_span_id());
+    }
+
+    #[test]
+    fn spans_record_and_filter() {
+        let r = Recorder::new("t-run");
+        let t = r.new_trace();
+        let root = r.span_between(t, None, "request", 0, 100, vec![]);
+        r.span_between(t, Some(root), "queue", 0, 10, vec![]);
+        r.event(t, Some(root), "reply", vec![("ok".into(), "true".into())]);
+        assert_eq!(r.n_spans(), 3);
+        let q = r.spans_of("queue");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].parent, Some(root));
+        assert_eq!(q[0].dur_us, 10);
+        assert_eq!(r.spans_of("reply")[0].dur_us, 0);
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let dir = std::env::temp_dir().join("autosage_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trace.jsonl");
+        let r = Recorder::new("jsonl-run");
+        let t = r.new_trace();
+        let root = r.span_between(t, None, "request", 5, 25, vec![]);
+        r.span_between(
+            t,
+            Some(root),
+            "execute",
+            7,
+            20,
+            vec![("variant".into(), "ell_tile".into())],
+        );
+        r.flush_jsonl(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("run_id").as_str(), Some("jsonl-run"));
+            assert!(j.get("trace").as_str().is_some());
+        }
+        let j = Json::parse(lines[1]).unwrap();
+        assert_eq!(j.get("name").as_str(), Some("execute"));
+        assert_eq!(j.get("parent").as_str(), Some(&root.to_string()[..]));
+        assert_eq!(j.get("dur_us").as_i64(), Some(13));
+        assert_eq!(j.get("attrs").get("variant").as_str(), Some("ell_tile"));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn run_ids_are_unique() {
+        let a = new_run_id("bench");
+        let b = new_run_id("bench");
+        assert_ne!(a, b);
+        assert!(a.starts_with("bench-"));
+    }
+
+    #[test]
+    fn us_of_clamps_before_epoch() {
+        let early = Instant::now();
+        let r = Recorder::new("t");
+        assert_eq!(r.us_of(early), 0);
+    }
+}

@@ -30,6 +30,9 @@ pub struct ScheduleCache {
     /// Telemetry counters (§8.6 warm-up vs steady-state accounting).
     pub hits: usize,
     pub misses: usize,
+    /// Unsaved in-memory changes (entries *or* counters). Lets callers
+    /// buffer writes and flush periodically instead of on every insert.
+    dirty: bool,
 }
 
 /// Compose the paper's cache key.
@@ -112,6 +115,9 @@ impl ScheduleCache {
         } else {
             self.misses += 1;
         }
+        // Counters are persisted state too: a warm-only run (all hits,
+        // no inserts) must still flush so `cache stats` stays accurate.
+        self.dirty = true;
         hit
     }
 
@@ -122,11 +128,30 @@ impl ScheduleCache {
 
     pub fn insert(&mut self, key: String, choice: CachedChoice) {
         self.entries.insert(key, choice);
+        self.dirty = true;
     }
 
-    /// Persist to the backing file (no-op for in-memory caches).
-    pub fn save(&self) -> Result<()> {
-        let Some(path) = &self.path else { return Ok(()) };
+    /// Backing file path, if any.
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Whether in-memory state (entries or counters) differs from disk.
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    pub fn mark_dirty(&mut self) {
+        self.dirty = true;
+    }
+
+    pub fn clear_dirty(&mut self) {
+        self.dirty = false;
+    }
+
+    /// The cache file's JSON text (what `save` writes), for callers that
+    /// want to serialize under a lock but do file I/O outside it.
+    pub fn serialize(&self) -> String {
         let mut obj = BTreeMap::new();
         for (k, v) in &self.entries {
             obj.insert(
@@ -145,25 +170,33 @@ impl ScheduleCache {
             ("misses", Json::num(self.misses as f64)),
             ("entries", Json::Obj(obj)),
         ]);
-        if let Some(dir) = path.parent() {
-            fs::create_dir_all(dir).ok();
+        root.pretty()
+    }
+
+    /// Persist to the backing file (no-op for in-memory caches). Clears
+    /// the dirty flag on success.
+    pub fn save(&mut self) -> Result<()> {
+        let Some(path) = self.path.clone() else {
+            self.dirty = false;
+            return Ok(());
+        };
+        write_atomic(&path, &self.serialize())?;
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Persist only if there are unsaved changes.
+    pub fn save_if_dirty(&mut self) -> Result<()> {
+        if self.dirty {
+            self.save()
+        } else {
+            Ok(())
         }
-        // Crash safety: write a sibling temp file, then rename over the
-        // target — a crash mid-write leaves the old cache intact instead
-        // of a truncated/corrupt file.
-        let file_name = path
-            .file_name()
-            .map(|n| n.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "cache.json".to_string());
-        let tmp = path.with_file_name(format!("{file_name}.tmp"));
-        fs::write(&tmp, root.pretty())
-            .with_context(|| format!("writing cache temp file {}", tmp.display()))?;
-        fs::rename(&tmp, path)
-            .with_context(|| format!("renaming cache temp file over {}", path.display()))
     }
 
     pub fn clear(&mut self) {
         self.entries.clear();
+        self.dirty = true;
     }
 
     /// Dump entries for the CLI (`autosage cache dump`).
@@ -173,6 +206,25 @@ impl ScheduleCache {
             .map(|(k, v)| (k.clone(), v.clone()))
             .collect()
     }
+}
+
+/// Crash-safe file write: a sibling temp file renamed over the target —
+/// a crash mid-write leaves the old file intact instead of a
+/// truncated/corrupt one. Shared by `ScheduleCache::save` and the serve
+/// pool's off-mutex cache flush.
+pub(crate) fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir).ok();
+    }
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "cache.json".to_string());
+    let tmp = path.with_file_name(format!("{file_name}.tmp"));
+    fs::write(&tmp, text)
+        .with_context(|| format!("writing temp file {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming temp file over {}", path.display()))
 }
 
 #[cfg(test)]
@@ -319,5 +371,45 @@ mod tests {
         let mut c = ScheduleCache::in_memory();
         c.insert("k".into(), sample());
         c.save().unwrap(); // must not panic or write anywhere
+    }
+
+    #[test]
+    fn dirty_tracks_mutations_and_save() {
+        let path = tmpfile("dirty.json");
+        let _ = fs::remove_file(&path);
+        let mut c = ScheduleCache::load(&path).unwrap();
+        assert!(!c.is_dirty(), "fresh load is clean");
+        c.insert("k".into(), sample());
+        assert!(c.is_dirty());
+        c.save().unwrap();
+        assert!(!c.is_dirty(), "save clears dirty");
+        // Counter bumps alone (warm-only run) also dirty the cache.
+        assert!(c.get("k").is_some());
+        assert!(c.is_dirty());
+        c.save_if_dirty().unwrap();
+        assert!(!c.is_dirty());
+        let reloaded = ScheduleCache::load(&path).unwrap();
+        assert_eq!(reloaded.hits, 1);
+        // save_if_dirty on a clean cache must not rewrite the file.
+        let mtime_before = fs::metadata(&path).unwrap().modified().unwrap();
+        let mut c2 = ScheduleCache::load(&path).unwrap();
+        c2.save_if_dirty().unwrap();
+        assert_eq!(
+            fs::metadata(&path).unwrap().modified().unwrap(),
+            mtime_before
+        );
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn serialize_matches_save_output() {
+        let path = tmpfile("serialize.json");
+        let _ = fs::remove_file(&path);
+        let mut c = ScheduleCache::load(&path).unwrap();
+        c.insert("k".into(), sample());
+        let text = c.serialize();
+        c.save().unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), text);
+        let _ = fs::remove_file(&path);
     }
 }

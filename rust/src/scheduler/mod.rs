@@ -177,6 +177,11 @@ pub struct Scheduler {
     pub dev_model: DeviceModel,
     pub cache: ScheduleCache,
     pub probe_seed: u64,
+    /// Flight recorder; when set together with [`Self::trace_ctx`],
+    /// `decide` emits estimate/probe/guardrail spans and cache events.
+    pub tracer: Option<std::sync::Arc<crate::obs::trace::Recorder>>,
+    /// (trace, parent span) the next `decide` call belongs to.
+    pub trace_ctx: Option<(crate::obs::trace::TraceId, crate::obs::trace::SpanId)>,
 }
 
 impl Scheduler {
@@ -192,6 +197,8 @@ impl Scheduler {
             dev_model: DeviceModel::default(),
             cache,
             probe_seed: 0xA0705A6E,
+            tracer: None,
+            trace_ctx: None,
         })
     }
 
@@ -211,9 +218,22 @@ impl Scheduler {
             if op.has_f() { f } else { 0 },
             op.as_str(),
         );
+        let tracer = self.tracer.clone();
+        let tctx = self.trace_ctx;
 
         // 1. Cache hit → replay.
         if let Some(hit) = self.cache.get(&key) {
+            if let (Some(tr), Some((trace, parent))) = (&tracer, tctx) {
+                tr.event(
+                    trace,
+                    Some(parent),
+                    "cache_hit",
+                    vec![
+                        ("key".to_string(), key.clone()),
+                        ("variant".to_string(), hit.variant.clone()),
+                    ],
+                );
+            }
             let choice = if hit.variant == "baseline" {
                 Choice::Baseline
             } else {
@@ -232,6 +252,14 @@ impl Scheduler {
                 },
                 None,
             ));
+        }
+        if let (Some(tr), Some((trace, parent))) = (&tracer, tctx) {
+            tr.event(
+                trace,
+                Some(parent),
+                "cache_miss",
+                vec![("key".to_string(), key.clone())],
+            );
         }
 
         // 2. Replay-only mode: miss → guaranteed-safe baseline.
@@ -254,6 +282,7 @@ impl Scheduler {
         // 3. Reject degenerate inputs with a typed error before any
         //    roofline math: 0 rows / 0 nnz / F=0 would otherwise surface
         //    as NaN scores or an unprobeable empty subgraph downstream.
+        let estimate_start_us = tracer.as_ref().map(|tr| tr.now_us());
         let feats = InputFeatures::extract(g, f);
         estimate::validate_input(&feats, op.has_f(), &self.dev_model)?;
 
@@ -378,7 +407,19 @@ impl Scheduler {
             }
         }
 
+        if let (Some(tr), Some((trace, parent))) = (&tracer, tctx) {
+            tr.span_between(
+                trace,
+                Some(parent),
+                "estimate",
+                estimate_start_us.unwrap_or(0),
+                tr.now_us(),
+                vec![("shortlisted".to_string(), short_refs.len().to_string())],
+            );
+        }
+
         // 4. Micro-probe (on the subgraph built in step 3).
+        let probe_start_us = tracer.as_ref().map(|tr| tr.now_us());
         let report = probe::run_probe(
             dev,
             op,
@@ -389,6 +430,19 @@ impl Scheduler {
             &self.cfg,
             self.probe_seed,
         )?;
+        if let (Some(tr), Some((trace, parent))) = (&tracer, tctx) {
+            tr.span_between(
+                trace,
+                Some(parent),
+                "probe",
+                probe_start_us.unwrap_or(0),
+                tr.now_us(),
+                vec![
+                    ("probed".to_string(), report.candidates.len().to_string()),
+                    ("wall_ms".to_string(), format!("{:.3}", report.wall_ms)),
+                ],
+            );
+        }
 
         // 5. Guardrail on estimate-scaled probe timings (predicted
         //    full-graph medians).
@@ -400,14 +454,34 @@ impl Scheduler {
                 (r.variant.clone(), r.timing.median_ms * s)
             })
             .collect();
+        let guardrail_start_us = tracer.as_ref().map(|tr| tr.now_us());
         let t_b = report.baseline.timing.median_ms * baseline_scale;
         let choice = guardrail::decide(&probed, t_b, self.cfg.alpha);
         let t_star = probed
             .iter()
             .map(|(_, t)| *t)
             .fold(f64::INFINITY, f64::min);
+        if let (Some(tr), Some((trace, parent))) = (&tracer, tctx) {
+            tr.span_between(
+                trace,
+                Some(parent),
+                "guardrail",
+                guardrail_start_us.unwrap_or(0),
+                tr.now_us(),
+                vec![
+                    ("choice".to_string(), choice.variant().to_string()),
+                    ("t_baseline_ms".to_string(), format!("{t_b:.3}")),
+                    (
+                        "t_star_ms".to_string(),
+                        format!("{:.3}", if t_star.is_finite() { t_star } else { 0.0 }),
+                    ),
+                ],
+            );
+        }
 
-        // 6. Cache + persist.
+        // 6. Cache + persist. Persist-I/O failure is a warning, not a
+        //    request failure: the decision is sound and already live in
+        //    memory; only warm-start across processes is lost.
         self.cache.insert(
             key.clone(),
             CachedChoice {
@@ -417,7 +491,16 @@ impl Scheduler {
                 alpha: self.cfg.alpha,
             },
         );
-        self.cache.save()?;
+        if let Err(e) = self.cache.save() {
+            if let Some(tr) = &tracer {
+                tr.warn(
+                    tctx.map(|(t, _)| t),
+                    "cache_persist",
+                    &format!("{e:#}"),
+                );
+            }
+            eprintln!("autosage: warning: schedule cache persist failed: {e:#}");
+        }
 
         Ok((
             Decision {

@@ -13,6 +13,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::bench_kit::render::render_serving_table;
 use crate::data::load_graph_spec;
 use crate::graph::Csr;
+use crate::obs::perf::{Direction, PerfProfile};
+use crate::obs::trace::{Recorder, SpanRecord, TraceCtx};
 use crate::ops::reference;
 use crate::scheduler::{probe, Op};
 use crate::telemetry::{serving_table, ServeShardStats};
@@ -87,6 +89,37 @@ pub struct LoadReport {
     /// Distinct (graph, op, F) request keys in the workload.
     pub unique_keys: usize,
     pub shards: Vec<ServeShardStats>,
+}
+
+impl LoadReport {
+    /// Gateable perf metrics for this run. Deterministic counters carry
+    /// zero tolerance (the smoke workload is seeded, so request totals,
+    /// unique keys and probe counts are exact); wall-clock metrics carry
+    /// wide tolerances so the gate fires on order-of-magnitude
+    /// regressions, not CI-runner jitter.
+    pub fn perf_profile(&self) -> PerfProfile {
+        let mut p = PerfProfile::new("serve_bench");
+        p.push("requests_total", self.total as f64, Direction::Exact, 0.0);
+        p.push("errors", self.errors as f64, Direction::Exact, 0.0);
+        p.push(
+            "oracle_mismatches",
+            self.mismatches as f64,
+            Direction::Exact,
+            0.0,
+        );
+        p.push("unique_keys", self.unique_keys as f64, Direction::Exact, 0.0);
+        // Single-flight must keep probes at one per unique key.
+        p.push("probes", self.probes as f64, Direction::Lower, 0.0);
+        p.push(
+            "throughput_rps",
+            self.throughput_rps,
+            Direction::Higher,
+            0.95,
+        );
+        p.push("p50_ms", self.p50_ms, Direction::Lower, 19.0);
+        p.push("p99_ms", self.p99_ms, Direction::Lower, 19.0);
+        p
+    }
 }
 
 /// One request template: deterministic operands + its oracle output.
@@ -164,6 +197,45 @@ pub fn request_schedule(
 /// seeded [`request_schedule`] over the combo list using the blocking
 /// submit path.
 pub fn run_load(pool: Arc<ServerPool>, spec: &LoadSpec) -> Result<LoadReport> {
+    run_load_traced(pool, spec, None)
+}
+
+/// Record a client-side root `request` span covering submit → reply.
+fn record_request_span(
+    recorder: Option<&Recorder>,
+    ctx: Option<TraceCtx>,
+    client: usize,
+    op: Op,
+    t0: Instant,
+    ok: bool,
+) {
+    if let (Some(r), Some(ctx)) = (recorder, ctx) {
+        r.record(SpanRecord {
+            trace: ctx.trace,
+            span: ctx.parent,
+            parent: None,
+            name: "request".to_string(),
+            start_us: r.us_of(t0),
+            dur_us: t0.elapsed().as_micros() as u64,
+            attrs: vec![
+                ("client".to_string(), client.to_string()),
+                ("op".to_string(), op.as_str().to_string()),
+                ("ok".to_string(), ok.to_string()),
+            ],
+        });
+    }
+}
+
+/// [`run_load`] with a flight recorder: every request gets a fresh
+/// trace id at ingress and carries it through shard queue, coalesced
+/// scheduling, backend execute and reply. Pass the same recorder the
+/// pool was spawned with so client- and worker-side spans share one
+/// timeline.
+pub fn run_load_traced(
+    pool: Arc<ServerPool>,
+    spec: &LoadSpec,
+    recorder: Option<Arc<Recorder>>,
+) -> Result<LoadReport> {
     let combos = Arc::new(build_combos(spec)?);
     let unique_keys = combos.len();
     let schedule = request_schedule(
@@ -178,6 +250,7 @@ pub fn run_load(pool: Arc<ServerPool>, spec: &LoadSpec) -> Result<LoadReport> {
         let pool = Arc::clone(&pool);
         let combos = Arc::clone(&combos);
         let verify = spec.verify;
+        let recorder = recorder.clone();
         let handle = std::thread::Builder::new()
             .name(format!("loadgen-client-{c}"))
             .spawn(move || -> (Vec<f64>, usize, usize, usize) {
@@ -186,23 +259,40 @@ pub fn run_load(pool: Arc<ServerPool>, spec: &LoadSpec) -> Result<LoadReport> {
                 for &ci in &mix {
                     let combo = &combos[ci];
                     let t0 = Instant::now();
-                    let rx = match pool.submit(
+                    // Fresh trace per request; the root span id doubles
+                    // as the parent for every worker-side span.
+                    let tctx = recorder.as_ref().map(|r| TraceCtx {
+                        trace: r.new_trace(),
+                        parent: r.next_span_id(),
+                    });
+                    let rx = match pool.submit_traced(
                         combo.op,
                         combo.graph.clone(),
                         combo.f,
                         combo.operands.clone(),
+                        tctx,
                     ) {
                         Ok(rx) => rx,
                         Err(_) => {
                             errors += 1;
+                            record_request_span(
+                                recorder.as_deref(),
+                                tctx,
+                                c,
+                                combo.op,
+                                t0,
+                                false,
+                            );
                             continue;
                         }
                     };
+                    let mut req_ok = false;
                     match rx.recv() {
                         Err(_) => errors += 1,
                         Ok(resp) => match resp.result {
                             Err(_) => errors += 1,
                             Ok(out) => {
+                                req_ok = true;
                                 lat.push(t0.elapsed().as_secs_f64() * 1e3);
                                 if verify
                                     && reference::max_abs_diff(&out, &combo.oracle) >= 2e-3
@@ -214,6 +304,14 @@ pub fn run_load(pool: Arc<ServerPool>, spec: &LoadSpec) -> Result<LoadReport> {
                             }
                         },
                     }
+                    record_request_span(
+                        recorder.as_deref(),
+                        tctx,
+                        c,
+                        combo.op,
+                        t0,
+                        req_ok,
+                    );
                 }
                 (lat, ok, errors, mismatches)
             })

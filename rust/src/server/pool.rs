@@ -28,6 +28,7 @@ use crate::config::Config;
 use crate::coordinator::AutoSage;
 use crate::graph::signature::{graph_signature, Fnv1a};
 use crate::graph::Csr;
+use crate::obs::trace::{Recorder, SpanRecord, TraceCtx};
 use crate::scheduler::{cache_key, CachedChoice, DecisionSource, Op};
 use crate::telemetry::ServeShardStats;
 
@@ -81,6 +82,9 @@ struct QueuedRequest {
     /// routing key).
     sig: String,
     enqueued: Instant,
+    /// Flight-recorder context the request travels under (None when the
+    /// pool runs untraced).
+    trace: Option<TraceCtx>,
 }
 
 struct Shard {
@@ -99,6 +103,8 @@ pub struct ServerPool {
     /// depth counter transiently includes in-flight submitters, but
     /// actual occupancy can never exceed this).
     queue_bound: u64,
+    /// Flight recorder shared with every shard worker (None = untraced).
+    recorder: Option<Arc<Recorder>>,
 }
 
 /// Route a graph signature to a shard.
@@ -113,10 +119,21 @@ impl ServerPool {
     /// its own backend on its own thread; the schedule cache (path from
     /// `cfg.cache_path`) is loaded once and shared across shards.
     pub fn spawn(artifacts_dir: PathBuf, cfg: Config) -> Result<ServerPool> {
+        ServerPool::spawn_traced(artifacts_dir, cfg, None)
+    }
+
+    /// Like [`Self::spawn`], with a flight recorder: every shard worker
+    /// records queue/schedule/execute/reply spans for traced requests.
+    pub fn spawn_traced(
+        artifacts_dir: PathBuf,
+        cfg: Config,
+        recorder: Option<Arc<Recorder>>,
+    ) -> Result<ServerPool> {
         cfg.validate().map_err(|e| anyhow!(e))?;
         let n = cfg.serve_workers.max(1);
         let shared = Arc::new(SharedScheduleCache::load(&cfg.cache_path)?);
         let metrics = Arc::new(ServerMetrics::new(n));
+        let flush = Duration::from_millis(cfg.cache_flush_ms as u64);
         // Workers keep their scheduler caches in-memory: the shared
         // layer owns cross-shard visibility and persistence.
         let mut worker_cfg = cfg.clone();
@@ -128,9 +145,10 @@ impl ServerPool {
             let wcfg = worker_cfg.clone();
             let sh = Arc::clone(&shared);
             let m = Arc::clone(&metrics);
+            let rec = recorder.clone();
             let join = std::thread::Builder::new()
                 .name(format!("autosage-shard-{shard_id}"))
-                .spawn(move || worker_loop(shard_id, rx, dir, wcfg, sh, m))
+                .spawn(move || worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, flush))
                 .with_context(|| format!("spawning shard {shard_id} worker"))?;
             shards.push(Shard { tx, join });
         }
@@ -139,6 +157,7 @@ impl ServerPool {
             metrics,
             shared,
             queue_bound: cfg.serve_queue_depth.max(1) as u64,
+            recorder,
         })
     }
 
@@ -181,7 +200,21 @@ impl ServerPool {
         f: usize,
         operands: Vec<(String, Vec<f32>)>,
     ) -> Result<Receiver<ServeResponse>, SubmitError> {
-        let (qr, shard, rx) = self.package(op, graph, f, operands);
+        self.submit_traced(op, graph, f, operands, None)
+    }
+
+    /// Blocking submit carrying a flight-recorder context: the worker's
+    /// queue/schedule/execute/reply spans attach to `trace`.
+    pub fn submit_traced(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+        trace: Option<TraceCtx>,
+    ) -> Result<Receiver<ServeResponse>, SubmitError> {
+        let (mut qr, shard, rx) = self.package(op, graph, f, operands);
+        qr.trace = trace;
         let sm = &self.metrics.shards[shard];
         let d = sm.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
         match self.shards[shard].tx.send(qr) {
@@ -228,8 +261,14 @@ impl ServerPool {
             respond,
             sig,
             enqueued: Instant::now(),
+            trace: None,
         };
         (qr, shard, rx)
+    }
+
+    /// The pool's flight recorder, if it was spawned with one.
+    pub fn recorder(&self) -> Option<&Arc<Recorder>> {
+        self.recorder.as_ref()
     }
 
     pub fn n_shards(&self) -> usize {
@@ -286,11 +325,21 @@ impl Drop for ServerPool {
                 );
             }
         }
+        // Final flush of dirty cache state (entries and hit/miss
+        // counters) now that every worker has stopped. Failure is a
+        // warning, not a panic: the serving session itself succeeded.
+        if let Err(e) = self.shared.persist() {
+            if let Some(r) = &self.recorder {
+                r.warn(None, "cache_persist_shutdown", &format!("{e:#}"));
+            }
+            eprintln!("autosage: warning: schedule cache flush on shutdown failed: {e:#}");
+        }
     }
 }
 
 // ------------------------------------------------------------- worker
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     shard: usize,
     rx: Receiver<QueuedRequest>,
@@ -298,6 +347,8 @@ fn worker_loop(
     cfg: Config,
     shared: Arc<SharedScheduleCache>,
     metrics: Arc<ServerMetrics>,
+    recorder: Option<Arc<Recorder>>,
+    flush: Duration,
 ) {
     let batch_max = cfg.serve_batch_max.max(1);
     let window = Duration::from_micros(cfg.serve_batch_window_us as u64);
@@ -324,13 +375,24 @@ fn worker_loop(
             return;
         }
     };
+    sage.set_recorder(recorder.clone());
     while let Ok(first) = rx.recv() {
         let batch = collect_batch(&rx, first, batch_max, window);
         let sm = &metrics.shards[shard];
         sm.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
         sm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
         sm.batches.fetch_add(1, Ordering::Relaxed);
-        serve_batch(shard, &mut sage, &shared, sm, batch);
+        serve_batch(shard, &mut sage, &shared, sm, recorder.as_deref(), batch);
+        // Satellite (PR 2 debt): cache persistence moved off the
+        // pool-wide mutex and out of `ProbeTicket::resolve` — dirty
+        // state flushes here, throttled, and I/O errors demote to a
+        // warning trace event instead of failing requests.
+        if let Err(e) = shared.maybe_persist(flush) {
+            if let Some(r) = &recorder {
+                r.warn(None, "cache_persist", &format!("{e:#}"));
+            }
+            eprintln!("autosage: warning: schedule cache flush failed: {e:#}");
+        }
     }
 }
 
@@ -369,6 +431,7 @@ fn serve_batch(
     sage: &mut AutoSage,
     shared: &SharedScheduleCache,
     sm: &ShardMetrics,
+    recorder: Option<&Recorder>,
     batch: Vec<QueuedRequest>,
 ) {
     let mut groups: Vec<(String, Vec<QueuedRequest>)> = Vec::new();
@@ -385,13 +448,57 @@ fn serve_batch(
             sm.coalesced.fetch_add(batch_size as u64 - 1, Ordering::Relaxed);
         }
         let leader = &group[0];
-        match decide_for(sage, shared, sm, leader) {
+        // Pre-allocate the schedule span id and point the scheduler's
+        // trace context at it, so estimate/probe/guardrail sub-spans and
+        // cache events emitted inside `decide` parent under it.
+        let sched = match (recorder, leader.trace) {
+            (Some(r), Some(ctx)) => {
+                let span = r.next_span_id();
+                sage.set_trace_ctx(Some((ctx.trace, span)));
+                Some((r, ctx, span, r.now_us()))
+            }
+            _ => {
+                sage.set_trace_ctx(None);
+                None
+            }
+        };
+        let decided = decide_for(sage, shared, sm, leader);
+        if let Some((r, ctx, span, start_us)) = sched {
+            let (outcome, source, variant) = match &decided {
+                Ok((v, true)) => ("ok", "cache", v.clone()),
+                Ok((v, false)) => ("ok", "probe", v.clone()),
+                Err(_) => ("error", "-", String::new()),
+            };
+            r.record(SpanRecord {
+                trace: ctx.trace,
+                span,
+                parent: Some(ctx.parent),
+                name: "schedule".to_string(),
+                start_us,
+                dur_us: r.now_us().saturating_sub(start_us),
+                attrs: vec![
+                    ("batch_size".to_string(), batch_size.to_string()),
+                    ("outcome".to_string(), outcome.to_string()),
+                    ("source".to_string(), source.to_string()),
+                    ("variant".to_string(), variant),
+                ],
+            });
+        }
+        match decided {
             Err(e) => {
                 let msg = format!("{e:#}");
                 for qr in group {
                     sm.errors.fetch_add(1, Ordering::Relaxed);
                     let total_ms = ms_since(qr.enqueued);
                     sm.latency.record_ms(total_ms);
+                    if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
+                        r.event(
+                            ctx.trace,
+                            Some(ctx.parent),
+                            "reply",
+                            vec![("ok".to_string(), "false".to_string())],
+                        );
+                    }
                     let _ = qr.respond.send(ServeResponse {
                         result: Err(anyhow!("{msg}")),
                         variant: String::new(),
@@ -406,13 +513,47 @@ fn serve_batch(
             Ok((variant, from_cache)) => {
                 for qr in group {
                     let queue_ms = ms_since(qr.enqueued);
+                    if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
+                        r.span_between(
+                            ctx.trace,
+                            Some(ctx.parent),
+                            "queue",
+                            r.us_of(qr.enqueued),
+                            r.now_us(),
+                            vec![("shard".to_string(), shard.to_string())],
+                        );
+                    }
+                    let exec_start_us = recorder.map(|r| r.now_us());
                     let result = execute_one(sage, &qr, &variant);
+                    if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
+                        r.span_between(
+                            ctx.trace,
+                            Some(ctx.parent),
+                            "execute",
+                            exec_start_us.unwrap_or(0),
+                            r.now_us(),
+                            vec![
+                                ("variant".to_string(), variant.clone()),
+                                ("backend".to_string(), sage.backend_name().to_string()),
+                                ("shard".to_string(), shard.to_string()),
+                            ],
+                        );
+                    }
+                    let ok = result.is_ok();
                     match &result {
                         Ok(_) => sm.completed.fetch_add(1, Ordering::Relaxed),
                         Err(_) => sm.errors.fetch_add(1, Ordering::Relaxed),
                     };
                     let total_ms = ms_since(qr.enqueued);
                     sm.latency.record_ms(total_ms);
+                    if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
+                        r.event(
+                            ctx.trace,
+                            Some(ctx.parent),
+                            "reply",
+                            vec![("ok".to_string(), ok.to_string())],
+                        );
+                    }
                     let _ = qr.respond.send(ServeResponse {
                         result,
                         variant: variant.clone(),
@@ -460,7 +601,7 @@ fn decide_for(
                 t_baseline_ms: d.t_baseline_ms,
                 t_star_ms: d.t_star_ms,
                 alpha: sage.config().alpha,
-            })?;
+            });
             Ok((
                 d.choice.variant().to_string(),
                 d.source == DecisionSource::Cache,

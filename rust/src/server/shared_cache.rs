@@ -12,19 +12,32 @@
 //! (probe error, worker panic unwinding) removes the in-flight marker
 //! and wakes the waiters, one of which inherits the probe — no key can
 //! be wedged by a failed prober.
+//!
+//! Persistence is decoupled from the request path: `resolve` only marks
+//! the cache dirty; [`SharedScheduleCache::maybe_persist`] flushes
+//! dirty state periodically (serialize under the lock, file I/O outside
+//! it) and [`SharedScheduleCache::persist`] flushes unconditionally at
+//! shutdown. A request never blocks on — or fails because of — disk.
 
 use std::collections::HashSet;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::scheduler::cache::write_atomic;
 use crate::scheduler::{CachedChoice, ScheduleCache};
 
 /// Shared, thread-safe wrapper around the persistent [`ScheduleCache`].
 pub struct SharedScheduleCache {
     state: Mutex<State>,
     resolved: Condvar,
+    /// Reference instant for the flush throttle.
+    epoch: Instant,
+    /// Milliseconds-since-epoch of the last flush (attempted or done).
+    last_flush_ms: AtomicU64,
 }
 
 struct State {
@@ -56,6 +69,8 @@ impl SharedScheduleCache {
         SharedScheduleCache {
             state: Mutex::new(State { cache, in_flight: HashSet::new() }),
             resolved: Condvar::new(),
+            epoch: Instant::now(),
+            last_flush_ms: AtomicU64::new(0),
         }
     }
 
@@ -84,11 +99,16 @@ impl SharedScheduleCache {
         let mut st = self.lock();
         if let Some(hit) = st.cache.peek(key).cloned() {
             st.cache.hits += 1;
+            // Counter bumps are persisted state: warm-only runs (every
+            // lookup a hit, no probe ever fires) must still flush so
+            // `autosage cache stats` is accurate afterwards.
+            st.cache.mark_dirty();
             return Lookup::Hit(hit);
         }
         // One miss per lookup, even if we then wait on another prober:
         // waiters are exactly the probes single-flight saved.
         st.cache.misses += 1;
+        st.cache.mark_dirty();
         while st.in_flight.contains(key) {
             st = self
                 .resolved
@@ -120,19 +140,65 @@ impl SharedScheduleCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Flush dirty cache state to its backing file (no-op when clean or
+    /// in-memory). Serializes under the lock but writes outside it, so
+    /// concurrent lookups never wait on disk. On write failure the
+    /// cache is re-marked dirty so a later flush retries.
+    pub fn persist(&self) -> Result<()> {
+        let (path, text) = {
+            let mut st = self.lock();
+            if !st.cache.is_dirty() {
+                return Ok(());
+            }
+            let Some(path) = st.cache.path().map(Path::to_path_buf) else {
+                st.cache.clear_dirty();
+                return Ok(());
+            };
+            let text = st.cache.serialize();
+            st.cache.clear_dirty();
+            (path, text)
+        };
+        if let Err(e) = write_atomic(&path, &text) {
+            self.lock().cache.mark_dirty();
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Throttled [`Self::persist`]: flushes at most once per `interval`
+    /// across all callers. Returns whether a flush was attempted.
+    pub fn maybe_persist(&self, interval: Duration) -> Result<bool> {
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let last = self.last_flush_ms.load(Ordering::Relaxed);
+        if now_ms.saturating_sub(last) < interval.as_millis() as u64 {
+            return Ok(false);
+        }
+        // One winner per interval; losers skip instead of queueing up
+        // behind the flush.
+        if self
+            .last_flush_ms
+            .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return Ok(false);
+        }
+        self.persist().map(|_| true)
+    }
 }
 
 impl ProbeTicket<'_> {
-    /// Publish the probed decision: insert, persist, wake all waiters.
-    pub fn resolve(mut self, choice: CachedChoice) -> Result<()> {
+    /// Publish the probed decision: insert (marking the cache dirty for
+    /// the next periodic/shutdown flush) and wake all waiters. No disk
+    /// I/O happens here — persistence is decoupled from the request
+    /// path via [`SharedScheduleCache::maybe_persist`].
+    pub fn resolve(mut self, choice: CachedChoice) {
         self.done = true;
         let mut st = self.owner.lock();
         st.cache.insert(self.key.clone(), choice);
-        let saved = st.cache.save();
         st.in_flight.remove(&self.key);
         drop(st);
         self.owner.resolved.notify_all();
-        saved
     }
 }
 
@@ -167,7 +233,7 @@ mod tests {
     fn miss_then_resolve_then_hit() {
         let sc = SharedScheduleCache::new(ScheduleCache::in_memory());
         match sc.lookup("k") {
-            Lookup::Probe(t) => t.resolve(choice("ell_r8_f32")).unwrap(),
+            Lookup::Probe(t) => t.resolve(choice("ell_r8_f32")),
             Lookup::Hit(_) => panic!("empty cache cannot hit"),
         }
         match sc.lookup("k") {
@@ -192,7 +258,7 @@ mod tests {
                     // Hold the probe long enough that every other thread
                     // reaches lookup() and has to wait on the condvar.
                     std::thread::sleep(Duration::from_millis(30));
-                    t.resolve(choice("ell_r8_f32")).unwrap();
+                    t.resolve(choice("ell_r8_f32"));
                     "ell_r8_f32".to_string()
                 }
                 Lookup::Hit(c) => c.variant,
@@ -214,7 +280,7 @@ mod tests {
         let sc2 = Arc::clone(&sc);
         let waiter = std::thread::spawn(move || match sc2.lookup("k") {
             Lookup::Probe(t) => {
-                t.resolve(choice("hub_r8_f32")).unwrap();
+                t.resolve(choice("hub_r8_f32"));
                 true
             }
             Lookup::Hit(_) => false,
@@ -226,5 +292,64 @@ mod tests {
             Lookup::Hit(c) => assert_eq!(c.variant, "hub_r8_f32"),
             Lookup::Probe(_) => panic!("resolved key must hit"),
         }
+    }
+
+    #[test]
+    fn resolve_does_not_write_until_persist() {
+        let dir = std::env::temp_dir().join("autosage_shared_cache_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("deferred.json");
+        let _ = std::fs::remove_file(&path);
+        let sc = SharedScheduleCache::load(path.to_str().unwrap()).unwrap();
+        match sc.lookup("k") {
+            Lookup::Probe(t) => t.resolve(choice("ell_r8_f32")),
+            Lookup::Hit(_) => panic!("empty cache cannot hit"),
+        }
+        assert!(!path.exists(), "resolve must not do file I/O");
+        sc.persist().unwrap();
+        assert!(path.exists(), "persist flushes the dirty entry");
+        let mut on_disk = ScheduleCache::load(&path).unwrap();
+        assert!(on_disk.get("k").is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn warm_only_counters_flush_to_disk() {
+        let dir = std::env::temp_dir().join("autosage_shared_cache_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm_only.json");
+        let _ = std::fs::remove_file(&path);
+        // Pre-populate the file so the serving session is all-warm.
+        let mut seed = ScheduleCache::load(&path).unwrap();
+        seed.insert("k".into(), choice("ell_r8_f32"));
+        seed.save().unwrap();
+
+        let sc = SharedScheduleCache::load(path.to_str().unwrap()).unwrap();
+        match sc.lookup("k") {
+            Lookup::Hit(c) => assert_eq!(c.variant, "ell_r8_f32"),
+            Lookup::Probe(_) => panic!("pre-populated key must hit"),
+        }
+        sc.persist().unwrap();
+        let reloaded = ScheduleCache::load(&path).unwrap();
+        assert_eq!(reloaded.hits, 1, "hit counter must survive a warm-only run");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn maybe_persist_throttles() {
+        let sc = SharedScheduleCache::new(ScheduleCache::in_memory());
+        // First call within the interval is throttled because the
+        // recorder starts at t=0; advance past it by using zero interval.
+        assert!(sc.maybe_persist(Duration::from_secs(0)).unwrap());
+        assert!(
+            !sc.maybe_persist(Duration::from_secs(3600)).unwrap(),
+            "second flush inside the interval must be skipped"
+        );
+    }
+
+    #[test]
+    fn persist_clean_cache_is_noop() {
+        let sc = SharedScheduleCache::new(ScheduleCache::in_memory());
+        sc.persist().unwrap();
     }
 }

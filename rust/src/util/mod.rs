@@ -1,10 +1,12 @@
 //! Substrates built from scratch (no third-party crates are available in
 //! this offline environment beyond `xla`/`anyhow`): JSON, deterministic
-//! PRNG, descriptive statistics, CSV, typed env toggles, and wall timing.
+//! PRNG, descriptive statistics, CSV, typed env toggles, SHA-256
+//! fingerprinting, and wall timing.
 
 pub mod csv;
 pub mod envcfg;
 pub mod json;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod timing;

@@ -1,0 +1,317 @@
+//! Integration: the flight recorder — run manifests survive key
+//! reordering and reject tampering, one trace id spans loadgen →
+//! shard → backend → reply for a coalesced batch, the perf gate
+//! fails on a synthetic slowdown against the checked-in baselines,
+//! and schedule-cache state (entries AND warm-only hit counters)
+//! persists through pool shutdown.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use autosage::config::Config;
+use autosage::gen::preset;
+use autosage::obs::manifest::{canonical_hash, validate};
+use autosage::obs::{compare, PerfProfile, RunManifest};
+use autosage::obs::trace::Recorder;
+use autosage::scheduler::{Op, ScheduleCache};
+use autosage::server::{run_load_traced, LoadSpec, ServerPool};
+use autosage::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("autosage_obs_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn cfg(workers: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
+    cfg.cache_path = String::new();
+    // Keep debug-mode probes on 512-row subgraphs and short loops.
+    cfg.probe_full_max_rows = 512;
+    cfg.probe_iters = 2;
+    cfg.probe_cap_ms = 200.0;
+    cfg.serve_workers = workers;
+    cfg
+}
+
+fn sample_manifest(dir: &Path) -> RunManifest {
+    std::fs::write(dir.join("rows.csv"), "op,ms\nspmm,1.5\n").unwrap();
+    let mut m = RunManifest::new(
+        "run-obs-1",
+        "bench",
+        42,
+        "native",
+        Json::obj(vec![("alpha", Json::num(0.95))]),
+    );
+    m.add_graph("er_s", "cafe000000000000", 1000, 8000);
+    m.add_metric("p50_ms", 1.25);
+    m.add_metric("speedup", 1.4);
+    m.add_artifact(dir, "rows.csv").unwrap();
+    m
+}
+
+/// Serialize a parsed manifest with its top-level keys in REVERSE
+/// order. The self-hash is defined over the canonical (sorted, compact)
+/// form, so the physically reordered file must still validate.
+fn reverse_key_order(parsed: &Json) -> String {
+    let obj = parsed.as_obj().expect("manifest root is an object");
+    let mut out = String::from("{");
+    for (i, (k, v)) in obj.iter().rev().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{}:{}", Json::Str(k.clone()), v);
+    }
+    out.push('}');
+    out
+}
+
+#[test]
+fn manifest_self_hash_is_stable_under_key_reordering() {
+    let dir = tmp("reorder");
+    let m = sample_manifest(&dir);
+    let p = m.write(&dir).unwrap();
+    let rep = validate(&p).unwrap();
+    assert_eq!(rep.run_id, "run-obs-1");
+    assert_eq!(rep.kind, "bench");
+    assert_eq!(rep.n_artifacts, 1);
+
+    let pretty = std::fs::read_to_string(&p).unwrap();
+    let parsed = Json::parse(&pretty).unwrap();
+    let scrambled = reverse_key_order(&parsed);
+    assert_ne!(scrambled, pretty, "reordering must change the bytes");
+    let reparsed = Json::parse(&scrambled).unwrap();
+    assert_eq!(
+        canonical_hash(&reparsed),
+        canonical_hash(&parsed),
+        "canonical hash must not depend on physical key order"
+    );
+
+    std::fs::write(&p, &scrambled).unwrap();
+    let rep = validate(&p).unwrap();
+    assert_eq!(rep.run_id, "run-obs-1");
+}
+
+#[test]
+fn corrupted_manifests_are_rejected() {
+    // A flipped metric value breaks the self-hash.
+    let dir = tmp("tamper_metric");
+    let p = sample_manifest(&dir).write(&dir).unwrap();
+    let text = std::fs::read_to_string(&p).unwrap();
+    std::fs::write(&p, text.replace("1.25", "9.99")).unwrap();
+    let err = validate(&p).unwrap_err();
+    assert!(format!("{err:#}").contains("self-hash mismatch"), "{err:#}");
+
+    // A rewritten artifact (same length) breaks its sha256.
+    let dir = tmp("tamper_artifact");
+    let p = sample_manifest(&dir).write(&dir).unwrap();
+    std::fs::write(dir.join("rows.csv"), "op,ms\nspmm,1.7\n").unwrap();
+    let err = validate(&p).unwrap_err();
+    assert!(format!("{err:#}").contains("sha256 mismatch"), "{err:#}");
+
+    // A deleted artifact fails hashing outright.
+    let dir = tmp("missing_artifact");
+    let p = sample_manifest(&dir).write(&dir).unwrap();
+    std::fs::remove_file(dir.join("rows.csv")).unwrap();
+    assert!(validate(&p).is_err());
+
+    // A truncated file is not JSON at all.
+    let dir = tmp("truncated");
+    let p = sample_manifest(&dir).write(&dir).unwrap();
+    let text = std::fs::read_to_string(&p).unwrap();
+    std::fs::write(&p, &text[..text.len() / 2]).unwrap();
+    assert!(validate(&p).is_err());
+}
+
+/// The tentpole trace guarantee: for a coalesced batch, the leader's
+/// trace id links the loadgen root `request` span, the shard `queue`
+/// wait, the (single) `schedule` decision with its scheduler sub-spans,
+/// the backend `execute`, and the `reply` event — end to end.
+#[test]
+fn one_trace_id_spans_loadgen_to_reply_for_a_coalesced_batch() {
+    let mut c = cfg(1);
+    c.serve_batch_max = 8;
+    c.serve_batch_window_us = 300_000;
+    let rec = Arc::new(Recorder::new("trace-it"));
+    let pool = Arc::new(
+        ServerPool::spawn_traced(PathBuf::from("artifacts"), c, Some(Arc::clone(&rec)))
+            .unwrap(),
+    );
+    let spec = LoadSpec {
+        clients: 4,
+        requests_per_client: 1,
+        f: 64,
+        presets: vec!["er_s".into()],
+        ops: vec![Op::Spmm],
+        seed: 42,
+        verify: true,
+    };
+    let report = run_load_traced(Arc::clone(&pool), &spec, Some(Arc::clone(&rec))).unwrap();
+    assert_eq!(report.errors, 0, "{}", report.text);
+    assert_eq!(report.mismatches, 0, "{}", report.text);
+    assert_eq!(report.probes, 1, "{}", report.text);
+
+    let spans = rec.snapshot();
+    let names_of = |t| -> BTreeSet<&str> {
+        spans
+            .iter()
+            .filter(|s| s.trace == t)
+            .map(|s| s.name.as_str())
+            .collect()
+    };
+
+    // Exactly one request span per client, each tracing through the
+    // shard to execute + reply.
+    let request_spans: Vec<_> = spans.iter().filter(|s| s.name == "request").collect();
+    assert_eq!(request_spans.len(), 4);
+    for r in &request_spans {
+        assert!(r.parent.is_none(), "request is the root span");
+        let names = names_of(r.trace);
+        for n in ["queue", "execute", "reply"] {
+            assert!(names.contains(n), "trace {} missing {n}: {names:?}", r.trace);
+        }
+    }
+
+    // The cold batch leader's trace carries the full decision chain.
+    let sched: Vec<_> = spans.iter().filter(|s| s.name == "schedule").collect();
+    assert!(!sched.is_empty(), "no schedule span recorded");
+    let cold = sched
+        .iter()
+        .find(|s| s.attrs.iter().any(|(k, v)| k == "source" && v == "probe"))
+        .expect("one batch must schedule via probe");
+    assert!(
+        cold.attrs
+            .iter()
+            .any(|(k, v)| k == "batch_size" && v.parse::<usize>().unwrap() >= 1),
+        "{:?}",
+        cold.attrs
+    );
+    let names = names_of(cold.trace);
+    for n in [
+        "request",
+        "queue",
+        "schedule",
+        "cache_miss",
+        "estimate",
+        "probe",
+        "guardrail",
+        "execute",
+        "reply",
+    ] {
+        assert!(names.contains(n), "leader trace missing {n}: {names:?}");
+    }
+    // Scheduler sub-spans parent under the schedule span; the schedule
+    // span parents under the loadgen root.
+    let root = spans
+        .iter()
+        .find(|s| s.trace == cold.trace && s.name == "request")
+        .unwrap();
+    assert_eq!(cold.parent, Some(root.span));
+    for n in ["estimate", "probe", "guardrail"] {
+        let sub = spans
+            .iter()
+            .find(|s| s.trace == cold.trace && s.name == n)
+            .unwrap();
+        assert_eq!(sub.parent, Some(cold.span), "{n} must parent under schedule");
+    }
+
+    // JSONL flush: every line parses and carries the run id.
+    let dir = tmp("jsonl");
+    let p = rec.flush_jsonl(&dir.join("trace.jsonl")).unwrap();
+    let text = std::fs::read_to_string(&p).unwrap();
+    assert_eq!(text.lines().count(), spans.len());
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("run_id").as_str(), Some("trace-it"));
+    }
+}
+
+/// The checked-in BENCH_*.json baselines parse, self-compare clean, and
+/// the gate demonstrably fails on a synthetic slowdown.
+#[test]
+fn perf_gate_fails_on_synthetic_slowdown() {
+    let serve = PerfProfile::load(Path::new("benchmarks/BENCH_serve_smoke.json")).unwrap();
+    assert_eq!(serve.name, "serve_bench");
+    assert!(compare(&serve, &serve).passed());
+    let bench = PerfProfile::load(Path::new("benchmarks/BENCH_bench_fixture.json")).unwrap();
+    assert_eq!(bench.name, "bench");
+    assert!(compare(&bench, &bench).passed());
+
+    // Synthetic regression: throughput collapses 100x, p99 blows up
+    // 100x — far beyond even the wide CI tolerances.
+    let mut slow = serve.clone();
+    let t = serve.metrics["throughput_rps"];
+    slow.metrics.get_mut("throughput_rps").unwrap().value = t.value * 0.01;
+    let p = serve.metrics["p99_ms"];
+    slow.metrics.get_mut("p99_ms").unwrap().value = p.value * 100.0;
+    let rep = compare(&serve, &slow);
+    assert!(!rep.passed(), "gate must fail on a 100x slowdown");
+    assert!(rep.regressions >= 2, "{}", rep.render("base", "slow"));
+    assert!(rep.render("base", "slow").contains("REGRESSED"));
+
+    // A dropped metric also fails (renames can't silently pass).
+    let mut missing = serve.clone();
+    missing.metrics.remove("probes");
+    let rep = compare(&serve, &missing);
+    assert!(!rep.passed());
+    assert_eq!(rep.missing, 1);
+
+    // Exact counters in the serve baseline gate the determinism
+    // contract: the seeded smoke workload's totals are not noisy.
+    for key in ["requests_total", "errors", "oracle_mismatches", "unique_keys"] {
+        let m = serve.metrics[key];
+        assert_eq!(m.tol_rel, 0.0, "{key} must gate exactly");
+        let mut off = serve.clone();
+        off.metrics.get_mut(key).unwrap().value = m.value + 1.0;
+        assert!(!compare(&serve, &off).passed(), "{key} drift must fail");
+    }
+}
+
+/// Satellites (a) + (c) end to end: probed decisions persist at pool
+/// shutdown (not on the request path), and a warm-only second run still
+/// flushes its hit counters to disk.
+#[test]
+fn cache_entries_and_warm_only_counters_persist_through_shutdown() {
+    let dir = tmp("cache_persist");
+    let path = dir.join("sched_cache.json");
+    let mut c = cfg(1);
+    c.cache_path = path.display().to_string();
+    // Throttle far beyond the test's runtime: only the shutdown flush
+    // may write, proving Drop persistence works.
+    c.cache_flush_ms = 3_600_000;
+
+    let pool = Arc::new(ServerPool::spawn(PathBuf::from("artifacts"), c.clone()).unwrap());
+    let (g, _) = preset("er_s", 17);
+    let f = 64;
+    let b = vec![0.5f32; g.n_rows * f];
+    let r1 = pool
+        .call(Op::Spmm, g.clone(), f, vec![("b".into(), b.clone())])
+        .unwrap();
+    assert!(r1.result.is_ok());
+    assert!(!r1.from_cache, "first request must probe");
+    assert!(
+        !path.exists(),
+        "persistence must be deferred off the request path (throttled)"
+    );
+    drop(pool);
+    let cache = ScheduleCache::load(&path).unwrap();
+    assert_eq!(cache.len(), 1, "probed decision must persist at shutdown");
+    assert_eq!(cache.misses, 1);
+    assert_eq!(cache.hits, 0);
+
+    // Warm-only run: no inserts, only a counter mutation — it still
+    // reaches disk (satellite: `autosage cache stats` stays accurate).
+    let pool = Arc::new(ServerPool::spawn(PathBuf::from("artifacts"), c).unwrap());
+    let r2 = pool.call(Op::Spmm, g, f, vec![("b".into(), b)]).unwrap();
+    assert!(r2.result.is_ok());
+    assert!(r2.from_cache, "decision must replay from the persisted cache");
+    assert_eq!(r2.variant, r1.variant);
+    drop(pool);
+    let cache = ScheduleCache::load(&path).unwrap();
+    assert_eq!(cache.len(), 1);
+    assert_eq!(cache.hits, 1, "warm-only hit counter must flush");
+}
