@@ -96,8 +96,32 @@ pub fn graph_bench_csv(rows: &[GraphBenchRow]) -> CsvTable {
 }
 
 /// ASCII per-shard serving-metrics table (`serve-bench` stdout; the
-/// CSV twin is `telemetry::serving_table`).
-pub fn render_serving_table(title: &str, shards: &[ServeShardStats]) -> String {
+/// CSV twin is `telemetry::serving_table`). With `pool` (counters
+/// summed, latency quantiles from the MERGED per-shard histograms via
+/// `ServerMetrics::pool_stats`) a separating rule and a `pool` row
+/// close the table — per-shard quantiles are never averaged or maxed
+/// into a pool number here.
+pub fn render_serving_table(
+    title: &str,
+    shards: &[ServeShardStats],
+    pool: Option<&ServeShardStats>,
+) -> String {
+    fn push_row(out: &mut String, label: &str, s: &ServeShardStats) {
+        out.push_str(&format!(
+            "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>8.3} | {:>8.3} | {:>8.3}\n",
+            label,
+            s.requests,
+            s.batches,
+            s.coalesced,
+            s.probes,
+            s.cache_hits,
+            s.errors,
+            s.rejected,
+            s.p50_ms,
+            s.p95_ms,
+            s.p99_ms
+        ));
+    }
     let mut out = format!("{title}\n");
     out.push_str(&format!(
         "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>8} | {:>8} | {:>8}\n",
@@ -116,20 +140,12 @@ pub fn render_serving_table(title: &str, shards: &[ServeShardStats]) -> String {
     out.push_str(&"-".repeat(112));
     out.push('\n');
     for s in shards {
-        out.push_str(&format!(
-            "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>8.3} | {:>8.3} | {:>8.3}\n",
-            s.shard,
-            s.requests,
-            s.batches,
-            s.coalesced,
-            s.probes,
-            s.cache_hits,
-            s.errors,
-            s.rejected,
-            s.p50_ms,
-            s.p95_ms,
-            s.p99_ms
-        ));
+        push_row(&mut out, &s.shard.to_string(), s);
+    }
+    if let Some(p) = pool {
+        out.push_str(&"-".repeat(112));
+        out.push('\n');
+        push_row(&mut out, "pool", p);
     }
     out
 }
@@ -251,9 +267,30 @@ mod tests {
             ServeShardStats { shard: 0, requests: 12, probes: 3, ..Default::default() },
             ServeShardStats { shard: 1, requests: 7, rejected: 2, ..Default::default() },
         ];
-        let s = render_serving_table("serve", &shards);
+        let s = render_serving_table("serve", &shards, None);
         assert!(s.contains("serve"));
         assert!(s.contains("coalesced"));
         assert_eq!(s.lines().count(), 5); // title + header + rule + 2 shards
+    }
+
+    #[test]
+    fn serving_table_pool_row_renders_merged_quantiles() {
+        let shards = vec![
+            ServeShardStats { shard: 0, requests: 990, p99_ms: 1.5, ..Default::default() },
+            ServeShardStats { shard: 1, requests: 10, p99_ms: 300.0, ..Default::default() },
+        ];
+        let pool = ServeShardStats {
+            shard: 2,
+            requests: 1000,
+            p99_ms: 3.0, // merged histogram, below the per-shard max
+            ..Default::default()
+        };
+        let s = render_serving_table("serve", &shards, Some(&pool));
+        assert_eq!(s.lines().count(), 7); // + rule + pool row
+        let pool_line = s.lines().last().unwrap();
+        assert!(pool_line.starts_with(" pool"), "{pool_line}");
+        assert!(pool_line.contains("1000"), "{pool_line}");
+        assert!(pool_line.contains("3.000"), "{pool_line}");
+        assert!(!pool_line.contains("300.000"), "never the per-shard max: {pool_line}");
     }
 }

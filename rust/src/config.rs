@@ -20,6 +20,9 @@
 //! | `AUTOSAGE_SERVE_BATCH`  | max requests drained per batch         | 16      |
 //! | `AUTOSAGE_SERVE_WINDOW_US` | batching window: how long a worker waits past the first request for coalescable stragglers (µs; 0 = drain-only) | 0 |
 //! | `AUTOSAGE_CACHE_FLUSH_MS` | serving pool schedule-cache flush throttle: dirty entries/counters persist at most once per this many ms (and always at shutdown) | 2000 |
+//! | `AUTOSAGE_TRACE_SAMPLE` | head-sampling rate for serve-bench traces in [0,1]: each trace id is kept iff `hash(seed ^ id) < rate`, so the sampled set is deterministic under `--seed` (1.0 = trace everything, 0.0 = trace nothing) | 1.0 |
+//! | `AUTOSAGE_TRACE_RING`   | flight-recorder span ring-buffer capacity (0 = unbounded); overflow evicts oldest unflushed spans and counts them as `spans_dropped` | 0 |
+//! | `AUTOSAGE_TRACE_FLUSH_MS` | periodic trace flush throttle during serving: sampled spans append to `trace.jsonl` at most once per this many ms (0 = flush only at run end) | 0 |
 
 use crate::util::envcfg::{env_bool, env_f64, env_string, env_usize};
 
@@ -63,6 +66,16 @@ pub struct Config {
     /// plus unconditionally at pool shutdown. Env:
     /// `AUTOSAGE_CACHE_FLUSH_MS`.
     pub cache_flush_ms: usize,
+    /// Trace head-sampling rate in [0, 1]: the fraction of trace ids
+    /// the flight recorder keeps during serving. Deterministic under
+    /// the run seed. Env: `AUTOSAGE_TRACE_SAMPLE`.
+    pub trace_sample: f64,
+    /// Flight-recorder ring-buffer capacity in spans (0 = unbounded).
+    /// Env: `AUTOSAGE_TRACE_RING`.
+    pub trace_ring: usize,
+    /// Periodic trace-flush throttle in ms (0 = flush only at run
+    /// end). Env: `AUTOSAGE_TRACE_FLUSH_MS`.
+    pub trace_flush_ms: usize,
 }
 
 impl Default for Config {
@@ -87,6 +100,9 @@ impl Default for Config {
             serve_batch_max: 16,
             serve_batch_window_us: 0,
             cache_flush_ms: 2000,
+            trace_sample: 1.0,
+            trace_ring: 0,
+            trace_flush_ms: 0,
         }
     }
 }
@@ -121,6 +137,9 @@ impl Config {
                 d.serve_batch_window_us,
             )?,
             cache_flush_ms: env_usize("AUTOSAGE_CACHE_FLUSH_MS", d.cache_flush_ms)?,
+            trace_sample: env_f64("AUTOSAGE_TRACE_SAMPLE", d.trace_sample)?,
+            trace_ring: env_usize("AUTOSAGE_TRACE_RING", d.trace_ring)?,
+            trace_flush_ms: env_usize("AUTOSAGE_TRACE_FLUSH_MS", d.trace_flush_ms)?,
         })
     }
 
@@ -153,6 +172,12 @@ impl Config {
         }
         if self.serve_queue_depth == 0 || self.serve_batch_max == 0 {
             return Err("serve queue depth and batch size must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.trace_sample) {
+            return Err(format!(
+                "AUTOSAGE_TRACE_SAMPLE must be in [0, 1]; got {}",
+                self.trace_sample
+            ));
         }
         Ok(())
     }
@@ -218,6 +243,27 @@ mod tests {
         assert!(c.serve_workers >= 1);
         assert!(c.serve_queue_depth >= 1);
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_trace_sample() {
+        let mut c = Config::default();
+        c.trace_sample = 1.5;
+        assert!(c.validate().is_err());
+        c.trace_sample = -0.1;
+        assert!(c.validate().is_err());
+        for ok in [0.0, 0.1, 1.0] {
+            c.trace_sample = ok;
+            assert!(c.validate().is_ok(), "{ok}");
+        }
+    }
+
+    #[test]
+    fn trace_defaults_keep_everything_and_never_drop() {
+        let c = Config::default();
+        assert_eq!(c.trace_sample, 1.0);
+        assert_eq!(c.trace_ring, 0);
+        assert_eq!(c.trace_flush_ms, 0);
     }
 
     #[test]

@@ -61,6 +61,30 @@ impl AutoSage {
         self.scheduler.trace_ctx = ctx;
     }
 
+    /// Attach (or detach) the unified metrics registry: subsequent
+    /// `decide` calls count decision outcomes (source, variant, probes,
+    /// guardrail fallbacks) into it.
+    pub fn set_metrics(
+        &mut self,
+        m: Option<std::sync::Arc<crate::obs::metrics::MetricsRegistry>>,
+    ) {
+        self.scheduler.metrics = m;
+    }
+
+    /// Roofline-predicted execution time in milliseconds of `variant`
+    /// on `g` — the "predicted" side of the estimate-accuracy audit
+    /// (`audit.jsonl`). `None` when no fitting full-size artifact
+    /// exists or the device model cannot score it.
+    pub fn estimate_ms(&self, g: &Csr, op: Op, f: usize, variant: &str) -> Option<f64> {
+        let entry = self
+            .scheduler
+            .select_entry(&self.manifest, g, op, f, variant)
+            .ok()?;
+        let feats = crate::scheduler::InputFeatures::extract(g, f);
+        crate::scheduler::estimate::estimate_entry(entry, &feats, &self.scheduler.dev_model)
+            .map(|e| e.score * 1e3)
+    }
+
     /// Short id of the active backend ("native" | "pjrt").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()

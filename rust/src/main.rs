@@ -17,6 +17,8 @@
 //!                      [--presets er_s,file:g.asg] [--ops spmm,sddmm,attention]
 //! autosage manifest validate <manifest.json>
 //! autosage perf     compare <baseline.json> <candidate.json>
+//! autosage metrics  validate|show <metrics.prom>
+//! autosage obs      report <dir>
 //! ```
 //!
 //! Everywhere a graph is named, the spec grammar is `PRESET` or
@@ -133,6 +135,8 @@ fn real_main() -> Result<()> {
         "serve-bench" => cmd_serve_bench(&args),
         "manifest" => cmd_manifest(&args),
         "perf" => cmd_perf(&args),
+        "metrics" => cmd_metrics(&args),
+        "obs" => cmd_obs(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -162,9 +166,12 @@ fn print_usage() {
          \x20 serve-bench [--smoke] [--workers K] [--clients N] [--requests M]\n\
          \x20             [--presets a,b] [--ops spmm,sddmm,attention] [--f F]\n\
          \x20             [--seed N] [--cache FILE] [--out DIR]\n\
-         \x20             (--out also writes trace.jsonl, perf.json, manifest.json)\n\
+         \x20             (--out also writes trace.jsonl, metrics.prom, audit.jsonl,\n\
+         \x20              perf.json, manifest.json; see AUTOSAGE_TRACE_* in config)\n\
          \x20 manifest validate <manifest.json>\n\
          \x20 perf    compare <baseline.json> <candidate.json>\n\
+         \x20 metrics validate|show <metrics.prom>\n\
+         \x20 obs     report <DIR>  (stage latencies + estimate-accuracy audit)\n\
          graph specs G: a preset <{presets}>\n\
          \x20             or file:PATH (.asg | .mtx | edge list .txt/.csv);\n\
          \x20             --preset NAME remains an alias for presets\n\
@@ -655,17 +662,38 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             .map(|s| Op::parse(s).ok_or_else(|| anyhow!("unknown op {s:?}")))
             .collect::<Result<Vec<_>>>()?;
     }
-    // The flight recorder only runs when the spans have somewhere to
-    // land: `--out DIR` gets trace.jsonl + perf.json + manifest.json
-    // next to the serving CSV.
+    // The flight recorder and metrics registry only run when their
+    // artifacts have somewhere to land: `--out DIR` gets trace.jsonl +
+    // metrics.prom + audit.jsonl + perf.json + manifest.json next to
+    // the serving CSV. Sampling/ring/flush shape comes from the
+    // AUTOSAGE_TRACE_* knobs; the sampling hash is seeded by `--seed`
+    // so reruns keep the identical sampled trace-id set.
     let run_id = obs::trace::new_run_id("serve-bench");
-    let recorder = args
+    let recorder = args.get("out").map(|_| {
+        std::sync::Arc::new(
+            obs::trace::Recorder::with_sampling(&run_id, cfg.trace_sample, spec.seed)
+                .with_capacity(cfg.trace_ring),
+        )
+    });
+    let registry = args
         .get("out")
-        .map(|_| std::sync::Arc::new(obs::trace::Recorder::new(&run_id)));
-    let pool = std::sync::Arc::new(ServerPool::spawn_traced(
+        .map(|_| std::sync::Arc::new(obs::metrics::MetricsRegistry::new()));
+    if let (Some(rec), Some(dir)) = (&recorder, args.get("out")) {
+        if cfg.trace_flush_ms > 0 {
+            let dir = Path::new(dir);
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating --out dir {}", dir.display()))?;
+            rec.set_auto_flush(
+                dir.join("trace.jsonl"),
+                std::time::Duration::from_millis(cfg.trace_flush_ms as u64),
+            );
+        }
+    }
+    let pool = std::sync::Arc::new(ServerPool::spawn_observed(
         artifacts_dir(args),
         cfg.clone(),
         recorder.clone(),
+        registry.clone(),
     )?);
     let report = run_load_traced(std::sync::Arc::clone(&pool), &spec, recorder.clone())?;
     println!("{}", report.text);
@@ -681,6 +709,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         )?;
         if let Some(rec) = &recorder {
             rec.flush_jsonl(&dir.join("trace.jsonl"))?;
+        }
+        if let Some(reg) = &registry {
+            let snap = autosage::server::prometheus_snapshot(
+                reg,
+                Some(pool.metrics()),
+                recorder.as_deref(),
+            );
+            std::fs::write(dir.join("metrics.prom"), &snap)
+                .context("writing metrics.prom")?;
+            reg.write_audit_jsonl(&dir.join("audit.jsonl"))?;
         }
         report.perf_profile().save(&dir.join("perf.json"))?;
 
@@ -717,9 +755,14 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         if recorder.is_some() {
             m.add_artifact(dir, "trace.jsonl")?;
         }
+        if registry.is_some() {
+            m.add_artifact(dir, "metrics.prom")?;
+            m.add_artifact(dir, "audit.jsonl")?;
+        }
         let mpath = m.write(dir)?;
         println!(
-            "[written to {}/serve_bench.{{csv,csv.meta.json}} + trace.jsonl, perf.json, {}]",
+            "[written to {}/serve_bench.{{csv,csv.meta.json}} + trace.jsonl, \
+             metrics.prom, audit.jsonl, perf.json, {}]",
             dir.display(),
             mpath.display()
         );
@@ -790,6 +833,55 @@ fn cmd_perf(args: &Args) -> Result<()> {
             Ok(())
         }
         other => bail!("unknown perf action {other:?} (compare)"),
+    }
+}
+
+/// `autosage metrics`: Prometheus-snapshot verbs.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .context("metrics action: validate|show <metrics.prom>")?;
+    let p = args
+        .positional
+        .get(1)
+        .with_context(|| format!("usage: metrics {action} <metrics.prom>"))?;
+    let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+    match action.as_str() {
+        "validate" => {
+            let snap = obs::metrics::validate_serving_snapshot(&text)
+                .with_context(|| format!("validating {p}"))?;
+            println!("metrics OK: {p} ({} series, all required present)", snap.len());
+            Ok(())
+        }
+        "show" => {
+            let snap = obs::metrics::parse_prometheus(&text)?;
+            for (name, value) in &snap {
+                println!("{name} = {value}");
+            }
+            Ok(())
+        }
+        other => bail!("unknown metrics action {other:?} (validate|show)"),
+    }
+}
+
+/// `autosage obs`: offline observability reports over run artifacts.
+fn cmd_obs(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .context("obs action: report <dir>")?;
+    match action.as_str() {
+        "report" => {
+            let dir = args
+                .positional
+                .get(1)
+                .context("usage: obs report <dir> (a serve-bench --out directory)")?;
+            let text = obs::report::report_dir(Path::new(dir))?;
+            print!("{text}");
+            Ok(())
+        }
+        other => bail!("unknown obs action {other:?} (report)"),
     }
 }
 

@@ -1,0 +1,528 @@
+//! Unified metrics registry: named counters / gauges / histograms with
+//! a Prometheus-style text exposition, plus the estimate-accuracy audit
+//! log — all zero-dep and lock-cheap (hot-path increments are relaxed
+//! atomics behind `Arc` handles; the registry maps are only locked to
+//! register or snapshot).
+//!
+//! Naming convention: `autosage_<subsystem>_<what>[_total]` with
+//! optional inline Prometheus labels, e.g.
+//! `autosage_scheduler_decisions_total{source="probe"}`. The full
+//! string (labels included) is the registry key; exposition groups
+//! label variants under one `# TYPE` line per family.
+//!
+//! Pool-wide latency percentiles MUST come from merging per-shard
+//! [`LatencyHistogram`]s bucket-wise ([`LatencyHistogram::merge_from`])
+//! — never from averaging per-shard quantiles, which has no statistical
+//! meaning (a shard with 3 slow requests would weigh as much as one
+//! with 30 000 fast ones).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Histogram bucket count: 40 log2 buckets cover 1 µs .. ~9 minutes.
+pub const N_BUCKETS: usize = 40;
+
+/// Log2-bucketed latency histogram. Bucket `b` counts samples in
+/// `[2^b, 2^(b+1))` microseconds; quantiles report the geometric
+/// midpoint of the bucket holding the q-th sample (≤ ~50% relative
+/// error, which is plenty for p50/p95/p99 monitoring without locks).
+/// Also keeps a running sum so exposition can report summary `_sum`.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(ms: f64) -> usize {
+        let us = (ms * 1000.0).max(1.0) as u64;
+        ((63 - us.leading_zeros()) as usize).min(N_BUCKETS - 1)
+    }
+
+    pub fn record_ms(&self, ms: f64) {
+        self.buckets[Self::bucket_of(ms)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us
+            .fetch_add((ms.max(0.0) * 1000.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of recorded values in milliseconds (µs-truncated).
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+
+    /// Latency quantile estimate in milliseconds (0.0 when empty).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            cum += bucket.load(Ordering::Relaxed);
+            if cum >= rank {
+                return (1u64 << b) as f64 * 1.5 / 1000.0;
+            }
+        }
+        (1u64 << (N_BUCKETS - 1)) as f64 * 1.5 / 1000.0
+    }
+
+    /// Bucket-wise accumulate `other` into `self`. This is the ONLY
+    /// correct way to derive pool-level quantiles from per-shard
+    /// histograms: the merged distribution weighs every sample equally,
+    /// where averaging per-shard quantiles would weigh shards equally
+    /// regardless of how many samples each saw.
+    pub fn merge_from(&self, other: &LatencyHistogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Overwrite `self` with `other`'s contents (bucket-wise store).
+    /// Used to mirror a live histogram into a registry snapshot
+    /// idempotently — repeated mirrors must not accumulate.
+    pub fn store_from(&self, other: &LatencyHistogram) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sum_us
+            .store(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Merge an iterator of histograms into one fresh histogram.
+    pub fn merged<'a>(parts: impl IntoIterator<Item = &'a LatencyHistogram>) -> LatencyHistogram {
+        let out = LatencyHistogram::new();
+        for h in parts {
+            out.merge_from(h);
+        }
+        out
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One estimate-vs-measured observation for the calibration audit:
+/// what the roofline model predicted for the chosen variant vs what the
+/// backend actually took, keyed by op, variant, and a coarse
+/// `InputFeatures` bucket (log2 rows / log2 nnz / F).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditSample {
+    pub op: String,
+    pub variant: String,
+    pub bucket: String,
+    pub predicted_ms: f64,
+    pub measured_ms: f64,
+}
+
+impl AuditSample {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str(&self.op)),
+            ("variant", Json::str(&self.variant)),
+            ("bucket", Json::str(&self.bucket)),
+            ("predicted_ms", Json::num(self.predicted_ms)),
+            ("measured_ms", Json::num(self.measured_ms)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<AuditSample> {
+        Some(AuditSample {
+            op: j.get("op").as_str()?.to_string(),
+            variant: j.get("variant").as_str()?.to_string(),
+            bucket: j.get("bucket").as_str()?.to_string(),
+            predicted_ms: j.get("predicted_ms").as_f64()?,
+            measured_ms: j.get("measured_ms").as_f64()?,
+        })
+    }
+}
+
+/// Coarse feature bucket used as the audit key: log2(rows), log2(nnz),
+/// and the dense feature width. Stable, low-cardinality, and derivable
+/// from any graph without a full `InputFeatures::extract`.
+pub fn feature_bucket(n_rows: usize, nnz: usize, f: usize) -> String {
+    fn log2_floor(x: usize) -> u32 {
+        63 - (x.max(1) as u64).leading_zeros()
+    }
+    format!("r2^{}|z2^{}|F{}", log2_floor(n_rows), log2_floor(nnz), f)
+}
+
+/// Cap on buffered audit samples; beyond it new samples are dropped and
+/// counted (`autosage_audit_dropped_total`) — the audit loop must never
+/// become an unbounded memory leak in a long serve run.
+const AUDIT_CAP: usize = 65_536;
+
+/// Process-wide metrics registry. Cheap to share (`Arc`), cheap to
+/// update (handles are `Arc<AtomicU64>` / `Arc<LatencyHistogram>`), and
+/// snapshot-rendered into Prometheus text exposition on demand.
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    /// Gauges store `f64::to_bits` so one atomic word carries floats.
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<LatencyHistogram>>>,
+    audit: Mutex<Vec<AuditSample>>,
+    audit_dropped: AtomicU64,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+            audit: Mutex::new(Vec::new()),
+            audit_dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+        m.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Register-or-get a counter handle. Callers on hot paths should
+    /// cache the returned `Arc` instead of re-resolving by name.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        Self::lock(&self.counters)
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Increment a counter by `v`.
+    pub fn add(&self, name: &str, v: u64) {
+        self.counter(name).fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Overwrite a counter with an externally-maintained total (used to
+    /// mirror counters owned by other subsystems into the exposition).
+    pub fn set_counter(&self, name: &str, v: u64) {
+        self.counter(name).store(v, Ordering::Relaxed);
+    }
+
+    /// Set a gauge to a float value.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        Self::lock(&self.gauges)
+            .entry(name.to_string())
+            .or_default()
+            .store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Register-or-get a histogram handle.
+    pub fn histogram(&self, name: &str) -> Arc<LatencyHistogram> {
+        Self::lock(&self.histograms)
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(LatencyHistogram::new()))
+            .clone()
+    }
+
+    /// Record one estimate-vs-measured audit observation. Bounded: past
+    /// [`AUDIT_CAP`] samples are dropped and counted.
+    pub fn record_audit(&self, s: AuditSample) {
+        let mut buf = Self::lock(&self.audit);
+        if buf.len() >= AUDIT_CAP {
+            drop(buf);
+            self.audit_dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        buf.push(s);
+    }
+
+    pub fn audit_snapshot(&self) -> Vec<AuditSample> {
+        Self::lock(&self.audit).clone()
+    }
+
+    pub fn audit_dropped(&self) -> u64 {
+        self.audit_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Write the buffered audit samples as JSONL (one object per line).
+    pub fn write_audit_jsonl(&self, path: &Path) -> Result<usize> {
+        let samples = self.audit_snapshot();
+        let mut out = String::new();
+        for s in &samples {
+            out.push_str(&s.to_json().to_string());
+            out.push('\n');
+        }
+        std::fs::write(path, &out)
+            .with_context(|| format!("writing audit JSONL {}", path.display()))?;
+        Ok(samples.len())
+    }
+
+    /// Prometheus text exposition of everything registered, sorted by
+    /// name (label variants of one family share a `# TYPE` line).
+    /// Histograms render as summaries: `{quantile=...}` + `_count` +
+    /// `_sum` (sum in milliseconds, like the quantiles).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_family = String::new();
+        let mut type_line = |out: &mut String, name: &str, kind: &str| {
+            let family = family_of(name).to_string();
+            if family != last_family {
+                out.push_str(&format!("# TYPE {family} {kind}\n"));
+                last_family = family;
+            }
+        };
+        for (name, v) in Self::lock(&self.counters).iter() {
+            type_line(&mut out, name, "counter");
+            out.push_str(&format!("{name} {}\n", v.load(Ordering::Relaxed)));
+        }
+        let dropped = self.audit_dropped.load(Ordering::Relaxed);
+        if dropped > 0 {
+            out.push_str("# TYPE autosage_audit_dropped_total counter\n");
+            out.push_str(&format!("autosage_audit_dropped_total {dropped}\n"));
+        }
+        for (name, v) in Self::lock(&self.gauges).iter() {
+            type_line(&mut out, name, "gauge");
+            out.push_str(&format!(
+                "{name} {}\n",
+                fmt_f64(f64::from_bits(v.load(Ordering::Relaxed)))
+            ));
+        }
+        for (name, h) in Self::lock(&self.histograms).iter() {
+            type_line(&mut out, name, "summary");
+            for q in [0.5, 0.95, 0.99] {
+                out.push_str(&format!(
+                    "{name}{{quantile=\"{q}\"}} {}\n",
+                    fmt_f64(h.quantile_ms(q))
+                ));
+            }
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+            out.push_str(&format!("{name}_sum {}\n", fmt_f64(h.sum_ms())));
+        }
+        out
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Family name = series name with any `{labels}` suffix stripped.
+fn family_of(name: &str) -> &str {
+    name.split('{').next().unwrap_or(name)
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// One parsed exposition snapshot: series name (labels included) → value.
+pub type PromSnapshot = BTreeMap<String, f64>;
+
+/// Parse Prometheus text exposition. Rejects lines that are neither
+/// comments nor `name[{labels}] value` pairs, duplicate series, and
+/// non-numeric values — enough validation for `autosage metrics
+/// validate` to catch a corrupted or truncated snapshot.
+pub fn parse_prometheus(text: &str) -> Result<PromSnapshot> {
+    let mut out = PromSnapshot::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // Labels may contain spaces inside quotes; the value is the
+        // last whitespace-separated token after the name/labels part.
+        let split_at = match line.find('{') {
+            Some(b) => {
+                let close = line[b..]
+                    .find('}')
+                    .map(|c| b + c + 1)
+                    .with_context(|| format!("line {}: unterminated labels", i + 1))?;
+                close
+            }
+            None => line
+                .find(char::is_whitespace)
+                .with_context(|| format!("line {}: missing value", i + 1))?,
+        };
+        let (name, rest) = line.split_at(split_at);
+        let name = name.trim();
+        let value: f64 = rest
+            .trim()
+            .parse()
+            .with_context(|| format!("line {}: bad value {:?}", i + 1, rest.trim()))?;
+        if name.is_empty() || !family_of(name).chars().all(|c| c.is_alphanumeric() || c == '_') {
+            bail!("line {}: bad series name {:?}", i + 1, name);
+        }
+        if out.insert(name.to_string(), value).is_some() {
+            bail!("line {}: duplicate series {:?}", i + 1, name);
+        }
+    }
+    Ok(out)
+}
+
+/// Series every serving snapshot must carry: the drop/overflow counters
+/// (satellite requirement) and the merged-histogram pool percentiles.
+pub const REQUIRED_SERVING_SERIES: &[&str] = &[
+    "autosage_traces_sampled_out_total",
+    "autosage_spans_dropped_total",
+    "autosage_pool_latency_ms{quantile=\"0.5\"}",
+    "autosage_pool_latency_ms{quantile=\"0.95\"}",
+    "autosage_pool_latency_ms{quantile=\"0.99\"}",
+    "autosage_pool_requests_total",
+];
+
+/// Validate a serving `metrics.prom` snapshot: well-formed exposition
+/// text that carries every [`REQUIRED_SERVING_SERIES`]. Returns the
+/// parsed snapshot for further inspection.
+pub fn validate_serving_snapshot(text: &str) -> Result<PromSnapshot> {
+    let snap = parse_prometheus(text)?;
+    for required in REQUIRED_SERVING_SERIES {
+        if !snap.contains_key(*required) {
+            bail!("metrics snapshot is missing required series {required}");
+        }
+    }
+    Ok(snap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_merge_is_bucket_wise_not_quantile_average() {
+        // Skewed shards: shard A has 900 fast samples, shard B has 10
+        // slow ones. The merged p50 must stay fast (the pool really did
+        // serve mostly-fast requests); max / average of per-shard p50s
+        // would both report a slow pool.
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        for _ in 0..900 {
+            a.record_ms(1.0);
+        }
+        for _ in 0..10 {
+            b.record_ms(100.0);
+        }
+        let merged = LatencyHistogram::merged([&a, &b]);
+        assert_eq!(merged.count(), 910);
+        let p50 = merged.quantile_ms(0.5);
+        let p99 = merged.quantile_ms(0.99);
+        assert!(p50 < 2.0, "merged p50 {p50} must stay near 1ms");
+        assert!(p99 > 50.0, "merged p99 {p99} must see the slow tail");
+        let avg_p50 = (a.quantile_ms(0.5) + b.quantile_ms(0.5)) / 2.0;
+        let max_p50 = a.quantile_ms(0.5).max(b.quantile_ms(0.5));
+        assert!(p50 < avg_p50, "merged {p50} vs avg {avg_p50}");
+        assert!(p50 < max_p50, "merged {p50} vs max {max_p50}");
+    }
+
+    #[test]
+    fn histogram_sum_accumulates_and_merges() {
+        let a = LatencyHistogram::new();
+        a.record_ms(2.0);
+        a.record_ms(3.0);
+        assert!((a.sum_ms() - 5.0).abs() < 0.01);
+        let b = LatencyHistogram::new();
+        b.record_ms(1.0);
+        b.merge_from(&a);
+        assert_eq!(b.count(), 3);
+        assert!((b.sum_ms() - 6.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn registry_counters_gauges_histograms_render() {
+        let reg = MetricsRegistry::new();
+        reg.inc("autosage_test_total{kind=\"a\"}");
+        reg.add("autosage_test_total{kind=\"b\"}", 4);
+        reg.set_gauge("autosage_depth", 2.5);
+        reg.histogram("autosage_lat_ms").record_ms(1.0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE autosage_test_total counter\n"));
+        assert!(text.contains("autosage_test_total{kind=\"a\"} 1\n"));
+        assert!(text.contains("autosage_test_total{kind=\"b\"} 4\n"));
+        // One TYPE line for the whole family, not one per label variant.
+        assert_eq!(text.matches("# TYPE autosage_test_total").count(), 1);
+        assert!(text.contains("autosage_depth 2.5\n"));
+        assert!(text.contains("autosage_lat_ms{quantile=\"0.5\"}"));
+        assert!(text.contains("autosage_lat_ms_count 1\n"));
+        let parsed = parse_prometheus(&text).unwrap();
+        assert_eq!(parsed["autosage_test_total{kind=\"b\"}"], 4.0);
+        assert_eq!(parsed["autosage_depth"], 2.5);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_snapshots() {
+        assert!(parse_prometheus("just words no value").is_err());
+        assert!(parse_prometheus("name notanumber").is_err());
+        assert!(parse_prometheus("a 1\na 2").is_err(), "duplicate series");
+        assert!(parse_prometheus("bad-name 1").is_err());
+        assert!(parse_prometheus("open{label=\"x 1").is_err());
+        let ok = parse_prometheus("# comment\n\nx_total 3\ny{q=\"0.5\"} 1.25\n").unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok["y{q=\"0.5\"}"], 1.25);
+    }
+
+    #[test]
+    fn serving_snapshot_validation_requires_drop_counters_and_pool_quantiles() {
+        let reg = MetricsRegistry::new();
+        reg.set_counter("autosage_traces_sampled_out_total", 3);
+        reg.set_counter("autosage_spans_dropped_total", 0);
+        reg.set_counter("autosage_pool_requests_total", 16);
+        let text = reg.render_prometheus();
+        assert!(
+            validate_serving_snapshot(&text).is_err(),
+            "must fail without pool latency quantiles"
+        );
+        reg.histogram("autosage_pool_latency_ms").record_ms(1.0);
+        let snap = validate_serving_snapshot(&reg.render_prometheus()).unwrap();
+        assert_eq!(snap["autosage_traces_sampled_out_total"], 3.0);
+    }
+
+    #[test]
+    fn audit_log_is_bounded_and_round_trips_json() {
+        let reg = MetricsRegistry::new();
+        let s = AuditSample {
+            op: "spmm".into(),
+            variant: "ell_tile".into(),
+            bucket: feature_bucket(1000, 8000, 64),
+            predicted_ms: 1.5,
+            measured_ms: 2.0,
+        };
+        reg.record_audit(s.clone());
+        let snap = reg.audit_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].bucket, "r2^9|z2^12|F64");
+        let back = AuditSample::from_json(&Json::parse(&s.to_json().to_string()).unwrap());
+        assert_eq!(back, Some(s));
+        assert_eq!(reg.audit_dropped(), 0);
+    }
+
+    #[test]
+    fn feature_bucket_is_log2_coarse() {
+        assert_eq!(feature_bucket(1, 1, 8), "r2^0|z2^0|F8");
+        assert_eq!(feature_bucket(1024, 1_000_000, 64), "r2^10|z2^19|F64");
+        assert_eq!(feature_bucket(0, 0, 1), "r2^0|z2^0|F1");
+    }
+}

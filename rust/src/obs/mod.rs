@@ -1,11 +1,21 @@
 //! Flight recorder: observability for scheduling decisions and runs.
 //!
-//! Three layers, all dependency-free:
+//! Five layers, all dependency-free:
 //! * [`trace`] — structured spans (trace id, span id, parent link,
 //!   microsecond offsets from a per-run epoch) recorded in memory and
 //!   flushed as JSONL keyed by `run_id`. Threaded through the serve
 //!   pool (queue wait → coalesce → execute → reply) and the scheduler
-//!   (estimate → probe → guardrail, cache hit/miss).
+//!   (estimate → probe → guardrail, cache hit/miss). Production mode:
+//!   head-based trace sampling (`AUTOSAGE_TRACE_SAMPLE`), ring-buffer
+//!   bounding with drop counters, and throttled incremental flush.
+//! * [`metrics`] — the unified metrics registry: named counters /
+//!   gauges / histograms per subsystem, merged-histogram pool
+//!   percentiles, Prometheus-style text exposition (`metrics.prom`,
+//!   `autosage metrics`), and the estimate-accuracy audit log
+//!   (`audit.jsonl`).
+//! * [`report`] — `autosage obs report`: aggregates trace + audit +
+//!   metrics artifacts into a stage-latency breakdown and a
+//!   per-variant roofline-calibration table.
 //! * [`manifest`] — versioned run manifests: every `bench` /
 //!   `serve-bench` run with `--out` emits `manifest.json` capturing the
 //!   run id, seed, env toggles, device signature, graph checksums,
@@ -16,9 +26,12 @@
 //!   checked-in `benchmarks/BENCH_*.json` trajectory.
 
 pub mod manifest;
+pub mod metrics;
 pub mod perf;
+pub mod report;
 pub mod trace;
 
 pub use manifest::{RunManifest, ValidationReport, MANIFEST_SCHEMA_VERSION};
+pub use metrics::{AuditSample, LatencyHistogram, MetricsRegistry};
 pub use perf::{compare, CompareReport, Direction, PerfProfile, Verdict};
 pub use trace::{new_run_id, Recorder, SpanRecord, TraceCtx, TraceId};

@@ -1,0 +1,354 @@
+//! `autosage obs report` — offline aggregation of the observability
+//! artifacts a `serve-bench --out DIR` run leaves behind:
+//!
+//! * `trace.jsonl`  → stage-latency breakdown (count / mean / max per
+//!   span name, in the pipeline's canonical stage order).
+//! * `audit.jsonl`  → per-(op, variant) calibration-error table for the
+//!   roofline estimates: mean/max relative error and sign bias of
+//!   predicted vs measured execution time. This table is the direct
+//!   input to the ROADMAP's learned-scheduler (`autosage train`) item.
+//! * `metrics.prom` → key serving counters echoed for context
+//!   (sampling drops, pool percentiles).
+//!
+//! Every artifact is optional — the report covers whatever exists and
+//! says what it skipped — but reporting on a directory with none of
+//! them is an error.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use crate::obs::metrics::{parse_prometheus, AuditSample};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Canonical pipeline order for the stage breakdown; unknown span names
+/// sort after these, alphabetically.
+const STAGE_ORDER: &[&str] = &[
+    "request",
+    "queue",
+    "schedule",
+    "cache_hit",
+    "cache_miss",
+    "estimate",
+    "probe",
+    "guardrail",
+    "execute",
+    "reply",
+    "warn",
+];
+
+fn stage_rank(name: &str) -> usize {
+    STAGE_ORDER
+        .iter()
+        .position(|s| *s == name)
+        .unwrap_or(STAGE_ORDER.len())
+}
+
+/// Aggregated timing for one span name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageStat {
+    pub name: String,
+    pub count: u64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Parse a `trace.jsonl` body into per-stage stats plus the distinct
+/// trace-id count (excluding the synthetic trace 0 used by warns).
+pub fn stage_breakdown(trace_jsonl: &str) -> Result<(Vec<StageStat>, usize)> {
+    struct Acc {
+        count: u64,
+        sum_us: f64,
+        max_us: f64,
+    }
+    let mut by_name: BTreeMap<String, Acc> = BTreeMap::new();
+    let mut traces: BTreeSet<String> = BTreeSet::new();
+    for (i, line) in trace_jsonl.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("trace.jsonl line {}", i + 1))?;
+        let name = j
+            .get("name")
+            .as_str()
+            .with_context(|| format!("trace.jsonl line {}: missing name", i + 1))?
+            .to_string();
+        let dur = j.get("dur_us").as_f64().unwrap_or(0.0);
+        if let Some(t) = j.get("trace").as_str() {
+            if t != "0000000000000000" {
+                traces.insert(t.to_string());
+            }
+        }
+        let a = by_name.entry(name).or_insert(Acc {
+            count: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+        });
+        a.count += 1;
+        a.sum_us += dur;
+        a.max_us = a.max_us.max(dur);
+    }
+    let mut stats: Vec<StageStat> = by_name
+        .into_iter()
+        .map(|(name, a)| StageStat {
+            name,
+            count: a.count,
+            mean_ms: a.sum_us / a.count.max(1) as f64 / 1000.0,
+            max_ms: a.max_us / 1000.0,
+        })
+        .collect();
+    stats.sort_by(|a, b| {
+        stage_rank(&a.name)
+            .cmp(&stage_rank(&b.name))
+            .then(a.name.cmp(&b.name))
+    });
+    Ok((stats, traces.len()))
+}
+
+/// One row of the calibration table: how well the roofline estimate
+/// predicted measured execution time for (op, variant).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationRow {
+    pub op: String,
+    pub variant: String,
+    /// Distinct `InputFeatures` buckets contributing samples.
+    pub buckets: usize,
+    pub n: u64,
+    /// Mean of |predicted - measured| / measured.
+    pub mean_rel_err: f64,
+    /// Max of |predicted - measured| / measured.
+    pub max_rel_err: f64,
+    /// Mean of (predicted - measured) / measured: positive ⇒ the model
+    /// overestimates cost, negative ⇒ underestimates.
+    pub sign_bias: f64,
+}
+
+/// Parse an `audit.jsonl` body into per-(op, variant) calibration rows.
+/// Samples with non-positive measured time are skipped (a relative
+/// error against ~0 is noise, not signal).
+pub fn calibration_table(audit_jsonl: &str) -> Result<Vec<CalibrationRow>> {
+    struct Acc {
+        buckets: BTreeSet<String>,
+        n: u64,
+        sum_abs: f64,
+        max_abs: f64,
+        sum_signed: f64,
+    }
+    let mut by_key: BTreeMap<(String, String), Acc> = BTreeMap::new();
+    for (i, line) in audit_jsonl.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("audit.jsonl line {}", i + 1))?;
+        let s = AuditSample::from_json(&j)
+            .with_context(|| format!("audit.jsonl line {}: not an audit sample", i + 1))?;
+        if s.measured_ms <= 0.0 {
+            continue;
+        }
+        let rel = (s.predicted_ms - s.measured_ms) / s.measured_ms;
+        let a = by_key.entry((s.op, s.variant)).or_insert(Acc {
+            buckets: BTreeSet::new(),
+            n: 0,
+            sum_abs: 0.0,
+            max_abs: 0.0,
+            sum_signed: 0.0,
+        });
+        a.buckets.insert(s.bucket);
+        a.n += 1;
+        a.sum_abs += rel.abs();
+        a.max_abs = a.max_abs.max(rel.abs());
+        a.sum_signed += rel;
+    }
+    Ok(by_key
+        .into_iter()
+        .map(|((op, variant), a)| CalibrationRow {
+            op,
+            variant,
+            buckets: a.buckets.len(),
+            n: a.n,
+            mean_rel_err: a.sum_abs / a.n.max(1) as f64,
+            max_rel_err: a.max_abs,
+            sign_bias: a.sum_signed / a.n.max(1) as f64,
+        })
+        .collect())
+}
+
+fn render_stage_table(stats: &[StageStat], n_traces: usize, out: &mut String) {
+    out.push_str(&format!("stage latency breakdown ({n_traces} traces)\n"));
+    out.push_str(&format!(
+        "{:<12} {:>8} {:>12} {:>12}\n",
+        "stage", "count", "mean_ms", "max_ms"
+    ));
+    out.push_str(&"-".repeat(48));
+    out.push('\n');
+    for s in stats {
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>12.3} {:>12.3}\n",
+            s.name, s.count, s.mean_ms, s.max_ms
+        ));
+    }
+}
+
+fn render_calibration_table(rows: &[CalibrationRow], out: &mut String) {
+    out.push_str("estimate calibration (roofline predicted vs measured execute)\n");
+    out.push_str(&format!(
+        "{:<10} {:<16} {:>8} {:>8} {:>12} {:>12} {:>10}\n",
+        "op", "variant", "buckets", "n", "mean_rel", "max_rel", "bias"
+    ));
+    out.push_str(&"-".repeat(82));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!(
+            "{:<10} {:<16} {:>8} {:>8} {:>12.3} {:>12.3} {:>+10.3}\n",
+            r.op, r.variant, r.buckets, r.n, r.mean_rel_err, r.max_rel_err, r.sign_bias
+        ));
+    }
+}
+
+/// Aggregate the observability artifacts under `dir` into a human
+/// report. Missing artifacts are noted and skipped; at least one of
+/// `trace.jsonl` / `audit.jsonl` / `metrics.prom` must exist.
+pub fn report_dir(dir: &Path) -> Result<String> {
+    let mut out = String::new();
+    let mut found = 0;
+    out.push_str(&format!("== obs report: {} ==\n", dir.display()));
+
+    let trace_path = dir.join("trace.jsonl");
+    if trace_path.exists() {
+        found += 1;
+        let text = std::fs::read_to_string(&trace_path)
+            .with_context(|| format!("reading {}", trace_path.display()))?;
+        let (stats, n_traces) = stage_breakdown(&text)?;
+        out.push('\n');
+        render_stage_table(&stats, n_traces, &mut out);
+    } else {
+        out.push_str("\n(no trace.jsonl — skipping stage breakdown)\n");
+    }
+
+    let audit_path = dir.join("audit.jsonl");
+    if audit_path.exists() {
+        found += 1;
+        let text = std::fs::read_to_string(&audit_path)
+            .with_context(|| format!("reading {}", audit_path.display()))?;
+        let rows = calibration_table(&text)?;
+        out.push('\n');
+        if rows.is_empty() {
+            out.push_str("estimate calibration: no usable audit samples\n");
+        } else {
+            render_calibration_table(&rows, &mut out);
+        }
+    } else {
+        out.push_str("(no audit.jsonl — skipping calibration table)\n");
+    }
+
+    let prom_path = dir.join("metrics.prom");
+    if prom_path.exists() {
+        found += 1;
+        let text = std::fs::read_to_string(&prom_path)
+            .with_context(|| format!("reading {}", prom_path.display()))?;
+        let snap = parse_prometheus(&text)?;
+        out.push_str("\nkey serving metrics\n");
+        for key in [
+            "autosage_pool_requests_total",
+            "autosage_pool_rejected_total",
+            "autosage_pool_latency_ms{quantile=\"0.5\"}",
+            "autosage_pool_latency_ms{quantile=\"0.95\"}",
+            "autosage_pool_latency_ms{quantile=\"0.99\"}",
+            "autosage_traces_sampled_out_total",
+            "autosage_spans_dropped_total",
+        ] {
+            if let Some(v) = snap.get(key) {
+                out.push_str(&format!("  {key} = {v}\n"));
+            }
+        }
+    } else {
+        out.push_str("(no metrics.prom — skipping metrics echo)\n");
+    }
+
+    if found == 0 {
+        bail!(
+            "no observability artifacts (trace.jsonl / audit.jsonl / metrics.prom) under {}",
+            dir.display()
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span_line(trace: &str, name: &str, dur_us: u64) -> String {
+        format!(
+            "{{\"run_id\":\"t\",\"trace\":\"{trace}\",\"span\":\"1\",\"parent\":null,\
+             \"name\":\"{name}\",\"start_us\":0,\"dur_us\":{dur_us},\"attrs\":{{}}}}"
+        )
+    }
+
+    #[test]
+    fn stage_breakdown_aggregates_in_pipeline_order() {
+        let text = [
+            span_line("0000000000000001", "execute", 2000),
+            span_line("0000000000000001", "queue", 500),
+            span_line("0000000000000002", "execute", 4000),
+            span_line("0000000000000000", "warn", 0),
+        ]
+        .join("\n");
+        let (stats, n_traces) = stage_breakdown(&text).unwrap();
+        assert_eq!(n_traces, 2, "warn's trace 0 is not a real trace");
+        let names: Vec<&str> = stats.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["queue", "execute", "warn"], "canonical stage order");
+        let exec = &stats[1];
+        assert_eq!(exec.count, 2);
+        assert!((exec.mean_ms - 3.0).abs() < 1e-9);
+        assert!((exec.max_ms - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibration_table_computes_error_and_bias() {
+        let lines = [
+            // spmm/ell: predicted 2 vs measured 1 (+100%), 0.5 vs 1 (-50%)
+            r#"{"op":"spmm","variant":"ell","bucket":"b1","predicted_ms":2.0,"measured_ms":1.0}"#,
+            r#"{"op":"spmm","variant":"ell","bucket":"b2","predicted_ms":0.5,"measured_ms":1.0}"#,
+            // measured 0 rows are skipped
+            r#"{"op":"spmm","variant":"ell","bucket":"b1","predicted_ms":1.0,"measured_ms":0.0}"#,
+            r#"{"op":"sddmm","variant":"csr","bucket":"b1","predicted_ms":1.0,"measured_ms":1.0}"#,
+        ]
+        .join("\n");
+        let rows = calibration_table(&lines).unwrap();
+        assert_eq!(rows.len(), 2);
+        let ell = rows.iter().find(|r| r.variant == "ell").unwrap();
+        assert_eq!(ell.n, 2);
+        assert_eq!(ell.buckets, 2);
+        assert!((ell.mean_rel_err - 0.75).abs() < 1e-9, "(1.0 + 0.5) / 2");
+        assert!((ell.max_rel_err - 1.0).abs() < 1e-9);
+        assert!((ell.sign_bias - 0.25).abs() < 1e-9, "(+1.0 - 0.5) / 2");
+        let csr = rows.iter().find(|r| r.variant == "csr").unwrap();
+        assert_eq!(csr.mean_rel_err, 0.0);
+        assert_eq!(csr.sign_bias, 0.0);
+    }
+
+    #[test]
+    fn report_dir_requires_at_least_one_artifact() {
+        let dir = std::env::temp_dir().join(format!("autosage_obs_report_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(report_dir(&dir).is_err());
+        std::fs::write(
+            dir.join("audit.jsonl"),
+            r#"{"op":"spmm","variant":"ell","bucket":"b","predicted_ms":1.0,"measured_ms":2.0}"#,
+        )
+        .unwrap();
+        let text = report_dir(&dir).unwrap();
+        assert!(text.contains("estimate calibration"));
+        assert!(text.contains("spmm"));
+        assert!(text.contains("no trace.jsonl"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_artifact_lines_are_errors() {
+        assert!(stage_breakdown("not json").is_err());
+        assert!(calibration_table(r#"{"op":"spmm"}"#).is_err());
+    }
+}

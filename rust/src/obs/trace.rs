@@ -3,9 +3,26 @@
 //! A [`Recorder`] hands out trace ids (one per logical request) and span
 //! ids (one per unit of work), timestamps spans as microsecond offsets
 //! from its own creation instant (monotonic — wall clock never moves a
-//! span), and buffers [`SpanRecord`]s in memory. At the end of a run the
-//! buffer flushes as JSONL, one span per line, every line carrying the
-//! `run_id` so multiple runs can be concatenated and still separated.
+//! span), and buffers [`SpanRecord`]s in memory. Spans flush as JSONL,
+//! one span per line, every line carrying the `run_id` so multiple runs
+//! can be concatenated and still separated.
+//!
+//! Production shape (always-on tracing at serving scale):
+//! * **Head-based sampling** — [`Recorder::with_sampling`] keeps a
+//!   trace iff a seeded hash of its trace id lands under the sample
+//!   rate. Trace ids are allocated sequentially, so the *set* of
+//!   sampled ids for a given (seed, rate, request count) is a pure
+//!   function — deterministic across reruns regardless of thread
+//!   interleaving. Discards count in `traces_sampled_out`.
+//! * **Bounded buffering** — [`Recorder::with_capacity`] turns the span
+//!   buffer into a ring: oldest spans evict first, and evictions that
+//!   were never flushed count in `spans_dropped`.
+//! * **Incremental flush** — [`Recorder::flush_jsonl`] keeps a snapshot
+//!   cursor: the first flush writes the whole buffer, later flushes
+//!   append only spans recorded since (no duplicates, safe to call
+//!   concurrently with `record`). [`Recorder::set_auto_flush`] +
+//!   [`Recorder::maybe_flush`] add a CAS-throttled periodic flush for
+//!   long `serve-bench` runs instead of only at exit.
 //!
 //! Span names used by the engine:
 //! * `request` — loadgen root span (client side, submit → reply recv)
@@ -18,10 +35,12 @@
 //! * `reply` — zero-duration event when the response is sent
 //! * `warn` — demoted non-fatal errors (e.g. cache persist I/O)
 
+use std::collections::VecDeque;
+use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -69,33 +88,130 @@ pub struct SpanRecord {
     pub attrs: Vec<(String, String)>,
 }
 
+/// Span buffer with flush bookkeeping, guarded by one mutex so the
+/// flush cursor can never race a concurrent `record`.
+struct SpanBuf {
+    spans: VecDeque<SpanRecord>,
+    /// Absolute index (over all spans ever recorded) one past the last
+    /// span already written by `flush_jsonl`.
+    flushed: u64,
+    /// Count of spans evicted from the front of the ring.
+    evicted: u64,
+}
+
 /// Thread-safe span sink for one run.
 pub struct Recorder {
     run_id: String,
     epoch: Instant,
     next_trace: AtomicU64,
     next_span: AtomicU64,
-    spans: Mutex<Vec<SpanRecord>>,
+    buf: Mutex<SpanBuf>,
+    /// Ring capacity; 0 = unbounded.
+    capacity: usize,
+    /// Head-sampling rate in [0, 1] and the seed mixed into the hash.
+    sample_rate: f64,
+    sample_seed: u64,
+    /// Traces discarded by head sampling.
+    sampled_out: AtomicU64,
+    /// Spans evicted from the ring before ever being flushed.
+    dropped: AtomicU64,
+    /// Periodic-flush target: (path, interval). CAS on `last_flush_ms`
+    /// picks one flusher per interval, mirroring
+    /// `SharedScheduleCache::maybe_persist`.
+    flush_target: Mutex<Option<(PathBuf, Duration)>>,
+    last_flush_ms: AtomicU64,
 }
 
 impl Recorder {
+    /// Unbounded recorder that keeps every trace (sample rate 1.0).
     pub fn new(run_id: &str) -> Recorder {
+        Recorder::with_sampling(run_id, 1.0, 0)
+    }
+
+    /// Recorder with head-based trace sampling: a trace is kept iff
+    /// `mix64(seed, id) < rate * 2^64`. The sampled-id set is a pure
+    /// function of (seed, rate), independent of thread interleaving.
+    pub fn with_sampling(run_id: &str, rate: f64, seed: u64) -> Recorder {
         Recorder {
             run_id: run_id.to_string(),
             epoch: Instant::now(),
             next_trace: AtomicU64::new(1),
             next_span: AtomicU64::new(1),
-            spans: Mutex::new(Vec::new()),
+            buf: Mutex::new(SpanBuf {
+                spans: VecDeque::new(),
+                flushed: 0,
+                evicted: 0,
+            }),
+            capacity: 0,
+            sample_rate: rate.clamp(0.0, 1.0),
+            sample_seed: seed,
+            sampled_out: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            flush_target: Mutex::new(None),
+            last_flush_ms: AtomicU64::new(0),
         }
+    }
+
+    /// Builder: bound the span buffer to a ring of `cap` spans
+    /// (0 = unbounded). Evicted-before-flush spans count in
+    /// [`Recorder::spans_dropped`].
+    pub fn with_capacity(mut self, cap: usize) -> Recorder {
+        self.capacity = cap;
+        self
     }
 
     pub fn run_id(&self) -> &str {
         &self.run_id
     }
 
+    pub fn sample_rate(&self) -> f64 {
+        self.sample_rate
+    }
+
+    /// Traces discarded by head sampling so far.
+    pub fn traces_sampled_out(&self) -> u64 {
+        self.sampled_out.load(Ordering::Relaxed)
+    }
+
+    /// Spans evicted from the ring buffer without ever being flushed.
+    pub fn spans_dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
     /// Allocate a fresh trace id (one per logical request).
     pub fn new_trace(&self) -> TraceId {
         TraceId(self.next_trace.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Pure head-sampling decision for a trace id: seeded hash of the
+    /// id against the rate threshold. Rates 0.0 / 1.0 short-circuit to
+    /// never / always.
+    pub fn trace_is_sampled(&self, id: TraceId) -> bool {
+        if self.sample_rate >= 1.0 {
+            return true;
+        }
+        if self.sample_rate <= 0.0 {
+            return false;
+        }
+        let threshold = (self.sample_rate * u64::MAX as f64) as u64;
+        mix64(self.sample_seed ^ id.0.wrapping_mul(0x9E3779B97F4A7C15)) < threshold
+    }
+
+    /// Allocate the next trace id and apply head sampling: `Some` ctx
+    /// (with a fresh root span id) iff the trace is kept. Ids advance
+    /// either way so the sampled-id set stays a pure function of
+    /// (seed, rate) — discarded traces count in `traces_sampled_out`.
+    pub fn sample_ctx(&self) -> Option<TraceCtx> {
+        let trace = self.new_trace();
+        if self.trace_is_sampled(trace) {
+            Some(TraceCtx {
+                trace,
+                parent: self.next_span_id(),
+            })
+        } else {
+            self.sampled_out.fetch_add(1, Ordering::Relaxed);
+            None
+        }
     }
 
     /// Allocate a span id without recording anything yet — used when the
@@ -117,13 +233,23 @@ impl Recorder {
             .unwrap_or(0)
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<SpanRecord>> {
-        self.spans.lock().unwrap_or_else(|p| p.into_inner())
+    fn lock(&self) -> std::sync::MutexGuard<'_, SpanBuf> {
+        self.buf.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    /// Record a fully-formed span.
+    /// Record a fully-formed span. In ring mode the oldest span evicts
+    /// when full; an eviction that was never flushed counts as dropped.
     pub fn record(&self, rec: SpanRecord) {
-        self.lock().push(rec);
+        let mut buf = self.lock();
+        buf.spans.push_back(rec);
+        if self.capacity > 0 && buf.spans.len() > self.capacity {
+            buf.spans.pop_front();
+            let abs = buf.evicted;
+            buf.evicted += 1;
+            if abs >= buf.flushed {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Record a span with a fresh id between two epoch-relative
@@ -178,52 +304,128 @@ impl Recorder {
     }
 
     pub fn n_spans(&self) -> usize {
-        self.lock().len()
+        self.lock().spans.len()
     }
 
     /// All recorded spans with the given name, in record order.
     pub fn spans_of(&self, name: &str) -> Vec<SpanRecord> {
-        self.lock().iter().filter(|s| s.name == name).cloned().collect()
+        self.lock()
+            .spans
+            .iter()
+            .filter(|s| s.name == name)
+            .cloned()
+            .collect()
     }
 
-    /// Copy of all recorded spans, in record order.
+    /// Copy of all buffered spans, in record order.
     pub fn snapshot(&self) -> Vec<SpanRecord> {
-        self.lock().clone()
+        self.lock().spans.iter().cloned().collect()
     }
 
-    /// Flush all spans as JSONL (one object per line, every line keyed
-    /// by `run_id`). Returns the path written.
+    fn jsonl_line(&self, s: &SpanRecord) -> String {
+        let mut attrs: Vec<(&str, Json)> = Vec::with_capacity(s.attrs.len());
+        for (k, v) in &s.attrs {
+            attrs.push((k.as_str(), Json::str(v)));
+        }
+        Json::obj(vec![
+            ("run_id", Json::str(&self.run_id)),
+            ("trace", Json::str(&s.trace.to_string())),
+            ("span", Json::str(&s.span.to_string())),
+            (
+                "parent",
+                match s.parent {
+                    Some(p) => Json::str(&p.to_string()),
+                    None => Json::Null,
+                },
+            ),
+            ("name", Json::str(&s.name)),
+            ("start_us", Json::num(s.start_us as f64)),
+            ("dur_us", Json::num(s.dur_us as f64)),
+            ("attrs", Json::obj(attrs)),
+        ])
+        .to_string()
+    }
+
+    /// Flush spans as JSONL (one object per line, every line keyed by
+    /// `run_id`). Incremental: the first flush truncates the file and
+    /// writes everything buffered; repeated flushes append only spans
+    /// recorded since the previous flush — never duplicates, even when
+    /// `record` runs concurrently (the cursor and the write happen
+    /// under the span-buffer lock). A recorder has ONE logical output
+    /// stream: flushing to a second path mid-run would only carry the
+    /// not-yet-flushed suffix. Returns the path written.
     pub fn flush_jsonl(&self, path: &Path) -> Result<PathBuf> {
-        let spans = self.snapshot();
+        let mut buf = self.lock();
+        let first = buf.flushed == 0;
+        let start_abs = buf.flushed.max(buf.evicted);
+        let skip = (start_abs - buf.evicted) as usize;
         let mut out = String::new();
-        for s in &spans {
-            let mut attrs: Vec<(&str, Json)> = Vec::with_capacity(s.attrs.len());
-            for (k, v) in &s.attrs {
-                attrs.push((k.as_str(), Json::str(v)));
-            }
-            let line = Json::obj(vec![
-                ("run_id", Json::str(&self.run_id)),
-                ("trace", Json::str(&s.trace.to_string())),
-                ("span", Json::str(&s.span.to_string())),
-                (
-                    "parent",
-                    match s.parent {
-                        Some(p) => Json::str(&p.to_string()),
-                        None => Json::Null,
-                    },
-                ),
-                ("name", Json::str(&s.name)),
-                ("start_us", Json::num(s.start_us as f64)),
-                ("dur_us", Json::num(s.dur_us as f64)),
-                ("attrs", Json::obj(attrs)),
-            ]);
-            out.push_str(&line.to_string());
+        for s in buf.spans.iter().skip(skip) {
+            out.push_str(&self.jsonl_line(s));
             out.push('\n');
         }
-        std::fs::write(path, &out)
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(!first)
+            .write(true)
+            .truncate(first)
+            .open(path)
+            .with_context(|| format!("opening trace JSONL {}", path.display()))?;
+        f.write_all(out.as_bytes())
             .with_context(|| format!("writing trace JSONL {}", path.display()))?;
+        buf.flushed = buf.evicted + buf.spans.len() as u64;
         Ok(path.to_path_buf())
     }
+
+    /// Configure a periodic flush target for [`Recorder::maybe_flush`].
+    pub fn set_auto_flush(&self, path: PathBuf, interval: Duration) {
+        let mut t = self
+            .flush_target
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        *t = Some((path, interval));
+    }
+
+    /// Throttled incremental flush: at most one caller per configured
+    /// interval actually flushes (CAS on the elapsed-ms word, same
+    /// pattern as `SharedScheduleCache::maybe_persist`). Returns
+    /// `Ok(true)` iff this call flushed. No-op without
+    /// [`Recorder::set_auto_flush`].
+    pub fn maybe_flush(&self) -> Result<bool> {
+        let target = {
+            let t = self
+                .flush_target
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            t.clone()
+        };
+        let Some((path, interval)) = target else {
+            return Ok(false);
+        };
+        let now_ms = self.epoch.elapsed().as_millis() as u64;
+        let last = self.last_flush_ms.load(Ordering::Relaxed);
+        if now_ms.saturating_sub(last) < interval.as_millis() as u64 {
+            return Ok(false);
+        }
+        if self
+            .last_flush_ms
+            .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return Ok(false);
+        }
+        self.flush_jsonl(&path).map(|_| true)
+    }
+}
+
+/// SplitMix64 finalizer: the avalanche step used for the head-sampling
+/// hash (full bit diffusion, so low ids don't bias the sampled set).
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
 }
 
 /// Process-unique run id: `{kind}-{unix_secs:x}-{pid:x}-{n:x}`.
@@ -297,6 +499,120 @@ mod tests {
         assert_eq!(j.get("parent").as_str(), Some(&root.to_string()[..]));
         assert_eq!(j.get("dur_us").as_i64(), Some(13));
         assert_eq!(j.get("attrs").get("variant").as_str(), Some("ell_tile"));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn repeated_flush_appends_only_new_spans() {
+        let dir = std::env::temp_dir().join("autosage_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("incr-{}.jsonl", std::process::id()));
+        // Stale file from a "previous run" must be truncated by the
+        // first flush.
+        std::fs::write(&p, "stale line\n").unwrap();
+        let r = Recorder::new("incr-run");
+        let t = r.new_trace();
+        r.span_between(t, None, "request", 0, 10, vec![]);
+        r.span_between(t, None, "queue", 0, 5, vec![]);
+        r.flush_jsonl(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap().lines().count(), 2);
+        // No new spans: flushing again must not duplicate anything.
+        r.flush_jsonl(&p).unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap().lines().count(), 2);
+        // New spans: only the delta appends.
+        r.span_between(t, None, "execute", 5, 9, vec![]);
+        r.flush_jsonl(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let names: Vec<String> = lines
+            .iter()
+            .map(|l| Json::parse(l).unwrap().get("name").as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, ["request", "queue", "execute"]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest_and_counts_drops() {
+        let r = Recorder::new("ring-run").with_capacity(3);
+        let t = r.new_trace();
+        for i in 0..5 {
+            r.span_between(t, None, &format!("s{i}"), i, i + 1, vec![]);
+        }
+        assert_eq!(r.n_spans(), 3);
+        assert_eq!(r.spans_dropped(), 2, "s0 and s1 evicted unflushed");
+        let names: Vec<String> = r.snapshot().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(names, ["s2", "s3", "s4"]);
+    }
+
+    #[test]
+    fn ring_eviction_after_flush_is_not_a_drop() {
+        let dir = std::env::temp_dir().join("autosage_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("ring-{}.jsonl", std::process::id()));
+        let r = Recorder::new("ring-flush").with_capacity(2);
+        let t = r.new_trace();
+        r.span_between(t, None, "a", 0, 1, vec![]);
+        r.span_between(t, None, "b", 1, 2, vec![]);
+        r.flush_jsonl(&p).unwrap();
+        // "a" and "b" are on disk; evicting them is not data loss.
+        r.span_between(t, None, "c", 2, 3, vec![]);
+        r.span_between(t, None, "d", 3, 4, vec![]);
+        assert_eq!(r.spans_dropped(), 0);
+        r.flush_jsonl(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 4, "a b c d all flushed once");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn sampling_edge_rates_keep_all_or_none() {
+        let all = Recorder::with_sampling("s1", 1.0, 7);
+        let none = Recorder::with_sampling("s0", 0.0, 7);
+        let mut kept = 0;
+        for _ in 0..50 {
+            assert!(all.sample_ctx().is_some());
+            if none.sample_ctx().is_some() {
+                kept += 1;
+            }
+        }
+        assert_eq!(kept, 0);
+        assert_eq!(all.traces_sampled_out(), 0);
+        assert_eq!(none.traces_sampled_out(), 50);
+    }
+
+    #[test]
+    fn sampled_id_set_is_a_pure_function_of_seed_and_rate() {
+        let a = Recorder::with_sampling("sa", 0.3, 42);
+        let b = Recorder::with_sampling("sb", 0.3, 42);
+        let ids_a: Vec<u64> = (1..=200).filter(|i| a.trace_is_sampled(TraceId(*i))).collect();
+        let ids_b: Vec<u64> = (1..=200).filter(|i| b.trace_is_sampled(TraceId(*i))).collect();
+        assert_eq!(ids_a, ids_b, "same seed+rate ⇒ same sampled set");
+        assert!(!ids_a.is_empty() && ids_a.len() < 200, "rate 0.3 samples a strict subset");
+        let c = Recorder::with_sampling("sc", 0.3, 43);
+        let ids_c: Vec<u64> = (1..=200).filter(|i| c.trace_is_sampled(TraceId(*i))).collect();
+        assert_ne!(ids_a, ids_c, "different seed ⇒ different set");
+    }
+
+    #[test]
+    fn maybe_flush_is_throttled_and_incremental() {
+        let dir = std::env::temp_dir().join("autosage_trace_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("auto-{}.jsonl", std::process::id()));
+        let r = Recorder::new("auto-run");
+        assert!(!r.maybe_flush().unwrap(), "no-op before set_auto_flush");
+        r.set_auto_flush(p.clone(), Duration::from_millis(0));
+        let t = r.new_trace();
+        r.span_between(t, None, "request", 0, 1, vec![]);
+        // Interval 0 + last_flush_ms starting at 0: the first tick may
+        // be throttled until 1ms of recorder age, so spin briefly.
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while !r.maybe_flush().unwrap() {
+            assert!(Instant::now() < deadline, "flush never fired");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(std::fs::read_to_string(&p).unwrap().lines().count(), 1);
         let _ = std::fs::remove_file(&p);
     }
 

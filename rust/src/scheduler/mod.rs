@@ -182,6 +182,9 @@ pub struct Scheduler {
     pub tracer: Option<std::sync::Arc<crate::obs::trace::Recorder>>,
     /// (trace, parent span) the next `decide` call belongs to.
     pub trace_ctx: Option<(crate::obs::trace::TraceId, crate::obs::trace::SpanId)>,
+    /// Unified metrics registry; when set, `decide` counts decision
+    /// outcomes (source, variant, probes, guardrail fallbacks).
+    pub metrics: Option<std::sync::Arc<crate::obs::metrics::MetricsRegistry>>,
 }
 
 impl Scheduler {
@@ -199,7 +202,22 @@ impl Scheduler {
             probe_seed: 0xA0705A6E,
             tracer: None,
             trace_ctx: None,
+            metrics: None,
         })
+    }
+
+    /// Count one decision outcome in the registry (no-op when unset):
+    /// `autosage_scheduler_decisions_total{source=...}` + the chosen
+    /// variant's `autosage_scheduler_variant_total{variant=...}`.
+    fn count_decision(&self, source: &str, variant: &str) {
+        if let Some(m) = &self.metrics {
+            m.inc(&format!(
+                "autosage_scheduler_decisions_total{{source=\"{source}\"}}"
+            ));
+            m.inc(&format!(
+                "autosage_scheduler_variant_total{{variant=\"{variant}\"}}"
+            ));
+        }
     }
 
     /// `autosage_decide` (paper §4.2 pseudocode): cache → shortlist →
@@ -239,6 +257,7 @@ impl Scheduler {
             } else {
                 Choice::Candidate(hit.variant.clone())
             };
+            self.count_decision("cache", choice.variant());
             return Ok((
                 Decision {
                     op,
@@ -264,6 +283,7 @@ impl Scheduler {
 
         // 2. Replay-only mode: miss → guaranteed-safe baseline.
         if self.cfg.replay_only {
+            self.count_decision("replay_fallback", "baseline");
             return Ok((
                 Decision {
                     op,
@@ -457,6 +477,14 @@ impl Scheduler {
         let guardrail_start_us = tracer.as_ref().map(|tr| tr.now_us());
         let t_b = report.baseline.timing.median_ms * baseline_scale;
         let choice = guardrail::decide(&probed, t_b, self.cfg.alpha);
+        if let Some(m) = &self.metrics {
+            m.inc("autosage_scheduler_probes_total");
+            // Guardrail fallback: candidates were probed but none beat
+            // α·t_baseline, so the safe vendor path won.
+            if choice.is_baseline() && !probed.is_empty() {
+                m.inc("autosage_scheduler_guardrail_fallback_total");
+            }
+        }
         let t_star = probed
             .iter()
             .map(|(_, t)| *t)
@@ -499,9 +527,13 @@ impl Scheduler {
                     &format!("{e:#}"),
                 );
             }
+            if let Some(m) = &self.metrics {
+                m.inc("autosage_cache_persist_errors_total");
+            }
             eprintln!("autosage: warning: schedule cache persist failed: {e:#}");
         }
 
+        self.count_decision("probe", choice.variant());
         Ok((
             Decision {
                 op,

@@ -259,12 +259,12 @@ pub fn run_load_traced(
                 for &ci in &mix {
                     let combo = &combos[ci];
                     let t0 = Instant::now();
-                    // Fresh trace per request; the root span id doubles
+                    // Fresh trace per request, subject to head sampling:
+                    // unsampled requests travel untraced (None) but still
+                    // consume a trace id, so the sampled set is a pure
+                    // function of (seed, rate). The root span id doubles
                     // as the parent for every worker-side span.
-                    let tctx = recorder.as_ref().map(|r| TraceCtx {
-                        trace: r.new_trace(),
-                        parent: r.next_span_id(),
-                    });
+                    let tctx = recorder.as_ref().and_then(|r| r.sample_ctx());
                     let rx = match pool.submit_traced(
                         combo.op,
                         combo.graph.clone(),
@@ -341,6 +341,7 @@ pub fn run_load_traced(
     };
     let throughput_rps = if wall_ms > 0.0 { ok as f64 / (wall_ms / 1e3) } else { 0.0 };
     let shards = pool.metrics().snapshot();
+    let pool_row = pool.metrics().pool_stats();
     let probes = pool.metrics().total_probes();
     let (cache_hits, cache_misses, cache_len) = pool.cache_stats();
 
@@ -356,6 +357,7 @@ pub fn run_load_traced(
             spec.f,
         ),
         &shards,
+        Some(&pool_row),
     );
     text.push_str(&format!(
         "\nrequests : {total} total | {ok} ok | {errors} errors | {mismatches} oracle mismatches\n"
@@ -375,7 +377,7 @@ pub fn run_load_traced(
 
     Ok(LoadReport {
         text,
-        csv: serving_table(&shards),
+        csv: serving_table(&shards, Some(&pool_row)),
         total,
         ok,
         errors,

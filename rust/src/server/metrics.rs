@@ -1,66 +1,24 @@
 //! Serving metrics: per-shard throughput/error/queue counters and
 //! log-bucketed latency histograms (p50/p95/p99), lock-free on the hot
 //! path (relaxed atomics only). Snapshots flow through `telemetry` into
-//! the repo's standard CSV + `.meta.json` sidecar format.
+//! the repo's standard CSV + `.meta.json` sidecar format, and into the
+//! Prometheus-style `metrics.prom` exposition via
+//! [`prometheus_snapshot`].
+//!
+//! The histogram type itself lives in [`crate::obs::metrics`] (it is a
+//! generic observability primitive); this module re-exports it and owns
+//! the pool-shaped aggregation. Pool-wide percentiles are ALWAYS
+//! derived by merging the per-shard histograms bucket-wise
+//! ([`ServerMetrics::merged_latency`]) — never by averaging (or taking
+//! the max of) per-shard quantiles.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::obs::metrics::MetricsRegistry;
+use crate::obs::trace::Recorder;
 use crate::telemetry::ServeShardStats;
 
-/// Histogram bucket count: 40 log2 buckets cover 1 µs .. ~9 minutes.
-const N_BUCKETS: usize = 40;
-
-/// Log2-bucketed latency histogram. Bucket `b` counts samples in
-/// `[2^b, 2^(b+1))` microseconds; quantiles report the geometric
-/// midpoint of the bucket holding the q-th sample (≤ ~50% relative
-/// error, which is plenty for p50/p95/p99 monitoring without locks).
-pub struct LatencyHistogram {
-    buckets: [AtomicU64; N_BUCKETS],
-}
-
-impl LatencyHistogram {
-    pub fn new() -> LatencyHistogram {
-        LatencyHistogram {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-        }
-    }
-
-    fn bucket_of(ms: f64) -> usize {
-        let us = (ms * 1000.0).max(1.0) as u64;
-        ((63 - us.leading_zeros()) as usize).min(N_BUCKETS - 1)
-    }
-
-    pub fn record_ms(&self, ms: f64) {
-        self.buckets[Self::bucket_of(ms)].fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
-    }
-
-    /// Latency quantile estimate in milliseconds (0.0 when empty).
-    pub fn quantile_ms(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return 0.0;
-        }
-        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
-        let mut cum = 0u64;
-        for (b, bucket) in self.buckets.iter().enumerate() {
-            cum += bucket.load(Ordering::Relaxed);
-            if cum >= rank {
-                return (1u64 << b) as f64 * 1.5 / 1000.0;
-            }
-        }
-        (1u64 << (N_BUCKETS - 1)) as f64 * 1.5 / 1000.0
-    }
-}
-
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
+pub use crate::obs::metrics::LatencyHistogram;
 
 /// One shard's counters. All relaxed atomics: torn cross-counter reads
 /// in a snapshot are acceptable for monitoring.
@@ -121,6 +79,42 @@ impl ServerMetrics {
             .collect()
     }
 
+    /// Bucket-wise merge of every shard's latency histogram — the only
+    /// statistically meaningful source of pool-level quantiles.
+    pub fn merged_latency(&self) -> LatencyHistogram {
+        LatencyHistogram::merged(self.shards.iter().map(|s| &s.latency))
+    }
+
+    /// Pool-wide stats row: counters summed across shards, latency
+    /// quantiles from the merged histogram. `shard` is set to the shard
+    /// count (one past the last real index) — renderers label this row
+    /// "pool", they never print the index.
+    pub fn pool_stats(&self) -> ServeShardStats {
+        let sum = |f: fn(&ShardMetrics) -> &AtomicU64| -> u64 {
+            self.shards.iter().map(|s| f(s).load(Ordering::Relaxed)).sum()
+        };
+        let merged = self.merged_latency();
+        ServeShardStats {
+            shard: self.shards.len(),
+            requests: sum(|s| &s.requests),
+            batches: sum(|s| &s.batches),
+            coalesced: sum(|s| &s.coalesced),
+            probes: sum(|s| &s.probes),
+            cache_hits: sum(|s| &s.cache_hits),
+            errors: sum(|s| &s.errors),
+            rejected: sum(|s| &s.rejected),
+            max_queue_depth: self
+                .shards
+                .iter()
+                .map(|s| s.max_queue_depth.load(Ordering::Relaxed))
+                .max()
+                .unwrap_or(0),
+            p50_ms: merged.quantile_ms(0.50),
+            p95_ms: merged.quantile_ms(0.95),
+            p99_ms: merged.quantile_ms(0.99),
+        }
+    }
+
     pub fn total_probes(&self) -> u64 {
         self.shards
             .iter()
@@ -148,6 +142,63 @@ impl ServerMetrics {
             .map(|s| s.errors.load(Ordering::Relaxed))
             .sum()
     }
+
+    /// Mirror the pool counters and the merged latency histogram into
+    /// the registry so one `render_prometheus` covers everything.
+    /// Counter mirrors use `set_counter` (absolute totals), so repeated
+    /// exports are idempotent; the pool latency histogram is rebuilt
+    /// from a fresh merge each time for the same reason.
+    pub fn export_into(&self, reg: &MetricsRegistry) {
+        let pool = self.pool_stats();
+        reg.set_counter("autosage_pool_requests_total", pool.requests);
+        reg.set_counter("autosage_pool_batches_total", pool.batches);
+        reg.set_counter("autosage_pool_coalesced_total", pool.coalesced);
+        reg.set_counter("autosage_pool_probes_total", pool.probes);
+        reg.set_counter("autosage_pool_cache_hits_total", pool.cache_hits);
+        reg.set_counter("autosage_pool_errors_total", pool.errors);
+        reg.set_counter("autosage_pool_rejected_total", pool.rejected);
+        reg.set_gauge(
+            "autosage_pool_max_queue_depth",
+            pool.max_queue_depth as f64,
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            reg.set_gauge(
+                &format!("autosage_pool_queue_depth{{shard=\"{i}\"}}"),
+                s.queue_depth.load(Ordering::Relaxed) as f64,
+            );
+        }
+        // Overwrite (not accumulate) so repeated exports stay
+        // idempotent: the registry's pool histogram is a mirror of the
+        // live per-shard histograms, rebuilt from a fresh merge.
+        reg.histogram("autosage_pool_latency_ms")
+            .store_from(&self.merged_latency());
+    }
+}
+
+/// Render one unified Prometheus text snapshot: the registry's own
+/// series, the recorder's sampling/drop counters, and the pool counters
+/// + merged-histogram percentiles. Safe to call repeatedly (all mirrors
+/// are absolute stores).
+pub fn prometheus_snapshot(
+    reg: &MetricsRegistry,
+    pool: Option<&ServerMetrics>,
+    recorder: Option<&Recorder>,
+) -> String {
+    reg.set_counter(
+        "autosage_traces_sampled_out_total",
+        recorder.map(|r| r.traces_sampled_out()).unwrap_or(0),
+    );
+    reg.set_counter(
+        "autosage_spans_dropped_total",
+        recorder.map(|r| r.spans_dropped()).unwrap_or(0),
+    );
+    if let Some(r) = recorder {
+        reg.set_gauge("autosage_trace_sample_rate", r.sample_rate());
+    }
+    if let Some(p) = pool {
+        p.export_into(reg);
+    }
+    reg.render_prometheus()
 }
 
 #[cfg(test)]
@@ -200,5 +251,53 @@ mod tests {
         assert_eq!(snap[0].shard, 0);
         assert_eq!(snap[1].probes, 1);
         assert!(snap[1].p50_ms > 0.0);
+    }
+
+    #[test]
+    fn pool_stats_merge_histograms_across_skewed_shards() {
+        // Regression test for the satellite: pool p50/p95/p99 must come
+        // from the merged distribution, not from aggregating per-shard
+        // quantiles. Shard 0 is busy and fast; shard 1 saw a handful of
+        // slow requests. Per-shard-quantile aggregation (max, as the
+        // old total row did, or an average) would report a slow pool
+        // p50; the merged histogram knows 980 of 1000 samples were fast
+        // (20 slow ones keep the p99 rank of 990 inside the slow tail).
+        let m = ServerMetrics::new(2);
+        for _ in 0..980 {
+            m.shards[0].latency.record_ms(1.0);
+        }
+        for _ in 0..20 {
+            m.shards[1].latency.record_ms(200.0);
+        }
+        m.shards[0].requests.fetch_add(980, Ordering::Relaxed);
+        m.shards[1].requests.fetch_add(20, Ordering::Relaxed);
+        let pool = m.pool_stats();
+        assert_eq!(pool.requests, 1000);
+        assert!(pool.p50_ms < 2.0, "merged p50 {} must stay fast", pool.p50_ms);
+        assert!(pool.p99_ms > 100.0, "merged p99 {} must see the tail", pool.p99_ms);
+        let snap = m.snapshot();
+        let max_p50 = snap.iter().map(|s| s.p50_ms).fold(0.0, f64::max);
+        let avg_p50 = snap.iter().map(|s| s.p50_ms).sum::<f64>() / snap.len() as f64;
+        assert!(pool.p50_ms < avg_p50, "merged {} < avg {}", pool.p50_ms, avg_p50);
+        assert!(pool.p50_ms < max_p50, "merged {} < max {}", pool.p50_ms, max_p50);
+    }
+
+    #[test]
+    fn prometheus_snapshot_is_idempotent_and_complete() {
+        let m = ServerMetrics::new(2);
+        m.shards[0].requests.fetch_add(3, Ordering::Relaxed);
+        m.shards[0].latency.record_ms(1.0);
+        m.shards[1].latency.record_ms(8.0);
+        let reg = MetricsRegistry::new();
+        let rec = Recorder::with_sampling("prom-test", 0.5, 7);
+        let _ = rec.sample_ctx();
+        let first = prometheus_snapshot(&reg, Some(&m), Some(&rec));
+        crate::obs::metrics::validate_serving_snapshot(&first).expect("valid snapshot");
+        assert!(first.contains("autosage_pool_requests_total 3\n"));
+        assert!(first.contains("autosage_trace_sample_rate 0.5\n"));
+        // Re-render without new traffic: absolute mirrors must not
+        // double-count.
+        let second = prometheus_snapshot(&reg, Some(&m), Some(&rec));
+        assert_eq!(first, second, "snapshot must be idempotent");
     }
 }

@@ -24,6 +24,6 @@ pub mod pool;
 pub mod shared_cache;
 
 pub use loadgen::{request_schedule, run_load, run_load_traced, LoadReport, LoadSpec};
-pub use metrics::{LatencyHistogram, ServerMetrics, ShardMetrics};
+pub use metrics::{prometheus_snapshot, LatencyHistogram, ServerMetrics, ShardMetrics};
 pub use pool::{ServeResponse, ServerPool, SubmitError};
 pub use shared_cache::{Lookup, ProbeTicket, SharedScheduleCache};

@@ -28,6 +28,7 @@ use crate::config::Config;
 use crate::coordinator::AutoSage;
 use crate::graph::signature::{graph_signature, Fnv1a};
 use crate::graph::Csr;
+use crate::obs::metrics::{feature_bucket, AuditSample, MetricsRegistry};
 use crate::obs::trace::{Recorder, SpanRecord, TraceCtx};
 use crate::scheduler::{cache_key, CachedChoice, DecisionSource, Op};
 use crate::telemetry::ServeShardStats;
@@ -105,6 +106,8 @@ pub struct ServerPool {
     queue_bound: u64,
     /// Flight recorder shared with every shard worker (None = untraced).
     recorder: Option<Arc<Recorder>>,
+    /// Metrics registry shared with every shard worker (None = unmetered).
+    registry: Option<Arc<MetricsRegistry>>,
 }
 
 /// Route a graph signature to a shard.
@@ -129,6 +132,19 @@ impl ServerPool {
         cfg: Config,
         recorder: Option<Arc<Recorder>>,
     ) -> Result<ServerPool> {
+        ServerPool::spawn_observed(artifacts_dir, cfg, recorder, None)
+    }
+
+    /// Like [`Self::spawn_traced`], with a metrics registry: shard
+    /// workers feed scheduler decision counters, batch-size histograms,
+    /// cache-persistence counters, and the predicted-vs-measured audit
+    /// stream into it.
+    pub fn spawn_observed(
+        artifacts_dir: PathBuf,
+        cfg: Config,
+        recorder: Option<Arc<Recorder>>,
+        registry: Option<Arc<MetricsRegistry>>,
+    ) -> Result<ServerPool> {
         cfg.validate().map_err(|e| anyhow!(e))?;
         let n = cfg.serve_workers.max(1);
         let shared = Arc::new(SharedScheduleCache::load(&cfg.cache_path)?);
@@ -146,9 +162,10 @@ impl ServerPool {
             let sh = Arc::clone(&shared);
             let m = Arc::clone(&metrics);
             let rec = recorder.clone();
+            let reg = registry.clone();
             let join = std::thread::Builder::new()
                 .name(format!("autosage-shard-{shard_id}"))
-                .spawn(move || worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, flush))
+                .spawn(move || worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, reg, flush))
                 .with_context(|| format!("spawning shard {shard_id} worker"))?;
             shards.push(Shard { tx, join });
         }
@@ -158,6 +175,7 @@ impl ServerPool {
             shared,
             queue_bound: cfg.serve_queue_depth.max(1) as u64,
             recorder,
+            registry,
         })
     }
 
@@ -271,6 +289,11 @@ impl ServerPool {
         self.recorder.as_ref()
     }
 
+    /// The pool's metrics registry, if it was spawned with one.
+    pub fn registry(&self) -> Option<&Arc<MetricsRegistry>> {
+        self.registry.as_ref()
+    }
+
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
@@ -348,6 +371,7 @@ fn worker_loop(
     shared: Arc<SharedScheduleCache>,
     metrics: Arc<ServerMetrics>,
     recorder: Option<Arc<Recorder>>,
+    registry: Option<Arc<MetricsRegistry>>,
     flush: Duration,
 ) {
     let batch_max = cfg.serve_batch_max.max(1);
@@ -376,22 +400,56 @@ fn worker_loop(
         }
     };
     sage.set_recorder(recorder.clone());
+    sage.set_metrics(registry.clone());
     while let Ok(first) = rx.recv() {
         let batch = collect_batch(&rx, first, batch_max, window);
         let sm = &metrics.shards[shard];
         sm.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
         sm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
         sm.batches.fetch_add(1, Ordering::Relaxed);
-        serve_batch(shard, &mut sage, &shared, sm, recorder.as_deref(), batch);
+        if let Some(reg) = &registry {
+            // Batch *size*, not latency — reuse the log2 buckets anyway:
+            // the interesting question ("did coalescing happen at all,
+            // and how skewed is it") survives the coarse resolution.
+            reg.histogram("autosage_pool_batch_size").record_ms(batch.len() as f64);
+        }
+        serve_batch(
+            shard,
+            &mut sage,
+            &shared,
+            sm,
+            recorder.as_deref(),
+            registry.as_deref(),
+            batch,
+        );
         // Satellite (PR 2 debt): cache persistence moved off the
         // pool-wide mutex and out of `ProbeTicket::resolve` — dirty
         // state flushes here, throttled, and I/O errors demote to a
         // warning trace event instead of failing requests.
-        if let Err(e) = shared.maybe_persist(flush) {
-            if let Some(r) = &recorder {
-                r.warn(None, "cache_persist", &format!("{e:#}"));
+        match shared.maybe_persist(flush) {
+            Ok(true) => {
+                if let Some(reg) = &registry {
+                    reg.inc("autosage_cache_persist_total");
+                }
             }
-            eprintln!("autosage: warning: schedule cache flush failed: {e:#}");
+            Ok(false) => {}
+            Err(e) => {
+                if let Some(reg) = &registry {
+                    reg.inc("autosage_cache_persist_errors_total");
+                }
+                if let Some(r) = &recorder {
+                    r.warn(None, "cache_persist", &format!("{e:#}"));
+                }
+                eprintln!("autosage: warning: schedule cache flush failed: {e:#}");
+            }
+        }
+        // Same throttle pattern for the trace ring: long serving runs
+        // stream spans to disk instead of holding everything in memory.
+        if let Some(r) = &recorder {
+            if let Err(e) = r.maybe_flush() {
+                r.warn(None, "trace_flush", &format!("{e:#}"));
+                eprintln!("autosage: warning: trace flush failed: {e:#}");
+            }
         }
     }
 }
@@ -426,12 +484,14 @@ fn collect_batch(
 /// Group a batch by coalescing key (graph signature, op, F) preserving
 /// arrival order, then schedule each group ONCE and execute its members
 /// under that decision.
+#[allow(clippy::too_many_arguments)]
 fn serve_batch(
     shard: usize,
     sage: &mut AutoSage,
     shared: &SharedScheduleCache,
     sm: &ShardMetrics,
     recorder: Option<&Recorder>,
+    registry: Option<&MetricsRegistry>,
     batch: Vec<QueuedRequest>,
 ) {
     let mut groups: Vec<(String, Vec<QueuedRequest>)> = Vec::new();
@@ -511,6 +571,20 @@ fn serve_batch(
                 }
             }
             Ok((variant, from_cache)) => {
+                // Audit loop: the roofline's prediction for the chosen
+                // variant, computed ONCE per coalescing group (members
+                // share graph/op/F by construction), compared below
+                // against each member's measured execute time. Every
+                // executed request is audited — the audit stream is
+                // deliberately NOT subject to trace sampling.
+                let audit = registry.map(|_| {
+                    let leader = &group[0];
+                    (
+                        sage.estimate_ms(&leader.graph, leader.op, leader.f, &variant),
+                        feature_bucket(leader.graph.n_rows, leader.graph.nnz(), leader.f),
+                        leader.op.as_str().to_string(),
+                    )
+                });
                 for qr in group {
                     let queue_ms = ms_since(qr.enqueued);
                     if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
@@ -524,19 +598,37 @@ fn serve_batch(
                         );
                     }
                     let exec_start_us = recorder.map(|r| r.now_us());
+                    let exec_started = Instant::now();
                     let result = execute_one(sage, &qr, &variant);
+                    let exec_ms = ms_since(exec_started);
+                    if let (Some(reg), Some((pred, bucket, op))) = (registry, audit.as_ref()) {
+                        if let (Some(p), true) = (pred, result.is_ok()) {
+                            reg.record_audit(AuditSample {
+                                op: op.clone(),
+                                variant: variant.clone(),
+                                bucket: bucket.clone(),
+                                predicted_ms: *p,
+                                measured_ms: exec_ms,
+                            });
+                        }
+                        reg.histogram("autosage_execute_ms").record_ms(exec_ms);
+                    }
                     if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
+                        let mut attrs = vec![
+                            ("variant".to_string(), variant.clone()),
+                            ("backend".to_string(), sage.backend_name().to_string()),
+                            ("shard".to_string(), shard.to_string()),
+                        ];
+                        if let Some((Some(p), _, _)) = audit.as_ref() {
+                            attrs.push(("predicted_ms".to_string(), format!("{p:.4}")));
+                        }
                         r.span_between(
                             ctx.trace,
                             Some(ctx.parent),
                             "execute",
                             exec_start_us.unwrap_or(0),
                             r.now_us(),
-                            vec![
-                                ("variant".to_string(), variant.clone()),
-                                ("backend".to_string(), sage.backend_name().to_string()),
-                                ("shard".to_string(), shard.to_string()),
-                            ],
+                            attrs,
                         );
                     }
                     let ok = result.is_ok();

@@ -126,10 +126,17 @@ pub const SERVING_HEADER: &[&str] = &[
     "errors", "rejected", "max_queue_depth", "p50_ms", "p95_ms", "p99_ms",
 ];
 
-/// Per-shard serving metrics → CSV with a trailing `total` row (counter
-/// sums; quantiles/depths take the per-shard max as the conservative
-/// aggregate).
-pub fn serving_table(shards: &[ServeShardStats]) -> CsvTable {
+/// Per-shard serving metrics → CSV with a trailing aggregate row.
+///
+/// Pass `pool` (from `ServerMetrics::pool_stats`, counters summed and
+/// latency quantiles computed on the *merged* per-shard histograms) to
+/// get a statistically meaningful `pool` row. Without it the fallback
+/// `total` row sums counters but can only take the per-shard max of the
+/// quantiles — a conservative upper bound, NOT a pool percentile (a
+/// nearly idle shard with a few slow requests would dominate it), which
+/// is why every caller with access to live `ServerMetrics` passes
+/// `pool`.
+pub fn serving_table(shards: &[ServeShardStats], pool: Option<&ServeShardStats>) -> CsvTable {
     fn push(t: &mut CsvTable, label: String, s: &ServeShardStats) {
         t.push(vec![
             label,
@@ -162,7 +169,10 @@ pub fn serving_table(shards: &[ServeShardStats]) -> CsvTable {
         total.p95_ms = total.p95_ms.max(s.p95_ms);
         total.p99_ms = total.p99_ms.max(s.p99_ms);
     }
-    push(&mut t, "total".into(), &total);
+    match pool {
+        Some(p) => push(&mut t, "pool".into(), p),
+        None => push(&mut t, "total".into(), &total),
+    }
     t
 }
 
@@ -275,21 +285,55 @@ mod tests {
                 ..Default::default()
             },
         ];
-        let t = serving_table(&shards);
+        let t = serving_table(&shards, None);
         assert_eq!(t.header().len(), SERVING_HEADER.len());
         assert_eq!(t.n_rows(), 3);
         let total = &t.rows()[2];
         assert_eq!(total[0], "total");
         assert_eq!(total[1], "15"); // requests sum
         assert_eq!(total[4], "3"); // probes sum
-        assert_eq!(total[11], "9.000"); // p99 max
+        assert_eq!(total[11], "9.000"); // p99 max (fallback upper bound)
+    }
+
+    #[test]
+    fn serving_table_pool_row_uses_merged_stats_not_shard_max() {
+        // Skewed shards: the merged-histogram pool row must be able to
+        // report a p99 BELOW the per-shard max — something the fallback
+        // total row can never do.
+        let shards = vec![
+            ServeShardStats {
+                shard: 0,
+                requests: 990,
+                p99_ms: 1.5,
+                ..Default::default()
+            },
+            ServeShardStats {
+                shard: 1,
+                requests: 10,
+                p99_ms: 300.0,
+                ..Default::default()
+            },
+        ];
+        let pool = ServeShardStats {
+            shard: 2,
+            requests: 1000,
+            p50_ms: 1.5,
+            p95_ms: 1.5,
+            p99_ms: 3.0, // merged: the slow shard is only 1% of traffic
+            ..Default::default()
+        };
+        let t = serving_table(&shards, Some(&pool));
+        let row = &t.rows()[2];
+        assert_eq!(row[0], "pool");
+        assert_eq!(row[1], "1000");
+        assert_eq!(row[11], "3.000", "merged p99, not per-shard max 300");
     }
 
     #[test]
     fn csv_with_sidecar_roundtrip() {
         let dir = std::env::temp_dir().join("autosage_serving_sidecar_test");
         let _ = fs::remove_dir_all(&dir);
-        let t = serving_table(&[ServeShardStats::default()]);
+        let t = serving_table(&[ServeShardStats::default()], None);
         let path =
             write_csv_with_sidecar(&dir, "serve_bench", &t, "devsig", &Config::default())
                 .unwrap();

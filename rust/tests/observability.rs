@@ -2,8 +2,12 @@
 //! reordering and reject tampering, one trace id spans loadgen →
 //! shard → backend → reply for a coalesced batch, the perf gate
 //! fails on a synthetic slowdown against the checked-in baselines,
-//! and schedule-cache state (entries AND warm-only hit counters)
-//! persists through pool shutdown.
+//! schedule-cache state (entries AND warm-only hit counters)
+//! persists through pool shutdown, and the observability pipeline
+//! end to end: head sampling is deterministic under a fixed seed,
+//! `serve-bench --smoke --out` emits trace.jsonl / metrics.prom /
+//! audit.jsonl that the `metrics` / `obs` / `manifest` CLI verbs all
+//! accept, and rate-0 sampling still audits every request.
 
 use std::collections::BTreeSet;
 use std::fmt::Write as _;
@@ -13,10 +17,12 @@ use std::sync::Arc;
 use autosage::config::Config;
 use autosage::gen::preset;
 use autosage::obs::manifest::{canonical_hash, validate};
-use autosage::obs::{compare, PerfProfile, RunManifest};
+use autosage::obs::metrics::validate_serving_snapshot;
+use autosage::obs::report::{calibration_table, stage_breakdown};
+use autosage::obs::{compare, AuditSample, MetricsRegistry, PerfProfile, RunManifest};
 use autosage::obs::trace::Recorder;
 use autosage::scheduler::{Op, ScheduleCache};
-use autosage::server::{run_load_traced, LoadSpec, ServerPool};
+use autosage::server::{prometheus_snapshot, run_load_traced, LoadSpec, ServerPool};
 use autosage::util::json::Json;
 
 fn tmp(name: &str) -> PathBuf {
@@ -314,4 +320,215 @@ fn cache_entries_and_warm_only_counters_persist_through_shutdown() {
     let cache = ScheduleCache::load(&path).unwrap();
     assert_eq!(cache.len(), 1);
     assert_eq!(cache.hits, 1, "warm-only hit counter must flush");
+}
+
+/// The one trace the seeded smoke workload keeps at sample rate 0.1:
+/// 16 requests allocate trace ids 1..=16, and the SplitMix-based head
+/// sampler under seed 42 keeps exactly id 10.
+const SMOKE_SAMPLED_TRACE: &str = "000000000000000a";
+
+/// Run `autosage serve-bench --smoke --seed 42 --out <dir>` with the
+/// acceptance-spec sampling knobs and debug-build-friendly probe caps.
+fn serve_bench_smoke(out_dir: &Path) -> std::process::Output {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_autosage"));
+    cmd.args(["serve-bench", "--smoke", "--seed", "42", "--out"])
+        .arg(out_dir)
+        .env("AUTOSAGE_BACKEND", "native")
+        .env("AUTOSAGE_TRACE_SAMPLE", "0.1")
+        // Exercise the periodic-flush path too: the cursor must keep
+        // the mid-run appends and the exit flush duplicate-free.
+        .env("AUTOSAGE_TRACE_FLUSH_MS", "25")
+        .env_remove("AUTOSAGE_TRACE_RING")
+        .env("AUTOSAGE_PROBE_ITERS", "2")
+        .env("AUTOSAGE_PROBE_CAP_MS", "200")
+        .env("AUTOSAGE_PROBE_FULL_MAX", "512");
+    cmd.output().expect("spawning autosage")
+}
+
+/// Run an `autosage` subcommand, asserting success; returns stdout.
+fn cli(args: &[&str]) -> String {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_autosage"))
+        .args(args)
+        .output()
+        .expect("spawning autosage");
+    assert!(
+        out.status.success(),
+        "autosage {args:?} failed:\nstdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Distinct non-zero trace ids in a trace.jsonl body (trace 0 is the
+/// synthetic id warn events use; it is not a sampled request).
+fn sampled_traces(trace_jsonl: &str) -> BTreeSet<String> {
+    trace_jsonl
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| {
+            Json::parse(l)
+                .unwrap()
+                .get("trace")
+                .as_str()
+                .map(str::to_string)
+        })
+        .filter(|t| t != "0000000000000000")
+        .collect()
+}
+
+/// The acceptance contract: with AUTOSAGE_TRACE_SAMPLE=0.1 and a fixed
+/// seed, `serve-bench --smoke --out` keeps the same single trace on
+/// every rerun, metrics.prom validates with merged-histogram pool
+/// percentiles and the sampling drop counters, audit.jsonl carries
+/// nonzero calibration rows, and the `metrics` / `obs` / `manifest`
+/// CLI verbs all accept the artifacts.
+#[test]
+fn serve_bench_cli_sampling_is_deterministic_and_artifacts_validate() {
+    let d1 = tmp("cli_smoke_1");
+    let d2 = tmp("cli_smoke_2");
+    for d in [&d1, &d2] {
+        let out = serve_bench_smoke(d);
+        assert!(
+            out.status.success(),
+            "serve-bench failed:\nstdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
+
+    // Head sampling: identical sampled set across reruns — exactly the
+    // trace the (seed 42, rate 0.1) hash keeps.
+    let t1 = std::fs::read_to_string(d1.join("trace.jsonl")).unwrap();
+    let t2 = std::fs::read_to_string(d2.join("trace.jsonl")).unwrap();
+    let s1 = sampled_traces(&t1);
+    assert_eq!(
+        s1,
+        BTreeSet::from([SMOKE_SAMPLED_TRACE.to_string()]),
+        "seed 42 @ rate 0.1 keeps exactly trace id 10 of the 16 smoke requests"
+    );
+    assert_eq!(s1, sampled_traces(&t2), "sampled set must survive reruns");
+
+    // The kept trace still carries the full request pipeline, and the
+    // periodic + exit flushes never wrote a span twice.
+    let (stats, n_traces) = stage_breakdown(&t1).unwrap();
+    assert_eq!(n_traces, 1);
+    let names: BTreeSet<&str> = stats.iter().map(|s| s.name.as_str()).collect();
+    for n in ["request", "queue", "execute", "reply"] {
+        assert!(names.contains(n), "sampled trace missing {n}: {names:?}");
+    }
+    let span_ids: Vec<String> = t1
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            Json::parse(l)
+                .unwrap()
+                .get("span")
+                .as_str()
+                .expect("span id")
+                .to_string()
+        })
+        .collect();
+    let uniq: BTreeSet<&String> = span_ids.iter().collect();
+    assert_eq!(
+        uniq.len(),
+        span_ids.len(),
+        "flush cursor must not duplicate spans across periodic + exit flushes"
+    );
+
+    // metrics.prom: well-formed exposition with every required series.
+    let prom = std::fs::read_to_string(d1.join("metrics.prom")).unwrap();
+    let snap = validate_serving_snapshot(&prom).unwrap();
+    assert_eq!(snap["autosage_traces_sampled_out_total"], 15.0);
+    assert_eq!(snap["autosage_spans_dropped_total"], 0.0);
+    assert_eq!(snap["autosage_pool_requests_total"], 16.0);
+    assert!(snap["autosage_pool_latency_ms{quantile=\"0.99\"}"] > 0.0);
+    assert!(
+        snap.iter()
+            .any(|(k, v)| k.starts_with("autosage_scheduler_decisions_total") && *v > 0.0),
+        "scheduler decision counters missing: {snap:?}"
+    );
+
+    // audit.jsonl: the estimate-accuracy loop ignores sampling, so the
+    // calibration table aggregates real (op, variant) rows.
+    let audit = std::fs::read_to_string(d1.join("audit.jsonl")).unwrap();
+    for line in audit.lines().filter(|l| !l.trim().is_empty()) {
+        let s = AuditSample::from_json(&Json::parse(line).unwrap()).unwrap();
+        assert!(s.measured_ms > 0.0, "{line}");
+        assert!(s.predicted_ms > 0.0, "{line}");
+    }
+    let rows = calibration_table(&audit).unwrap();
+    assert!(!rows.is_empty(), "audit.jsonl produced no calibration rows");
+    assert!(rows.iter().all(|r| r.n > 0 && r.buckets > 0), "{rows:?}");
+
+    // The CLI verbs accept everything the run emitted.
+    let prom_path = d1.join("metrics.prom");
+    let out = cli(&["metrics", "validate", prom_path.to_str().unwrap()]);
+    assert!(out.contains("metrics OK"), "{out}");
+    let out = cli(&["obs", "report", d1.to_str().unwrap()]);
+    assert!(out.contains("stage latency breakdown"), "{out}");
+    assert!(out.contains("estimate calibration"), "{out}");
+    assert!(!out.contains("no usable audit samples"), "{out}");
+    assert!(out.contains("autosage_traces_sampled_out_total"), "{out}");
+    let manifest_path = d1.join("manifest.json");
+    let out = cli(&["manifest", "validate", manifest_path.to_str().unwrap()]);
+    assert!(out.contains("manifest OK"), "{out}");
+    // metrics.prom and audit.jsonl are sha256-covered by the manifest:
+    // corrupting the snapshot must now fail validation.
+    std::fs::write(&prom_path, format!("{prom}\nextra_series 1\n")).unwrap();
+    let rep = std::process::Command::new(env!("CARGO_BIN_EXE_autosage"))
+        .args(["manifest", "validate", manifest_path.to_str().unwrap()])
+        .output()
+        .expect("spawning autosage");
+    assert!(
+        !rep.status.success(),
+        "tampered metrics.prom must fail manifest validation"
+    );
+}
+
+/// Sampling only throttles the *trace* stream: at rate 0.0 no request
+/// spans record (only the discard counter moves), while the metrics
+/// registry and the estimate-accuracy audit still see every request.
+#[test]
+fn rate_zero_sampling_audits_and_counts_but_records_no_request_spans() {
+    let rec = Arc::new(Recorder::with_sampling("rate0-it", 0.0, 42));
+    let reg = Arc::new(MetricsRegistry::new());
+    let pool = Arc::new(
+        ServerPool::spawn_observed(
+            PathBuf::from("artifacts"),
+            cfg(2),
+            Some(Arc::clone(&rec)),
+            Some(Arc::clone(&reg)),
+        )
+        .unwrap(),
+    );
+    let spec = LoadSpec {
+        clients: 4,
+        requests_per_client: 2,
+        f: 64,
+        presets: vec!["er_s".into()],
+        ops: vec![Op::Spmm, Op::Sddmm],
+        seed: 7,
+        verify: false,
+    };
+    let report = run_load_traced(Arc::clone(&pool), &spec, Some(Arc::clone(&rec))).unwrap();
+    assert_eq!(report.errors, 0, "{}", report.text);
+    assert_eq!(rec.traces_sampled_out(), 8, "all 8 requests discarded");
+    let request_spans = rec
+        .snapshot()
+        .iter()
+        .filter(|s| s.name == "request" || s.name == "execute")
+        .count();
+    assert_eq!(request_spans, 0, "rate 0 must record no request spans");
+
+    // Registry + audit are sampling-independent.
+    assert!(
+        !reg.audit_snapshot().is_empty(),
+        "audit loop must see every executed request at rate 0"
+    );
+    let snap_text = prometheus_snapshot(&reg, Some(pool.metrics()), Some(&*rec));
+    let snap = validate_serving_snapshot(&snap_text).unwrap();
+    assert_eq!(snap["autosage_traces_sampled_out_total"], 8.0);
+    assert_eq!(snap["autosage_pool_requests_total"], 8.0);
+    assert!(snap["autosage_pool_latency_ms{quantile=\"0.5\"}"] > 0.0);
 }
