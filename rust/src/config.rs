@@ -23,6 +23,8 @@
 //! | `AUTOSAGE_TRACE_SAMPLE` | head-sampling rate for serve-bench traces in [0,1]: each trace id is kept iff `hash(seed ^ id) < rate`, so the sampled set is deterministic under `--seed` (1.0 = trace everything, 0.0 = trace nothing) | 1.0 |
 //! | `AUTOSAGE_TRACE_RING`   | flight-recorder span ring-buffer capacity (0 = unbounded); overflow evicts oldest unflushed spans and counts them as `spans_dropped` | 0 |
 //! | `AUTOSAGE_TRACE_FLUSH_MS` | periodic trace flush throttle during serving: sampled spans append to `trace.jsonl` at most once per this many ms (0 = flush only at run end) | 0 |
+//! | `AUTOSAGE_MODEL`        | trained cost-model file (`autosage train` output) consulted on cold keys ("" = always probe) | "" |
+//! | `AUTOSAGE_MODEL_CONFIDENCE` | minimum calibrated confidence to act on a model prediction without probing; below it the prediction is recorded and the micro-probe runs anyway | 0.8 |
 
 use crate::util::envcfg::{env_bool, env_f64, env_string, env_usize};
 
@@ -76,6 +78,14 @@ pub struct Config {
     /// Periodic trace-flush throttle in ms (0 = flush only at run
     /// end). Env: `AUTOSAGE_TRACE_FLUSH_MS`.
     pub trace_flush_ms: usize,
+    /// Trained cost-model file consulted on cold keys ("" = no model,
+    /// always probe). Env: `AUTOSAGE_MODEL`.
+    pub model_path: String,
+    /// Minimum calibrated confidence for acting on a model prediction
+    /// without probing, in [0, 1]. Below it the prediction is recorded
+    /// (for the agreement counters) but the micro-probe still decides.
+    /// Env: `AUTOSAGE_MODEL_CONFIDENCE`.
+    pub model_confidence: f64,
 }
 
 impl Default for Config {
@@ -103,6 +113,8 @@ impl Default for Config {
             trace_sample: 1.0,
             trace_ring: 0,
             trace_flush_ms: 0,
+            model_path: String::new(),
+            model_confidence: 0.8,
         }
     }
 }
@@ -140,6 +152,8 @@ impl Config {
             trace_sample: env_f64("AUTOSAGE_TRACE_SAMPLE", d.trace_sample)?,
             trace_ring: env_usize("AUTOSAGE_TRACE_RING", d.trace_ring)?,
             trace_flush_ms: env_usize("AUTOSAGE_TRACE_FLUSH_MS", d.trace_flush_ms)?,
+            model_path: env_string("AUTOSAGE_MODEL", &d.model_path),
+            model_confidence: env_f64("AUTOSAGE_MODEL_CONFIDENCE", d.model_confidence)?,
         })
     }
 
@@ -177,6 +191,12 @@ impl Config {
             return Err(format!(
                 "AUTOSAGE_TRACE_SAMPLE must be in [0, 1]; got {}",
                 self.trace_sample
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.model_confidence) {
+            return Err(format!(
+                "AUTOSAGE_MODEL_CONFIDENCE must be in [0, 1]; got {}",
+                self.model_confidence
             ));
         }
         Ok(())
@@ -264,6 +284,21 @@ mod tests {
         assert_eq!(c.trace_sample, 1.0);
         assert_eq!(c.trace_ring, 0);
         assert_eq!(c.trace_flush_ms, 0);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_model_confidence() {
+        let mut c = Config::default();
+        assert_eq!(c.model_path, "");
+        assert_eq!(c.model_confidence, 0.8);
+        c.model_confidence = 1.1;
+        assert!(c.validate().is_err());
+        c.model_confidence = -0.01;
+        assert!(c.validate().is_err());
+        for ok in [0.0, 0.5, 1.0] {
+            c.model_confidence = ok;
+            assert!(c.validate().is_ok(), "{ok}");
+        }
     }
 
     #[test]

@@ -71,6 +71,19 @@ impl AutoSage {
         self.scheduler.metrics = m;
     }
 
+    /// Attach (or detach) a trained cost model: subsequent `decide`
+    /// calls predict cold keys first and probe only below the
+    /// confidence threshold. The serve pool loads one model and shares
+    /// it read-only across every shard through this setter.
+    pub fn set_model(&mut self, m: Option<std::sync::Arc<crate::model::CostModel>>) {
+        self.scheduler.model = m;
+    }
+
+    /// Whether a trained cost model is attached.
+    pub fn has_model(&self) -> bool {
+        self.scheduler.model.is_some()
+    }
+
     /// Roofline-predicted execution time in milliseconds of `variant`
     /// on `g` — the "predicted" side of the estimate-accuracy audit
     /// (`audit.jsonl`). `None` when no fitting full-size artifact

@@ -26,6 +26,10 @@
 //! * [`ops`] — typed SpMM/SDDMM/softmax/attention ops + Rust oracle.
 //! * [`scheduler`] — the paper's contribution: estimate → micro-probe →
 //!   guardrail, with a persistent decision cache and replay mode.
+//! * [`model`] — the learned scheduler: mines probe + audit telemetry
+//!   into a trained per-op decision tree (`autosage train`, `.asgm`
+//!   files) that predicts variants for cold keys; the scheduler probes
+//!   only when the calibrated confidence is low.
 //! * [`coordinator`] — the public facade (`AutoSage`) and request queue.
 //! * [`server`] — the concurrent serving subsystem: sharded worker
 //!   pool, shared single-flight schedule cache, request coalescing,
@@ -42,6 +46,7 @@ pub mod coordinator;
 pub mod data;
 pub mod gen;
 pub mod graph;
+pub mod model;
 pub mod obs;
 pub mod ops;
 pub mod runtime;

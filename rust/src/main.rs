@@ -70,9 +70,10 @@ impl Args {
         let mut positional = Vec::new();
         let mut flags = HashMap::new();
         let mut it = raw.iter().peekable();
-        // Flags that may appear bare, with no value (`--smoke`); every
-        // other flag still hard-errors when its value is missing.
-        const BOOL_FLAGS: &[&str] = &["smoke"];
+        // Flags that may appear bare, with no value (`--smoke`,
+        // `--json`); every other flag still hard-errors when its value
+        // is missing.
+        const BOOL_FLAGS: &[&str] = &["smoke", "json"];
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 let val = if BOOL_FLAGS.contains(&key) {
@@ -133,6 +134,7 @@ fn real_main() -> Result<()> {
         "all" => cmd_all(&args),
         "cache" => cmd_cache(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "train" => cmd_train(&args),
         "manifest" => cmd_manifest(&args),
         "perf" => cmd_perf(&args),
         "metrics" => cmd_metrics(&args),
@@ -165,13 +167,18 @@ fn print_usage() {
          \x20 cache   dump|clear|stats [--path FILE]\n\
          \x20 serve-bench [--smoke] [--workers K] [--clients N] [--requests M]\n\
          \x20             [--presets a,b] [--ops spmm,sddmm,attention] [--f F]\n\
-         \x20             [--seed N] [--cache FILE] [--out DIR]\n\
+         \x20             [--seed N] [--cache FILE] [--model FILE.asgm] [--out DIR]\n\
          \x20             (--out also writes trace.jsonl, metrics.prom, audit.jsonl,\n\
          \x20              perf.json, manifest.json; see AUTOSAGE_TRACE_* in config)\n\
+         \x20 train   --from DIR [--cache FILE] --out MODEL.asgm [--seed N]\n\
+         \x20         [--max-depth D]  (mine audit.jsonl + schedule-cache probe\n\
+         \x20          outcomes into a decision-tree cost model; deterministic\n\
+         \x20          under --seed; load via --model / AUTOSAGE_MODEL with the\n\
+         \x20          probe threshold AUTOSAGE_MODEL_CONFIDENCE)\n\
          \x20 manifest validate <manifest.json>\n\
          \x20 perf    compare <baseline.json> <candidate.json>\n\
          \x20 metrics validate|show <metrics.prom>\n\
-         \x20 obs     report <DIR>  (stage latencies + estimate-accuracy audit)\n\
+         \x20 obs     report <DIR> [--json]  (stage latencies + estimate-accuracy audit)\n\
          graph specs G: a preset <{presets}>\n\
          \x20             or file:PATH (.asg | .mtx | edge list .txt/.csv);\n\
          \x20             --preset NAME remains an alias for presets\n\
@@ -647,6 +654,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // Fresh in-memory schedule cache by default so the bench measures
     // cold probes + warm replay; `--cache FILE` opts into persistence.
     cfg.cache_path = args.get("cache").unwrap_or("").to_string();
+    // `--model FILE.asgm` attaches a trained cost model (overrides
+    // AUTOSAGE_MODEL): cold keys above AUTOSAGE_MODEL_CONFIDENCE skip
+    // the micro-probe.
+    if let Some(mp) = args.get("model") {
+        cfg.model_path = mp.to_string();
+    }
     cfg.serve_workers = args.get_parse("workers", cfg.serve_workers)?;
     let mut spec = if smoke { LoadSpec::smoke() } else { LoadSpec::bench() };
     spec.clients = args.get_parse("clients", spec.clients)?;
@@ -744,6 +757,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         m.add_metric("p95_ms", report.p95_ms);
         m.add_metric("p99_ms", report.p99_ms);
         m.add_metric("probes", report.probes as f64);
+        m.add_metric("model_predictions", report.model_predictions as f64);
         m.add_metric("unique_keys", report.unique_keys as f64);
         for rel in [
             "serve_bench.csv",
@@ -777,6 +791,89 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             report.total
         );
     }
+    Ok(())
+}
+
+/// `autosage train`: mine probe + audit telemetry into a trained cost
+/// model (`.asgm`). Deterministic: the same telemetry and the same
+/// `--seed` produce a byte-identical model file.
+fn cmd_train(args: &Args) -> Result<()> {
+    use autosage::model::{
+        class_summary, examples_from_audit, examples_from_cache, merge_and_cap,
+        write_model, CostModel, Example, DEFAULT_MAX_DEPTH, TRAIN_EXAMPLE_CAP,
+    };
+    use autosage::obs::report::calibration_table;
+
+    let out = args
+        .get("out")
+        .context("--out MODEL.asgm required (where to write the trained model)")?;
+    let from = args.get("from");
+    let cache_path = args.get("cache");
+    if from.is_none() && cache_path.is_none() {
+        bail!(
+            "nothing to mine: pass --from DIR (a serve-bench --out directory \
+             with audit.jsonl) and/or --cache FILE (a persisted schedule cache)"
+        );
+    }
+    let seed = args.get_parse("seed", 42u64)?;
+    let max_depth = args.get_parse("max-depth", DEFAULT_MAX_DEPTH)?;
+
+    // Source 1: probe-resolved schedule-cache entries (the ones that
+    // carry feature vectors).
+    let mut sources: Vec<Vec<Example>> = Vec::new();
+    if let Some(cp) = cache_path {
+        let cache = ScheduleCache::load(Path::new(cp))?;
+        let ex = examples_from_cache(&cache);
+        println!(
+            "cache {cp}: {} entries, {} probe-labeled examples",
+            cache.len(),
+            ex.len()
+        );
+        sources.push(ex);
+    }
+    // Source 2 (mined later, so fresher audit rows win dedup): the
+    // audit stream's probe outcomes, which also feed the calibration
+    // damping table.
+    let mut calib = Vec::new();
+    if let Some(dir) = from {
+        let audit_path = Path::new(dir).join("audit.jsonl");
+        let text = std::fs::read_to_string(&audit_path)
+            .with_context(|| format!("reading {}", audit_path.display()))?;
+        let ex = examples_from_audit(&text)?;
+        calib = calibration_table(&text)?;
+        println!(
+            "audit {}: {} labeled examples, {} calibration rows",
+            audit_path.display(),
+            ex.len(),
+            calib.len()
+        );
+        sources.push(ex);
+    }
+    let examples = merge_and_cap(sources, TRAIN_EXAMPLE_CAP, seed);
+    println!("training set: {} examples (cap {TRAIN_EXAMPLE_CAP})", examples.len());
+    for (op, classes) in class_summary(&examples) {
+        let detail = classes
+            .iter()
+            .map(|(v, c)| format!("{v} x{c}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("  {op:<10} {detail}");
+    }
+
+    let model = CostModel::train(&examples, &calib, seed, max_depth)?;
+    let out_path = Path::new(out);
+    write_model(out_path, &model)?;
+    let bytes = std::fs::metadata(out_path).map(|m| m.len()).unwrap_or(0);
+    for op in model.op_names() {
+        println!(
+            "  {op:<10} tree depth {}",
+            model.ops[op].tree.depth()
+        );
+    }
+    println!(
+        "written {out} ({bytes} bytes, seed {seed}, max depth {max_depth}) — \
+         serve with --model {out} (threshold: AUTOSAGE_MODEL_CONFIDENCE)"
+    );
     Ok(())
 }
 
@@ -876,9 +973,14 @@ fn cmd_obs(args: &Args) -> Result<()> {
             let dir = args
                 .positional
                 .get(1)
-                .context("usage: obs report <dir> (a serve-bench --out directory)")?;
-            let text = obs::report::report_dir(Path::new(dir))?;
-            print!("{text}");
+                .context("usage: obs report <dir> [--json] (a serve-bench --out directory)")?;
+            if args.get("json").map(|v| v != "false").unwrap_or(false) {
+                let j = obs::report::report_dir_json(Path::new(dir))?;
+                println!("{j}");
+            } else {
+                let text = obs::report::report_dir(Path::new(dir))?;
+                print!("{text}");
+            }
             Ok(())
         }
         other => bail!("unknown obs action {other:?} (report)"),

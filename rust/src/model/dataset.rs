@@ -1,0 +1,216 @@
+//! Training-data extraction: mine the telemetry the engine already
+//! persists — schedule-cache probe resolutions and `audit.jsonl` probe
+//! outcome rows — into labeled `(op, InputFeatures vector) → variant`
+//! examples for the cost model.
+//!
+//! Two sources, same label semantics:
+//!
+//! * **Schedule cache**: entries that carry a stored feature vector are
+//!   probe resolutions (model-predicted entries deliberately store no
+//!   features, so the model never trains on its own output). The label
+//!   is the cached variant.
+//! * **Audit stream**: probe-path rows record every probed candidate
+//!   with an outcome. A `"chosen"` row is a positive label; a
+//!   `"fallback"` row labels the input `"baseline"` (the guardrail
+//!   rejected every candidate — the negative outcome the satellite task
+//!   asks us to learn from). `"rejected"` / `"baseline"` rows carry the
+//!   losing side; they contribute to calibration, and they gate labels:
+//!   a group with only rejected rows yields no example.
+
+use std::collections::BTreeMap;
+
+use crate::obs::metrics::AuditSample;
+use crate::scheduler::ScheduleCache;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// One labeled training example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub op: String,
+    pub features: Vec<f64>,
+    pub label: String,
+}
+
+/// Deduplication key: op + the exact feature vector. `{:?}` on f64 is
+/// shortest-roundtrip, so distinct vectors get distinct keys.
+fn example_key(op: &str, features: &[f64]) -> String {
+    format!("{op}|{features:?}")
+}
+
+/// Mine probe-resolved schedule-cache entries (the ones carrying a
+/// feature vector) into examples. The cache key's last `|` segment is
+/// the op name.
+pub fn examples_from_cache(cache: &ScheduleCache) -> Vec<Example> {
+    let mut out = Vec::new();
+    for (key, choice) in cache.dump() {
+        let Some(features) = choice.features else { continue };
+        let Some(op) = key.rsplit('|').next().filter(|s| !s.is_empty()) else {
+            continue;
+        };
+        out.push(Example {
+            op: op.to_string(),
+            features,
+            label: choice.variant,
+        });
+    }
+    out
+}
+
+/// Mine an `audit.jsonl` body into examples: per (op, feature-vector)
+/// group, the `"chosen"` row wins, a `"fallback"` row labels the group
+/// `"baseline"`, and groups with neither yield nothing.
+pub fn examples_from_audit(audit_jsonl: &str) -> Result<Vec<Example>> {
+    let mut by_key: BTreeMap<String, Example> = BTreeMap::new();
+    for (i, line) in audit_jsonl.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("audit.jsonl line {}", i + 1))?;
+        let s = AuditSample::from_json(&j)
+            .with_context(|| format!("audit.jsonl line {}: not an audit sample", i + 1))?;
+        let Some(features) = s.features else { continue };
+        let label = match s.outcome.as_str() {
+            "chosen" => s.variant,
+            "fallback" => "baseline".to_string(),
+            _ => continue, // rejected/baseline/executed: no label here
+        };
+        // Later rows win: a re-probe of the same input is fresher.
+        by_key.insert(
+            example_key(&s.op, &features),
+            Example {
+                op: s.op,
+                features,
+                label,
+            },
+        );
+    }
+    Ok(by_key.into_values().collect())
+}
+
+/// Merge example sources, dedup by (op, feature vector) — later sources
+/// win — and cap the set with a seeded subsample. Output order is
+/// sorted by key, so the training set (and therefore the trained model
+/// file) is a pure function of (telemetry, seed).
+pub fn merge_and_cap(sources: Vec<Vec<Example>>, cap: usize, seed: u64) -> Vec<Example> {
+    let mut by_key: BTreeMap<String, Example> = BTreeMap::new();
+    for source in sources {
+        for ex in source {
+            by_key.insert(example_key(&ex.op, &ex.features), ex);
+        }
+    }
+    let mut keys: Vec<String> = by_key.keys().cloned().collect();
+    if keys.len() > cap {
+        let mut rng = Rng::for_stream(seed, 0);
+        rng.shuffle(&mut keys);
+        keys.truncate(cap);
+        keys.sort();
+    }
+    keys.into_iter()
+        .filter_map(|k| by_key.remove(&k))
+        .collect()
+}
+
+/// Per-op class histogram, for the `autosage train` summary.
+pub fn class_summary(examples: &[Example]) -> BTreeMap<String, BTreeMap<String, usize>> {
+    let mut out: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+    for ex in examples {
+        *out.entry(ex.op.clone())
+            .or_default()
+            .entry(ex.label.clone())
+            .or_default() += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::CachedChoice;
+
+    fn sample_line(op: &str, variant: &str, outcome: &str, features: Option<&[f64]>) -> String {
+        let mut s = AuditSample::executed(op, variant, "b", 1.0, 2.0);
+        s.outcome = outcome.into();
+        s.features = features.map(|f| f.to_vec());
+        s.to_json().to_string()
+    }
+
+    #[test]
+    fn audit_labels_come_from_chosen_and_fallback_rows() {
+        let feats_a = [100.0, 400.0];
+        let feats_b = [200.0, 800.0];
+        let feats_c = [300.0, 900.0];
+        let lines = [
+            sample_line("spmm", "ell_r8_f32", "chosen", Some(&feats_a)),
+            sample_line("spmm", "hub_r8_f32", "rejected", Some(&feats_a)),
+            sample_line("spmm", "baseline", "fallback", Some(&feats_b)),
+            // Only-rejected group: no ground truth, no example.
+            sample_line("spmm", "hub_r8_f32", "rejected", Some(&feats_c)),
+            // Executed rows carry no features and never label.
+            sample_line("spmm", "ell_r8_f32", "executed", None),
+        ]
+        .join("\n");
+        let mut ex = examples_from_audit(&lines).unwrap();
+        ex.sort_by(|a, b| a.features[0].partial_cmp(&b.features[0]).unwrap());
+        assert_eq!(ex.len(), 2);
+        assert_eq!(ex[0].label, "ell_r8_f32");
+        assert_eq!(ex[1].label, "baseline");
+    }
+
+    #[test]
+    fn cache_entries_without_features_are_skipped() {
+        let mut cache = ScheduleCache::in_memory();
+        cache.insert(
+            "dev|sig1|F64|spmm".into(),
+            CachedChoice {
+                variant: "ell_r8_f32".into(),
+                t_baseline_ms: 1.0,
+                t_star_ms: 0.5,
+                alpha: 0.95,
+                features: Some(vec![64.0, 256.0]),
+            },
+        );
+        cache.insert(
+            "dev|sig2|F64|attention".into(),
+            CachedChoice {
+                variant: "fused".into(),
+                t_baseline_ms: 1.0,
+                t_star_ms: 0.5,
+                alpha: 0.95,
+                features: None, // model-predicted: never a training row
+            },
+        );
+        let ex = examples_from_cache(&cache);
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].op, "spmm");
+        assert_eq!(ex[0].label, "ell_r8_f32");
+    }
+
+    #[test]
+    fn merge_dedups_and_caps_deterministically() {
+        let a = Example {
+            op: "spmm".into(),
+            features: vec![1.0],
+            label: "old".into(),
+        };
+        let a2 = Example {
+            label: "new".into(),
+            ..a.clone()
+        };
+        let rest: Vec<Example> = (0..20)
+            .map(|i| Example {
+                op: "spmm".into(),
+                features: vec![10.0 + i as f64],
+                label: "x".into(),
+            })
+            .collect();
+        let merged = merge_and_cap(vec![vec![a], vec![a2.clone()], rest.clone()], 100, 7);
+        assert_eq!(merged.len(), 21);
+        assert!(merged.contains(&a2), "later source wins the dup key");
+        let capped1 = merge_and_cap(vec![rest.clone()], 8, 7);
+        let capped2 = merge_and_cap(vec![rest], 8, 7);
+        assert_eq!(capped1.len(), 8);
+        assert_eq!(capped1, capped2, "same seed → same subsample");
+    }
+}

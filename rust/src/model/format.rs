@@ -1,0 +1,170 @@
+//! `.asgm` — the versioned, checksummed cost-model file format.
+//!
+//! Layout (integers little-endian, mirroring the `.asg` snapshot
+//! format's crash-safety and verification discipline):
+//!
+//! ```text
+//! magic    8 B   b"ASGMODL1"
+//! version  u32   MODEL_VERSION (load rejects anything else)
+//! seed     u64   the --seed the model was trained under
+//! len      u64   payload byte length
+//! payload  len B compact JSON (CostModel::to_json; BTreeMap-backed, so
+//!                key order — and therefore the bytes — is canonical)
+//! checksum u64   FNV-1a over every preceding byte
+//! ```
+//!
+//! Writes go through a sibling temp file + rename; loads verify magic,
+//! version, exact length, and checksum before parsing the payload.
+//! Determinism contract: the same telemetry and the same seed produce
+//! byte-identical files (verified by an integration test), so model
+//! artifacts can be content-compared in CI.
+
+use std::fs;
+use std::path::Path;
+
+use crate::graph::signature::Fnv1a;
+use crate::model::CostModel;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+pub const MODEL_MAGIC: &[u8; 8] = b"ASGMODL1";
+pub const MODEL_VERSION: u32 = 1;
+
+/// Serialize `model` to `path`, crash-safely (temp file + rename).
+pub fn write_model(path: &Path, model: &CostModel) -> Result<()> {
+    let payload = model.to_json().to_string();
+    let mut buf: Vec<u8> = Vec::with_capacity(8 + 4 + 8 + 8 + payload.len() + 8);
+    buf.extend_from_slice(MODEL_MAGIC);
+    buf.extend_from_slice(&MODEL_VERSION.to_le_bytes());
+    buf.extend_from_slice(&model.seed.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    buf.extend_from_slice(payload.as_bytes());
+    let mut h = Fnv1a::new();
+    h.write(&buf);
+    buf.extend_from_slice(&h.finish().to_le_bytes());
+
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        fs::create_dir_all(dir).ok();
+    }
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "model.asgm".to_string());
+    let tmp = path.with_file_name(format!("{file_name}.tmp"));
+    fs::write(&tmp, &buf)
+        .with_context(|| format!("writing model temp file {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming model over {}", path.display()))
+}
+
+/// Load and fully verify a cost model from `path`.
+pub fn read_model(path: &Path) -> Result<CostModel> {
+    let buf =
+        fs::read(path).with_context(|| format!("reading model {}", path.display()))?;
+    let name = path.display();
+    let header = 8 + 4 + 8 + 8;
+    if buf.len() < header + 8 {
+        return Err(anyhow!("{name}: truncated model file ({} bytes)", buf.len()));
+    }
+    if &buf[..8] != MODEL_MAGIC {
+        return Err(anyhow!("{name}: not an AutoSAGE model file (bad magic)"));
+    }
+    let version = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
+    if version != MODEL_VERSION {
+        return Err(anyhow!(
+            "{name}: unsupported model version {version} (expected {MODEL_VERSION})"
+        ));
+    }
+    let seed = u64::from_le_bytes(buf[12..20].try_into().expect("8 bytes"));
+    let len = u64::from_le_bytes(buf[20..28].try_into().expect("8 bytes"));
+    // u128 math: the length field is untrusted.
+    if buf.len() as u128 != header as u128 + len as u128 + 8 {
+        return Err(anyhow!(
+            "{name}: length {} != expected for {len}-byte payload",
+            buf.len()
+        ));
+    }
+    let mut h = Fnv1a::new();
+    h.write(&buf[..buf.len() - 8]);
+    let stored = u64::from_le_bytes(
+        buf[buf.len() - 8..].try_into().expect("8 bytes"),
+    );
+    if h.finish() != stored {
+        return Err(anyhow!(
+            "{name}: checksum mismatch (file corrupt or truncated mid-write)"
+        ));
+    }
+    let payload = std::str::from_utf8(&buf[header..buf.len() - 8])
+        .map_err(|_| anyhow!("{name}: model payload is not UTF-8"))?;
+    let j = Json::parse(payload).map_err(|e| anyhow!("{name}: payload: {e}"))?;
+    let mut model = CostModel::from_json(&j).with_context(|| format!("{name}: payload"))?;
+    model.seed = seed;
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests::tiny_model;
+    use std::path::PathBuf;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("autosage_model_format_tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_and_atomicity() {
+        let path = tmpfile("roundtrip.asgm");
+        let m = tiny_model(42);
+        write_model(&path, &m).unwrap();
+        assert!(!path.with_file_name("roundtrip.asgm.tmp").exists());
+        let back = read_model(&path).unwrap();
+        assert_eq!(back, m);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn writes_are_byte_identical_for_same_model() {
+        let a = tmpfile("det_a.asgm");
+        let b = tmpfile("det_b.asgm");
+        write_model(&a, &tiny_model(7)).unwrap();
+        write_model(&b, &tiny_model(7)).unwrap();
+        assert_eq!(fs::read(&a).unwrap(), fs::read(&b).unwrap());
+        let _ = fs::remove_file(&a);
+        let _ = fs::remove_file(&b);
+    }
+
+    #[test]
+    fn detects_corruption_truncation_bad_magic_and_version() {
+        let path = tmpfile("corrupt.asgm");
+        write_model(&path, &tiny_model(1)).unwrap();
+        let good = fs::read(&path).unwrap();
+
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0xFF;
+        fs::write(&path, &flipped).unwrap();
+        let err = format!("{:#}", read_model(&path).unwrap_err());
+        assert!(err.contains("checksum") || err.contains("payload"), "{err}");
+
+        fs::write(&path, &good[..good.len() - 3]).unwrap();
+        assert!(read_model(&path).is_err());
+
+        fs::write(&path, vec![b'X'; 64]).unwrap();
+        let err = format!("{:#}", read_model(&path).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+
+        let mut futver = good.clone();
+        futver[8] = 99;
+        let mut h = Fnv1a::new();
+        let n = futver.len();
+        h.write(&futver[..n - 8]);
+        futver[n - 8..].copy_from_slice(&h.finish().to_le_bytes());
+        fs::write(&path, &futver).unwrap();
+        let err = format!("{:#}", read_model(&path).unwrap_err());
+        assert!(err.contains("version"), "{err}");
+        let _ = fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,307 @@
+//! The learned scheduler's cost model (ROADMAP "Learned scheduler";
+//! ParamSpMM / DA-SpMM in PAPERS.md): a per-op decision tree trained on
+//! telemetry the engine already persists — probe resolutions in the
+//! schedule cache and probe-outcome rows in `audit.jsonl` — predicting
+//! the kernel variant for cold keys so serving skips the micro-probe
+//! when the model is confident.
+//!
+//! Pipeline: [`dataset`] mines labeled examples over the
+//! `InputFeatures::to_vec()` vector, [`tree`] fits a deterministic CART
+//! per op, and [`format`] persists the result as a versioned,
+//! checksummed, crash-safe `.asgm` file. `Scheduler::decide` consults
+//! the model after input validation: confidence at or above
+//! `AUTOSAGE_MODEL_CONFIDENCE` skips the probe (the guardrail's oracle
+//! safety is untouched — a mispredicted variant still computes the
+//! exact answer, it is merely slower); below it the probe runs and the
+//! predicted-vs-probed agreement is counted.
+//!
+//! Confidence is calibrated: the tree's Laplace-smoothed leaf purity is
+//! damped by the per-variant roofline calibration error from the audit
+//! table, so variants whose cost estimates are known-bad need stronger
+//! leaf evidence before the probe is skipped.
+
+pub mod dataset;
+pub mod format;
+pub mod tree;
+
+use std::collections::BTreeMap;
+
+use crate::obs::report::CalibrationRow;
+use crate::scheduler::features::FEATURE_NAMES;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+pub use dataset::{class_summary, examples_from_audit, examples_from_cache, merge_and_cap, Example};
+pub use format::{read_model, write_model, MODEL_MAGIC, MODEL_VERSION};
+pub use tree::{DecisionTree, Prediction, DEFAULT_MAX_DEPTH};
+
+/// Cap on training examples; beyond it a seeded subsample keeps
+/// training time bounded on long-lived telemetry.
+pub const TRAIN_EXAMPLE_CAP: usize = 50_000;
+
+/// One op's trained classifier plus its calibration damping table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpModel {
+    pub tree: DecisionTree,
+    /// Per-variant mean relative roofline error from the audit
+    /// calibration table (absent variant = no damping).
+    pub calib: BTreeMap<String, f64>,
+}
+
+/// The trained cost model: per-op trees over the canonical
+/// [`FEATURE_NAMES`] vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Training seed (stamped into the file header; byte-identical
+    /// retraining requires the same seed and telemetry).
+    pub seed: u64,
+    pub feature_names: Vec<String>,
+    pub ops: BTreeMap<String, OpModel>,
+}
+
+/// Damp a raw leaf confidence by the variant's known estimate error:
+/// full trust while the roofline is within ~100% relative error, down
+/// to half trust once it exceeds 200%. Bounded in [0.5, 1.0] so a bad
+/// calibration table can force probing but never zero the model out.
+fn calib_factor(mean_rel_err: f64) -> f64 {
+    1.0 / (1.0 + (mean_rel_err - 1.0).clamp(0.0, 1.0))
+}
+
+impl CostModel {
+    /// Train per-op trees from labeled examples plus the audit
+    /// calibration table. Deterministic: same inputs + seed → the same
+    /// model, bit for bit.
+    pub fn train(
+        examples: &[Example],
+        calib: &[CalibrationRow],
+        seed: u64,
+        max_depth: usize,
+    ) -> Result<CostModel> {
+        if examples.is_empty() {
+            return Err(anyhow!(
+                "no labeled examples — run serve-bench/bench with probing \
+                 first so the cache and audit stream carry probe outcomes"
+            ));
+        }
+        let mut by_op: BTreeMap<String, Vec<&Example>> = BTreeMap::new();
+        for ex in examples {
+            by_op.entry(ex.op.clone()).or_default().push(ex);
+        }
+        let mut ops = BTreeMap::new();
+        for (op, exs) in by_op {
+            let mut classes: Vec<String> =
+                exs.iter().map(|e| e.label.clone()).collect();
+            classes.sort();
+            classes.dedup();
+            let labels: Vec<usize> = exs
+                .iter()
+                .map(|e| classes.iter().position(|c| *c == e.label).expect("own label"))
+                .collect();
+            let features: Vec<Vec<f64>> =
+                exs.iter().map(|e| e.features.clone()).collect();
+            let tree = DecisionTree::train(classes, &features, &labels, max_depth)
+                .with_context(|| format!("training op {op}"))?;
+            let calib_map: BTreeMap<String, f64> = calib
+                .iter()
+                .filter(|r| r.op == op)
+                .map(|r| (r.variant.clone(), r.mean_rel_err))
+                .collect();
+            ops.insert(
+                op,
+                OpModel {
+                    tree,
+                    calib: calib_map,
+                },
+            );
+        }
+        Ok(CostModel {
+            seed,
+            feature_names: FEATURE_NAMES.iter().map(|s| s.to_string()).collect(),
+            ops,
+        })
+    }
+
+    /// Predict the variant for one op + feature vector. `None` when the
+    /// model has no tree for the op. The returned confidence is already
+    /// calibration-damped.
+    pub fn predict(&self, op: &str, features: &[f64]) -> Option<Prediction> {
+        let m = self.ops.get(op)?;
+        let mut p = m.tree.predict(features)?;
+        let err = m.calib.get(&p.variant).copied().unwrap_or(0.0);
+        p.confidence = (p.confidence * calib_factor(err)).clamp(0.0, 1.0);
+        Some(p)
+    }
+
+    /// Ops this model can predict for.
+    pub fn op_names(&self) -> Vec<&str> {
+        self.ops.keys().map(String::as_str).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut ops = BTreeMap::new();
+        for (op, m) in &self.ops {
+            let mut calib = BTreeMap::new();
+            for (variant, err) in &m.calib {
+                calib.insert(variant.clone(), Json::num(*err));
+            }
+            ops.insert(
+                op.clone(),
+                Json::obj(vec![
+                    ("calib", Json::Obj(calib)),
+                    ("tree", m.tree.to_json()),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            (
+                "feature_names",
+                Json::Arr(self.feature_names.iter().map(Json::str).collect()),
+            ),
+            ("ops", Json::Obj(ops)),
+        ])
+    }
+
+    /// Parse a payload. Rejects models trained over a different feature
+    /// vector: positional feature indexing makes the name list part of
+    /// the file contract.
+    pub fn from_json(j: &Json) -> Result<CostModel> {
+        let feature_names: Vec<String> = j
+            .get("feature_names")
+            .as_arr()
+            .ok_or_else(|| anyhow!("model: missing feature_names"))?
+            .iter()
+            .filter_map(|n| n.as_str().map(str::to_string))
+            .collect();
+        if feature_names != FEATURE_NAMES {
+            return Err(anyhow!(
+                "model was trained over features {feature_names:?} but this \
+                 build extracts {FEATURE_NAMES:?} — retrain with `autosage train`"
+            ));
+        }
+        let mut ops = BTreeMap::new();
+        let raw = j
+            .get("ops")
+            .as_obj()
+            .ok_or_else(|| anyhow!("model: missing ops"))?;
+        for (op, body) in raw {
+            let tree = DecisionTree::from_json(body.get("tree"))
+                .with_context(|| format!("model op {op}"))?;
+            let mut calib = BTreeMap::new();
+            if let Some(c) = body.get("calib").as_obj() {
+                for (variant, err) in c {
+                    if let Some(e) = err.as_f64() {
+                        calib.insert(variant.clone(), e);
+                    }
+                }
+            }
+            ops.insert(op.clone(), OpModel { tree, calib });
+        }
+        Ok(CostModel {
+            seed: 0, // header-owned; read_model overwrites
+            feature_names,
+            ops,
+        })
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    /// A deterministic 2-op model used across model/ unit tests.
+    pub(crate) fn tiny_model(seed: u64) -> CostModel {
+        let examples = vec![
+            Example {
+                op: "spmm".into(),
+                features: vec![100.0, 400.0, 64.0, 4.0, 4.0, 4.0, 4.0, 4.0, 0.1, 0.2, 0.0, 0.5, 0.3],
+                label: "ell_r8_f32".into(),
+            },
+            Example {
+                op: "spmm".into(),
+                features: vec![100.0, 400.0, 64.0, 4.0, 4.0, 4.0, 4.0, 200.0, 0.8, 2.0, 0.0, 0.2, 0.3],
+                label: "hub_r8_f32".into(),
+            },
+            Example {
+                op: "attention".into(),
+                features: vec![50.0, 100.0, 32.0, 2.0, 2.0, 2.0, 2.0, 2.0, 0.1, 0.1, 0.0, 0.9, 0.1],
+                label: "fused".into(),
+            },
+        ];
+        let calib = vec![CalibrationRow {
+            op: "spmm".into(),
+            variant: "hub_r8_f32".into(),
+            buckets: 1,
+            n: 4,
+            mean_rel_err: 2.5,
+            max_rel_err: 3.0,
+            sign_bias: 0.1,
+        }];
+        CostModel::train(&examples, &calib, seed, DEFAULT_MAX_DEPTH).unwrap()
+    }
+
+    #[test]
+    fn train_predict_and_calibration_damping() {
+        let m = tiny_model(42);
+        assert_eq!(m.op_names(), ["attention", "spmm"]);
+        let light = m
+            .predict(
+                "spmm",
+                &[100.0, 400.0, 64.0, 4.0, 4.0, 4.0, 4.0, 4.0, 0.1, 0.2, 0.0, 0.5, 0.3],
+            )
+            .unwrap();
+        assert_eq!(light.variant, "ell_r8_f32");
+        let hub = m
+            .predict(
+                "spmm",
+                &[100.0, 400.0, 64.0, 4.0, 4.0, 4.0, 4.0, 200.0, 0.8, 2.0, 0.0, 0.2, 0.3],
+            )
+            .unwrap();
+        assert_eq!(hub.variant, "hub_r8_f32");
+        // hub's roofline is badly calibrated (mean_rel_err 2.5 → factor
+        // 0.5), so its confidence is half the undamped twin's.
+        assert!(
+            (hub.confidence - light.confidence * 0.5).abs() < 1e-9,
+            "{} vs {}",
+            hub.confidence,
+            light.confidence
+        );
+        assert!(m.predict("sddmm", &[1.0; 13]).is_none());
+    }
+
+    #[test]
+    fn calib_factor_is_bounded() {
+        assert_eq!(calib_factor(0.0), 1.0);
+        assert_eq!(calib_factor(1.0), 1.0);
+        assert!((calib_factor(1.5) - 1.0 / 1.5).abs() < 1e-12);
+        assert_eq!(calib_factor(2.0), 0.5);
+        assert_eq!(calib_factor(100.0), 0.5, "damping is bounded at 1/2");
+    }
+
+    #[test]
+    fn json_round_trip_preserves_model() {
+        let m = tiny_model(7);
+        let text = m.to_json().to_string();
+        let mut back = CostModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        back.seed = m.seed;
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn from_json_rejects_foreign_feature_vector() {
+        let m = tiny_model(7);
+        let text = m
+            .to_json()
+            .to_string()
+            .replace("\"n_rows\"", "\"rows_n\"");
+        let err = CostModel::from_json(&Json::parse(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("retrain"), "{err:#}");
+    }
+
+    #[test]
+    fn training_is_deterministic_across_runs() {
+        let a = tiny_model(3);
+        let b = tiny_model(3);
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}

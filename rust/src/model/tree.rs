@@ -1,0 +1,474 @@
+//! Dependency-free CART decision tree over the numeric
+//! `InputFeatures::to_vec()` vector.
+//!
+//! Training is fully deterministic: features are swept in index order,
+//! candidate thresholds are midpoints between consecutive distinct
+//! sorted values, and ties break toward (lower impurity, lower feature
+//! index, lower threshold) — the same labeled examples always produce
+//! the same tree, which is what makes `autosage train --seed` emit
+//! byte-identical model files.
+//!
+//! Leaves store raw class counts rather than a collapsed argmax so
+//! prediction can report a Laplace-smoothed purity as its confidence:
+//! a 1-example leaf claims (1+1)/(1+k) — honest uncertainty — while a
+//! 50/0 leaf claims ~0.98.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Default growth limit; deep enough for the ~13-dim feature space,
+/// shallow enough that a handful of probes cannot overfit to noise.
+pub const DEFAULT_MAX_DEPTH: usize = 6;
+
+/// A predicted variant plus the calibrated confidence in [0, 1].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Prediction {
+    pub variant: String,
+    pub confidence: f64,
+}
+
+/// One tree node. Internal nodes split `feature <= threshold` → left;
+/// leaves carry per-class example counts (parallel to
+/// [`DecisionTree::classes`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+    Leaf {
+        counts: Vec<u64>,
+    },
+}
+
+/// A trained per-op classifier: variant labels + a flat node array
+/// (node 0 is the root).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionTree {
+    pub classes: Vec<String>,
+    pub nodes: Vec<Node>,
+}
+
+fn gini(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - counts
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / t;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+struct BestSplit {
+    feature: usize,
+    threshold: f64,
+    impurity: f64,
+}
+
+/// Sweep every feature for the lowest weighted-Gini split of `idx`.
+/// O(d · n log n); first-encountered best wins, so ties deterministically
+/// resolve to the lowest (feature, threshold).
+fn best_split(
+    features: &[Vec<f64>],
+    labels: &[usize],
+    idx: &[usize],
+    n_classes: usize,
+    n_features: usize,
+) -> Option<BestSplit> {
+    let parent = {
+        let mut c = vec![0u64; n_classes];
+        for &i in idx {
+            c[labels[i]] += 1;
+        }
+        gini(&c)
+    };
+    let n = idx.len() as f64;
+    let mut best: Option<BestSplit> = None;
+    for f in 0..n_features {
+        let mut order: Vec<usize> = idx.to_vec();
+        order.sort_by(|&a, &b| {
+            features[a][f]
+                .partial_cmp(&features[b][f])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut left = vec![0u64; n_classes];
+        let mut right = vec![0u64; n_classes];
+        for &i in &order {
+            right[labels[i]] += 1;
+        }
+        for w in 0..order.len().saturating_sub(1) {
+            let i = order[w];
+            left[labels[i]] += 1;
+            right[labels[i]] -= 1;
+            let (a, b) = (features[i][f], features[order[w + 1]][f]);
+            if a == b {
+                continue; // can't split between equal values
+            }
+            let n_l = (w + 1) as f64;
+            let n_r = n - n_l;
+            let impurity = (n_l * gini(&left) + n_r * gini(&right)) / n;
+            let improves = match &best {
+                None => true,
+                Some(bst) => impurity < bst.impurity,
+            };
+            if impurity + 1e-12 < parent && improves {
+                best = Some(BestSplit {
+                    feature: f,
+                    threshold: (a + b) / 2.0,
+                    impurity,
+                });
+            }
+        }
+    }
+    best
+}
+
+impl DecisionTree {
+    /// Train on parallel `(feature-vector, class-index)` examples.
+    /// `classes` maps class indices back to variant ids.
+    pub fn train(
+        classes: Vec<String>,
+        features: &[Vec<f64>],
+        labels: &[usize],
+        max_depth: usize,
+    ) -> Result<DecisionTree> {
+        if features.is_empty() || features.len() != labels.len() {
+            return Err(anyhow!(
+                "tree training needs matched non-empty features/labels \
+                 ({} vs {})",
+                features.len(),
+                labels.len()
+            ));
+        }
+        if let Some(&bad) = labels.iter().find(|&&l| l >= classes.len()) {
+            return Err(anyhow!("label index {bad} out of {} classes", classes.len()));
+        }
+        let n_features = features[0].len();
+        let mut tree = DecisionTree {
+            classes,
+            nodes: Vec::new(),
+        };
+        let all: Vec<usize> = (0..features.len()).collect();
+        tree.grow(features, labels, &all, n_features, max_depth);
+        Ok(tree)
+    }
+
+    fn leaf_counts(&self, labels: &[usize], idx: &[usize]) -> Vec<u64> {
+        let mut counts = vec![0u64; self.classes.len()];
+        for &i in idx {
+            counts[labels[i]] += 1;
+        }
+        counts
+    }
+
+    /// Append the subtree for `idx`, returning its root node index.
+    fn grow(
+        &mut self,
+        features: &[Vec<f64>],
+        labels: &[usize],
+        idx: &[usize],
+        n_features: usize,
+        depth_left: usize,
+    ) -> usize {
+        let counts = self.leaf_counts(labels, idx);
+        let split = if depth_left == 0 || idx.len() < 2 || gini(&counts) == 0.0 {
+            None
+        } else {
+            best_split(features, labels, idx, self.classes.len(), n_features)
+        };
+        let slot = self.nodes.len();
+        self.nodes.push(Node::Leaf { counts });
+        if let Some(s) = split {
+            let (l_idx, r_idx): (Vec<usize>, Vec<usize>) = idx
+                .iter()
+                .partition(|&&i| features[i][s.feature] <= s.threshold);
+            if !l_idx.is_empty() && !r_idx.is_empty() {
+                let left = self.grow(features, labels, &l_idx, n_features, depth_left - 1);
+                let right = self.grow(features, labels, &r_idx, n_features, depth_left - 1);
+                self.nodes[slot] = Node::Split {
+                    feature: s.feature,
+                    threshold: s.threshold,
+                    left,
+                    right,
+                };
+            }
+        }
+        slot
+    }
+
+    /// Classify a feature vector: the majority class of the reached
+    /// leaf, with Laplace-smoothed purity `(max+1)/(total+k)` as the raw
+    /// (pre-calibration) confidence. `None` only for an empty tree.
+    pub fn predict(&self, features: &[f64]) -> Option<Prediction> {
+        let mut at = 0usize;
+        loop {
+            match self.nodes.get(at)? {
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    let v = features.get(*feature).copied().unwrap_or(0.0);
+                    at = if v <= *threshold { *left } else { *right };
+                }
+                Node::Leaf { counts } => {
+                    let total: u64 = counts.iter().sum();
+                    if total == 0 || counts.is_empty() {
+                        return None;
+                    }
+                    // Ties break to the lowest class index (stable).
+                    let mut best = 0usize;
+                    for (i, &c) in counts.iter().enumerate() {
+                        if c > counts[best] {
+                            best = i;
+                        }
+                    }
+                    let confidence = (counts[best] as f64 + 1.0)
+                        / (total as f64 + self.classes.len() as f64);
+                    return Some(Prediction {
+                        variant: self.classes.get(best)?.clone(),
+                        confidence,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Maximum split depth (leaf-only tree = 0); model-file sanity stat.
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], at: usize) -> usize {
+            match &nodes[at] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => {
+                    1 + walk(nodes, *left).max(walk(nodes, *right))
+                }
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            walk(&self.nodes, 0)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                Node::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => Json::obj(vec![
+                    ("f", Json::num(*feature as f64)),
+                    ("t", Json::num(*threshold)),
+                    ("l", Json::num(*left as f64)),
+                    ("r", Json::num(*right as f64)),
+                ]),
+                Node::Leaf { counts } => Json::obj(vec![(
+                    "c",
+                    Json::Arr(counts.iter().map(|&c| Json::num(c as f64)).collect()),
+                )]),
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "classes",
+                Json::Arr(self.classes.iter().map(Json::str).collect()),
+            ),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DecisionTree> {
+        let classes: Vec<String> = j
+            .get("classes")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tree: missing classes"))?
+            .iter()
+            .filter_map(|c| c.as_str().map(str::to_string))
+            .collect();
+        let raw = j
+            .get("nodes")
+            .as_arr()
+            .ok_or_else(|| anyhow!("tree: missing nodes"))?;
+        let mut nodes = Vec::with_capacity(raw.len());
+        for (i, n) in raw.iter().enumerate() {
+            if let Some(counts) = n.get("c").as_arr() {
+                let counts: Vec<u64> = counts
+                    .iter()
+                    .filter_map(|c| c.as_f64().map(|v| v.max(0.0) as u64))
+                    .collect();
+                if counts.len() != classes.len() {
+                    return Err(anyhow!(
+                        "tree node {i}: {} counts for {} classes",
+                        counts.len(),
+                        classes.len()
+                    ));
+                }
+                nodes.push(Node::Leaf { counts });
+            } else {
+                let geti = |k: &str| -> Result<usize> {
+                    n.get(k)
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("tree node {i}: missing {k}"))
+                };
+                let (left, right) = (geti("l")?, geti("r")?);
+                if left >= raw.len() || right >= raw.len() || left <= i || right <= i {
+                    // Children must point forward — this also rules out
+                    // cycles, so predict() always terminates.
+                    return Err(anyhow!("tree node {i}: bad child indices {left}/{right}"));
+                }
+                nodes.push(Node::Split {
+                    feature: geti("f")?,
+                    threshold: n
+                        .get("t")
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("tree node {i}: missing t"))?,
+                    left,
+                    right,
+                });
+            }
+        }
+        if nodes.is_empty() {
+            return Err(anyhow!("tree: empty node array"));
+        }
+        Ok(DecisionTree { classes, nodes })
+    }
+
+    /// Per-class training-example counts (root totals).
+    pub fn class_counts(&self) -> BTreeMap<String, u64> {
+        fn root_counts(nodes: &[Node], at: usize, acc: &mut Vec<u64>) {
+            match &nodes[at] {
+                Node::Leaf { counts } => {
+                    for (a, c) in acc.iter_mut().zip(counts) {
+                        *a += c;
+                    }
+                }
+                Node::Split { left, right, .. } => {
+                    root_counts(nodes, *left, acc);
+                    root_counts(nodes, *right, acc);
+                }
+            }
+        }
+        let mut acc = vec![0u64; self.classes.len()];
+        if !self.nodes.is_empty() {
+            root_counts(&self.nodes, 0, &mut acc);
+        }
+        self.classes
+            .iter()
+            .cloned()
+            .zip(acc)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_ish() -> (Vec<Vec<f64>>, Vec<usize>) {
+        // Separable on feature 1 at ~5: class 0 below, class 1 above.
+        let features = vec![
+            vec![1.0, 2.0],
+            vec![2.0, 3.0],
+            vec![1.5, 4.0],
+            vec![1.0, 8.0],
+            vec![2.0, 9.0],
+            vec![1.5, 7.0],
+        ];
+        let labels = vec![0, 0, 0, 1, 1, 1];
+        (features, labels)
+    }
+
+    #[test]
+    fn learns_a_separable_split_with_high_confidence() {
+        let (f, l) = xor_ish();
+        let t = DecisionTree::train(vec!["a".into(), "b".into()], &f, &l, 6).unwrap();
+        let p = t.predict(&[1.0, 2.5]).unwrap();
+        assert_eq!(p.variant, "a");
+        assert!(p.confidence > 0.7, "{}", p.confidence);
+        let p = t.predict(&[1.0, 8.5]).unwrap();
+        assert_eq!(p.variant, "b");
+        assert!(t.depth() >= 1);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let (f, l) = xor_ish();
+        let classes = vec!["a".to_string(), "b".to_string()];
+        let t1 = DecisionTree::train(classes.clone(), &f, &l, 6).unwrap();
+        let t2 = DecisionTree::train(classes, &f, &l, 6).unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(t1.to_json().to_string(), t2.to_json().to_string());
+    }
+
+    #[test]
+    fn single_class_is_a_pure_leaf() {
+        let t = DecisionTree::train(
+            vec!["only".into()],
+            &[vec![1.0], vec![2.0]],
+            &[0, 0],
+            6,
+        )
+        .unwrap();
+        assert_eq!(t.depth(), 0);
+        let p = t.predict(&[5.0]).unwrap();
+        assert_eq!(p.variant, "only");
+        // Laplace: (2+1)/(2+1) = 1.0 for a single-class problem.
+        assert!((p.confidence - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_leaves_report_damped_confidence() {
+        // One example per class, not separable by depth 0.
+        let t = DecisionTree::train(
+            vec!["a".into(), "b".into(), "c".into()],
+            &[vec![1.0]],
+            &[1],
+            6,
+        )
+        .unwrap();
+        let p = t.predict(&[1.0]).unwrap();
+        assert_eq!(p.variant, "b");
+        // (1+1)/(1+3) = 0.5: one observation is weak evidence.
+        assert!((p.confidence - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_round_trip_and_corruption_rejection() {
+        let (f, l) = xor_ish();
+        let t = DecisionTree::train(vec!["a".into(), "b".into()], &f, &l, 6).unwrap();
+        let text = t.to_json().to_string();
+        let back = DecisionTree::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t);
+        // Backward child pointer would loop forever — rejected.
+        let evil = r#"{"classes":["a"],"nodes":[{"f":0,"t":1,"l":0,"r":0}]}"#;
+        assert!(DecisionTree::from_json(&Json::parse(evil).unwrap()).is_err());
+        let short = r#"{"classes":["a","b"],"nodes":[{"c":[1]}]}"#;
+        assert!(DecisionTree::from_json(&Json::parse(short).unwrap()).is_err());
+    }
+
+    #[test]
+    fn depth_limit_is_respected() {
+        let n = 64;
+        let features: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64]).collect();
+        let labels: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        let t =
+            DecisionTree::train(vec!["a".into(), "b".into()], &features, &labels, 3).unwrap();
+        assert!(t.depth() <= 3, "depth {}", t.depth());
+    }
+}

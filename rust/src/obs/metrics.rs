@@ -136,17 +136,55 @@ pub struct AuditSample {
     pub bucket: String,
     pub predicted_ms: f64,
     pub measured_ms: f64,
+    /// How this variant fared in the decision that produced the sample:
+    /// `"executed"` (served request — the original per-request stream),
+    /// `"chosen"` (probe winner), `"rejected"` (probed but lost),
+    /// `"baseline"` (vendor-path reference timing when a candidate won),
+    /// or `"fallback"` (guardrail rejected every candidate and the
+    /// baseline won defensively). The non-"executed" outcomes carry the
+    /// negative labels the trained cost model learns from.
+    pub outcome: String,
+    /// Full `InputFeatures::to_vec()` vector of the scheduling input.
+    /// Probe-path samples carry it so `autosage train` can mine labeled
+    /// examples straight from `audit.jsonl`; per-request "executed"
+    /// samples omit it (the coarse `bucket` suffices for calibration).
+    pub features: Option<Vec<f64>>,
 }
 
 impl AuditSample {
+    /// An "executed" sample — the per-request calibration stream.
+    pub fn executed(
+        op: impl Into<String>,
+        variant: impl Into<String>,
+        bucket: impl Into<String>,
+        predicted_ms: f64,
+        measured_ms: f64,
+    ) -> AuditSample {
+        AuditSample {
+            op: op.into(),
+            variant: variant.into(),
+            bucket: bucket.into(),
+            predicted_ms,
+            measured_ms,
+            outcome: "executed".to_string(),
+            features: None,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("op", Json::str(&self.op)),
             ("variant", Json::str(&self.variant)),
             ("bucket", Json::str(&self.bucket)),
             ("predicted_ms", Json::num(self.predicted_ms)),
             ("measured_ms", Json::num(self.measured_ms)),
-        ])
+            ("outcome", Json::str(&self.outcome)),
+        ];
+        if let Some(fv) = &self.features {
+            let arr = fv.iter().map(|&v| Json::num(v)).collect();
+            pairs.push(("features", Json::Arr(arr)));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> Option<AuditSample> {
@@ -156,6 +194,13 @@ impl AuditSample {
             bucket: j.get("bucket").as_str()?.to_string(),
             predicted_ms: j.get("predicted_ms").as_f64()?,
             measured_ms: j.get("measured_ms").as_f64()?,
+            // Audit files written before outcomes existed read back as
+            // the per-request stream they were.
+            outcome: j.get("outcome").as_str().unwrap_or("executed").to_string(),
+            features: j
+                .get("features")
+                .as_arr()
+                .map(|arr| arr.iter().filter_map(|v| v.as_f64()).collect()),
         })
     }
 }
@@ -385,7 +430,9 @@ pub fn parse_prometheus(text: &str) -> Result<PromSnapshot> {
 }
 
 /// Series every serving snapshot must carry: the drop/overflow counters
-/// (satellite requirement) and the merged-histogram pool percentiles.
+/// (satellite requirement), the merged-histogram pool percentiles, and
+/// the learned-scheduler prediction counters (zero when no model is
+/// loaded — a missing series means a miswired registry, not "no model").
 pub const REQUIRED_SERVING_SERIES: &[&str] = &[
     "autosage_traces_sampled_out_total",
     "autosage_spans_dropped_total",
@@ -393,6 +440,10 @@ pub const REQUIRED_SERVING_SERIES: &[&str] = &[
     "autosage_pool_latency_ms{quantile=\"0.95\"}",
     "autosage_pool_latency_ms{quantile=\"0.99\"}",
     "autosage_pool_requests_total",
+    "autosage_model_predictions_total",
+    "autosage_model_low_confidence_probes_total",
+    "autosage_model_agree_total",
+    "autosage_model_disagree_total",
 ];
 
 /// Validate a serving `metrics.prom` snapshot: well-formed exposition
@@ -496,20 +547,23 @@ mod tests {
             "must fail without pool latency quantiles"
         );
         reg.histogram("autosage_pool_latency_ms").record_ms(1.0);
+        assert!(
+            validate_serving_snapshot(&reg.render_prometheus()).is_err(),
+            "must fail without model prediction counters"
+        );
+        reg.set_counter("autosage_model_predictions_total", 0);
+        reg.set_counter("autosage_model_low_confidence_probes_total", 0);
+        reg.set_counter("autosage_model_agree_total", 0);
+        reg.set_counter("autosage_model_disagree_total", 0);
         let snap = validate_serving_snapshot(&reg.render_prometheus()).unwrap();
         assert_eq!(snap["autosage_traces_sampled_out_total"], 3.0);
+        assert_eq!(snap["autosage_model_predictions_total"], 0.0);
     }
 
     #[test]
     fn audit_log_is_bounded_and_round_trips_json() {
         let reg = MetricsRegistry::new();
-        let s = AuditSample {
-            op: "spmm".into(),
-            variant: "ell_tile".into(),
-            bucket: feature_bucket(1000, 8000, 64),
-            predicted_ms: 1.5,
-            measured_ms: 2.0,
-        };
+        let s = AuditSample::executed("spmm", "ell_tile", feature_bucket(1000, 8000, 64), 1.5, 2.0);
         reg.record_audit(s.clone());
         let snap = reg.audit_snapshot();
         assert_eq!(snap.len(), 1);
@@ -517,6 +571,38 @@ mod tests {
         let back = AuditSample::from_json(&Json::parse(&s.to_json().to_string()).unwrap());
         assert_eq!(back, Some(s));
         assert_eq!(reg.audit_dropped(), 0);
+    }
+
+    #[test]
+    fn audit_outcome_and_features_round_trip_and_default() {
+        let mut s =
+            AuditSample::executed("spmm", "hub_split", feature_bucket(512, 2048, 128), 0.5, 0.6);
+        s.outcome = "rejected".into();
+        s.features = Some(vec![512.0, 2048.0, 128.0, 4.0]);
+        let text = s.to_json().to_string();
+        assert!(text.contains("\"outcome\":\"rejected\""));
+        assert!(text.contains("\"features\":[512,2048,128,4]"));
+        let back = AuditSample::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+        // Pre-outcome audit lines (PR 5 format) still parse, as the
+        // per-request stream they were.
+        let legacy = r#"{"op":"spmm","variant":"v","bucket":"b","predicted_ms":1,"measured_ms":2}"#;
+        let back = AuditSample::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(back.outcome, "executed");
+        assert_eq!(back.features, None);
+    }
+
+    #[test]
+    fn feature_bucket_boundaries_are_exact_powers_of_two() {
+        // log2 floor: the bucket edge sits exactly ON the power of two —
+        // 1023 rows is still r2^9, 1024 flips to r2^10.
+        assert_eq!(feature_bucket(1023, 1, 8), "r2^9|z2^0|F8");
+        assert_eq!(feature_bucket(1024, 1, 8), "r2^10|z2^0|F8");
+        assert_eq!(feature_bucket(1025, 1, 8), "r2^10|z2^0|F8");
+        assert_eq!(feature_bucket(1, 4095, 8), "r2^0|z2^11|F8");
+        assert_eq!(feature_bucket(1, 4096, 8), "r2^0|z2^12|F8");
+        // F is carried verbatim, not bucketed.
+        assert_eq!(feature_bucket(2, 2, 127), "r2^1|z2^1|F127");
     }
 
     #[test]

@@ -29,6 +29,7 @@ const STAGE_ORDER: &[&str] = &[
     "schedule",
     "cache_hit",
     "cache_miss",
+    "predict",
     "estimate",
     "probe",
     "guardrail",
@@ -205,73 +206,174 @@ fn render_calibration_table(rows: &[CalibrationRow], out: &mut String) {
     }
 }
 
-/// Aggregate the observability artifacts under `dir` into a human
-/// report. Missing artifacts are noted and skipped; at least one of
-/// `trace.jsonl` / `audit.jsonl` / `metrics.prom` must exist.
-pub fn report_dir(dir: &Path) -> Result<String> {
-    let mut out = String::new();
-    let mut found = 0;
-    out.push_str(&format!("== obs report: {} ==\n", dir.display()));
+/// Counters echoed in the "key serving metrics" section (text and JSON
+/// reports alike).
+const KEY_METRICS: &[&str] = &[
+    "autosage_pool_requests_total",
+    "autosage_pool_rejected_total",
+    "autosage_pool_latency_ms{quantile=\"0.5\"}",
+    "autosage_pool_latency_ms{quantile=\"0.95\"}",
+    "autosage_pool_latency_ms{quantile=\"0.99\"}",
+    "autosage_traces_sampled_out_total",
+    "autosage_spans_dropped_total",
+    "autosage_model_predictions_total",
+    "autosage_model_low_confidence_probes_total",
+    "autosage_model_agree_total",
+    "autosage_model_disagree_total",
+];
 
-    let trace_path = dir.join("trace.jsonl");
-    if trace_path.exists() {
-        found += 1;
-        let text = std::fs::read_to_string(&trace_path)
-            .with_context(|| format!("reading {}", trace_path.display()))?;
-        let (stats, n_traces) = stage_breakdown(&text)?;
-        out.push('\n');
-        render_stage_table(&stats, n_traces, &mut out);
-    } else {
-        out.push_str("\n(no trace.jsonl — skipping stage breakdown)\n");
-    }
+/// Everything an observability directory yields, parsed once and shared
+/// by the text and JSON renderers. `None` = that artifact was absent.
+pub struct ReportData {
+    pub stages: Option<(Vec<StageStat>, usize)>,
+    pub calibration: Option<Vec<CalibrationRow>>,
+    pub metrics: Option<crate::obs::metrics::PromSnapshot>,
+}
 
-    let audit_path = dir.join("audit.jsonl");
-    if audit_path.exists() {
-        found += 1;
-        let text = std::fs::read_to_string(&audit_path)
-            .with_context(|| format!("reading {}", audit_path.display()))?;
-        let rows = calibration_table(&text)?;
-        out.push('\n');
-        if rows.is_empty() {
-            out.push_str("estimate calibration: no usable audit samples\n");
-        } else {
-            render_calibration_table(&rows, &mut out);
+/// Parse whatever observability artifacts exist under `dir`. Errors on
+/// malformed artifacts; errors when none exist at all.
+pub fn gather_report(dir: &Path) -> Result<ReportData> {
+    let read_opt = |name: &str| -> Result<Option<String>> {
+        let p = dir.join(name);
+        if !p.exists() {
+            return Ok(None);
         }
-    } else {
-        out.push_str("(no audit.jsonl — skipping calibration table)\n");
-    }
-
-    let prom_path = dir.join("metrics.prom");
-    if prom_path.exists() {
-        found += 1;
-        let text = std::fs::read_to_string(&prom_path)
-            .with_context(|| format!("reading {}", prom_path.display()))?;
-        let snap = parse_prometheus(&text)?;
-        out.push_str("\nkey serving metrics\n");
-        for key in [
-            "autosage_pool_requests_total",
-            "autosage_pool_rejected_total",
-            "autosage_pool_latency_ms{quantile=\"0.5\"}",
-            "autosage_pool_latency_ms{quantile=\"0.95\"}",
-            "autosage_pool_latency_ms{quantile=\"0.99\"}",
-            "autosage_traces_sampled_out_total",
-            "autosage_spans_dropped_total",
-        ] {
-            if let Some(v) = snap.get(key) {
-                out.push_str(&format!("  {key} = {v}\n"));
-            }
-        }
-    } else {
-        out.push_str("(no metrics.prom — skipping metrics echo)\n");
-    }
-
-    if found == 0 {
+        std::fs::read_to_string(&p)
+            .map(Some)
+            .with_context(|| format!("reading {}", p.display()))
+    };
+    let stages = match read_opt("trace.jsonl")? {
+        Some(text) => Some(stage_breakdown(&text)?),
+        None => None,
+    };
+    let calibration = match read_opt("audit.jsonl")? {
+        Some(text) => Some(calibration_table(&text)?),
+        None => None,
+    };
+    let metrics = match read_opt("metrics.prom")? {
+        Some(text) => Some(parse_prometheus(&text)?),
+        None => None,
+    };
+    if stages.is_none() && calibration.is_none() && metrics.is_none() {
         bail!(
             "no observability artifacts (trace.jsonl / audit.jsonl / metrics.prom) under {}",
             dir.display()
         );
     }
+    Ok(ReportData {
+        stages,
+        calibration,
+        metrics,
+    })
+}
+
+/// Aggregate the observability artifacts under `dir` into a human
+/// report. Missing artifacts are noted and skipped; at least one of
+/// `trace.jsonl` / `audit.jsonl` / `metrics.prom` must exist.
+pub fn report_dir(dir: &Path) -> Result<String> {
+    let data = gather_report(dir)?;
+    let mut out = String::new();
+    out.push_str(&format!("== obs report: {} ==\n", dir.display()));
+
+    match &data.stages {
+        Some((stats, n_traces)) => {
+            out.push('\n');
+            render_stage_table(stats, *n_traces, &mut out);
+        }
+        None => out.push_str("\n(no trace.jsonl — skipping stage breakdown)\n"),
+    }
+
+    match &data.calibration {
+        Some(rows) => {
+            out.push('\n');
+            if rows.is_empty() {
+                out.push_str("estimate calibration: no usable audit samples\n");
+            } else {
+                render_calibration_table(rows, &mut out);
+            }
+        }
+        None => out.push_str("(no audit.jsonl — skipping calibration table)\n"),
+    }
+
+    match &data.metrics {
+        Some(snap) => {
+            out.push_str("\nkey serving metrics\n");
+            for key in KEY_METRICS {
+                if let Some(v) = snap.get(*key) {
+                    out.push_str(&format!("  {key} = {v}\n"));
+                }
+            }
+        }
+        None => out.push_str("(no metrics.prom — skipping metrics echo)\n"),
+    }
+
     Ok(out)
+}
+
+/// The same aggregation as [`report_dir`] rendered as machine-readable
+/// JSON (`autosage obs report --json`): absent artifacts are `null`,
+/// so consumers can distinguish "not collected" from "empty". Keys are
+/// BTreeMap-sorted — the output is deterministic for a given directory.
+pub fn report_dir_json(dir: &Path) -> Result<Json> {
+    let data = gather_report(dir)?;
+    let stages = match &data.stages {
+        None => Json::Null,
+        Some((stats, n_traces)) => Json::obj(vec![
+            ("n_traces", Json::num(*n_traces as f64)),
+            (
+                "stages",
+                Json::Arr(
+                    stats
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::str(&s.name)),
+                                ("count", Json::num(s.count as f64)),
+                                ("mean_ms", Json::num(s.mean_ms)),
+                                ("max_ms", Json::num(s.max_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    };
+    let calibration = match &data.calibration {
+        None => Json::Null,
+        Some(rows) => Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("op", Json::str(&r.op)),
+                        ("variant", Json::str(&r.variant)),
+                        ("buckets", Json::num(r.buckets as f64)),
+                        ("n", Json::num(r.n as f64)),
+                        ("mean_rel_err", Json::num(r.mean_rel_err)),
+                        ("max_rel_err", Json::num(r.max_rel_err)),
+                        ("sign_bias", Json::num(r.sign_bias)),
+                    ])
+                })
+                .collect(),
+        ),
+    };
+    let metrics = match &data.metrics {
+        None => Json::Null,
+        Some(snap) => {
+            let mut m = std::collections::BTreeMap::new();
+            for key in KEY_METRICS {
+                if let Some(v) = snap.get(*key) {
+                    m.insert((*key).to_string(), Json::num(*v));
+                }
+            }
+            Json::Obj(m)
+        }
+    };
+    Ok(Json::obj(vec![
+        ("dir", Json::str(dir.display().to_string())),
+        ("trace", stages),
+        ("calibration", calibration),
+        ("metrics", metrics),
+    ]))
 }
 
 #[cfg(test)]

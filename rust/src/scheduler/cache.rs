@@ -20,6 +20,12 @@ pub struct CachedChoice {
     pub t_baseline_ms: f64,
     pub t_star_ms: f64,
     pub alpha: f64,
+    /// `InputFeatures::to_vec()` of the input this choice was probed on,
+    /// mined by `autosage train` as a labeled example. `None` on entries
+    /// written before this field existed — and deliberately `None` on
+    /// model-predicted entries, so the trainer never feeds the model its
+    /// own predictions back as ground truth.
+    pub features: Option<Vec<f64>>,
 }
 
 /// The cache: an ordered map (stable file output) + optional backing file.
@@ -92,6 +98,10 @@ impl ScheduleCache {
                             t_baseline_ms: v.get("t_baseline_ms").as_f64().unwrap_or(0.0),
                             t_star_ms: v.get("t_star_ms").as_f64().unwrap_or(0.0),
                             alpha: v.get("alpha").as_f64().unwrap_or(0.95),
+                            features: v
+                                .get("features")
+                                .as_arr()
+                                .map(|arr| arr.iter().filter_map(|x| x.as_f64()).collect()),
                         },
                     );
                 }
@@ -154,15 +164,17 @@ impl ScheduleCache {
     pub fn serialize(&self) -> String {
         let mut obj = BTreeMap::new();
         for (k, v) in &self.entries {
-            obj.insert(
-                k.clone(),
-                Json::obj(vec![
-                    ("variant", Json::str(v.variant.clone())),
-                    ("t_baseline_ms", Json::num(v.t_baseline_ms)),
-                    ("t_star_ms", Json::num(v.t_star_ms)),
-                    ("alpha", Json::num(v.alpha)),
-                ]),
-            );
+            let mut pairs = vec![
+                ("variant", Json::str(v.variant.clone())),
+                ("t_baseline_ms", Json::num(v.t_baseline_ms)),
+                ("t_star_ms", Json::num(v.t_star_ms)),
+                ("alpha", Json::num(v.alpha)),
+            ];
+            if let Some(fv) = &v.features {
+                let arr = fv.iter().map(|&x| Json::num(x)).collect();
+                pairs.push(("features", Json::Arr(arr)));
+            }
+            obj.insert(k.clone(), Json::obj(pairs));
         }
         let root = Json::obj(vec![
             ("version", Json::num(CACHE_VERSION as f64)),
@@ -243,6 +255,7 @@ mod tests {
             t_baseline_ms: 1.5,
             t_star_ms: 0.4,
             alpha: 0.95,
+            features: None,
         }
     }
 
@@ -265,6 +278,32 @@ mod tests {
         let got = c2.get(&cache_key("d", "g", 64, "spmm")).unwrap();
         assert_eq!(got, sample());
         assert_eq!(c2.hits, 1);
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn features_round_trip_and_stay_optional() {
+        let path = tmpfile("features.json");
+        let _ = fs::remove_file(&path);
+        let mut c = ScheduleCache::load(&path).unwrap();
+        let with = CachedChoice {
+            features: Some(vec![100.0, 400.0, 64.0, 4.0]),
+            ..sample()
+        };
+        c.insert("probed".into(), with.clone());
+        c.insert("predicted".into(), sample());
+        c.save().unwrap();
+        let mut c2 = ScheduleCache::load(&path).unwrap();
+        assert_eq!(c2.get("probed"), Some(with));
+        assert_eq!(c2.get("predicted").unwrap().features, None);
+        // Pre-features cache files (version 1, no features key) load.
+        fs::write(
+            &path,
+            r#"{"version": 1, "entries": {"k": {"variant": "v", "alpha": 0.9}}}"#,
+        )
+        .unwrap();
+        let mut c3 = ScheduleCache::load(&path).unwrap();
+        assert_eq!(c3.get("k").unwrap().features, None);
         let _ = fs::remove_file(&path);
     }
 

@@ -6,6 +6,15 @@ use crate::graph::csr::METRIC_TILE_ROWS;
 use crate::graph::Csr;
 use crate::util::stats;
 
+/// Canonical order of the numeric feature vector ([`InputFeatures::to_vec`]).
+/// The trained cost model (`model/`) indexes features by position, so this
+/// order is part of the model-file contract: changing it invalidates
+/// persisted models (their stored `feature_names` will no longer match).
+pub const FEATURE_NAMES: [&str; 13] = [
+    "n_rows", "nnz", "f", "avg_deg", "p50_deg", "p90_deg", "p99_deg",
+    "max_deg", "gini", "cv", "vec_aligned", "tile_fill", "band_frac",
+];
+
 /// Features of one (graph, F) scheduling input.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InputFeatures {
@@ -58,6 +67,27 @@ impl InputFeatures {
         }
     }
 
+    /// The numeric feature vector in [`FEATURE_NAMES`] order (booleans
+    /// as 0/1). This is what flows into the audit stream, the schedule
+    /// cache, and ultimately the trained cost model.
+    pub fn to_vec(&self) -> Vec<f64> {
+        vec![
+            self.n_rows as f64,
+            self.nnz as f64,
+            self.f as f64,
+            self.avg_deg,
+            self.p50_deg,
+            self.p90_deg,
+            self.p99_deg,
+            self.max_deg as f64,
+            self.gini,
+            self.cv,
+            if self.vec_aligned { 1.0 } else { 0.0 },
+            self.tile_fill,
+            self.band_frac,
+        ]
+    }
+
     /// Heavy-row fraction above a threshold (split-threshold ablation).
     pub fn heavy_fraction(g: &Csr, threshold: usize) -> f64 {
         if g.n_rows == 0 {
@@ -98,6 +128,65 @@ mod tests {
         let g = hub_skew(1000, 4, 0.15, 64, 3);
         let hf = InputFeatures::heavy_fraction(&g, 32);
         assert!((hf - 0.15).abs() < 0.01);
+    }
+
+    #[test]
+    fn to_vec_matches_feature_names_order() {
+        let g = erdos_renyi(256, 4.0, 32, 3);
+        let f = InputFeatures::extract(&g, 128);
+        let v = f.to_vec();
+        assert_eq!(v.len(), FEATURE_NAMES.len());
+        assert_eq!(v[0], f.n_rows as f64);
+        assert_eq!(v[1], f.nnz as f64);
+        assert_eq!(v[2], 128.0);
+        assert_eq!(v[7], f.max_deg as f64);
+        assert_eq!(v[10], 1.0, "F=128 is vec-aligned");
+        assert_eq!(v[11], f.tile_fill);
+        assert_eq!(v[12], f.band_frac);
+        let g = erdos_renyi(256, 4.0, 32, 4);
+        assert_eq!(InputFeatures::extract(&g, 64).to_vec()[10], 0.0);
+    }
+
+    #[test]
+    fn degenerate_inputs_extract_without_panicking() {
+        // 0-nnz and single-row graphs must produce finite features; the
+        // scheduler still rejects them (typed EstimateError) before any
+        // model prediction, but extraction itself cannot NaN.
+        let empty = Csr::from_rows(2, vec![vec![], vec![]]);
+        let f = InputFeatures::extract(&empty, 64);
+        assert_eq!((f.n_rows, f.nnz, f.max_deg), (2, 0, 0));
+        assert!(f.to_vec().iter().all(|v| v.is_finite()), "{:?}", f.to_vec());
+        let single = Csr::from_rows(1, vec![vec![(0, 1.0)]]);
+        let f = InputFeatures::extract(&single, 0);
+        assert_eq!((f.n_rows, f.nnz), (1, 1));
+        assert!(f.to_vec().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn features_stable_across_asg_roundtrip_and_unpermutation() {
+        use crate::data::reorder::{permute_rows, reorder, ReorderPass};
+        use crate::data::{read_asg, write_asg};
+        let g = hub_skew(512, 3, 0.1, 32, 3);
+        let dir = std::env::temp_dir().join("autosage_feature_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.asg");
+        // .asg round-trip is lossless, so features are bit-identical.
+        write_asg(&path, &g, None).unwrap();
+        let back = read_asg(&path).unwrap();
+        assert_eq!(
+            InputFeatures::extract(&g, 64),
+            InputFeatures::extract(&back.csr, 64)
+        );
+        // Reorder + un-permute restores the original layout, and with it
+        // the layout-sensitive features (tile_fill / band_frac).
+        let r = reorder(&g, &[ReorderPass::HubPack, ReorderPass::SegmentSort]);
+        let inv: Vec<usize> = r.inverse().into_iter().map(|v| v as usize).collect();
+        let restored = permute_rows(&r.graph, &inv);
+        assert_eq!(
+            InputFeatures::extract(&g, 64),
+            InputFeatures::extract(&restored, 64)
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

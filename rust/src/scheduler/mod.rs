@@ -83,6 +83,8 @@ pub enum DecisionSource {
     Cache,
     /// Fresh probe run.
     Probe,
+    /// Trained cost-model prediction, confident enough to skip probing.
+    Model,
     /// Replay-only mode, no cache entry → forced baseline.
     ReplayFallback,
 }
@@ -100,6 +102,11 @@ pub struct Decision {
     pub t_star_ms: f64,
     /// Probe wall-clock overhead (0 for cache hits).
     pub probe_wall_ms: f64,
+    /// `InputFeatures::to_vec()` of the decided input, carried on the
+    /// PROBE path only: probe resolutions are training data, while
+    /// model-predicted decisions deliberately carry none so the trainer
+    /// never mines the model's own output as ground truth.
+    pub features: Option<Vec<f64>>,
 }
 
 impl Decision {
@@ -185,6 +192,10 @@ pub struct Scheduler {
     /// Unified metrics registry; when set, `decide` counts decision
     /// outcomes (source, variant, probes, guardrail fallbacks).
     pub metrics: Option<std::sync::Arc<crate::obs::metrics::MetricsRegistry>>,
+    /// Trained cost model; when set, cold keys are predicted first and
+    /// probed only below the `model_confidence` threshold. Shared
+    /// read-only across serve shards.
+    pub model: Option<std::sync::Arc<crate::model::CostModel>>,
 }
 
 impl Scheduler {
@@ -195,6 +206,13 @@ impl Scheduler {
         } else {
             ScheduleCache::load(std::path::Path::new(&cfg.cache_path))?
         };
+        let model = if cfg.model_path.is_empty() {
+            None
+        } else {
+            Some(std::sync::Arc::new(crate::model::read_model(
+                std::path::Path::new(&cfg.model_path),
+            )?))
+        };
         Ok(Scheduler {
             cfg,
             dev_model: DeviceModel::default(),
@@ -203,7 +221,27 @@ impl Scheduler {
             tracer: None,
             trace_ctx: None,
             metrics: None,
+            model,
         })
+    }
+
+    /// Persist the schedule cache, downgrading I/O failure to a warning:
+    /// the decision is sound and already live in memory; only warm-start
+    /// across processes is lost.
+    fn persist_cache(
+        &mut self,
+        tracer: &Option<std::sync::Arc<crate::obs::trace::Recorder>>,
+        tctx: Option<(crate::obs::trace::TraceId, crate::obs::trace::SpanId)>,
+    ) {
+        if let Err(e) = self.cache.save() {
+            if let Some(tr) = tracer {
+                tr.warn(tctx.map(|(t, _)| t), "cache_persist", &format!("{e:#}"));
+            }
+            if let Some(m) = &self.metrics {
+                m.inc("autosage_cache_persist_errors_total");
+            }
+            eprintln!("autosage: warning: schedule cache persist failed: {e:#}");
+        }
     }
 
     /// Count one decision outcome in the registry (no-op when unset):
@@ -268,6 +306,7 @@ impl Scheduler {
                     t_baseline_ms: hit.t_baseline_ms,
                     t_star_ms: hit.t_star_ms,
                     probe_wall_ms: 0.0,
+                    features: None,
                 },
                 None,
             ));
@@ -294,6 +333,7 @@ impl Scheduler {
                     t_baseline_ms: 0.0,
                     t_star_ms: 0.0,
                     probe_wall_ms: 0.0,
+                    features: None,
                 },
                 None,
             ));
@@ -305,13 +345,103 @@ impl Scheduler {
         let estimate_start_us = tracer.as_ref().map(|tr| tr.now_us());
         let feats = InputFeatures::extract(g, f);
         estimate::validate_input(&feats, op.has_f(), &self.dev_model)?;
+        let fq = if op.has_f() { Some(f) } else { None };
+        let feats_vec = feats.to_vec();
+
+        // 3.5 Learned scheduler: on a cold key, ask the trained cost
+        //     model first. A confident prediction of a deployable
+        //     variant skips the micro-probe entirely (the cold-start
+        //     latency kill); a low-confidence one is remembered so the
+        //     probe below can grade it (agree/disagree counters). A
+        //     mispredicted variant is still oracle-safe — every variant
+        //     computes the exact result, only the latency differs.
+        let mut pending_prediction: Option<crate::model::Prediction> = None;
+        if let Some(model) = self.model.clone() {
+            let predict_start_us = tracer.as_ref().map(|tr| tr.now_us());
+            if let Some(pred) = model.predict(op.as_str(), &feats_vec) {
+                // Deployable = baseline, or a full-size artifact of the
+                // predicted variant fits this graph under the same grid
+                // gating the shortlist applies.
+                let deployable = pred.variant == "baseline"
+                    || manifest
+                        .candidates(op.as_str(), fq, false)
+                        .into_iter()
+                        .any(|e| {
+                            e.variant == pred.variant
+                                && entry_fits(e, g)
+                                && (self.cfg.allow_grid_kernels
+                                    || dev.executes_grid_kernels()
+                                    || e.param("r").is_none())
+                        });
+                let acted = deployable && pred.confidence >= self.cfg.model_confidence;
+                if let (Some(tr), Some((trace, parent))) = (&tracer, tctx) {
+                    tr.span_between(
+                        trace,
+                        Some(parent),
+                        "predict",
+                        predict_start_us.unwrap_or(0),
+                        tr.now_us(),
+                        vec![
+                            ("variant".to_string(), pred.variant.clone()),
+                            (
+                                "confidence".to_string(),
+                                format!("{:.3}", pred.confidence),
+                            ),
+                            ("acted".to_string(), acted.to_string()),
+                        ],
+                    );
+                }
+                if acted {
+                    let choice = if pred.variant == "baseline" {
+                        Choice::Baseline
+                    } else {
+                        Choice::Candidate(pred.variant.clone())
+                    };
+                    if let Some(m) = &self.metrics {
+                        m.inc("autosage_model_predictions_total");
+                    }
+                    // Predicted entries carry NO feature vector: the
+                    // trainer must never see the model's own output as
+                    // a probe-grade label (self-training feedback).
+                    self.cache.insert(
+                        key.clone(),
+                        CachedChoice {
+                            variant: choice.variant().to_string(),
+                            t_baseline_ms: 0.0,
+                            t_star_ms: 0.0,
+                            alpha: self.cfg.alpha,
+                            features: None,
+                        },
+                    );
+                    self.persist_cache(&tracer, tctx);
+                    self.count_decision("model", choice.variant());
+                    return Ok((
+                        Decision {
+                            op,
+                            f,
+                            key,
+                            choice,
+                            source: DecisionSource::Model,
+                            t_baseline_ms: 0.0,
+                            t_star_ms: 0.0,
+                            probe_wall_ms: 0.0,
+                            features: None,
+                        },
+                        None,
+                    ));
+                }
+                if let Some(m) = &self.metrics {
+                    m.inc("autosage_model_low_confidence_probes_total");
+                }
+                pending_prediction = Some(pred);
+            }
+        }
 
         //    Shortlist by estimating the FULL-size candidates (their
         //    cost is what the decision commits to — grid kernels have
         //    per-step costs that grow with n_pad, so scoring the probe
         //    bucket would not extrapolate), then probe each winner's
         //    probe-size twin.
-        let fq = if op.has_f() { Some(f) } else { None };
         // Small-enough inputs are probed on their full bucket — the
         // guardrail is then exact on the real input (Prop. 1); larger
         // ones probe an induced subgraph and scale by the estimate.
@@ -489,6 +619,80 @@ impl Scheduler {
             .iter()
             .map(|(_, t)| *t)
             .fold(f64::INFINITY, f64::min);
+
+        // Every probe outcome — winner, losers, and the vendor baseline
+        // — becomes an audit row carrying this input's feature vector,
+        // so the trainer learns from rejected variants and guardrail
+        // fallbacks too, not only from executed decisions.
+        if let Some(m) = &self.metrics {
+            use crate::obs::metrics::{feature_bucket, AuditSample};
+            let bucket = feature_bucket(g.n_rows, g.nnz(), f);
+            for (variant, measured_ms) in &probed {
+                let predicted_ms = shortlisted
+                    .iter()
+                    .find(|(e, _)| e.variant == *variant)
+                    .map(|(_, est)| est.score * 1e3)
+                    .unwrap_or(0.0);
+                let outcome = if !choice.is_baseline() && choice.variant() == variant {
+                    "chosen"
+                } else {
+                    "rejected"
+                };
+                let mut s = AuditSample::executed(
+                    op.as_str(),
+                    variant,
+                    &bucket,
+                    predicted_ms,
+                    *measured_ms,
+                );
+                s.outcome = outcome.to_string();
+                s.features = Some(feats_vec.clone());
+                m.record_audit(s);
+            }
+            let base_predicted_ms = manifest
+                .candidates(op.as_str(), fq, false)
+                .into_iter()
+                .filter(|e| e.variant == op.baseline_variant() && entry_fits(e, g))
+                .filter_map(|e| estimate::estimate_entry(e, &feats, &self.dev_model))
+                .map(|est| est.score * 1e3)
+                .fold(f64::INFINITY, f64::min);
+            let base_outcome = if choice.is_baseline() {
+                // Won by default (nothing probed) vs guardrail fallback
+                // (candidates probed, all rejected) — the fallback is
+                // the negative label the trainer maps to "baseline".
+                if probed.is_empty() {
+                    "chosen"
+                } else {
+                    "fallback"
+                }
+            } else {
+                "baseline"
+            };
+            let mut s = AuditSample::executed(
+                op.as_str(),
+                "baseline",
+                &bucket,
+                if base_predicted_ms.is_finite() {
+                    base_predicted_ms
+                } else {
+                    0.0
+                },
+                t_b,
+            );
+            s.outcome = base_outcome.to_string();
+            s.features = Some(feats_vec.clone());
+            m.record_audit(s);
+
+            // Low-confidence predictions were deferred to this probe:
+            // grade them now that ground truth exists.
+            if let Some(pred) = &pending_prediction {
+                if pred.variant == choice.variant() {
+                    m.inc("autosage_model_agree_total");
+                } else {
+                    m.inc("autosage_model_disagree_total");
+                }
+            }
+        }
         if let (Some(tr), Some((trace, parent))) = (&tracer, tctx) {
             tr.span_between(
                 trace,
@@ -507,9 +711,9 @@ impl Scheduler {
             );
         }
 
-        // 6. Cache + persist. Persist-I/O failure is a warning, not a
-        //    request failure: the decision is sound and already live in
-        //    memory; only warm-start across processes is lost.
+        // 6. Cache + persist. Probe resolutions store the input's
+        //    feature vector — they are the ground truth `autosage train`
+        //    mines (model-predicted entries store none).
         self.cache.insert(
             key.clone(),
             CachedChoice {
@@ -517,21 +721,10 @@ impl Scheduler {
                 t_baseline_ms: t_b,
                 t_star_ms: if t_star.is_finite() { t_star } else { 0.0 },
                 alpha: self.cfg.alpha,
+                features: Some(feats_vec.clone()),
             },
         );
-        if let Err(e) = self.cache.save() {
-            if let Some(tr) = &tracer {
-                tr.warn(
-                    tctx.map(|(t, _)| t),
-                    "cache_persist",
-                    &format!("{e:#}"),
-                );
-            }
-            if let Some(m) = &self.metrics {
-                m.inc("autosage_cache_persist_errors_total");
-            }
-            eprintln!("autosage: warning: schedule cache persist failed: {e:#}");
-        }
+        self.persist_cache(&tracer, tctx);
 
         self.count_decision("probe", choice.variant());
         Ok((
@@ -544,6 +737,7 @@ impl Scheduler {
                 t_baseline_ms: t_b,
                 t_star_ms: if t_star.is_finite() { t_star } else { 0.0 },
                 probe_wall_ms: report.wall_ms,
+                features: Some(feats_vec),
             },
             Some(report),
         ))

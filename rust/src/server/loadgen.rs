@@ -86,6 +86,9 @@ pub struct LoadReport {
     pub p99_ms: f64,
     /// Micro-probes actually run across all shards.
     pub probes: u64,
+    /// Cold keys decided by the trained cost model without probing
+    /// (0 when no model is attached).
+    pub model_predictions: u64,
     /// Distinct (graph, op, F) request keys in the workload.
     pub unique_keys: usize,
     pub shards: Vec<ServeShardStats>,
@@ -344,6 +347,12 @@ pub fn run_load_traced(
     let pool_row = pool.metrics().pool_stats();
     let probes = pool.metrics().total_probes();
     let (cache_hits, cache_misses, cache_len) = pool.cache_stats();
+    let model_counter = |name: &str| -> u64 {
+        pool.registry()
+            .map(|r| r.counter(name).load(std::sync::atomic::Ordering::Relaxed))
+            .unwrap_or(0)
+    };
+    let model_predictions = model_counter("autosage_model_predictions_total");
 
     let ops: Vec<&str> = spec.ops.iter().map(|o| o.as_str()).collect();
     let mut text = render_serving_table(
@@ -367,6 +376,15 @@ pub fn run_load_traced(
          {cache_misses} misses / {cache_len} entries (single-flight saved {} probes)\n",
         (cache_misses as u64).saturating_sub(probes),
     ));
+    if pool.has_model() {
+        text.push_str(&format!(
+            "model    : {model_predictions} predictions | {} low-confidence probes | \
+             {} agree / {} disagree vs probe\n",
+            model_counter("autosage_model_low_confidence_probes_total"),
+            model_counter("autosage_model_agree_total"),
+            model_counter("autosage_model_disagree_total"),
+        ));
+    }
     text.push_str(&format!(
         "latency  : p50 {p50_ms:.2}ms | p95 {p95_ms:.2}ms | p99 {p99_ms:.2}ms (client-observed)\n"
     ));
@@ -388,6 +406,7 @@ pub fn run_load_traced(
         p95_ms,
         p99_ms,
         probes,
+        model_predictions,
         unique_keys,
         shards,
     })

@@ -195,6 +195,18 @@ pub fn prometheus_snapshot(
     if let Some(r) = recorder {
         reg.set_gauge("autosage_trace_sample_rate", r.sample_rate());
     }
+    // Materialize the learned-scheduler counters even when no model is
+    // attached (or it never fired): the required-series validation —
+    // and dashboards diffing model vs no-model runs — need explicit
+    // zeros, not absent series.
+    for name in [
+        "autosage_model_predictions_total",
+        "autosage_model_low_confidence_probes_total",
+        "autosage_model_agree_total",
+        "autosage_model_disagree_total",
+    ] {
+        reg.counter(name);
+    }
     if let Some(p) = pool {
         p.export_into(reg);
     }

@@ -108,6 +108,9 @@ pub struct ServerPool {
     recorder: Option<Arc<Recorder>>,
     /// Metrics registry shared with every shard worker (None = unmetered).
     registry: Option<Arc<MetricsRegistry>>,
+    /// Trained cost model shared read-only with every shard worker
+    /// (None = probe-only scheduling).
+    model: Option<Arc<crate::model::CostModel>>,
 }
 
 /// Route a graph signature to a shard.
@@ -150,10 +153,22 @@ impl ServerPool {
         let shared = Arc::new(SharedScheduleCache::load(&cfg.cache_path)?);
         let metrics = Arc::new(ServerMetrics::new(n));
         let flush = Duration::from_millis(cfg.cache_flush_ms as u64);
+        // The trained cost model (if any) is loaded ONCE here and shared
+        // read-only across every shard — a load failure is a spawn-time
+        // error, not K identical per-worker failures.
+        let model = if cfg.model_path.is_empty() {
+            None
+        } else {
+            Some(Arc::new(crate::model::read_model(std::path::Path::new(
+                &cfg.model_path,
+            ))?))
+        };
         // Workers keep their scheduler caches in-memory: the shared
-        // layer owns cross-shard visibility and persistence.
+        // layer owns cross-shard visibility and persistence. The model
+        // path is cleared too — workers receive the Arc, not the file.
         let mut worker_cfg = cfg.clone();
         worker_cfg.cache_path = String::new();
+        worker_cfg.model_path = String::new();
         let mut shards = Vec::with_capacity(n);
         for shard_id in 0..n {
             let (tx, rx) = mpsc::sync_channel(cfg.serve_queue_depth.max(1));
@@ -163,9 +178,10 @@ impl ServerPool {
             let m = Arc::clone(&metrics);
             let rec = recorder.clone();
             let reg = registry.clone();
+            let mdl = model.clone();
             let join = std::thread::Builder::new()
                 .name(format!("autosage-shard-{shard_id}"))
-                .spawn(move || worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, reg, flush))
+                .spawn(move || worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, reg, mdl, flush))
                 .with_context(|| format!("spawning shard {shard_id} worker"))?;
             shards.push(Shard { tx, join });
         }
@@ -176,6 +192,7 @@ impl ServerPool {
             queue_bound: cfg.serve_queue_depth.max(1) as u64,
             recorder,
             registry,
+            model,
         })
     }
 
@@ -294,6 +311,11 @@ impl ServerPool {
         self.registry.as_ref()
     }
 
+    /// Whether a trained cost model is attached to the shards.
+    pub fn has_model(&self) -> bool {
+        self.model.is_some()
+    }
+
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
@@ -372,6 +394,7 @@ fn worker_loop(
     metrics: Arc<ServerMetrics>,
     recorder: Option<Arc<Recorder>>,
     registry: Option<Arc<MetricsRegistry>>,
+    model: Option<Arc<crate::model::CostModel>>,
     flush: Duration,
 ) {
     let batch_max = cfg.serve_batch_max.max(1);
@@ -401,6 +424,7 @@ fn worker_loop(
     };
     sage.set_recorder(recorder.clone());
     sage.set_metrics(registry.clone());
+    sage.set_model(model);
     while let Ok(first) = rx.recv() {
         let batch = collect_batch(&rx, first, batch_max, window);
         let sm = &metrics.shards[shard];
@@ -525,8 +549,15 @@ fn serve_batch(
         let decided = decide_for(sage, shared, sm, leader);
         if let Some((r, ctx, span, start_us)) = sched {
             let (outcome, source, variant) = match &decided {
-                Ok((v, true)) => ("ok", "cache", v.clone()),
-                Ok((v, false)) => ("ok", "probe", v.clone()),
+                Ok((v, src)) => {
+                    let s = match src {
+                        DecisionSource::Cache => "cache",
+                        DecisionSource::Probe => "probe",
+                        DecisionSource::Model => "model",
+                        DecisionSource::ReplayFallback => "replay",
+                    };
+                    ("ok", s, v.clone())
+                }
                 Err(_) => ("error", "-", String::new()),
             };
             r.record(SpanRecord {
@@ -570,7 +601,8 @@ fn serve_batch(
                     });
                 }
             }
-            Ok((variant, from_cache)) => {
+            Ok((variant, source)) => {
+                let from_cache = source == DecisionSource::Cache;
                 // Audit loop: the roofline's prediction for the chosen
                 // variant, computed ONCE per coalescing group (members
                 // share graph/op/F by construction), compared below
@@ -603,13 +635,13 @@ fn serve_batch(
                     let exec_ms = ms_since(exec_started);
                     if let (Some(reg), Some((pred, bucket, op))) = (registry, audit.as_ref()) {
                         if let (Some(p), true) = (pred, result.is_ok()) {
-                            reg.record_audit(AuditSample {
-                                op: op.clone(),
-                                variant: variant.clone(),
-                                bucket: bucket.clone(),
-                                predicted_ms: *p,
-                                measured_ms: exec_ms,
-                            });
+                            reg.record_audit(AuditSample::executed(
+                                op.clone(),
+                                variant.clone(),
+                                bucket.clone(),
+                                *p,
+                                exec_ms,
+                            ));
                         }
                         reg.histogram("autosage_execute_ms").record_ms(exec_ms);
                     }
@@ -669,7 +701,7 @@ fn decide_for(
     shared: &SharedScheduleCache,
     sm: &ShardMetrics,
     leader: &QueuedRequest,
-) -> Result<(String, bool)> {
+) -> Result<(String, DecisionSource)> {
     let key = cache_key(
         &sage.backend_signature(),
         &leader.sig,
@@ -679,7 +711,7 @@ fn decide_for(
     match shared.lookup(&key) {
         Lookup::Hit(c) => {
             sm.cache_hits.fetch_add(1, Ordering::Relaxed);
-            Ok((c.variant, true))
+            Ok((c.variant, DecisionSource::Cache))
         }
         Lookup::Probe(ticket) => {
             // On error the ticket drops unresolved, handing the probe
@@ -688,16 +720,17 @@ fn decide_for(
             if d.source == DecisionSource::Probe {
                 sm.probes.fetch_add(1, Ordering::Relaxed);
             }
+            // Probe resolutions carry the input's feature vector into
+            // the shared cache (training data for `autosage train`);
+            // model-predicted decisions deliberately carry none.
             ticket.resolve(CachedChoice {
                 variant: d.choice.variant().to_string(),
                 t_baseline_ms: d.t_baseline_ms,
                 t_star_ms: d.t_star_ms,
                 alpha: sage.config().alpha,
+                features: d.features,
             });
-            Ok((
-                d.choice.variant().to_string(),
-                d.source == DecisionSource::Cache,
-            ))
+            Ok((d.choice.variant().to_string(), d.source))
         }
     }
 }

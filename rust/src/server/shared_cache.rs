@@ -226,6 +226,7 @@ mod tests {
             t_baseline_ms: 1.0,
             t_star_ms: 0.5,
             alpha: 0.95,
+            features: None,
         }
     }
 

@@ -236,6 +236,7 @@ mod tests {
             t_baseline_ms: 1.0,
             t_star_ms: 0.5,
             probe_wall_ms: 12.0,
+            features: None,
         }
     }
 

@@ -1,0 +1,278 @@
+//! Learned-scheduler integration: training from real probe + audit
+//! telemetry is byte-deterministic, a confident prediction skips the
+//! micro-probe on a cold key, a forced misprediction stays oracle-safe,
+//! a low-confidence prediction defers to the probe and is graded, and
+//! degenerate inputs fail typed before any prediction runs.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use autosage::config::Config;
+use autosage::coordinator::AutoSage;
+use autosage::gen::preset;
+use autosage::graph::Csr;
+use autosage::model::{
+    examples_from_audit, examples_from_cache, merge_and_cap, read_model, write_model,
+    CostModel, Example, DEFAULT_MAX_DEPTH, TRAIN_EXAMPLE_CAP,
+};
+use autosage::obs::metrics::MetricsRegistry;
+use autosage::ops::reference;
+use autosage::scheduler::features::FEATURE_NAMES;
+use autosage::scheduler::{entry_fits, probe, DecisionSource, EstimateError, Op};
+
+fn native_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
+    cfg.cache_path = String::new();
+    cfg.probe_full_max_rows = 512;
+    cfg.probe_iters = 3;
+    cfg.probe_cap_ms = 300.0;
+    cfg
+}
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("autosage_learned_scheduler_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// A model that predicts `label` for `op` with confidence 1.0 no matter
+/// the input: one single-class example makes a pure leaf, and Laplace
+/// smoothing over one class is (1+1)/(1+1).
+fn constant_model(op: &str, label: &str) -> CostModel {
+    let examples = vec![Example {
+        op: op.to_string(),
+        features: vec![1.0; FEATURE_NAMES.len()],
+        label: label.to_string(),
+    }];
+    CostModel::train(&examples, &[], 1, DEFAULT_MAX_DEPTH).unwrap()
+}
+
+fn counter(reg: &Arc<MetricsRegistry>, name: &str) -> u64 {
+    reg.counter(name).load(Ordering::Relaxed)
+}
+
+/// The first non-baseline spmm variant deployable on `g` — what a
+/// correct (or deliberately wrong) model would be allowed to predict.
+fn fitting_spmm_variants(sage: &AutoSage, g: &Csr, f: usize) -> Vec<String> {
+    let mut out: Vec<String> = sage
+        .manifest
+        .candidates("spmm", Some(f), false)
+        .into_iter()
+        .filter(|e| e.variant != Op::Spmm.baseline_variant() && entry_fits(e, g))
+        .map(|e| e.variant.clone())
+        .collect();
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Tentpole acceptance: mining the schedule cache + audit stream from
+/// real probe runs and training twice under one seed produces
+/// byte-identical `.asgm` files, and the round trip preserves the model.
+#[test]
+fn training_from_real_telemetry_is_byte_deterministic() {
+    let mut sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let reg = Arc::new(MetricsRegistry::new());
+    sage.set_metrics(Some(reg.clone()));
+    for &(name, op, f) in &[
+        ("er_s", Op::Spmm, 64),
+        ("hub_s", Op::Spmm, 64),
+        ("er_s", Op::Spmm, 128),
+        ("er_s", Op::Sddmm, 64),
+    ] {
+        let (g, _) = preset(name, 42);
+        sage.decide(&g, op, f).unwrap();
+    }
+
+    // Both telemetry sources carry labeled rows after probe decisions.
+    let from_cache = examples_from_cache(&sage.scheduler.cache);
+    assert!(!from_cache.is_empty(), "probe resolutions must store features");
+    let audit_jsonl: Vec<String> = reg
+        .audit_snapshot()
+        .iter()
+        .map(|s| s.to_json().to_string())
+        .collect();
+    let from_audit = examples_from_audit(&audit_jsonl.join("\n")).unwrap();
+    assert!(!from_audit.is_empty(), "probe outcomes must reach the audit stream");
+
+    let examples = merge_and_cap(vec![from_cache, from_audit], TRAIN_EXAMPLE_CAP, 42);
+    let a = CostModel::train(&examples, &[], 42, DEFAULT_MAX_DEPTH).unwrap();
+    let b = CostModel::train(&examples, &[], 42, DEFAULT_MAX_DEPTH).unwrap();
+    assert_eq!(a, b, "same telemetry + seed must train the same model");
+
+    let pa = tmpfile("det_a.asgm");
+    let pb = tmpfile("det_b.asgm");
+    write_model(&pa, &a).unwrap();
+    write_model(&pb, &b).unwrap();
+    assert_eq!(
+        std::fs::read(&pa).unwrap(),
+        std::fs::read(&pb).unwrap(),
+        "model files must be byte-identical for CI content comparison"
+    );
+    let back = read_model(&pa).unwrap();
+    assert_eq!(back, a);
+    assert_eq!(back.seed, 42);
+    let _ = std::fs::remove_file(&pa);
+    let _ = std::fs::remove_file(&pb);
+}
+
+/// A confident prediction of a deployable variant decides a cold key
+/// with zero probes, stores a feature-less cache entry (no self-training
+/// feedback), and the deployed kernel still matches the oracle.
+#[test]
+fn confident_prediction_skips_probe_and_matches_oracle() {
+    let mut sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let reg = Arc::new(MetricsRegistry::new());
+    sage.set_metrics(Some(reg.clone()));
+    let (g, _) = preset("er_s", 42);
+    let f = 64;
+    let variant = fitting_spmm_variants(&sage, &g, f)
+        .into_iter()
+        .next()
+        .expect("some non-baseline spmm artifact fits er_s");
+    sage.set_model(Some(Arc::new(constant_model("spmm", &variant))));
+    assert!(sage.has_model());
+
+    let d = sage.decide(&g, Op::Spmm, f).unwrap();
+    assert_eq!(d.source, DecisionSource::Model);
+    assert_eq!(d.choice.variant(), variant);
+    assert_eq!(d.probe_wall_ms, 0.0);
+    assert!(d.features.is_none(), "model decisions carry no training features");
+    assert_eq!(counter(&reg, "autosage_model_predictions_total"), 1);
+    assert_eq!(counter(&reg, "autosage_scheduler_probes_total"), 0);
+    assert!(
+        examples_from_cache(&sage.scheduler.cache).is_empty(),
+        "predicted cache entries must never become training examples"
+    );
+
+    // The predicted kernel computes the exact answer.
+    let data = probe::synth_operands(Op::Spmm, g.n_rows, f, 42);
+    let b = data.dense.get("b").unwrap();
+    let out = sage.spmm_auto(&g, b, f).unwrap();
+    let want = reference::spmm(&g, b, f);
+    let diff = reference::max_abs_diff(&out, &want);
+    assert!(diff < 1e-4, "predicted variant {variant}: max diff {diff}");
+}
+
+/// Forced misprediction: point the model at a deployable variant that is
+/// NOT what the probe would pick. The scheduler commits to it (that is
+/// the latency bet the confidence gate makes) but the output is still
+/// oracle-exact — mispredictions cost time, never correctness.
+#[test]
+fn forced_misprediction_is_oracle_safe() {
+    let f = 64;
+    let (g, _) = preset("er_s", 42);
+
+    // Ground truth from a model-free probe run.
+    let mut oracle_sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let winner = oracle_sage
+        .decide(&g, Op::Spmm, f)
+        .unwrap()
+        .choice
+        .variant()
+        .to_string();
+
+    // Predict any deployable variant that is not the probe's winner
+    // ("baseline" is always deployable, so a wrong pick always exists).
+    let mut sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let reg = Arc::new(MetricsRegistry::new());
+    sage.set_metrics(Some(reg.clone()));
+    let mut options = fitting_spmm_variants(&sage, &g, f);
+    options.push("baseline".to_string());
+    let wrong = options
+        .into_iter()
+        .find(|v| *v != winner)
+        .expect("a deployable non-winner always exists");
+    sage.set_model(Some(Arc::new(constant_model("spmm", &wrong))));
+
+    let d = sage.decide(&g, Op::Spmm, f).unwrap();
+    assert_eq!(d.source, DecisionSource::Model);
+    assert_eq!(d.choice.variant(), wrong);
+    assert_ne!(d.choice.variant(), winner);
+    assert_eq!(counter(&reg, "autosage_scheduler_probes_total"), 0);
+
+    let data = probe::synth_operands(Op::Spmm, g.n_rows, f, 42);
+    let b = data.dense.get("b").unwrap();
+    let out = sage.spmm_auto(&g, b, f).unwrap();
+    let want = reference::spmm(&g, b, f);
+    let diff = reference::max_abs_diff(&out, &want);
+    assert!(diff < 1e-4, "mispredicted variant {wrong}: max diff {diff}");
+}
+
+/// Below the confidence gate the probe still runs and grades the
+/// prediction: exactly one of agree/disagree increments, and the
+/// decision is a full probe resolution carrying training features.
+#[test]
+fn low_confidence_prediction_defers_to_probe_and_is_graded() {
+    let mut sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let reg = Arc::new(MetricsRegistry::new());
+    sage.set_metrics(Some(reg.clone()));
+    // Two classes on identical features cannot split: the leaf holds
+    // one example each, so confidence is (1+1)/(2+2) = 0.5 < 0.8.
+    let examples = vec![
+        Example {
+            op: "spmm".to_string(),
+            features: vec![1.0; FEATURE_NAMES.len()],
+            label: "baseline".to_string(),
+        },
+        Example {
+            op: "spmm".to_string(),
+            features: vec![1.0; FEATURE_NAMES.len()],
+            label: "zz_other".to_string(),
+        },
+    ];
+    let model = CostModel::train(&examples, &[], 1, DEFAULT_MAX_DEPTH).unwrap();
+    let pred = model.predict("spmm", &[2.0; 13]).unwrap();
+    assert!((pred.confidence - 0.5).abs() < 1e-9, "{}", pred.confidence);
+    sage.set_model(Some(Arc::new(model)));
+
+    let (g, _) = preset("er_s", 42);
+    let d = sage.decide(&g, Op::Spmm, 64).unwrap();
+    assert_eq!(d.source, DecisionSource::Probe, "low confidence must probe");
+    assert!(d.features.is_some(), "probe resolutions still feed the trainer");
+    assert_eq!(counter(&reg, "autosage_model_predictions_total"), 0);
+    assert_eq!(counter(&reg, "autosage_model_low_confidence_probes_total"), 1);
+    assert_eq!(counter(&reg, "autosage_scheduler_probes_total"), 1);
+    let agree = counter(&reg, "autosage_model_agree_total");
+    let disagree = counter(&reg, "autosage_model_disagree_total");
+    assert_eq!(agree + disagree, 1, "exactly one grading per deferred prediction");
+}
+
+/// Degenerate inputs hit the typed `EstimateError` before the model is
+/// consulted — prediction never masks input validation.
+#[test]
+fn degenerate_input_fails_typed_before_prediction() {
+    let mut sage = AutoSage::new(Path::new("x"), native_cfg(), None).unwrap();
+    let reg = Arc::new(MetricsRegistry::new());
+    sage.set_metrics(Some(reg.clone()));
+    sage.set_model(Some(Arc::new(constant_model("spmm", "baseline"))));
+    let rows: Vec<Vec<(u32, f32)>> = vec![vec![], vec![]];
+    let empty = Csr::from_rows(2, rows);
+    let err = sage.decide(&empty, Op::Spmm, 64).unwrap_err();
+    assert!(
+        err.chain().any(|c| c.downcast_ref::<EstimateError>().is_some()),
+        "expected typed EstimateError, got: {err:#}"
+    );
+    assert_eq!(counter(&reg, "autosage_model_predictions_total"), 0);
+    assert_eq!(counter(&reg, "autosage_model_low_confidence_probes_total"), 0);
+}
+
+/// `AUTOSAGE_MODEL` wiring: a model file on disk loads through the
+/// config at construction; a missing file is a construction-time error,
+/// not a silent no-model fallback.
+#[test]
+fn model_loads_via_config_path() {
+    let path = tmpfile("via_config.asgm");
+    write_model(&path, &constant_model("spmm", "baseline")).unwrap();
+    let mut cfg = native_cfg();
+    cfg.model_path = path.display().to_string();
+    let sage = AutoSage::new(Path::new("x"), cfg, None).unwrap();
+    assert!(sage.has_model());
+    let _ = std::fs::remove_file(&path);
+
+    let mut cfg = native_cfg();
+    cfg.model_path = tmpfile("definitely_missing.asgm").display().to_string();
+    assert!(AutoSage::new(Path::new("x"), cfg, None).is_err());
+}
