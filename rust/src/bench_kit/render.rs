@@ -108,7 +108,7 @@ pub fn render_serving_table(
 ) -> String {
     fn push_row(out: &mut String, label: &str, s: &ServeShardStats) {
         out.push_str(&format!(
-            "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>8.3} | {:>8.3} | {:>8.3}\n",
+            "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>4} | {:>4} | {:>6} | {:>8.3} | {:>8.3} | {:>8.3}\n",
             label,
             s.requests,
             s.batches,
@@ -117,6 +117,9 @@ pub fn render_serving_table(
             s.cache_hits,
             s.errors,
             s.rejected,
+            s.shed,
+            s.degraded,
+            s.panics,
             s.p50_ms,
             s.p95_ms,
             s.p99_ms
@@ -124,7 +127,7 @@ pub fn render_serving_table(
     }
     let mut out = format!("{title}\n");
     out.push_str(&format!(
-        "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>8} | {:>8} | {:>8}\n",
+        "{:>5} | {:>8} | {:>7} | {:>9} | {:>6} | {:>9} | {:>6} | {:>8} | {:>4} | {:>4} | {:>6} | {:>8} | {:>8} | {:>8}\n",
         "shard",
         "requests",
         "batches",
@@ -133,17 +136,20 @@ pub fn render_serving_table(
         "cache_hit",
         "errors",
         "rejected",
+        "shed",
+        "deg",
+        "panics",
         "p50 ms",
         "p95 ms",
         "p99 ms"
     ));
-    out.push_str(&"-".repeat(112));
+    out.push_str(&"-".repeat(135));
     out.push('\n');
     for s in shards {
         push_row(&mut out, &s.shard.to_string(), s);
     }
     if let Some(p) = pool {
-        out.push_str(&"-".repeat(112));
+        out.push_str(&"-".repeat(135));
         out.push('\n');
         push_row(&mut out, "pool", p);
     }

@@ -25,6 +25,14 @@
 //! | `AUTOSAGE_TRACE_FLUSH_MS` | periodic trace flush throttle during serving: sampled spans append to `trace.jsonl` at most once per this many ms (0 = flush only at run end) | 0 |
 //! | `AUTOSAGE_MODEL`        | trained cost-model file (`autosage train` output) consulted on cold keys ("" = always probe) | "" |
 //! | `AUTOSAGE_MODEL_CONFIDENCE` | minimum calibrated confidence to act on a model prediction without probing; below it the prediction is recorded and the micro-probe runs anyway | 0.8 |
+//! | `AUTOSAGE_DEADLINE_MS`  | per-request serving deadline (ms): requests whose queue wait already exceeds it are shed at dequeue with `DeadlineExceeded` (0 = no deadline) | 0 |
+//! | `AUTOSAGE_FAULT_RATE`   | deterministic fault-injection rate in [0,1]: each request id draws from `Rng::for_stream(fault_seed, id)`, so the injected set replays bit-identically (0 = off) | 0 |
+//! | `AUTOSAGE_FAULT_KINDS`  | comma list of injected fault kinds: `error` \| `panic` \| `latency` | error,panic,latency |
+//! | `AUTOSAGE_FAULT_SEED`   | fault-injection RNG seed (independent of the workload seed) | 0 |
+//! | `AUTOSAGE_FAULT_LATENCY_MS` | injected latency-spike duration (ms) for `latency` faults | 5 |
+//! | `AUTOSAGE_DEGRADE_WATERMARK` | queue-depth fraction of `AUTOSAGE_SERVE_QUEUE` at/above which eligible SpMM requests degrade to the edge-sampled graph instead of running full (0 = degradation off) | 0 |
+//! | `AUTOSAGE_DEGRADE_KEEP` | edge-sampling keep fraction per hub row in (0,1] for degraded execution | 0.5 |
+//! | `AUTOSAGE_DEGRADE_MIN_DEG` | rows at/below this degree keep all edges when sampling (hub threshold) | 8 |
 
 use crate::util::envcfg::{env_bool, env_f64, env_string, env_usize};
 
@@ -86,6 +94,43 @@ pub struct Config {
     /// (for the agreement counters) but the micro-probe still decides.
     /// Env: `AUTOSAGE_MODEL_CONFIDENCE`.
     pub model_confidence: f64,
+    /// Per-request serving deadline in ms. A request whose queue wait
+    /// already exceeds it is shed at dequeue with a typed
+    /// `DeadlineExceeded` reply instead of executing. 0 disables
+    /// deadlines. Env: `AUTOSAGE_DEADLINE_MS`.
+    pub deadline_ms: f64,
+    /// Deterministic fault-injection rate in [0, 1]. Each request id
+    /// draws its fault from `Rng::for_stream(fault_seed, id)` — a pure
+    /// function of (seed, id), so two runs at the same seed inject the
+    /// identical fault set. 0 disables injection. Env:
+    /// `AUTOSAGE_FAULT_RATE`.
+    pub fault_rate: f64,
+    /// Comma-separated injected fault kinds drawn uniformly per faulty
+    /// request: "error" (backend failure), "panic" (worker panic,
+    /// caught by supervision), "latency" (execute-time spike). Env:
+    /// `AUTOSAGE_FAULT_KINDS`.
+    pub fault_kinds: String,
+    /// Fault-injection RNG seed, independent of the workload seed so
+    /// chaos placement can vary while the request mix replays. Env:
+    /// `AUTOSAGE_FAULT_SEED`.
+    pub fault_seed: usize,
+    /// Injected latency-spike duration in ms for `latency` faults.
+    /// Env: `AUTOSAGE_FAULT_LATENCY_MS`.
+    pub fault_latency_ms: f64,
+    /// Graceful-degradation watermark as a fraction of
+    /// `serve_queue_depth`: when a shard's queue depth at dequeue is at
+    /// or above `watermark * queue_depth`, eligible SpMM requests run
+    /// on the edge-sampled graph (with a per-reply error estimate)
+    /// instead of the full graph. 0 disables degradation. Env:
+    /// `AUTOSAGE_DEGRADE_WATERMARK`.
+    pub degrade_watermark: f64,
+    /// Edge-sampling keep fraction per hub row in (0, 1] used by
+    /// degraded execution. Env: `AUTOSAGE_DEGRADE_KEEP`.
+    pub degrade_keep_frac: f64,
+    /// Rows at or below this degree keep all their edges when
+    /// sampling (only hub rows lose mass). Env:
+    /// `AUTOSAGE_DEGRADE_MIN_DEG`.
+    pub degrade_min_deg: usize,
 }
 
 impl Default for Config {
@@ -115,6 +160,14 @@ impl Default for Config {
             trace_flush_ms: 0,
             model_path: String::new(),
             model_confidence: 0.8,
+            deadline_ms: 0.0,
+            fault_rate: 0.0,
+            fault_kinds: "error,panic,latency".to_string(),
+            fault_seed: 0,
+            fault_latency_ms: 5.0,
+            degrade_watermark: 0.0,
+            degrade_keep_frac: 0.5,
+            degrade_min_deg: 8,
         }
     }
 }
@@ -154,6 +207,14 @@ impl Config {
             trace_flush_ms: env_usize("AUTOSAGE_TRACE_FLUSH_MS", d.trace_flush_ms)?,
             model_path: env_string("AUTOSAGE_MODEL", &d.model_path),
             model_confidence: env_f64("AUTOSAGE_MODEL_CONFIDENCE", d.model_confidence)?,
+            deadline_ms: env_f64("AUTOSAGE_DEADLINE_MS", d.deadline_ms)?,
+            fault_rate: env_f64("AUTOSAGE_FAULT_RATE", d.fault_rate)?,
+            fault_kinds: env_string("AUTOSAGE_FAULT_KINDS", &d.fault_kinds),
+            fault_seed: env_usize("AUTOSAGE_FAULT_SEED", d.fault_seed)?,
+            fault_latency_ms: env_f64("AUTOSAGE_FAULT_LATENCY_MS", d.fault_latency_ms)?,
+            degrade_watermark: env_f64("AUTOSAGE_DEGRADE_WATERMARK", d.degrade_watermark)?,
+            degrade_keep_frac: env_f64("AUTOSAGE_DEGRADE_KEEP", d.degrade_keep_frac)?,
+            degrade_min_deg: env_usize("AUTOSAGE_DEGRADE_MIN_DEG", d.degrade_min_deg)?,
         })
     }
 
@@ -198,6 +259,48 @@ impl Config {
                 "AUTOSAGE_MODEL_CONFIDENCE must be in [0, 1]; got {}",
                 self.model_confidence
             ));
+        }
+        if !self.deadline_ms.is_finite() || self.deadline_ms < 0.0 {
+            return Err(format!(
+                "AUTOSAGE_DEADLINE_MS must be >= 0; got {}",
+                self.deadline_ms
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.fault_rate) {
+            return Err(format!(
+                "AUTOSAGE_FAULT_RATE must be in [0, 1]; got {}",
+                self.fault_rate
+            ));
+        }
+        if !self.fault_latency_ms.is_finite() || self.fault_latency_ms < 0.0 {
+            return Err(format!(
+                "AUTOSAGE_FAULT_LATENCY_MS must be >= 0; got {}",
+                self.fault_latency_ms
+            ));
+        }
+        for kind in self.fault_kinds.split(',') {
+            let kind = kind.trim();
+            if !kind.is_empty() && !matches!(kind, "error" | "panic" | "latency") {
+                return Err(format!(
+                    "unknown AUTOSAGE_FAULT_KINDS entry {kind:?} \
+                     (valid: error, panic, latency)"
+                ));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.degrade_watermark) {
+            return Err(format!(
+                "AUTOSAGE_DEGRADE_WATERMARK must be in [0, 1]; got {}",
+                self.degrade_watermark
+            ));
+        }
+        if !(0.0 < self.degrade_keep_frac && self.degrade_keep_frac <= 1.0) {
+            return Err(format!(
+                "AUTOSAGE_DEGRADE_KEEP must be in (0, 1]; got {}",
+                self.degrade_keep_frac
+            ));
+        }
+        if self.degrade_min_deg == 0 {
+            return Err("AUTOSAGE_DEGRADE_MIN_DEG must be >= 1".into());
         }
         Ok(())
     }
@@ -299,6 +402,44 @@ mod tests {
             c.model_confidence = ok;
             assert!(c.validate().is_ok(), "{ok}");
         }
+    }
+
+    #[test]
+    fn resilience_defaults_are_off() {
+        let c = Config::default();
+        assert_eq!(c.deadline_ms, 0.0);
+        assert_eq!(c.fault_rate, 0.0);
+        assert_eq!(c.fault_kinds, "error,panic,latency");
+        assert_eq!(c.degrade_watermark, 0.0);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_resilience_knobs() {
+        let mut c = Config::default();
+        c.fault_rate = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.fault_kinds = "error,segfault".to_string();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.deadline_ms = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.degrade_watermark = 2.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.degrade_keep_frac = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.degrade_min_deg = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.fault_rate = 0.05;
+        c.fault_kinds = "panic".to_string();
+        c.deadline_ms = 10.0;
+        c.degrade_watermark = 0.75;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub mod edgelist;
 pub mod mtx;
 pub mod normalize;
 pub mod reorder;
+pub mod sample;
 pub mod spec;
 
 use std::path::Path;
@@ -32,6 +33,7 @@ use crate::graph::Csr;
 pub use asg::{read_asg, write_asg, AsgSnapshot};
 pub use normalize::{normalize, NormOptions, NormReport};
 pub use reorder::{parse_passes, reorder, ReorderPass, ReorderReport, Reordered};
+pub use sample::{sample_edges, SampleReport, SampleSpec, SampledGraph};
 pub use spec::{load_graph_spec, GraphSpec};
 
 /// Source format of a loaded graph.

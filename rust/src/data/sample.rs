@@ -1,0 +1,234 @@
+//! Degree-aware edge sampling with a per-graph error estimate — the
+//! approximation that backs graceful degradation in the serve pool.
+//!
+//! AES-SpMM and cache-first edge sampling (PAPERS.md) trade bounded
+//! accuracy for large SpMM speedups by dropping edges from hub rows.
+//! This pass keeps every edge of low-degree rows (degree ≤
+//! `min_keep_deg`) and, for hub rows, the `keep_frac` largest-|value|
+//! edges, so the dropped mass per row is as small as the budget allows.
+//!
+//! The pass is deterministic (pure function of the input graph and the
+//! spec — ties break by slot order) and emits the quantity the serving
+//! layer needs to *bound* the approximation: `max_row_dropped_mass`,
+//! the largest Σ|v| dropped from any single row. For SpMM `Y = A·B`
+//! every output element satisfies
+//!
+//! ```text
+//! |Y_full[i][j] − Y_sampled[i][j]| = |Σ_dropped v_e · B[col_e][j]|
+//!                                  ≤ max_row_dropped_mass · max|B|
+//! ```
+//!
+//! so a degraded reply can carry a hard per-element error estimate
+//! without knowing `B` in advance.
+
+use std::fmt;
+
+use crate::graph::Csr;
+
+/// Edge-sampling parameters (serving defaults come from
+/// `AUTOSAGE_DEGRADE_{KEEP,MIN_DEG}`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampleSpec {
+    /// Fraction of a hub row's edges to keep, in (0, 1].
+    pub keep_frac: f64,
+    /// Rows with at most this many edges are untouched; hub rows never
+    /// keep fewer than this many edges either.
+    pub min_keep_deg: usize,
+}
+
+impl Default for SampleSpec {
+    fn default() -> Self {
+        SampleSpec { keep_frac: 0.5, min_keep_deg: 8 }
+    }
+}
+
+/// What the sampling pass did and how wrong the result can be.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SampleReport {
+    /// Hub rows that actually lost edges.
+    pub rows_sampled: usize,
+    pub edges_kept: usize,
+    pub edges_dropped: usize,
+    /// max over rows of Σ|v| dropped from that row — the per-element
+    /// SpMM error bound is this times max|B|.
+    pub max_row_dropped_mass: f64,
+    /// Σ|v| dropped over Σ|v| total (0 when the graph has no mass).
+    pub dropped_mass_frac: f64,
+}
+
+impl fmt::Display for SampleReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "sampled {} rows: kept {} / dropped {} edges, \
+             max row dropped mass {:.4}, dropped mass frac {:.4}",
+            self.rows_sampled,
+            self.edges_kept,
+            self.edges_dropped,
+            self.max_row_dropped_mass,
+            self.dropped_mass_frac
+        )
+    }
+}
+
+/// An edge-sampled graph plus its error estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampledGraph {
+    pub graph: Csr,
+    pub report: SampleReport,
+}
+
+/// Deterministically drop low-|value| edges from hub rows.
+///
+/// Rows with degree ≤ `spec.min_keep_deg` are copied verbatim. A hub
+/// row of degree `d` keeps `max(min_keep_deg, ceil(d · keep_frac))`
+/// edges, chosen by largest |value| (ties broken by slot order so the
+/// output is a pure function of the input); kept edges stay in their
+/// original column order, so the result is a valid sorted CSR.
+pub fn sample_edges(g: &Csr, spec: &SampleSpec) -> SampledGraph {
+    assert!(
+        spec.keep_frac > 0.0 && spec.keep_frac <= 1.0,
+        "keep_frac out of (0,1]: {}",
+        spec.keep_frac
+    );
+    let min_keep = spec.min_keep_deg.max(1);
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(g.n_rows);
+    let mut report = SampleReport::default();
+    let mut total_mass = 0.0f64;
+    for i in 0..g.n_rows {
+        let (cols, vals) = g.row(i);
+        let deg = cols.len();
+        let row_mass: f64 = vals.iter().map(|v| v.abs() as f64).sum();
+        total_mass += row_mass;
+        let keep = if deg <= min_keep {
+            deg
+        } else {
+            min_keep.max(((deg as f64) * spec.keep_frac).ceil() as usize)
+        };
+        if keep >= deg {
+            report.edges_kept += deg;
+            rows.push(cols.iter().copied().zip(vals.iter().copied()).collect());
+            continue;
+        }
+        // Rank slots by |value| descending, slot ascending on ties.
+        let mut slots: Vec<usize> = (0..deg).collect();
+        slots.sort_by(|&a, &b| {
+            vals[b]
+                .abs()
+                .partial_cmp(&vals[a].abs())
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut kept_slots = slots[..keep].to_vec();
+        kept_slots.sort_unstable(); // back to column order
+        let dropped_mass: f64 = slots[keep..]
+            .iter()
+            .map(|&s| vals[s].abs() as f64)
+            .sum();
+        report.rows_sampled += 1;
+        report.edges_kept += keep;
+        report.edges_dropped += deg - keep;
+        report.max_row_dropped_mass = report.max_row_dropped_mass.max(dropped_mass);
+        rows.push(kept_slots.iter().map(|&s| (cols[s], vals[s])).collect());
+    }
+    if total_mass > 0.0 {
+        let dropped: f64 = total_mass
+            - rows
+                .iter()
+                .flat_map(|r| r.iter())
+                .map(|&(_, v)| v.abs() as f64)
+                .sum::<f64>();
+        report.dropped_mass_frac = (dropped / total_mass).max(0.0);
+    }
+    SampledGraph { graph: Csr::from_rows(g.n_cols, rows), report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::reference;
+    use crate::util::rng::Rng;
+
+    /// One hub row (degree 32) over a tail of degree-2 rows.
+    fn hub_graph() -> Csr {
+        let mut rng = Rng::new(7);
+        let n = 40;
+        let mut rows: Vec<Vec<(u32, f32)>> = Vec::new();
+        let mut hub: Vec<(u32, f32)> = (0..32u32)
+            .map(|c| (c, rng.next_f32() * 2.0 - 1.0))
+            .collect();
+        hub.sort_by_key(|&(c, _)| c);
+        rows.push(hub);
+        for i in 1..n {
+            rows.push(vec![
+                ((i as u32) % 40, 0.5),
+                (((i as u32) + 3) % 40, -0.25),
+            ]);
+        }
+        Csr::from_rows(40, rows)
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let g = hub_graph();
+        let spec = SampleSpec { keep_frac: 0.25, min_keep_deg: 4 };
+        let a = sample_edges(&g, &spec);
+        let b = sample_edges(&g, &spec);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.report, b.report);
+        assert!(a.report.edges_dropped > 0);
+    }
+
+    #[test]
+    fn low_degree_graph_is_untouched() {
+        let g = Csr::from_rows(
+            8,
+            vec![vec![(0, 1.0), (3, 2.0)], vec![(1, -1.0)], vec![]],
+        );
+        let s = sample_edges(&g, &SampleSpec::default());
+        assert_eq!(s.graph, g);
+        assert_eq!(s.report.rows_sampled, 0);
+        assert_eq!(s.report.edges_dropped, 0);
+        assert_eq!(s.report.max_row_dropped_mass, 0.0);
+    }
+
+    #[test]
+    fn kept_plus_dropped_is_nnz_and_columns_stay_sorted() {
+        let g = hub_graph();
+        let s = sample_edges(&g, &SampleSpec { keep_frac: 0.5, min_keep_deg: 4 });
+        assert_eq!(s.report.edges_kept + s.report.edges_dropped, g.nnz());
+        assert_eq!(s.graph.nnz(), s.report.edges_kept);
+        for i in 0..s.graph.n_rows {
+            let (cols, _) = s.graph.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} unsorted");
+        }
+    }
+
+    #[test]
+    fn spmm_error_stays_within_reported_bound() {
+        let g = hub_graph();
+        let s = sample_edges(&g, &SampleSpec { keep_frac: 0.25, min_keep_deg: 4 });
+        assert!(s.report.edges_dropped > 0);
+        let f = 16;
+        let mut rng = Rng::new(11);
+        let b: Vec<f32> = (0..g.n_cols * f)
+            .map(|_| rng.next_f32() * 2.0 - 1.0)
+            .collect();
+        let max_b = b.iter().fold(0.0f32, |m, v| m.max(v.abs())) as f64;
+        let full = reference::spmm(&g, &b, f);
+        let approx = reference::spmm(&s.graph, &b, f);
+        let bound = s.report.max_row_dropped_mass * max_b + 1e-5;
+        for (i, (&yf, &ya)) in full.iter().zip(approx.iter()).enumerate() {
+            let err = (yf - ya).abs() as f64;
+            assert!(err <= bound, "elem {i}: err {err} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn empty_graph_is_fine() {
+        let g = Csr::from_rows(4, vec![vec![], vec![], vec![]]);
+        let s = sample_edges(&g, &SampleSpec::default());
+        assert_eq!(s.graph.nnz(), 0);
+        assert_eq!(s.report.dropped_mass_frac, 0.0);
+    }
+}

@@ -430,9 +430,11 @@ pub fn parse_prometheus(text: &str) -> Result<PromSnapshot> {
 }
 
 /// Series every serving snapshot must carry: the drop/overflow counters
-/// (satellite requirement), the merged-histogram pool percentiles, and
-/// the learned-scheduler prediction counters (zero when no model is
-/// loaded — a missing series means a miswired registry, not "no model").
+/// (satellite requirement), the merged-histogram pool percentiles, the
+/// learned-scheduler prediction counters (zero when no model is
+/// loaded — a missing series means a miswired registry, not "no model"),
+/// and the resilience counters (zero when fault injection / deadlines /
+/// degradation are off, for the same reason).
 pub const REQUIRED_SERVING_SERIES: &[&str] = &[
     "autosage_traces_sampled_out_total",
     "autosage_spans_dropped_total",
@@ -444,6 +446,11 @@ pub const REQUIRED_SERVING_SERIES: &[&str] = &[
     "autosage_model_low_confidence_probes_total",
     "autosage_model_agree_total",
     "autosage_model_disagree_total",
+    "autosage_faults_injected_total",
+    "autosage_requests_quarantined_total",
+    "autosage_pool_shed_total",
+    "autosage_pool_degraded_total",
+    "autosage_worker_panics_total",
 ];
 
 /// Validate a serving `metrics.prom` snapshot: well-formed exposition
@@ -555,6 +562,15 @@ mod tests {
         reg.set_counter("autosage_model_low_confidence_probes_total", 0);
         reg.set_counter("autosage_model_agree_total", 0);
         reg.set_counter("autosage_model_disagree_total", 0);
+        assert!(
+            validate_serving_snapshot(&reg.render_prometheus()).is_err(),
+            "must fail without resilience counters"
+        );
+        reg.set_counter("autosage_faults_injected_total", 0);
+        reg.set_counter("autosage_requests_quarantined_total", 0);
+        reg.set_counter("autosage_pool_shed_total", 0);
+        reg.set_counter("autosage_pool_degraded_total", 0);
+        reg.set_counter("autosage_worker_panics_total", 0);
         let snap = validate_serving_snapshot(&reg.render_prometheus()).unwrap();
         assert_eq!(snap["autosage_traces_sampled_out_total"], 3.0);
         assert_eq!(snap["autosage_model_predictions_total"], 0.0);

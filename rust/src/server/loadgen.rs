@@ -6,7 +6,7 @@
 //! metrics.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -22,7 +22,8 @@ use crate::util::csv::CsvTable;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
-use super::pool::ServerPool;
+use super::pool::{ServerPool, SubmitError};
+use super::resilience::ServeError;
 
 /// One load-generation run's shape.
 #[derive(Debug, Clone)]
@@ -39,6 +40,13 @@ pub struct LoadSpec {
     pub seed: u64,
     /// Check every response against the reference oracle.
     pub verify: bool,
+    /// Bounded retry budget per request: `QueueFull` rejections and
+    /// deadline sheds are retried up to this many times with seeded
+    /// jittered exponential backoff (0 = no retry, blocking submit).
+    pub max_retries: usize,
+    /// Base backoff before the first retry, in microseconds (doubles
+    /// per attempt, plus a seeded jitter of up to one base unit).
+    pub retry_backoff_us: u64,
 }
 
 impl LoadSpec {
@@ -52,6 +60,8 @@ impl LoadSpec {
             ops: vec![Op::Spmm, Op::Sddmm, Op::Attention],
             seed: 42,
             verify: true,
+            max_retries: 0,
+            retry_backoff_us: 200,
         }
     }
 
@@ -65,7 +75,50 @@ impl LoadSpec {
             ops: vec![Op::Spmm, Op::Sddmm, Op::Attention],
             seed: 42,
             verify: true,
+            max_retries: 0,
+            retry_backoff_us: 200,
         }
+    }
+}
+
+/// Client-observed request failures split by kind (satellite: errors
+/// are no longer one opaque number).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ErrorBreakdown {
+    /// `SubmitError::QueueFull` after the retry budget was exhausted.
+    pub queue_full: usize,
+    /// `SubmitError::Closed` — the target shard's worker is dead.
+    pub closed: usize,
+    /// Typed execute/scheduling failures (`ServeError::Execute`).
+    pub execute: usize,
+    /// Supervised worker panics (`ServeError::Panic`).
+    pub panic: usize,
+    /// Deadline sheds (`ServeError::DeadlineExceeded`) after retries.
+    pub deadline: usize,
+}
+
+impl ErrorBreakdown {
+    pub fn total(&self) -> usize {
+        self.queue_full + self.closed + self.execute + self.panic + self.deadline
+    }
+
+    fn absorb(&mut self, other: &ErrorBreakdown) {
+        self.queue_full += other.queue_full;
+        self.closed += other.closed;
+        self.execute += other.execute;
+        self.panic += other.panic;
+        self.deadline += other.deadline;
+    }
+
+    /// (kind label, count) pairs for metrics export and report text.
+    pub fn kinds(&self) -> [(&'static str, usize); 5] {
+        [
+            ("queue_full", self.queue_full),
+            ("closed", self.closed),
+            ("execute", self.execute),
+            ("panic", self.panic),
+            ("deadline", self.deadline),
+        ]
     }
 }
 
@@ -92,6 +145,23 @@ pub struct LoadReport {
     /// Distinct (graph, op, F) request keys in the workload.
     pub unique_keys: usize,
     pub shards: Vec<ServeShardStats>,
+    /// Client-observed failures split by kind (sums to `errors`).
+    pub errors_by_kind: ErrorBreakdown,
+    /// Subset of `errors` caused by the fault injector (the chaos
+    /// harness subtracts these: they are expected, not regressions).
+    pub injected_errors: usize,
+    /// Replies served on the edge-sampled graph (graceful degradation).
+    pub degraded: usize,
+    /// Retry attempts actually performed across all clients.
+    pub retries: usize,
+    /// Requests shed past their deadline, summed across shards.
+    pub shed: u64,
+    /// Worker panics caught by supervision, summed across shards.
+    pub worker_panics: u64,
+    /// Faults the injector placed (0 when chaos is off).
+    pub faults_injected: u64,
+    /// Requests quarantined after a supervised panic.
+    pub quarantined: usize,
 }
 
 impl LoadReport {
@@ -132,6 +202,9 @@ struct Combo {
     f: usize,
     operands: Vec<(String, Vec<f32>)>,
     oracle: Vec<f32>,
+    /// max|B| of the SpMM dense operand (0 for other ops): scales the
+    /// degraded-reply error bound `mass × max|B|` (see `data::sample`).
+    max_abs_b: f32,
 }
 
 fn build_combos(spec: &LoadSpec) -> Result<Vec<Combo>> {
@@ -161,12 +234,21 @@ fn build_combos(spec: &LoadSpec) -> Result<Vec<Combo>> {
                 }
                 Op::Softmax => unreachable!("rejected above"),
             };
-            let operands = op
+            let operands: Vec<(String, Vec<f32>)> = op
                 .dense_operands()
                 .iter()
                 .map(|n| ((*n).to_string(), data.dense.get(*n).cloned().unwrap_or_default()))
                 .collect();
-            combos.push(Combo { op, graph: g.clone(), f: spec.f, operands, oracle });
+            let max_abs_b = if op == Op::Spmm {
+                operands
+                    .iter()
+                    .find(|(n, _)| n == "b")
+                    .map(|(_, v)| v.iter().fold(0.0f32, |m, x| m.max(x.abs())))
+                    .unwrap_or(0.0)
+            } else {
+                0.0
+            };
+            combos.push(Combo { op, graph: g.clone(), f: spec.f, operands, oracle, max_abs_b });
         }
     }
     Ok(combos)
@@ -201,6 +283,27 @@ pub fn request_schedule(
 /// submit path.
 pub fn run_load(pool: Arc<ServerPool>, spec: &LoadSpec) -> Result<LoadReport> {
     run_load_traced(pool, spec, None)
+}
+
+/// Everything one client thread observed.
+#[derive(Default)]
+struct ClientTally {
+    lat: Vec<f64>,
+    ok: usize,
+    errors: usize,
+    mismatches: usize,
+    eb: ErrorBreakdown,
+    injected_errors: usize,
+    degraded: usize,
+    retries: usize,
+}
+
+/// Seeded jittered exponential backoff between retry attempts:
+/// `base × 2^(attempt-1)` plus up to one base unit of jitter.
+fn backoff_sleep(rng: &mut Rng, base_us: u64, attempt: usize) {
+    let exp = base_us.saturating_mul(1u64 << (attempt.saturating_sub(1)).min(10));
+    let jitter = rng.below(base_us.max(1) as usize) as u64;
+    std::thread::sleep(Duration::from_micros(exp + jitter));
 }
 
 /// Record a client-side root `request` span covering submit → reply.
@@ -253,12 +356,17 @@ pub fn run_load_traced(
         let pool = Arc::clone(&pool);
         let combos = Arc::clone(&combos);
         let verify = spec.verify;
+        let max_retries = spec.max_retries;
+        let backoff_us = spec.retry_backoff_us;
+        let seed = spec.seed;
         let recorder = recorder.clone();
         let handle = std::thread::Builder::new()
             .name(format!("loadgen-client-{c}"))
-            .spawn(move || -> (Vec<f64>, usize, usize, usize) {
-                let mut lat = Vec::new();
-                let (mut ok, mut errors, mut mismatches) = (0usize, 0usize, 0usize);
+            .spawn(move || -> ClientTally {
+                let mut t = ClientTally::default();
+                // Retry backoff jitter gets its own seeded stream per
+                // client so the whole run stays replayable.
+                let mut retry_rng = Rng::for_stream(seed ^ 0x9e37_79b9, c as u64);
                 for &ci in &mix {
                     let combo = &combos[ci];
                     let t0 = Instant::now();
@@ -266,46 +374,109 @@ pub fn run_load_traced(
                     // unsampled requests travel untraced (None) but still
                     // consume a trace id, so the sampled set is a pure
                     // function of (seed, rate). The root span id doubles
-                    // as the parent for every worker-side span.
+                    // as the parent for every worker-side span. Retried
+                    // attempts reuse the same trace.
                     let tctx = recorder.as_ref().and_then(|r| r.sample_ctx());
-                    let rx = match pool.submit_traced(
-                        combo.op,
-                        combo.graph.clone(),
-                        combo.f,
-                        combo.operands.clone(),
-                        tctx,
-                    ) {
-                        Ok(rx) => rx,
-                        Err(_) => {
-                            errors += 1;
-                            record_request_span(
-                                recorder.as_deref(),
-                                tctx,
-                                c,
-                                combo.op,
-                                t0,
-                                false,
-                            );
-                            continue;
-                        }
-                    };
                     let mut req_ok = false;
-                    match rx.recv() {
-                        Err(_) => errors += 1,
-                        Ok(resp) => match resp.result {
-                            Err(_) => errors += 1,
-                            Ok(out) => {
-                                req_ok = true;
-                                lat.push(t0.elapsed().as_secs_f64() * 1e3);
-                                if verify
-                                    && reference::max_abs_diff(&out, &combo.oracle) >= 2e-3
-                                {
-                                    mismatches += 1;
-                                } else {
-                                    ok += 1;
+                    let mut attempt = 0usize;
+                    loop {
+                        // With a retry budget, submission must not block:
+                        // `QueueFull` is the backoff signal.
+                        let submitted = if max_retries == 0 {
+                            pool.submit_traced(
+                                combo.op,
+                                combo.graph.clone(),
+                                combo.f,
+                                combo.operands.clone(),
+                                tctx,
+                            )
+                        } else {
+                            pool.try_submit_traced(
+                                combo.op,
+                                combo.graph.clone(),
+                                combo.f,
+                                combo.operands.clone(),
+                                tctx,
+                            )
+                        };
+                        let rx = match submitted {
+                            Ok(rx) => rx,
+                            Err(SubmitError::QueueFull) => {
+                                if attempt < max_retries {
+                                    attempt += 1;
+                                    t.retries += 1;
+                                    backoff_sleep(&mut retry_rng, backoff_us, attempt);
+                                    continue;
                                 }
+                                t.errors += 1;
+                                t.eb.queue_full += 1;
+                                break;
                             }
-                        },
+                            // A dead shard stays dead: retrying `Closed`
+                            // only burns the backoff budget.
+                            Err(SubmitError::Closed) => {
+                                t.errors += 1;
+                                t.eb.closed += 1;
+                                break;
+                            }
+                        };
+                        match rx.recv() {
+                            Err(_) => {
+                                t.errors += 1;
+                                t.eb.execute += 1;
+                                break;
+                            }
+                            Ok(resp) => match resp.result {
+                                Ok(out) => {
+                                    req_ok = true;
+                                    t.lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                                    if resp.degraded.is_some() {
+                                        t.degraded += 1;
+                                    }
+                                    if verify {
+                                        // A degraded reply is verified
+                                        // against its advertised bound:
+                                        // |err| ≤ dropped mass × max|B|
+                                        // (plus the usual float slack).
+                                        let tol = 2e-3
+                                            + resp.degraded.unwrap_or(0.0)
+                                                * combo.max_abs_b as f64;
+                                        let diff =
+                                            reference::max_abs_diff(&out, &combo.oracle);
+                                        if (diff as f64) >= tol {
+                                            t.mismatches += 1;
+                                        } else {
+                                            t.ok += 1;
+                                        }
+                                    } else {
+                                        t.ok += 1;
+                                    }
+                                    break;
+                                }
+                                Err(ServeError::DeadlineExceeded { .. })
+                                    if attempt < max_retries =>
+                                {
+                                    attempt += 1;
+                                    t.retries += 1;
+                                    backoff_sleep(&mut retry_rng, backoff_us, attempt);
+                                    continue;
+                                }
+                                Err(e) => {
+                                    t.errors += 1;
+                                    if e.injected() {
+                                        t.injected_errors += 1;
+                                    }
+                                    match e {
+                                        ServeError::DeadlineExceeded { .. } => {
+                                            t.eb.deadline += 1
+                                        }
+                                        ServeError::Panic { .. } => t.eb.panic += 1,
+                                        ServeError::Execute { .. } => t.eb.execute += 1,
+                                    }
+                                    break;
+                                }
+                            },
+                        }
                     }
                     record_request_span(
                         recorder.as_deref(),
@@ -316,7 +487,7 @@ pub fn run_load_traced(
                         req_ok,
                     );
                 }
-                (lat, ok, errors, mismatches)
+                t
             })
             .with_context(|| format!("spawning load client {c}"))?;
         handles.push(handle);
@@ -324,12 +495,18 @@ pub fn run_load_traced(
 
     let mut lat = Vec::new();
     let (mut ok, mut errors, mut mismatches) = (0usize, 0usize, 0usize);
+    let mut eb = ErrorBreakdown::default();
+    let (mut injected_errors, mut degraded, mut retries) = (0usize, 0usize, 0usize);
     for h in handles {
-        let (l, o, e, m) = h.join().map_err(|_| anyhow!("load client panicked"))?;
-        lat.extend(l);
-        ok += o;
-        errors += e;
-        mismatches += m;
+        let t = h.join().map_err(|_| anyhow!("load client panicked"))?;
+        lat.extend(t.lat);
+        ok += t.ok;
+        errors += t.errors;
+        mismatches += t.mismatches;
+        eb.absorb(&t.eb);
+        injected_errors += t.injected_errors;
+        degraded += t.degraded;
+        retries += t.retries;
     }
     let wall_ms = sw.elapsed().as_secs_f64() * 1e3;
     let total = spec.clients * spec.requests_per_client;
@@ -353,6 +530,24 @@ pub fn run_load_traced(
             .unwrap_or(0)
     };
     let model_predictions = model_counter("autosage_model_predictions_total");
+    let shed = pool.metrics().total_shed();
+    let worker_panics = pool.metrics().total_panics();
+    let resil = pool.resilience();
+    let faults_injected =
+        resil.injector.as_ref().map(|i| i.injected_total()).unwrap_or(0);
+    let quarantined = resil.quarantine.len();
+    // Satellite: client-observed failures land in the metrics registry
+    // split by kind, not as one opaque number.
+    if let Some(reg) = pool.registry() {
+        for (kind, n) in eb.kinds() {
+            if n > 0 {
+                reg.add(
+                    &format!("autosage_client_errors_total{{kind=\"{kind}\"}}"),
+                    n as u64,
+                );
+            }
+        }
+    }
 
     let ops: Vec<&str> = spec.ops.iter().map(|o| o.as_str()).collect();
     let mut text = render_serving_table(
@@ -371,6 +566,26 @@ pub fn run_load_traced(
     text.push_str(&format!(
         "\nrequests : {total} total | {ok} ok | {errors} errors | {mismatches} oracle mismatches\n"
     ));
+    if errors > 0 {
+        let parts: Vec<String> = eb
+            .kinds()
+            .iter()
+            .filter(|(_, n)| *n > 0)
+            .map(|(k, n)| format!("{n} {k}"))
+            .collect();
+        text.push_str(&format!(
+            "errors   : {} ({injected_errors} injected)\n",
+            parts.join(" | ")
+        ));
+    }
+    if shed + worker_panics + faults_injected > 0
+        || degraded + retries + quarantined > 0
+    {
+        text.push_str(&format!(
+            "resil    : {shed} shed | {degraded} degraded | {worker_panics} panics | \
+             {faults_injected} faults injected | {quarantined} quarantined | {retries} retries\n"
+        ));
+    }
     text.push_str(&format!(
         "schedule : {unique_keys} unique keys | {probes} probes | cache {cache_hits} hits / \
          {cache_misses} misses / {cache_len} entries (single-flight saved {} probes)\n",
@@ -409,6 +624,14 @@ pub fn run_load_traced(
         model_predictions,
         unique_keys,
         shards,
+        errors_by_kind: eb,
+        injected_errors,
+        degraded,
+        retries,
+        shed,
+        worker_panics,
+        faults_injected,
+        quarantined,
     })
 }
 
@@ -426,11 +649,16 @@ mod tests {
             ops: vec![Op::Spmm, Op::Sddmm],
             seed: 7,
             verify: false,
+            max_retries: 0,
+            retry_backoff_us: 200,
         };
         let combos = build_combos(&spec).unwrap();
         assert_eq!(combos.len(), 2);
         assert_eq!(combos[0].op, Op::Spmm);
         assert_eq!(combos[0].oracle.len(), combos[0].graph.n_rows * 64);
+        // The SpMM combo must carry a usable degradation bound scale.
+        assert!(combos[0].max_abs_b > 0.0);
+        assert_eq!(combos[1].max_abs_b, 0.0);
         // SDDMM oracle is per-edge.
         assert_eq!(combos[1].oracle.len(), combos[1].graph.nnz());
     }
@@ -495,6 +723,8 @@ mod tests {
             ops: vec![Op::Spmm],
             seed: 7,
             verify: false,
+            max_retries: 0,
+            retry_backoff_us: 200,
         };
         let combos = build_combos(&spec).unwrap();
         assert_eq!(combos.len(), 1);
@@ -510,5 +740,20 @@ mod tests {
         let s = LoadSpec::smoke();
         assert!(s.clients >= 8);
         assert_eq!(s.f, 64);
+        // Retries are off by default: the perf gate's `errors: Exact 0`
+        // contract relies on the blocking submit path.
+        assert_eq!(s.max_retries, 0);
+        assert!(s.retry_backoff_us > 0);
+    }
+
+    #[test]
+    fn error_breakdown_sums_and_labels() {
+        let mut a = ErrorBreakdown { queue_full: 1, closed: 2, ..Default::default() };
+        let b = ErrorBreakdown { execute: 3, panic: 4, deadline: 5, ..Default::default() };
+        a.absorb(&b);
+        assert_eq!(a.total(), 15);
+        let kinds = a.kinds();
+        assert_eq!(kinds.iter().map(|(_, n)| n).sum::<usize>(), 15);
+        assert!(kinds.iter().any(|(k, n)| *k == "deadline" && *n == 5));
     }
 }

@@ -40,6 +40,15 @@ pub struct ShardMetrics {
     pub cache_hits: AtomicU64,
     /// Submissions rejected with `QueueFull` (backpressure).
     pub rejected: AtomicU64,
+    /// Requests shed at dequeue because their queue wait already
+    /// exceeded `AUTOSAGE_DEADLINE_MS`.
+    pub shed: AtomicU64,
+    /// Requests served on the edge-sampled graph (graceful
+    /// degradation under overload).
+    pub degraded: AtomicU64,
+    /// Worker panics caught by supervision (injected or organic);
+    /// the shard survives every one of them.
+    pub panics: AtomicU64,
     pub queue_depth: AtomicU64,
     pub max_queue_depth: AtomicU64,
     /// End-to-end latency (enqueue → response) per completed request.
@@ -71,6 +80,9 @@ impl ServerMetrics {
                 cache_hits: s.cache_hits.load(Ordering::Relaxed),
                 errors: s.errors.load(Ordering::Relaxed),
                 rejected: s.rejected.load(Ordering::Relaxed),
+                shed: s.shed.load(Ordering::Relaxed),
+                degraded: s.degraded.load(Ordering::Relaxed),
+                panics: s.panics.load(Ordering::Relaxed),
                 max_queue_depth: s.max_queue_depth.load(Ordering::Relaxed),
                 p50_ms: s.latency.quantile_ms(0.50),
                 p95_ms: s.latency.quantile_ms(0.95),
@@ -103,6 +115,9 @@ impl ServerMetrics {
             cache_hits: sum(|s| &s.cache_hits),
             errors: sum(|s| &s.errors),
             rejected: sum(|s| &s.rejected),
+            shed: sum(|s| &s.shed),
+            degraded: sum(|s| &s.degraded),
+            panics: sum(|s| &s.panics),
             max_queue_depth: self
                 .shards
                 .iter()
@@ -143,6 +158,18 @@ impl ServerMetrics {
             .sum()
     }
 
+    pub fn total_shed(&self) -> u64 {
+        self.shards.iter().map(|s| s.shed.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_degraded(&self) -> u64 {
+        self.shards.iter().map(|s| s.degraded.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_panics(&self) -> u64 {
+        self.shards.iter().map(|s| s.panics.load(Ordering::Relaxed)).sum()
+    }
+
     /// Mirror the pool counters and the merged latency histogram into
     /// the registry so one `render_prometheus` covers everything.
     /// Counter mirrors use `set_counter` (absolute totals), so repeated
@@ -157,6 +184,9 @@ impl ServerMetrics {
         reg.set_counter("autosage_pool_cache_hits_total", pool.cache_hits);
         reg.set_counter("autosage_pool_errors_total", pool.errors);
         reg.set_counter("autosage_pool_rejected_total", pool.rejected);
+        reg.set_counter("autosage_pool_shed_total", pool.shed);
+        reg.set_counter("autosage_pool_degraded_total", pool.degraded);
+        reg.set_counter("autosage_worker_panics_total", pool.panics);
         reg.set_gauge(
             "autosage_pool_max_queue_depth",
             pool.max_queue_depth as f64,
@@ -204,6 +234,16 @@ pub fn prometheus_snapshot(
         "autosage_model_low_confidence_probes_total",
         "autosage_model_agree_total",
         "autosage_model_disagree_total",
+    ] {
+        reg.counter(name);
+    }
+    // Same for the resilience counters: fault-free runs must export
+    // explicit zeros so the required-series validation (and chaos-vs-
+    // clean dashboards) see the series either way. The live increments
+    // happen in the workers (`reg.inc`); these just materialize them.
+    for name in [
+        "autosage_faults_injected_total",
+        "autosage_requests_quarantined_total",
     ] {
         reg.counter(name);
     }

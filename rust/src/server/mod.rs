@@ -13,7 +13,12 @@
 //! * [`metrics`] — per-shard throughput/error/queue counters and
 //!   latency histograms (p50/p95/p99), exported through `telemetry`.
 //! * [`loadgen`] — the `autosage serve-bench` harness: multi-threaded
-//!   clients, mixed op/preset request streams, oracle verification.
+//!   clients, mixed op/preset request streams, oracle verification,
+//!   bounded retry with seeded jittered backoff.
+//! * [`resilience`] — typed serve errors, worker supervision's
+//!   quarantine log, deterministic fault injection
+//!   (`AUTOSAGE_FAULT_{RATE,KINDS,SEED}`), and the edge-sampled-graph
+//!   cache behind graceful degradation under overload.
 //!
 //! The legacy single-worker `coordinator::ServiceHandle` is a thin
 //! compatibility wrapper over [`pool::ServerPool`].
@@ -21,9 +26,15 @@
 pub mod loadgen;
 pub mod metrics;
 pub mod pool;
+pub mod resilience;
 pub mod shared_cache;
 
-pub use loadgen::{request_schedule, run_load, run_load_traced, LoadReport, LoadSpec};
+pub use loadgen::{
+    request_schedule, run_load, run_load_traced, ErrorBreakdown, LoadReport, LoadSpec,
+};
 pub use metrics::{prometheus_snapshot, LatencyHistogram, ServerMetrics, ShardMetrics};
 pub use pool::{ServeResponse, ServerPool, SubmitError};
+pub use resilience::{
+    FaultInjector, FaultKind, QuarantineEntry, QuarantineLog, Resilience, ServeError,
+};
 pub use shared_cache::{Lookup, ProbeTicket, SharedScheduleCache};

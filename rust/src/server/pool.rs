@@ -14,9 +14,20 @@
 //! drain their queue in batches (up to `serve_batch_max`, waiting up to
 //! `serve_batch_window_us` for stragglers) and coalesce same
 //! `(graph, op, F)` requests under one scheduling decision.
+//!
+//! Resilience (see [`super::resilience`]): per-request execution runs
+//! under `catch_unwind` supervision — a panicking request is
+//! quarantined and replied with a typed [`ServeError::Panic`] while
+//! the shard keeps serving; requests carry a deadline and are shed at
+//! dequeue once their queue wait blows it; a deterministic fault
+//! injector can place backend errors / panics / latency spikes as a
+//! pure function of (seed, request id); and under queue-depth overload
+//! eligible SpMM requests degrade to an edge-sampled graph with a
+//! per-reply error bound instead of rejecting.
 
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -26,6 +37,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::Config;
 use crate::coordinator::AutoSage;
+use crate::data::sample::SampleSpec;
 use crate::graph::signature::{graph_signature, Fnv1a};
 use crate::graph::Csr;
 use crate::obs::metrics::{feature_bucket, AuditSample, MetricsRegistry};
@@ -34,11 +46,12 @@ use crate::scheduler::{cache_key, CachedChoice, DecisionSource, Op};
 use crate::telemetry::ServeShardStats;
 
 use super::metrics::{ServerMetrics, ShardMetrics};
+use super::resilience::{FaultKind, QuarantineEntry, Resilience, ServeError};
 use super::shared_cache::{Lookup, SharedScheduleCache};
 
 /// Operator result + how it was scheduled and served.
 pub struct ServeResponse {
-    pub result: Result<Vec<f32>>,
+    pub result: Result<Vec<f32>, ServeError>,
     /// Chosen kernel variant id ("" when scheduling itself failed).
     pub variant: String,
     /// Decision replayed from the (shared or worker-local) cache.
@@ -50,6 +63,13 @@ pub struct ServeResponse {
     pub queue_ms: f64,
     /// End-to-end enqueue → response time.
     pub total_ms: f64,
+    /// `Some(mass)` when this request was served on the edge-sampled
+    /// graph (graceful degradation): the per-element error of an SpMM
+    /// result is bounded by `mass × max|B|` (see `data::sample`).
+    pub degraded: Option<f64>,
+    /// Kind of chaos the fault injector applied to this request, if any
+    /// ("error" / "panic" / "latency").
+    pub injected_fault: Option<&'static str>,
 }
 
 /// Why a submission was not accepted.
@@ -86,11 +106,34 @@ struct QueuedRequest {
     /// Flight-recorder context the request travels under (None when the
     /// pool runs untraced).
     trace: Option<TraceCtx>,
+    /// Pool-wide submission index — the fault injector's stream id.
+    req_id: u64,
+    /// Deadline propagated with the request (`AUTOSAGE_DEADLINE_MS`,
+    /// 0 = none): shed at dequeue once queue wait exceeds it.
+    deadline_ms: f64,
+    /// Sentinel used by `debug_stop_shard`: makes the worker exit its
+    /// loop cleanly after the current batch (never served).
+    stop: bool,
 }
 
 struct Shard {
     tx: SyncSender<QueuedRequest>,
     join: JoinHandle<()>,
+    /// Flipped false by the worker on ANY exit (shutdown, init
+    /// failure, stop sentinel, unwinding panic) so submits fail fast
+    /// with `Closed` instead of enqueueing into a dead shard.
+    alive: Arc<AtomicBool>,
+}
+
+/// Sets the shard's liveness flag to false when the worker unwinds or
+/// returns — the satellite fix: a dead shard is visible at submit time,
+/// not only in pool `Drop`.
+struct AliveGuard(Arc<AtomicBool>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Release);
+    }
 }
 
 /// Handle to the running pool. Dropping it shuts the workers down and
@@ -111,6 +154,15 @@ pub struct ServerPool {
     /// Trained cost model shared read-only with every shard worker
     /// (None = probe-only scheduling).
     model: Option<Arc<crate::model::CostModel>>,
+    /// Fault injector + quarantine log + degrade cache, shared with
+    /// every shard worker.
+    resilience: Arc<Resilience>,
+    /// Pool-wide request counter: each submission gets the next id,
+    /// which is also its fault-injection stream.
+    next_req_id: AtomicU64,
+    /// Deadline stamped on every submitted request
+    /// (`AUTOSAGE_DEADLINE_MS`, 0 = none).
+    deadline_ms: f64,
 }
 
 /// Route a graph signature to a shard.
@@ -169,6 +221,11 @@ impl ServerPool {
         let mut worker_cfg = cfg.clone();
         worker_cfg.cache_path = String::new();
         worker_cfg.model_path = String::new();
+        // One injector / quarantine log / degrade cache for the whole
+        // pool: fault placement is pool-global by request id, and each
+        // distinct graph is edge-sampled at most once.
+        let resilience =
+            Arc::new(Resilience::from_config(&cfg).map_err(|e| anyhow!(e))?);
         let mut shards = Vec::with_capacity(n);
         for shard_id in 0..n {
             let (tx, rx) = mpsc::sync_channel(cfg.serve_queue_depth.max(1));
@@ -179,11 +236,16 @@ impl ServerPool {
             let rec = recorder.clone();
             let reg = registry.clone();
             let mdl = model.clone();
+            let res = Arc::clone(&resilience);
+            let alive = Arc::new(AtomicBool::new(true));
+            let alive_w = Arc::clone(&alive);
             let join = std::thread::Builder::new()
                 .name(format!("autosage-shard-{shard_id}"))
-                .spawn(move || worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, reg, mdl, flush))
+                .spawn(move || {
+                    worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, reg, mdl, res, alive_w, flush)
+                })
                 .with_context(|| format!("spawning shard {shard_id} worker"))?;
-            shards.push(Shard { tx, join });
+            shards.push(Shard { tx, join, alive });
         }
         Ok(ServerPool {
             shards,
@@ -193,6 +255,9 @@ impl ServerPool {
             recorder,
             registry,
             model,
+            resilience,
+            next_req_id: AtomicU64::new(0),
+            deadline_ms: cfg.deadline_ms,
         })
     }
 
@@ -205,8 +270,27 @@ impl ServerPool {
         f: usize,
         operands: Vec<(String, Vec<f32>)>,
     ) -> Result<Receiver<ServeResponse>, SubmitError> {
-        let (qr, shard, rx) = self.package(op, graph, f, operands);
+        self.try_submit_traced(op, graph, f, operands, None)
+    }
+
+    /// Non-blocking submit carrying a flight-recorder context — the
+    /// retrying loadgen path.
+    pub fn try_submit_traced(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+        trace: Option<TraceCtx>,
+    ) -> Result<Receiver<ServeResponse>, SubmitError> {
+        let (mut qr, shard, rx) = self.package(op, graph, f, operands);
+        qr.trace = trace;
         let sm = &self.metrics.shards[shard];
+        // Dead-shard fast path (satellite): a stopped/crashed worker is
+        // visible here, not only when the channel finally disconnects.
+        if !self.shards[shard].alive.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
         // Count depth *before* the send so the worker's decrement can
         // never observe (and wrap below) zero.
         let d = sm.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
@@ -251,6 +335,9 @@ impl ServerPool {
         let (mut qr, shard, rx) = self.package(op, graph, f, operands);
         qr.trace = trace;
         let sm = &self.metrics.shards[shard];
+        if !self.shards[shard].alive.load(Ordering::Acquire) {
+            return Err(SubmitError::Closed);
+        }
         let d = sm.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
         match self.shards[shard].tx.send(qr) {
             Ok(()) => {
@@ -297,6 +384,9 @@ impl ServerPool {
             sig,
             enqueued: Instant::now(),
             trace: None,
+            req_id: self.next_req_id.fetch_add(1, Ordering::Relaxed),
+            deadline_ms: self.deadline_ms,
+            stop: false,
         };
         (qr, shard, rx)
     }
@@ -331,6 +421,50 @@ impl ServerPool {
     /// (hits, misses, entries) of the shared schedule cache.
     pub fn cache_stats(&self) -> (usize, usize, usize) {
         self.shared.stats()
+    }
+
+    /// The pool's resilience state: fault injector (if chaos is on),
+    /// quarantine log, degrade cache.
+    pub fn resilience(&self) -> &Resilience {
+        &self.resilience
+    }
+
+    /// Whether a shard's worker is still serving (false once it exits
+    /// for any reason).
+    pub fn shard_alive(&self, shard: usize) -> bool {
+        self.shards[shard].alive.load(Ordering::Acquire)
+    }
+
+    /// True when every shard worker is still serving — the chaos
+    /// harness's "no permanently-dead shard" assertion.
+    pub fn all_shards_alive(&self) -> bool {
+        self.shards.iter().all(|s| s.alive.load(Ordering::Acquire))
+    }
+
+    /// Test hook: make one shard's worker exit its loop cleanly after
+    /// the current batch — the "dead shard" scenario without a real
+    /// crash. Blocks until the sentinel is enqueued.
+    #[doc(hidden)]
+    pub fn debug_stop_shard(&self, shard: usize) {
+        let (respond, _rx) = mpsc::channel();
+        let qr = QueuedRequest {
+            op: Op::Spmm,
+            graph: Csr::from_rows(0, Vec::new()),
+            f: 0,
+            operands: Vec::new(),
+            respond,
+            sig: String::new(),
+            enqueued: Instant::now(),
+            trace: None,
+            req_id: u64::MAX,
+            deadline_ms: 0.0,
+            stop: true,
+        };
+        let sm = &self.metrics.shards[shard];
+        sm.queue_depth.fetch_add(1, Ordering::Relaxed);
+        if self.shards[shard].tx.send(qr).is_err() {
+            sm.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        }
     }
 
     /// Record the observed queue depth after a SUCCESSFUL enqueue only
@@ -373,16 +507,33 @@ impl Drop for ServerPool {
         // Final flush of dirty cache state (entries and hit/miss
         // counters) now that every worker has stopped. Failure is a
         // warning, not a panic: the serving session itself succeeded.
+        // Satellite: the failure lands in the metrics warn counter and
+        // the recorder; stderr is only the fallback when the pool runs
+        // fully unobserved.
         if let Err(e) = self.shared.persist() {
+            if let Some(reg) = &self.registry {
+                reg.inc("autosage_cache_persist_errors_total");
+            }
             if let Some(r) = &self.recorder {
                 r.warn(None, "cache_persist_shutdown", &format!("{e:#}"));
             }
-            eprintln!("autosage: warning: schedule cache flush on shutdown failed: {e:#}");
+            if self.registry.is_none() && self.recorder.is_none() {
+                eprintln!(
+                    "autosage: warning: schedule cache flush on shutdown failed: {e:#}"
+                );
+            }
         }
     }
 }
 
 // ------------------------------------------------------------- worker
+
+/// Per-worker resilience settings derived from config once at spawn.
+struct WorkerSettings {
+    queue_bound: u64,
+    degrade_watermark: f64,
+    sample_spec: SampleSpec,
+}
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
@@ -395,10 +546,21 @@ fn worker_loop(
     recorder: Option<Arc<Recorder>>,
     registry: Option<Arc<MetricsRegistry>>,
     model: Option<Arc<crate::model::CostModel>>,
+    resilience: Arc<Resilience>,
+    alive: Arc<AtomicBool>,
     flush: Duration,
 ) {
+    let _alive = AliveGuard(alive);
     let batch_max = cfg.serve_batch_max.max(1);
     let window = Duration::from_micros(cfg.serve_batch_window_us as u64);
+    let settings = WorkerSettings {
+        queue_bound: cfg.serve_queue_depth.max(1) as u64,
+        degrade_watermark: cfg.degrade_watermark,
+        sample_spec: SampleSpec {
+            keep_frac: cfg.degrade_keep_frac,
+            min_keep_deg: cfg.degrade_min_deg,
+        },
+    };
     let mut sage = match AutoSage::new(&artifacts_dir, cfg, None) {
         Ok(s) => s,
         Err(e) => {
@@ -407,16 +569,21 @@ fn worker_loop(
             let sm = &metrics.shards[shard];
             for req in rx {
                 sm.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                if req.stop {
+                    continue;
+                }
                 sm.requests.fetch_add(1, Ordering::Relaxed);
                 sm.errors.fetch_add(1, Ordering::Relaxed);
                 let _ = req.respond.send(ServeResponse {
-                    result: Err(anyhow!("{msg}")),
+                    result: Err(ServeError::Execute { msg: msg.clone(), injected: false }),
                     variant: String::new(),
                     from_cache: false,
                     shard,
                     batch_size: 0,
                     queue_ms: 0.0,
                     total_ms: 0.0,
+                    degraded: None,
+                    injected_fault: None,
                 });
             }
             return;
@@ -426,26 +593,35 @@ fn worker_loop(
     sage.set_metrics(registry.clone());
     sage.set_model(model);
     while let Ok(first) = rx.recv() {
-        let batch = collect_batch(&rx, first, batch_max, window);
+        let mut batch = collect_batch(&rx, first, batch_max, window);
         let sm = &metrics.shards[shard];
         sm.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
-        sm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        sm.batches.fetch_add(1, Ordering::Relaxed);
-        if let Some(reg) = &registry {
-            // Batch *size*, not latency — reuse the log2 buckets anyway:
-            // the interesting question ("did coalescing happen at all,
-            // and how skewed is it") survives the coarse resolution.
-            reg.histogram("autosage_pool_batch_size").record_ms(batch.len() as f64);
+        let stop = batch.iter().any(|q| q.stop);
+        if stop {
+            batch.retain(|q| !q.stop);
         }
-        serve_batch(
-            shard,
-            &mut sage,
-            &shared,
-            sm,
-            recorder.as_deref(),
-            registry.as_deref(),
-            batch,
-        );
+        if !batch.is_empty() {
+            sm.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            sm.batches.fetch_add(1, Ordering::Relaxed);
+            if let Some(reg) = &registry {
+                // Batch *size*, not latency — reuse the log2 buckets
+                // anyway: the interesting question ("did coalescing
+                // happen at all, and how skewed is it") survives the
+                // coarse resolution.
+                reg.histogram("autosage_pool_batch_size").record_ms(batch.len() as f64);
+            }
+            serve_batch(
+                shard,
+                &mut sage,
+                &shared,
+                sm,
+                recorder.as_deref(),
+                registry.as_deref(),
+                &resilience,
+                &settings,
+                batch,
+            );
+        }
         // Satellite (PR 2 debt): cache persistence moved off the
         // pool-wide mutex and out of `ProbeTicket::resolve` — dirty
         // state flushes here, throttled, and I/O errors demote to a
@@ -474,6 +650,9 @@ fn worker_loop(
                 r.warn(None, "trace_flush", &format!("{e:#}"));
                 eprintln!("autosage: warning: trace flush failed: {e:#}");
             }
+        }
+        if stop {
+            return;
         }
     }
 }
@@ -505,9 +684,119 @@ fn collect_batch(
     batch
 }
 
+/// Extract a readable message from a caught panic payload.
+fn panic_message(panic: Box<dyn std::any::Any + Send>) -> String {
+    panic
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| panic.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".to_string())
+}
+
+/// Quarantine a poisoning request: bounded log + counter + warn trace.
+fn quarantine_request(
+    res: &Resilience,
+    registry: Option<&MetricsRegistry>,
+    recorder: Option<&Recorder>,
+    entry: QuarantineEntry,
+) {
+    if let Some(reg) = registry {
+        reg.inc("autosage_requests_quarantined_total");
+    }
+    if let Some(r) = recorder {
+        r.warn(
+            None,
+            "quarantine",
+            &format!(
+                "shard {} req {} op {} F{} sig {}: {}",
+                entry.shard, entry.req_id, entry.op, entry.f, entry.sig, entry.msg
+            ),
+        );
+    }
+    res.quarantine.record(entry);
+}
+
+/// Reply to one request with its final result, recording latency and
+/// the reply trace event. Counter updates (errors/completed/shed/…)
+/// stay with the caller — they differ per path.
+#[allow(clippy::too_many_arguments)]
+fn reply_now(
+    shard: usize,
+    sm: &ShardMetrics,
+    recorder: Option<&Recorder>,
+    qr: QueuedRequest,
+    result: Result<Vec<f32>, ServeError>,
+    variant: String,
+    from_cache: bool,
+    batch_size: usize,
+    queue_ms: f64,
+    degraded: Option<f64>,
+    injected_fault: Option<&'static str>,
+) {
+    let ok = result.is_ok();
+    let total_ms = ms_since(qr.enqueued);
+    sm.latency.record_ms(total_ms);
+    if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
+        r.event(
+            ctx.trace,
+            Some(ctx.parent),
+            "reply",
+            vec![("ok".to_string(), ok.to_string())],
+        );
+    }
+    let _ = qr.respond.send(ServeResponse {
+        result,
+        variant,
+        from_cache,
+        shard,
+        batch_size,
+        queue_ms,
+        total_ms,
+        degraded,
+        injected_fault,
+    });
+}
+
+/// Shed a request whose queue wait blew its deadline: typed
+/// `DeadlineExceeded` reply, `shed` counter, trace event.
+fn shed_request(
+    shard: usize,
+    sm: &ShardMetrics,
+    recorder: Option<&Recorder>,
+    qr: QueuedRequest,
+    batch_size: usize,
+) {
+    sm.shed.fetch_add(1, Ordering::Relaxed);
+    let waited_ms = ms_since(qr.enqueued);
+    let deadline_ms = qr.deadline_ms;
+    if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
+        r.event(
+            ctx.trace,
+            Some(ctx.parent),
+            "shed",
+            vec![("waited_ms".to_string(), format!("{waited_ms:.3}"))],
+        );
+    }
+    reply_now(
+        shard,
+        sm,
+        recorder,
+        qr,
+        Err(ServeError::DeadlineExceeded { waited_ms, deadline_ms }),
+        String::new(),
+        false,
+        batch_size,
+        waited_ms,
+        None,
+        None,
+    );
+}
+
 /// Group a batch by coalescing key (graph signature, op, F) preserving
 /// arrival order, then schedule each group ONCE and execute its members
-/// under that decision.
+/// under that decision. Scheduling and execution both run under
+/// `catch_unwind` supervision: a panic quarantines the poisoning
+/// request and the worker keeps serving.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
     shard: usize,
@@ -516,10 +805,22 @@ fn serve_batch(
     sm: &ShardMetrics,
     recorder: Option<&Recorder>,
     registry: Option<&MetricsRegistry>,
+    res: &Resilience,
+    settings: &WorkerSettings,
     batch: Vec<QueuedRequest>,
 ) {
-    let mut groups: Vec<(String, Vec<QueuedRequest>)> = Vec::new();
+    // Deadline shedding at dequeue: a request that already waited past
+    // its deadline is not worth scheduling, let alone executing.
+    let mut live = Vec::with_capacity(batch.len());
     for qr in batch {
+        if qr.deadline_ms > 0.0 && ms_since(qr.enqueued) > qr.deadline_ms {
+            shed_request(shard, sm, recorder, qr, 1);
+        } else {
+            live.push(qr);
+        }
+    }
+    let mut groups: Vec<(String, Vec<QueuedRequest>)> = Vec::new();
+    for qr in live {
         let gk = format!("{}|{}|F{}", qr.sig, qr.op.as_str(), qr.f);
         match groups.iter_mut().find(|(k, _)| *k == gk) {
             Some((_, members)) => members.push(qr),
@@ -546,7 +847,35 @@ fn serve_batch(
                 None
             }
         };
-        let decided = decide_for(sage, shared, sm, leader);
+        // Supervised scheduling: a panic inside decide (estimate,
+        // probe, backend) quarantines the group leader and fails the
+        // group with a typed reply — the shard stays alive.
+        let decided: Result<(String, DecisionSource), ServeError> =
+            match catch_unwind(AssertUnwindSafe(|| decide_for(sage, shared, sm, leader))) {
+                Ok(Ok(v)) => Ok(v),
+                Ok(Err(e)) => {
+                    Err(ServeError::Execute { msg: format!("{e:#}"), injected: false })
+                }
+                Err(panic) => {
+                    let msg = panic_message(panic);
+                    sm.panics.fetch_add(1, Ordering::Relaxed);
+                    quarantine_request(
+                        res,
+                        registry,
+                        recorder,
+                        QuarantineEntry {
+                            req_id: leader.req_id,
+                            shard,
+                            sig: leader.sig.clone(),
+                            op: leader.op.as_str().to_string(),
+                            f: leader.f,
+                            injected: false,
+                            msg: msg.clone(),
+                        },
+                    );
+                    Err(ServeError::Panic { msg, injected: false })
+                }
+            };
         if let Some((r, ctx, span, start_us)) = sched {
             let (outcome, source, variant) = match &decided {
                 Ok((v, src)) => {
@@ -577,28 +906,22 @@ fn serve_batch(
         }
         match decided {
             Err(e) => {
-                let msg = format!("{e:#}");
                 for qr in group {
                     sm.errors.fetch_add(1, Ordering::Relaxed);
-                    let total_ms = ms_since(qr.enqueued);
-                    sm.latency.record_ms(total_ms);
-                    if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
-                        r.event(
-                            ctx.trace,
-                            Some(ctx.parent),
-                            "reply",
-                            vec![("ok".to_string(), "false".to_string())],
-                        );
-                    }
-                    let _ = qr.respond.send(ServeResponse {
-                        result: Err(anyhow!("{msg}")),
-                        variant: String::new(),
-                        from_cache: false,
+                    let queue_ms = ms_since(qr.enqueued);
+                    reply_now(
                         shard,
+                        sm,
+                        recorder,
+                        qr,
+                        Err(e.clone()),
+                        String::new(),
+                        false,
                         batch_size,
-                        queue_ms: total_ms,
-                        total_ms,
-                    });
+                        queue_ms,
+                        None,
+                        None,
+                    );
                 }
             }
             Ok((variant, source)) => {
@@ -607,8 +930,10 @@ fn serve_batch(
                 // variant, computed ONCE per coalescing group (members
                 // share graph/op/F by construction), compared below
                 // against each member's measured execute time. Every
-                // executed request is audited — the audit stream is
-                // deliberately NOT subject to trace sampling.
+                // cleanly executed request is audited — the audit
+                // stream is deliberately NOT subject to trace sampling,
+                // but faulted/degraded executions are skipped (their
+                // measured time is not the full-graph prediction's).
                 let audit = registry.map(|_| {
                     let leader = &group[0];
                     (
@@ -618,6 +943,13 @@ fn serve_batch(
                     )
                 });
                 for qr in group {
+                    // Re-check the deadline before executing: injected
+                    // latency or a slow batch-mate may have burned the
+                    // budget since dequeue.
+                    if qr.deadline_ms > 0.0 && ms_since(qr.enqueued) > qr.deadline_ms {
+                        shed_request(shard, sm, recorder, qr, batch_size);
+                        continue;
+                    }
                     let queue_ms = ms_since(qr.enqueued);
                     if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
                         r.span_between(
@@ -629,12 +961,117 @@ fn serve_batch(
                             vec![("shard".to_string(), shard.to_string())],
                         );
                     }
+                    // Deterministic chaos placement: pure in
+                    // (fault seed, request id), so same-seed runs
+                    // inject the identical fault set.
+                    let fault = res.injector.as_ref().and_then(|inj| inj.decide(qr.req_id));
+                    let injected_kind = fault.map(|k| k.as_str());
+                    if let Some(kind) = fault {
+                        if let Some(inj) = res.injector.as_ref() {
+                            inj.note(qr.req_id, kind);
+                        }
+                        if let Some(reg) = registry {
+                            reg.inc("autosage_faults_injected_total");
+                            reg.inc(&format!(
+                                "autosage_faults_injected_total{{kind=\"{}\"}}",
+                                kind.as_str()
+                            ));
+                        }
+                        if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
+                            r.event(
+                                ctx.trace,
+                                Some(ctx.parent),
+                                "fault",
+                                vec![("kind".to_string(), kind.as_str().to_string())],
+                            );
+                        }
+                    }
+                    // Graceful degradation: queue depth at/over the
+                    // watermark degrades eligible SpMM requests to the
+                    // edge-sampled graph instead of rejecting them.
+                    let degrade = if settings.degrade_watermark > 0.0
+                        && qr.op == Op::Spmm
+                        && !matches!(fault, Some(FaultKind::Error))
+                    {
+                        let depth = sm.queue_depth.load(Ordering::Relaxed) as f64;
+                        if depth >= settings.degrade_watermark * settings.queue_bound as f64 {
+                            let sg = res.degrade.get_or_build(
+                                &qr.sig,
+                                &qr.graph,
+                                &settings.sample_spec,
+                            );
+                            // A graph with nothing to drop gains
+                            // nothing from "degrading".
+                            if sg.report.edges_dropped > 0 {
+                                Some(sg)
+                            } else {
+                                None
+                            }
+                        } else {
+                            None
+                        }
+                    } else {
+                        None
+                    };
+                    let degraded_mass =
+                        degrade.as_ref().map(|sg| sg.report.max_row_dropped_mass);
                     let exec_start_us = recorder.map(|r| r.now_us());
                     let exec_started = Instant::now();
-                    let result = execute_one(sage, &qr, &variant);
+                    let result: Result<Vec<f32>, ServeError> = if matches!(
+                        fault,
+                        Some(FaultKind::Error)
+                    ) {
+                        Err(ServeError::Execute {
+                            msg: format!("injected backend error (req {})", qr.req_id),
+                            injected: true,
+                        })
+                    } else {
+                        if matches!(fault, Some(FaultKind::Latency)) {
+                            let ms =
+                                res.injector.as_ref().map(|i| i.latency_ms()).unwrap_or(0.0);
+                            std::thread::sleep(Duration::from_secs_f64(ms.max(0.0) / 1e3));
+                        }
+                        let exec_graph: &Csr =
+                            degrade.as_ref().map(|sg| &sg.graph).unwrap_or(&qr.graph);
+                        let inject_panic = matches!(fault, Some(FaultKind::Panic));
+                        // Worker supervision: the panic (injected or
+                        // organic) unwinds only to here.
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            if inject_panic {
+                                panic!("injected worker panic (req {})", qr.req_id);
+                            }
+                            execute_one(sage, &qr, exec_graph, &variant)
+                        })) {
+                            Ok(Ok(v)) => Ok(v),
+                            Ok(Err(e)) => Err(ServeError::Execute {
+                                msg: format!("{e:#}"),
+                                injected: false,
+                            }),
+                            Err(panic) => {
+                                let msg = panic_message(panic);
+                                sm.panics.fetch_add(1, Ordering::Relaxed);
+                                quarantine_request(
+                                    res,
+                                    registry,
+                                    recorder,
+                                    QuarantineEntry {
+                                        req_id: qr.req_id,
+                                        shard,
+                                        sig: qr.sig.clone(),
+                                        op: qr.op.as_str().to_string(),
+                                        f: qr.f,
+                                        injected: inject_panic,
+                                        msg: msg.clone(),
+                                    },
+                                );
+                                Err(ServeError::Panic { msg, injected: inject_panic })
+                            }
+                        }
+                    };
                     let exec_ms = ms_since(exec_started);
                     if let (Some(reg), Some((pred, bucket, op))) = (registry, audit.as_ref()) {
-                        if let (Some(p), true) = (pred, result.is_ok()) {
+                        let clean = result.is_ok() && fault.is_none() && degrade.is_none();
+                        if let (Some(p), true) = (pred, clean) {
                             reg.record_audit(AuditSample::executed(
                                 op.clone(),
                                 variant.clone(),
@@ -654,6 +1091,13 @@ fn serve_batch(
                         if let Some((Some(p), _, _)) = audit.as_ref() {
                             attrs.push(("predicted_ms".to_string(), format!("{p:.4}")));
                         }
+                        if let Some(mass) = degraded_mass {
+                            attrs.push(("degraded".to_string(), "true".to_string()));
+                            attrs.push(("error_bound_mass".to_string(), format!("{mass:.6}")));
+                        }
+                        if let Some(kind) = injected_kind {
+                            attrs.push(("injected_fault".to_string(), kind.to_string()));
+                        }
                         r.span_between(
                             ctx.trace,
                             Some(ctx.parent),
@@ -663,30 +1107,30 @@ fn serve_batch(
                             attrs,
                         );
                     }
-                    let ok = result.is_ok();
                     match &result {
-                        Ok(_) => sm.completed.fetch_add(1, Ordering::Relaxed),
-                        Err(_) => sm.errors.fetch_add(1, Ordering::Relaxed),
+                        Ok(_) => {
+                            sm.completed.fetch_add(1, Ordering::Relaxed);
+                            if degrade.is_some() {
+                                sm.degraded.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            sm.errors.fetch_add(1, Ordering::Relaxed);
+                        }
                     };
-                    let total_ms = ms_since(qr.enqueued);
-                    sm.latency.record_ms(total_ms);
-                    if let (Some(r), Some(ctx)) = (recorder, qr.trace) {
-                        r.event(
-                            ctx.trace,
-                            Some(ctx.parent),
-                            "reply",
-                            vec![("ok".to_string(), ok.to_string())],
-                        );
-                    }
-                    let _ = qr.respond.send(ServeResponse {
-                        result,
-                        variant: variant.clone(),
-                        from_cache,
+                    reply_now(
                         shard,
+                        sm,
+                        recorder,
+                        qr,
+                        result,
+                        variant.clone(),
+                        from_cache,
                         batch_size,
                         queue_ms,
-                        total_ms,
-                    });
+                        degraded_mass,
+                        injected_kind,
+                    );
                 }
             }
         }
@@ -735,7 +1179,14 @@ fn decide_for(
     }
 }
 
-fn execute_one(sage: &mut AutoSage, qr: &QueuedRequest, variant: &str) -> Result<Vec<f32>> {
+/// Execute one request's op on `graph` — usually `qr.graph`, but the
+/// edge-sampled substitute when the request degraded under overload.
+fn execute_one(
+    sage: &mut AutoSage,
+    qr: &QueuedRequest,
+    graph: &Csr,
+    variant: &str,
+) -> Result<Vec<f32>> {
     let get = |name: &str| -> Result<&Vec<f32>> {
         qr.operands
             .iter()
@@ -744,11 +1195,11 @@ fn execute_one(sage: &mut AutoSage, qr: &QueuedRequest, variant: &str) -> Result
             .ok_or_else(|| anyhow!("request missing operand {name:?}"))
     };
     match qr.op {
-        Op::Spmm => sage.spmm_with(&qr.graph, get("b")?, qr.f, variant),
-        Op::Sddmm => sage.sddmm_with(&qr.graph, get("x")?, get("y")?, qr.f, variant),
-        Op::Softmax => sage.softmax_with(&qr.graph, get("val")?, variant),
+        Op::Spmm => sage.spmm_with(graph, get("b")?, qr.f, variant),
+        Op::Sddmm => sage.sddmm_with(graph, get("x")?, get("y")?, qr.f, variant),
+        Op::Softmax => sage.softmax_with(graph, get("val")?, variant),
         Op::Attention => sage.attention_with(
-            &qr.graph,
+            graph,
             get("q")?,
             get("k")?,
             get("v")?,

@@ -1,0 +1,463 @@
+//! Resilience layer for the serve pool: typed serve errors,
+//! deterministic fault injection, and the quarantine log that worker
+//! supervision writes poisoning requests into.
+//!
+//! Fault injection is a *pure function of (fault seed, request id)*:
+//! each request id draws from its own `Rng::for_stream` stream, so two
+//! runs at the same seed inject the identical {(request id, kind)} set
+//! regardless of client/shard interleaving — chaos runs replay
+//! bit-identically (`AUTOSAGE_FAULT_{RATE,KINDS,SEED}`).
+//!
+//! Quarantine: when per-request execution panics (injected or
+//! organic), supervision catches it via `catch_unwind`, records the
+//! poisoning request's signature + op here, replies with a typed
+//! [`ServeError::Panic`], and the shard keeps serving — a crashed
+//! worker is no longer discovered only in pool `Drop`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::data::sample::{sample_edges, SampleSpec, SampledGraph};
+use crate::graph::Csr;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Typed serving failure carried in `ServeResponse::result`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Shed at dequeue: queue wait already exceeded the deadline.
+    DeadlineExceeded { waited_ms: f64, deadline_ms: f64 },
+    /// Per-request execution panicked; supervision caught it and the
+    /// request was quarantined. `injected` marks chaos-injected panics.
+    Panic { msg: String, injected: bool },
+    /// Backend/setup failure. `injected` marks chaos-injected errors.
+    Execute { msg: String, injected: bool },
+}
+
+impl ServeError {
+    /// Stable short tag used for metrics labels and error breakdowns.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::DeadlineExceeded { .. } => "deadline",
+            ServeError::Panic { .. } => "panic",
+            ServeError::Execute { .. } => "error",
+        }
+    }
+
+    /// True when this failure was placed by the fault injector (so
+    /// harnesses can separate chaos from organic failures).
+    pub fn injected(&self) -> bool {
+        match self {
+            ServeError::DeadlineExceeded { .. } => false,
+            ServeError::Panic { injected, .. } | ServeError::Execute { injected, .. } => {
+                *injected
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { waited_ms, deadline_ms } => write!(
+                f,
+                "deadline exceeded: queued {waited_ms:.3} ms > deadline {deadline_ms:.3} ms"
+            ),
+            ServeError::Panic { msg, injected } => {
+                let tag = if *injected { " [injected]" } else { "" };
+                write!(f, "worker panic{tag}: {msg}")
+            }
+            ServeError::Execute { msg, injected } => {
+                let tag = if *injected { " [injected]" } else { "" };
+                write!(f, "execute failed{tag}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+// ------------------------------------------------------ fault injection
+
+/// What kind of chaos a faulty request receives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Backend error: the request fails with an injected `Execute`.
+    Error,
+    /// Worker panic inside execution, caught by supervision.
+    Panic,
+    /// Latency spike: the request sleeps `fault_latency_ms`, then runs.
+    Latency,
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::Error => "error",
+            FaultKind::Panic => "panic",
+            FaultKind::Latency => "latency",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultKind, String> {
+        match s.trim() {
+            "error" => Ok(FaultKind::Error),
+            "panic" => Ok(FaultKind::Panic),
+            "latency" => Ok(FaultKind::Latency),
+            other => Err(format!(
+                "unknown fault kind {other:?} (valid: error, panic, latency)"
+            )),
+        }
+    }
+}
+
+/// Parse the `AUTOSAGE_FAULT_KINDS` comma list (empty entries skipped).
+pub fn parse_kinds(csv: &str) -> Result<Vec<FaultKind>, String> {
+    let mut kinds = Vec::new();
+    for tok in csv.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let k = FaultKind::parse(tok)?;
+        if !kinds.contains(&k) {
+            kinds.push(k);
+        }
+    }
+    Ok(kinds)
+}
+
+const FAULT_LOG_CAP: usize = 65536;
+
+/// Deterministic fault injector shared by every shard of a pool.
+///
+/// `decide` is a pure function — no interior state is consulted — so
+/// placement never depends on thread interleaving. Counters and the
+/// replay log are updated separately via `note` by whichever worker
+/// actually applied the fault.
+pub struct FaultInjector {
+    rate: f64,
+    kinds: Vec<FaultKind>,
+    seed: u64,
+    latency_ms: f64,
+    injected: [AtomicU64; 3],
+    log: Mutex<Vec<(u64, FaultKind)>>,
+}
+
+impl FaultInjector {
+    pub fn new(rate: f64, kinds: Vec<FaultKind>, seed: u64, latency_ms: f64) -> FaultInjector {
+        FaultInjector {
+            rate,
+            kinds,
+            seed,
+            latency_ms,
+            injected: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Build from config; `Ok(None)` when injection is off
+    /// (rate 0 or no kinds enabled).
+    pub fn from_config(cfg: &Config) -> Result<Option<FaultInjector>, String> {
+        if cfg.fault_rate <= 0.0 {
+            return Ok(None);
+        }
+        let kinds = parse_kinds(&cfg.fault_kinds)?;
+        if kinds.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(FaultInjector::new(
+            cfg.fault_rate,
+            kinds,
+            cfg.fault_seed as u64,
+            cfg.fault_latency_ms,
+        )))
+    }
+
+    /// Pure placement decision for one request id.
+    pub fn decide(&self, req_id: u64) -> Option<FaultKind> {
+        let mut rng = Rng::for_stream(self.seed, req_id);
+        if rng.next_f64() >= self.rate {
+            return None;
+        }
+        Some(self.kinds[rng.below(self.kinds.len())])
+    }
+
+    /// Record that a fault was actually applied (counter + replay log).
+    pub fn note(&self, req_id: u64, kind: FaultKind) {
+        self.injected[kind as usize].fetch_add(1, Ordering::Relaxed);
+        let mut log = self.log.lock().unwrap();
+        if log.len() < FAULT_LOG_CAP {
+            log.push((req_id, kind));
+        }
+    }
+
+    pub fn latency_ms(&self) -> f64 {
+        self.latency_ms
+    }
+
+    pub fn injected_of(&self, kind: FaultKind) -> u64 {
+        self.injected[kind as usize].load(Ordering::Relaxed)
+    }
+
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sorted copy of the applied-fault log — the determinism witness
+    /// chaos tests compare across same-seed runs.
+    pub fn log_snapshot(&self) -> Vec<(u64, FaultKind)> {
+        let mut log = self.log.lock().unwrap().clone();
+        log.sort_unstable_by_key(|&(id, k)| (id, k as usize));
+        log
+    }
+}
+
+// ----------------------------------------------------------- quarantine
+
+/// One quarantined request: enough to identify and replay the
+/// poisoning input without holding the (potentially huge) graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuarantineEntry {
+    pub req_id: u64,
+    pub shard: usize,
+    pub sig: String,
+    pub op: String,
+    pub f: usize,
+    pub injected: bool,
+    pub msg: String,
+}
+
+impl QuarantineEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("req_id", Json::num(self.req_id as f64)),
+            ("shard", Json::num(self.shard as f64)),
+            ("sig", Json::str(&self.sig)),
+            ("op", Json::str(&self.op)),
+            ("f", Json::num(self.f as f64)),
+            ("injected", Json::from(self.injected)),
+            ("msg", Json::str(&self.msg)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<QuarantineEntry> {
+        Some(QuarantineEntry {
+            req_id: j.get("req_id").as_usize()? as u64,
+            shard: j.get("shard").as_usize()?,
+            sig: j.get("sig").as_str()?.to_string(),
+            op: j.get("op").as_str()?.to_string(),
+            f: j.get("f").as_usize()?,
+            injected: j.get("injected").as_bool()?,
+            msg: j.get("msg").as_str().unwrap_or("").to_string(),
+        })
+    }
+}
+
+const QUARANTINE_CAP: usize = 4096;
+
+/// Bounded in-memory quarantine, flushed to `quarantine.jsonl` by
+/// `serve-bench --out` (and inspectable by tests/handlers live).
+#[derive(Default)]
+pub struct QuarantineLog {
+    entries: Mutex<Vec<QuarantineEntry>>,
+    dropped: AtomicU64,
+}
+
+impl QuarantineLog {
+    pub fn record(&self, entry: QuarantineEntry) {
+        let mut entries = self.entries.lock().unwrap();
+        if entries.len() >= QUARANTINE_CAP {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        entries.push(entry);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> Vec<QuarantineEntry> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    /// Write one JSON object per line; returns the entry count.
+    pub fn write_jsonl(&self, path: &std::path::Path) -> Result<usize> {
+        let entries = self.snapshot();
+        let mut out = String::new();
+        for e in &entries {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(entries.len())
+    }
+}
+
+// ----------------------------------------------------- degraded serving
+
+/// Cache of edge-sampled graphs keyed by graph signature, shared by
+/// all shards so each distinct graph is sampled at most once per pool.
+#[derive(Default)]
+pub struct DegradeCache {
+    map: Mutex<HashMap<String, Arc<SampledGraph>>>,
+}
+
+impl DegradeCache {
+    pub fn get_or_build(&self, sig: &str, g: &Csr, spec: &SampleSpec) -> Arc<SampledGraph> {
+        if let Some(hit) = self.map.lock().unwrap().get(sig) {
+            return Arc::clone(hit);
+        }
+        // Sample outside the lock: only the loser of a race resamples,
+        // and both produce identical graphs (the pass is deterministic).
+        let built = Arc::new(sample_edges(g, spec));
+        let mut map = self.map.lock().unwrap();
+        Arc::clone(map.entry(sig.to_string()).or_insert(built))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Everything the pool + workers share for fault handling: one
+/// injector (optional), one quarantine log, one degrade cache.
+pub struct Resilience {
+    pub injector: Option<FaultInjector>,
+    pub quarantine: QuarantineLog,
+    pub degrade: DegradeCache,
+}
+
+impl Resilience {
+    pub fn from_config(cfg: &Config) -> Result<Resilience, String> {
+        Ok(Resilience {
+            injector: FaultInjector::from_config(cfg)?,
+            quarantine: QuarantineLog::default(),
+            degrade: DegradeCache::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_error_kinds_and_display() {
+        let e = ServeError::DeadlineExceeded { waited_ms: 3.0, deadline_ms: 1.0 };
+        assert_eq!(e.kind(), "deadline");
+        assert!(!e.injected());
+        assert!(e.to_string().contains("deadline"));
+        let p = ServeError::Panic { msg: "boom".into(), injected: true };
+        assert_eq!(p.kind(), "panic");
+        assert!(p.injected());
+        assert!(p.to_string().contains("[injected]"));
+        let x = ServeError::Execute { msg: "bad".into(), injected: false };
+        assert_eq!(x.kind(), "error");
+        assert!(!x.to_string().contains("[injected]"));
+    }
+
+    #[test]
+    fn parse_kinds_dedups_and_rejects_unknown() {
+        let ks = parse_kinds("error, panic,error,,latency").unwrap();
+        assert_eq!(ks, vec![FaultKind::Error, FaultKind::Panic, FaultKind::Latency]);
+        assert!(parse_kinds("error,oom").is_err());
+        assert!(parse_kinds("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn injector_decisions_are_pure_and_seeded() {
+        let inj = FaultInjector::new(0.3, parse_kinds("error,panic,latency").unwrap(), 9, 1.0);
+        let a: Vec<_> = (0..500).map(|id| inj.decide(id)).collect();
+        let b: Vec<_> = (0..500).map(|id| inj.decide(id)).collect();
+        assert_eq!(a, b, "decide must be a pure function of (seed, id)");
+        let hit = a.iter().flatten().count();
+        assert!(hit > 50 && hit < 300, "rate 0.3 over 500 ids, got {hit}");
+        // A different seed moves the fault set.
+        let other = FaultInjector::new(0.3, parse_kinds("error").unwrap(), 10, 1.0);
+        let c: Vec<_> = (0..500).map(|id| other.decide(id).is_some()).collect();
+        let a_hits: Vec<_> = a.iter().map(|d| d.is_some()).collect();
+        assert_ne!(a_hits, c);
+    }
+
+    #[test]
+    fn injector_from_config_gates_on_rate_and_kinds() {
+        let mut cfg = Config::default();
+        assert!(FaultInjector::from_config(&cfg).unwrap().is_none());
+        cfg.fault_rate = 0.5;
+        cfg.fault_kinds = String::new();
+        assert!(FaultInjector::from_config(&cfg).unwrap().is_none());
+        cfg.fault_kinds = "latency".to_string();
+        let inj = FaultInjector::from_config(&cfg).unwrap().unwrap();
+        assert_eq!(inj.latency_ms(), 5.0);
+        cfg.fault_kinds = "segv".to_string();
+        assert!(FaultInjector::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn injector_counts_and_logs_applied_faults() {
+        let inj = FaultInjector::new(1.0, vec![FaultKind::Error], 0, 1.0);
+        inj.note(5, FaultKind::Error);
+        inj.note(2, FaultKind::Error);
+        assert_eq!(inj.injected_total(), 2);
+        assert_eq!(inj.injected_of(FaultKind::Error), 2);
+        assert_eq!(inj.injected_of(FaultKind::Panic), 0);
+        let log = inj.log_snapshot();
+        assert_eq!(log, vec![(2, FaultKind::Error), (5, FaultKind::Error)]);
+    }
+
+    #[test]
+    fn quarantine_roundtrips_jsonl() {
+        let q = QuarantineLog::default();
+        q.record(QuarantineEntry {
+            req_id: 7,
+            shard: 1,
+            sig: "sig-a".into(),
+            op: "spmm".into(),
+            f: 64,
+            injected: true,
+            msg: "injected worker panic".into(),
+        });
+        assert_eq!(q.len(), 1);
+        let dir = std::env::temp_dir().join("autosage_quarantine_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("quarantine.jsonl");
+        assert_eq!(q.write_jsonl(&path).unwrap(), 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = QuarantineEntry::from_json(&Json::parse(text.trim()).unwrap()).unwrap();
+        assert_eq!(back, q.snapshot()[0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn degrade_cache_builds_once_per_signature() {
+        let g = Csr::from_rows(
+            16,
+            vec![(0..16u32).map(|c| (c, 1.0 + c as f32)).collect(), vec![(0, 1.0)]],
+        );
+        let cache = DegradeCache::default();
+        let spec = SampleSpec { keep_frac: 0.5, min_keep_deg: 2 };
+        let a = cache.get_or_build("sig", &g, &spec);
+        let b = cache.get_or_build("sig", &g, &spec);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+        assert!(a.report.edges_dropped > 0);
+    }
+}

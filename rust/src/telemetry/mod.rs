@@ -41,6 +41,7 @@ impl Telemetry {
         let source = match d.source {
             DecisionSource::Cache => "cache",
             DecisionSource::Probe => "probe",
+            DecisionSource::Model => "model",
             DecisionSource::ReplayFallback => "replay_fallback",
         };
         self.events.borrow_mut().push(vec![
@@ -115,6 +116,15 @@ pub struct ServeShardStats {
     pub cache_hits: u64,
     pub errors: u64,
     pub rejected: u64,
+    /// Requests shed at dequeue because their queue wait already
+    /// exceeded the deadline (`AUTOSAGE_DEADLINE_MS`).
+    pub shed: u64,
+    /// Requests served on the edge-sampled graph under overload
+    /// (graceful degradation, `AUTOSAGE_DEGRADE_WATERMARK`).
+    pub degraded: u64,
+    /// Worker panics caught by supervision (injected or organic); the
+    /// shard stays alive and the poisoning request is quarantined.
+    pub panics: u64,
     pub max_queue_depth: u64,
     pub p50_ms: f64,
     pub p95_ms: f64,
@@ -123,7 +133,8 @@ pub struct ServeShardStats {
 
 pub const SERVING_HEADER: &[&str] = &[
     "shard", "requests", "batches", "coalesced", "probes", "cache_hits",
-    "errors", "rejected", "max_queue_depth", "p50_ms", "p95_ms", "p99_ms",
+    "errors", "rejected", "shed", "degraded", "panics", "max_queue_depth",
+    "p50_ms", "p95_ms", "p99_ms",
 ];
 
 /// Per-shard serving metrics → CSV with a trailing aggregate row.
@@ -147,6 +158,9 @@ pub fn serving_table(shards: &[ServeShardStats], pool: Option<&ServeShardStats>)
             s.cache_hits.to_string(),
             s.errors.to_string(),
             s.rejected.to_string(),
+            s.shed.to_string(),
+            s.degraded.to_string(),
+            s.panics.to_string(),
             s.max_queue_depth.to_string(),
             format!("{:.3}", s.p50_ms),
             format!("{:.3}", s.p95_ms),
@@ -164,6 +178,9 @@ pub fn serving_table(shards: &[ServeShardStats], pool: Option<&ServeShardStats>)
         total.cache_hits += s.cache_hits;
         total.errors += s.errors;
         total.rejected += s.rejected;
+        total.shed += s.shed;
+        total.degraded += s.degraded;
+        total.panics += s.panics;
         total.max_queue_depth = total.max_queue_depth.max(s.max_queue_depth);
         total.p50_ms = total.p50_ms.max(s.p50_ms);
         total.p95_ms = total.p95_ms.max(s.p95_ms);
@@ -293,7 +310,7 @@ mod tests {
         assert_eq!(total[0], "total");
         assert_eq!(total[1], "15"); // requests sum
         assert_eq!(total[4], "3"); // probes sum
-        assert_eq!(total[11], "9.000"); // p99 max (fallback upper bound)
+        assert_eq!(total[14], "9.000"); // p99 max (fallback upper bound)
     }
 
     #[test]
@@ -327,7 +344,7 @@ mod tests {
         let row = &t.rows()[2];
         assert_eq!(row[0], "pool");
         assert_eq!(row[1], "1000");
-        assert_eq!(row[11], "3.000", "merged p99, not per-shard max 300");
+        assert_eq!(row[14], "3.000", "merged p99, not per-shard max 300");
     }
 
     #[test]

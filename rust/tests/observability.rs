@@ -155,6 +155,8 @@ fn one_trace_id_spans_loadgen_to_reply_for_a_coalesced_batch() {
         ops: vec![Op::Spmm],
         seed: 42,
         verify: true,
+        max_retries: 0,
+        retry_backoff_us: 200,
     };
     let report = run_load_traced(Arc::clone(&pool), &spec, Some(Arc::clone(&rec))).unwrap();
     assert_eq!(report.errors, 0, "{}", report.text);
@@ -510,6 +512,8 @@ fn rate_zero_sampling_audits_and_counts_but_records_no_request_spans() {
         ops: vec![Op::Spmm, Op::Sddmm],
         seed: 7,
         verify: false,
+        max_retries: 0,
+        retry_backoff_us: 200,
     };
     let report = run_load_traced(Arc::clone(&pool), &spec, Some(Arc::clone(&rec))).unwrap();
     assert_eq!(report.errors, 0, "{}", report.text);

@@ -1,0 +1,291 @@
+//! Integration: the resilience layer end-to-end — seeded chaos against
+//! the sharded pool (injected errors/panics/latency), deadline
+//! shedding, graceful degradation via edge sampling, dead-shard
+//! fast-fail, and quarantine. Native backend, no artifacts needed.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use autosage::config::Config;
+use autosage::gen::preset;
+use autosage::graph::Csr;
+use autosage::obs::metrics::MetricsRegistry;
+use autosage::ops::reference;
+use autosage::scheduler::Op;
+use autosage::server::{run_load, FaultKind, LoadSpec, ServeError, ServerPool, SubmitError};
+
+fn cfg(workers: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
+    cfg.cache_path = String::new();
+    // Keep debug-mode probes on 512-row subgraphs and short loops.
+    cfg.probe_full_max_rows = 512;
+    cfg.probe_iters = 2;
+    cfg.probe_cap_ms = 200.0;
+    cfg.serve_workers = workers;
+    cfg
+}
+
+fn chaos_cfg(workers: usize, rate: f64, kinds: &str, seed: usize) -> Config {
+    let mut c = cfg(workers);
+    c.fault_rate = rate;
+    c.fault_kinds = kinds.to_string();
+    c.fault_seed = seed;
+    c.fault_latency_ms = 2.0;
+    c
+}
+
+/// 4 shards under mixed error+panic+latency chaos: every non-failed
+/// reply matches the oracle, no shard dies, the applied fault set is
+/// exactly what the pure `decide` function predicts, and a second
+/// same-seed run replays the identical set.
+#[test]
+fn chaos_mixed_workload_stays_correct_and_replays_identically() {
+    let spec = LoadSpec {
+        clients: 8,
+        requests_per_client: 4,
+        f: 64,
+        presets: vec!["er_s".into()],
+        ops: vec![Op::Spmm, Op::Sddmm, Op::Attention],
+        seed: 42,
+        verify: true,
+        max_retries: 0,
+        retry_backoff_us: 200,
+    };
+    let total = (spec.clients * spec.requests_per_client) as u64;
+    let registry = Arc::new(MetricsRegistry::new());
+    let pool = Arc::new(
+        ServerPool::spawn_observed(
+            PathBuf::from("artifacts"),
+            chaos_cfg(4, 0.3, "error,panic,latency", 7),
+            None,
+            Some(Arc::clone(&registry)),
+        )
+        .unwrap(),
+    );
+    let report = run_load(Arc::clone(&pool), &spec).unwrap();
+    assert_eq!(report.mismatches, 0, "{}", report.text);
+    assert!(pool.all_shards_alive(), "chaos must not kill a shard");
+
+    // The applied fault multiset is exactly the pure prediction over
+    // the id range — placement does not depend on interleaving.
+    let inj = pool.resilience().injector.as_ref().expect("chaos is on");
+    let predicted: Vec<(u64, FaultKind)> =
+        (0..total).filter_map(|id| inj.decide(id).map(|k| (id, k))).collect();
+    assert!(!predicted.is_empty(), "rate 0.3 over {total} ids placed no faults");
+    assert_eq!(inj.log_snapshot(), predicted);
+    assert_eq!(report.faults_injected, predicted.len() as u64, "{}", report.text);
+
+    // Failures split cleanly: injected panics → panic, injected errors
+    // → execute, latency alone fails nothing; nothing organic failed.
+    let panics = inj.injected_of(FaultKind::Panic) as usize;
+    let errors = inj.injected_of(FaultKind::Error) as usize;
+    assert_eq!(report.errors_by_kind.panic, panics, "{}", report.text);
+    assert_eq!(report.errors_by_kind.execute, errors, "{}", report.text);
+    assert_eq!(report.errors, panics + errors, "{}", report.text);
+    assert_eq!(report.injected_errors, report.errors, "{}", report.text);
+    assert_eq!(report.quarantined, panics, "every injected panic quarantines");
+    assert_eq!(
+        registry
+            .counter("autosage_faults_injected_total")
+            .load(std::sync::atomic::Ordering::Relaxed),
+        predicted.len() as u64
+    );
+
+    // The pool still serves cleanly after the chaos run (fresh request
+    // ids keep drawing from the same seeded stream, so pick a clean id
+    // implicitly: just require an eventually-ok reply is NOT guaranteed
+    // per id — assert the call path works and errors stay typed).
+    let (g, _) = preset("er_s", 42);
+    let b = vec![0.5f32; g.n_rows * 64];
+    let resp = pool.call(Op::Spmm, g, 64, vec![("b".into(), b)]).unwrap();
+    if let Err(e) = &resp.result {
+        assert!(e.injected(), "post-chaos failures must be injected ones: {e}");
+    }
+
+    // Same seed, fresh pool: the applied fault set replays identically.
+    let pool2 = Arc::new(
+        ServerPool::spawn(
+            PathBuf::from("artifacts"),
+            chaos_cfg(4, 0.3, "error,panic,latency", 7),
+        )
+        .unwrap(),
+    );
+    let report2 = run_load(Arc::clone(&pool2), &spec).unwrap();
+    assert_eq!(report2.mismatches, 0, "{}", report2.text);
+    let inj2 = pool2.resilience().injector.as_ref().unwrap();
+    assert_eq!(
+        inj2.log_snapshot(),
+        predicted,
+        "same-seed chaos must inject the identical (id, kind) set"
+    );
+}
+
+/// A slow head-of-line request (injected latency) burns queued
+/// requests past their deadline: they are shed with a typed
+/// `DeadlineExceeded`, not executed.
+#[test]
+fn deadline_sheds_requests_that_outwait_their_budget() {
+    let mut c = chaos_cfg(1, 1.0, "latency", 3);
+    c.fault_latency_ms = 50.0;
+    c.deadline_ms = 10.0;
+    c.serve_batch_max = 1;
+    c.serve_queue_depth = 32;
+    let pool = Arc::new(ServerPool::spawn(PathBuf::from("artifacts"), c).unwrap());
+    let (g, _) = preset("er_s", 5);
+    let f = 64;
+    let b = vec![0.25f32; g.n_rows * f];
+    let rxs: Vec<_> = (0..6)
+        .map(|_| {
+            pool.submit(Op::Spmm, g.clone(), f, vec![("b".into(), b.clone())])
+                .unwrap()
+        })
+        .collect();
+    let mut shed = 0u64;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        match resp.result {
+            Err(ServeError::DeadlineExceeded { waited_ms, deadline_ms }) => {
+                assert_eq!(deadline_ms, 10.0);
+                assert!(waited_ms > deadline_ms, "shed implies the wait exceeded it");
+                shed += 1;
+            }
+            Ok(out) => {
+                // Every 50ms latency fault applies, so at most the
+                // head-of-line requests can finish inside 10ms of queue
+                // wait; correctness still holds for them.
+                assert!(!out.is_empty());
+            }
+            Err(e) => panic!("only deadline sheds expected here, got {e}"),
+        }
+    }
+    assert!(shed > 0, "a 50ms head-of-line stall must shed 10ms-deadline requests");
+    assert_eq!(pool.metrics().total_shed(), shed);
+    assert!(pool.all_shards_alive());
+}
+
+/// Queue-depth overload degrades SpMM to the edge-sampled graph; every
+/// degraded reply stays within its advertised error bound.
+#[test]
+fn overload_degrades_spmm_within_the_advertised_bound() {
+    // A 40×40 graph with one heavy hub row (degree 32, mixed-sign
+    // weights) and light tail rows the sampler must leave untouched.
+    let n = 40usize;
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
+    rows.push(
+        (0..32u32)
+            .map(|c| (c, ((c as i32 % 13) - 6) as f32 * 0.21))
+            .collect(),
+    );
+    for r in 1..n {
+        rows.push(vec![
+            (r as u32 % n as u32, 0.4),
+            ((r as u32 + 3) % n as u32, -0.7),
+        ]);
+    }
+    rows.iter_mut().for_each(|r| r.sort_by_key(|&(c, _)| c));
+    let g = Csr::from_rows(n, rows);
+
+    let mut c = cfg(1);
+    c.serve_batch_max = 1;
+    c.serve_queue_depth = 64;
+    c.degrade_watermark = 0.01; // depth ≥ 1 already counts as overload
+    c.degrade_keep_frac = 0.5;
+    c.degrade_min_deg = 4;
+    let pool = Arc::new(ServerPool::spawn(PathBuf::from("artifacts"), c).unwrap());
+
+    let f = 32;
+    let b: Vec<f32> = (0..n * f).map(|i| ((i % 11) as f32 - 5.0) * 0.13).collect();
+    let max_b = b.iter().fold(0.0f32, |m, x| m.max(x.abs())) as f64;
+    let oracle = reference::spmm(&g, &b, f);
+
+    let rxs: Vec<_> = (0..10)
+        .map(|_| {
+            pool.submit(Op::Spmm, g.clone(), f, vec![("b".into(), b.clone())])
+                .unwrap()
+        })
+        .collect();
+    let mut degraded = 0u64;
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        let out = resp.result.expect("degradation must not fail requests");
+        let diff = reference::max_abs_diff(&out, &oracle) as f64;
+        match resp.degraded {
+            Some(mass) => {
+                degraded += 1;
+                assert!(mass > 0.0, "degraded reply must carry a nonzero bound");
+                assert!(
+                    diff <= mass * max_b + 2e-3,
+                    "degraded error {diff} exceeds bound {} (mass {mass})",
+                    mass * max_b
+                );
+            }
+            None => assert!(diff < 2e-3, "full-graph reply must match the oracle"),
+        }
+    }
+    assert!(degraded > 0, "a 10-deep burst over watermark 0.01 must degrade");
+    assert_eq!(pool.metrics().total_degraded(), degraded);
+    assert_eq!(pool.resilience().degrade.len(), 1, "one graph → one sample");
+}
+
+/// A stopped shard is visible at submit time: `Closed` immediately,
+/// no hanging on a dead queue.
+#[test]
+fn dead_shard_fails_submissions_fast_with_closed() {
+    let pool = Arc::new(ServerPool::spawn(PathBuf::from("artifacts"), cfg(1)).unwrap());
+    assert!(pool.all_shards_alive());
+    pool.debug_stop_shard(0);
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while pool.shard_alive(0) {
+        assert!(Instant::now() < deadline, "worker must exit on the stop sentinel");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(!pool.all_shards_alive());
+    let (g, _) = preset("er_s", 21);
+    let b = vec![0.1f32; g.n_rows * 64];
+    assert_eq!(
+        pool.try_submit(Op::Spmm, g.clone(), 64, vec![("b".into(), b.clone())])
+            .err(),
+        Some(SubmitError::Closed)
+    );
+    assert_eq!(
+        pool.submit(Op::Spmm, g, 64, vec![("b".into(), b)]).err(),
+        Some(SubmitError::Closed)
+    );
+}
+
+/// Injected panics are caught by supervision: each poisoning request is
+/// quarantined with a typed reply and the shard keeps serving.
+#[test]
+fn injected_panics_quarantine_and_shard_survives() {
+    let pool = Arc::new(
+        ServerPool::spawn(PathBuf::from("artifacts"), chaos_cfg(1, 1.0, "panic", 11))
+            .unwrap(),
+    );
+    let (g, _) = preset("er_s", 23);
+    let f = 64;
+    let b = vec![0.3f32; g.n_rows * f];
+    for _ in 0..3 {
+        let resp = pool
+            .call(Op::Spmm, g.clone(), f, vec![("b".into(), b.clone())])
+            .unwrap();
+        match resp.result {
+            Err(ServeError::Panic { injected, ref msg }) => {
+                assert!(injected);
+                assert!(msg.contains("injected"), "{msg}");
+            }
+            other => panic!("rate-1.0 panic injection must panic every request: {other:?}"),
+        }
+        assert_eq!(resp.injected_fault, Some("panic"));
+        assert!(pool.shard_alive(0), "supervision must keep the shard alive");
+    }
+    assert_eq!(pool.metrics().total_panics(), 3);
+    assert_eq!(pool.resilience().quarantine.len(), 3);
+    for e in pool.resilience().quarantine.snapshot() {
+        assert!(e.injected);
+        assert_eq!(e.op, "spmm");
+        assert_eq!(e.f, f);
+        assert!(!e.sig.is_empty());
+    }
+}

@@ -42,6 +42,8 @@ fn concurrent_mixed_workload_matches_oracle_with_one_probe_per_key() {
         ops: vec![Op::Spmm, Op::Sddmm, Op::Attention],
         seed: 42,
         verify: true,
+        max_retries: 0,
+        retry_backoff_us: 200,
     };
     let report = run_load(Arc::clone(&pool), &spec).unwrap();
     assert_eq!(report.total, 16);
