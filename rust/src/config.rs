@@ -33,6 +33,13 @@
 //! | `AUTOSAGE_DEGRADE_WATERMARK` | queue-depth fraction of `AUTOSAGE_SERVE_QUEUE` at/above which eligible SpMM requests degrade to the edge-sampled graph instead of running full (0 = degradation off) | 0 |
 //! | `AUTOSAGE_DEGRADE_KEEP` | edge-sampling keep fraction per hub row in (0,1] for degraded execution | 0.5 |
 //! | `AUTOSAGE_DEGRADE_MIN_DEG` | rows at/below this degree keep all edges when sampling (hub threshold) | 8 |
+//! | `AUTOSAGE_IO_FAULT_RATE` | seeded I/O fault-injection rate in [0,1] applied at every durable read/write site: each (site, op-index) pair draws from `Rng::for_stream(io_fault_seed ^ fnv(site), idx)`, so same-seed runs inject the identical fault set (0 = off) | 0 |
+//! | `AUTOSAGE_IO_FAULT_KINDS` | comma list of injected I/O fault kinds: `torn_write` \| `short_read` \| `failed_rename` \| `enospc` \| `bit_flip` (empty = all) | "" |
+//! | `AUTOSAGE_IO_FAULT_SEED`  | I/O fault-injection RNG seed (independent of workload and chaos seeds) | 0 |
+//! | `AUTOSAGE_MODEL_RELOAD_MS` | live model hot-reload poll interval (ms): the serve pool watches `AUTOSAGE_MODEL` for changes, canaries candidates in shadow mode, and promotes/rolls back without a restart (0 = hot-reload off) | 0 |
+//! | `AUTOSAGE_MODEL_CANARY_N` | shadow-graded decisions a candidate model must accumulate before the promote/rollback verdict | 8 |
+//! | `AUTOSAGE_MODEL_CANARY_AGREE` | minimum agreement fraction (candidate vs incumbent outcome) over the canary window to promote; below it the candidate rolls back | 0.6 |
+//! | `AUTOSAGE_LOG_ROTATE_BYTES` | size cap for `audit.jsonl` / `quarantine.jsonl`: at/above it the file rotates to `<name>.1` before the next write (0 = never rotate) | 16777216 |
 
 use crate::util::envcfg::{env_bool, env_f64, env_string, env_usize};
 
@@ -131,6 +138,38 @@ pub struct Config {
     /// sampling (only hub rows lose mass). Env:
     /// `AUTOSAGE_DEGRADE_MIN_DEG`.
     pub degrade_min_deg: usize,
+    /// Seeded I/O fault-injection rate in [0, 1] applied at every
+    /// durable read/write site (schedule cache, model/snapshot files,
+    /// JSONL streams, manifests). Pure function of (io_fault_seed,
+    /// site, op index) — same-seed runs inject identically. 0 disables
+    /// injection. Env: `AUTOSAGE_IO_FAULT_RATE`.
+    pub io_fault_rate: f64,
+    /// Comma list restricting injected I/O fault kinds (torn_write,
+    /// short_read, failed_rename, enospc, bit_flip); empty = all.
+    /// Env: `AUTOSAGE_IO_FAULT_KINDS`.
+    pub io_fault_kinds: String,
+    /// I/O fault-injection RNG seed, independent of the workload seed
+    /// and the request-chaos seed. Env: `AUTOSAGE_IO_FAULT_SEED`.
+    pub io_fault_seed: usize,
+    /// Model hot-reload poll interval in ms: the serve pool watches
+    /// `model_path` for a new generation, shadow-grades it, and
+    /// promotes or rolls back live. 0 disables hot-reload. Env:
+    /// `AUTOSAGE_MODEL_RELOAD_MS`.
+    pub model_reload_ms: usize,
+    /// Canary window: shadow-graded decisions a candidate model must
+    /// accumulate before the promote/rollback verdict. Env:
+    /// `AUTOSAGE_MODEL_CANARY_N`.
+    pub model_canary_n: usize,
+    /// Minimum candidate-vs-incumbent agreement fraction over the
+    /// canary window to promote (0.0 promotes unconditionally once the
+    /// window fills — deterministic promotion for tests). Env:
+    /// `AUTOSAGE_MODEL_CANARY_AGREE`.
+    pub model_canary_agree: f64,
+    /// Size cap in bytes for the append-style JSONL artifacts
+    /// (`audit.jsonl`, `quarantine.jsonl`): at/above it the file is
+    /// rotated to `<name>.1` before the next write. 0 = never rotate.
+    /// Env: `AUTOSAGE_LOG_ROTATE_BYTES`.
+    pub log_rotate_bytes: usize,
 }
 
 impl Default for Config {
@@ -168,6 +207,13 @@ impl Default for Config {
             degrade_watermark: 0.0,
             degrade_keep_frac: 0.5,
             degrade_min_deg: 8,
+            io_fault_rate: 0.0,
+            io_fault_kinds: String::new(),
+            io_fault_seed: 0,
+            model_reload_ms: 0,
+            model_canary_n: 8,
+            model_canary_agree: 0.6,
+            log_rotate_bytes: 16 * 1024 * 1024,
         }
     }
 }
@@ -215,6 +261,16 @@ impl Config {
             degrade_watermark: env_f64("AUTOSAGE_DEGRADE_WATERMARK", d.degrade_watermark)?,
             degrade_keep_frac: env_f64("AUTOSAGE_DEGRADE_KEEP", d.degrade_keep_frac)?,
             degrade_min_deg: env_usize("AUTOSAGE_DEGRADE_MIN_DEG", d.degrade_min_deg)?,
+            io_fault_rate: env_f64("AUTOSAGE_IO_FAULT_RATE", d.io_fault_rate)?,
+            io_fault_kinds: env_string("AUTOSAGE_IO_FAULT_KINDS", &d.io_fault_kinds),
+            io_fault_seed: env_usize("AUTOSAGE_IO_FAULT_SEED", d.io_fault_seed)?,
+            model_reload_ms: env_usize("AUTOSAGE_MODEL_RELOAD_MS", d.model_reload_ms)?,
+            model_canary_n: env_usize("AUTOSAGE_MODEL_CANARY_N", d.model_canary_n)?,
+            model_canary_agree: env_f64(
+                "AUTOSAGE_MODEL_CANARY_AGREE",
+                d.model_canary_agree,
+            )?,
+            log_rotate_bytes: env_usize("AUTOSAGE_LOG_ROTATE_BYTES", d.log_rotate_bytes)?,
         })
     }
 
@@ -301,6 +357,22 @@ impl Config {
         }
         if self.degrade_min_deg == 0 {
             return Err("AUTOSAGE_DEGRADE_MIN_DEG must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.io_fault_rate) {
+            return Err(format!(
+                "AUTOSAGE_IO_FAULT_RATE must be in [0, 1]; got {}",
+                self.io_fault_rate
+            ));
+        }
+        crate::util::iofault::parse_io_kinds(&self.io_fault_kinds)?;
+        if self.model_canary_n == 0 {
+            return Err("AUTOSAGE_MODEL_CANARY_N must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.model_canary_agree) {
+            return Err(format!(
+                "AUTOSAGE_MODEL_CANARY_AGREE must be in [0, 1]; got {}",
+                self.model_canary_agree
+            ));
         }
         Ok(())
     }
@@ -439,6 +511,36 @@ mod tests {
         c.fault_kinds = "panic".to_string();
         c.deadline_ms = 10.0;
         c.degrade_watermark = 0.75;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn durability_defaults_are_off_and_validated() {
+        let c = Config::default();
+        assert_eq!(c.io_fault_rate, 0.0);
+        assert_eq!(c.io_fault_kinds, "");
+        assert_eq!(c.model_reload_ms, 0);
+        assert_eq!(c.model_canary_n, 8);
+        assert_eq!(c.model_canary_agree, 0.6);
+        assert_eq!(c.log_rotate_bytes, 16 * 1024 * 1024);
+        assert!(c.validate().is_ok());
+        let mut c = Config::default();
+        c.io_fault_rate = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.io_fault_kinds = "torn_write,oom".to_string();
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.model_canary_n = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.model_canary_agree = 1.01;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.io_fault_rate = 0.05;
+        c.io_fault_kinds = "bit_flip, enospc".to_string();
+        c.model_reload_ms = 50;
+        c.model_canary_agree = 0.0;
         assert!(c.validate().is_ok());
     }
 

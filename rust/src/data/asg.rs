@@ -30,6 +30,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::graph::signature::Fnv1a;
 use crate::graph::Csr;
+use crate::util::iofault::{self, CorruptArtifact};
 
 pub const ASG_MAGIC: &[u8; 8] = b"ASGSNAP1";
 pub const ASG_VERSION: u32 = 1;
@@ -95,15 +96,58 @@ pub fn write_asg(path: &Path, g: &Csr, perm: Option<&[u32]>) -> Result<()> {
     if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
         fs::create_dir_all(dir).ok();
     }
+    iofault::write_atomic("data.asg.write", path, &buf)
+        .with_context(|| format!("writing snapshot {}", path.display()))
+}
+
+/// Path of the previous-generation sibling (`graph.asg` -> `graph.asg.prev`).
+pub fn prev_path(path: &Path) -> std::path::PathBuf {
     let file_name = path
         .file_name()
         .map(|n| n.to_string_lossy().into_owned())
         .unwrap_or_else(|| "snapshot.asg".to_string());
-    let tmp = path.with_file_name(format!("{file_name}.tmp"));
-    fs::write(&tmp, &buf)
-        .with_context(|| format!("writing snapshot temp file {}", tmp.display()))?;
-    fs::rename(&tmp, path)
-        .with_context(|| format!("renaming snapshot over {}", path.display()))
+    path.with_file_name(format!("{file_name}.prev"))
+}
+
+/// [`write_asg`] with two-generation retention: the existing snapshot
+/// is first rotated to `<path>.prev`, then the new one is written
+/// atomically, so a reader can fall back one generation on corruption.
+pub fn write_asg_generational(
+    path: &Path,
+    g: &Csr,
+    perm: Option<&[u32]>,
+) -> Result<()> {
+    if path.exists() {
+        iofault::rename("data.asg.rotate", path, &prev_path(path))
+            .with_context(|| format!("rotating previous snapshot {}", path.display()))?;
+    }
+    write_asg(path, g, perm)
+}
+
+/// Load a snapshot, falling back to `<path>.prev` when the current
+/// generation is corrupt. Returns the snapshot plus a flag that is
+/// `true` when the previous generation stood in. When both generations
+/// are unreadable the error downcasts to [`CorruptArtifact`].
+pub fn read_asg_generational(path: &Path) -> Result<(AsgSnapshot, bool)> {
+    match read_asg(path) {
+        Ok(s) => Ok((s, false)),
+        Err(primary) => {
+            let prev = prev_path(path);
+            if prev.exists() {
+                if let Ok(s) = read_asg(&prev) {
+                    iofault::recovery().generation_fallbacks.fetch_add(
+                        1,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    return Ok((s, true));
+                }
+            }
+            Err(anyhow::Error::new(CorruptArtifact {
+                path: path.to_path_buf(),
+                detail: format!("{primary:#}"),
+            }))
+        }
+    }
 }
 
 fn rd_u32(buf: &[u8], off: &mut usize) -> u32 {
@@ -120,7 +164,7 @@ fn rd_u64(buf: &[u8], off: &mut usize) -> u64 {
 
 /// Load and fully verify a snapshot from `path`.
 pub fn read_asg(path: &Path) -> Result<AsgSnapshot> {
-    let buf = fs::read(path)
+    let buf = iofault::read_file("data.asg.read", path)
         .with_context(|| format!("reading snapshot {}", path.display()))?;
     let name = path.display();
     if buf.len() < 8 + 4 + 4 + 24 + 8 + 8 {
@@ -311,6 +355,42 @@ mod tests {
         let err = read_asg(&path).unwrap_err();
         assert!(format!("{err:#}").contains("permutation"), "{err:#}");
         let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn generational_snapshot_falls_back_then_refuses() {
+        let path = tmpfile("gen.asg");
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(prev_path(&path));
+        let g1 = sample();
+        let g2 = Csr::from_rows(2, vec![vec![(0, 1.0)], vec![(1, 2.0)]]);
+
+        write_asg_generational(&path, &g1, None).unwrap();
+        assert!(!prev_path(&path).exists());
+        write_asg_generational(&path, &g2, None).unwrap();
+        assert_eq!(read_asg(&prev_path(&path)).unwrap().csr, g1);
+        let (snap, fell_back) = read_asg_generational(&path).unwrap();
+        assert_eq!(snap.csr, g2);
+        assert!(!fell_back);
+
+        // Corrupt current generation -> previous stands in.
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        let (snap, fell_back) = read_asg_generational(&path).unwrap();
+        assert_eq!(snap.csr, g1);
+        assert!(fell_back);
+
+        // Both corrupt -> typed refusal, downcastable.
+        fs::write(prev_path(&path), b"junk").unwrap();
+        let err = read_asg_generational(&path).unwrap_err();
+        assert!(
+            err.downcast_ref::<CorruptArtifact>().is_some(),
+            "expected CorruptArtifact, got {err:#}"
+        );
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(prev_path(&path));
     }
 
     #[test]

@@ -30,7 +30,7 @@ use anyhow::{anyhow, Result};
 
 use crate::graph::Csr;
 
-pub use asg::{read_asg, write_asg, AsgSnapshot};
+pub use asg::{read_asg, read_asg_generational, write_asg, write_asg_generational, AsgSnapshot};
 pub use normalize::{normalize, NormOptions, NormReport};
 pub use reorder::{parse_passes, reorder, ReorderPass, ReorderReport, Reordered};
 pub use sample::{sample_edges, SampleReport, SampleSpec, SampledGraph};

@@ -9,6 +9,7 @@
 //!                  [--reorder hub-pack,segment-sort] [--out results]
 //! autosage data    convert <in> <out.asg> | inspect <path>
 //!                  | reorder <in> [out.asg] --pass hub-pack,segment-sort
+//!                  | sample <in> [out.asg] --keep-frac 0.5 --min-keep-deg 8
 //! autosage table   <2..12> [--iters 7] [--cap-ms 1500] [--out results]
 //! autosage figure  <1..7>  [--iters 7] [--cap-ms 1500] [--out results]
 //! autosage all     [--out results]
@@ -20,6 +21,7 @@
 //! autosage perf     compare <baseline.json> <candidate.json>
 //! autosage metrics  validate|show <metrics.prom>
 //! autosage obs      report <dir>
+//! autosage doctor   <dir> [--fix] [--cache FILE]
 //! ```
 //!
 //! Everywhere a graph is named, the spec grammar is `PRESET` or
@@ -74,7 +76,7 @@ impl Args {
         // Flags that may appear bare, with no value (`--smoke`,
         // `--json`); every other flag still hard-errors when its value
         // is missing.
-        const BOOL_FLAGS: &[&str] = &["smoke", "json"];
+        const BOOL_FLAGS: &[&str] = &["smoke", "json", "fix"];
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 let val = if BOOL_FLAGS.contains(&key) {
@@ -140,6 +142,7 @@ fn real_main() -> Result<()> {
         "perf" => cmd_perf(&args),
         "metrics" => cmd_metrics(&args),
         "obs" => cmd_obs(&args),
+        "doctor" => cmd_doctor(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -162,6 +165,8 @@ fn print_usage() {
          \x20 data    convert <in> <out.asg>\n\
          \x20         inspect <path>\n\
          \x20         reorder <in> [out.asg] --pass hub-pack,segment-sort\n\
+         \x20         sample  <in> [out.asg] [--keep-frac F] [--min-keep-deg D]\n\
+         \x20                 [--json]  (degree-aware edge sampling + error bound)\n\
          \x20 table   <2..12> [--iters N] [--cap-ms MS] [--out DIR]\n\
          \x20 figure  <1..7>  [--iters N] [--cap-ms MS] [--out DIR]\n\
          \x20 all     [--out DIR]\n\
@@ -169,11 +174,11 @@ fn print_usage() {
          \x20 serve-bench [--smoke] [--workers K] [--clients N] [--requests M]\n\
          \x20             [--presets a,b] [--ops spmm,sddmm,attention] [--f F]\n\
          \x20             [--seed N] [--cache FILE] [--model FILE.asgm] [--out DIR]\n\
-         \x20             [--deadline-ms MS] [--retries R]\n\
+         \x20             [--deadline-ms MS] [--retries R] [--approx-frac P]\n\
          \x20             (--out also writes trace.jsonl, metrics.prom, audit.jsonl,\n\
-         \x20              perf.json, manifest.json, quarantine.jsonl; see\n\
-         \x20              AUTOSAGE_TRACE_* / AUTOSAGE_FAULT_* / AUTOSAGE_DEGRADE_*\n\
-         \x20              in config)\n\
+         \x20              perf.json, manifest.json, quarantine.jsonl, recovery.json;\n\
+         \x20              see AUTOSAGE_TRACE_* / AUTOSAGE_FAULT_* / AUTOSAGE_IO_FAULT_*\n\
+         \x20              / AUTOSAGE_DEGRADE_* / AUTOSAGE_MODEL_RELOAD_MS in config)\n\
          \x20 train   --from DIR [--cache FILE] --out MODEL.asgm [--seed N]\n\
          \x20         [--max-depth D]  (mine audit.jsonl + schedule-cache probe\n\
          \x20          outcomes into a decision-tree cost model; deterministic\n\
@@ -183,6 +188,10 @@ fn print_usage() {
          \x20 perf    compare <baseline.json> <candidate.json>\n\
          \x20 metrics validate|show <metrics.prom>\n\
          \x20 obs     report <DIR> [--json]  (stage latencies + estimate-accuracy audit)\n\
+         \x20 doctor  <DIR> [--fix] [--json] [--cache FILE]  (audit/repair run\n\
+         \x20         artifacts: salvage torn JSONL tails, quarantine corrupt cache\n\
+         \x20         entries, check generational .asg/.asgm fallback, verify the\n\
+         \x20         manifest; --fix rewrites what salvage recovered)\n\
          graph specs G: a preset <{presets}>\n\
          \x20             or file:PATH (.asg | .mtx | edge list .txt/.csv);\n\
          \x20             --preset NAME remains an alias for presets\n\
@@ -433,7 +442,7 @@ fn cmd_data(args: &Args) -> Result<()> {
     let action = args
         .positional
         .first()
-        .context("data action: convert|inspect|reorder")?;
+        .context("data action: convert|inspect|reorder|sample")?;
     match action.as_str() {
         "convert" => {
             let inp = args
@@ -548,7 +557,86 @@ fn cmd_data(args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown data action {other:?} (convert|inspect|reorder)"),
+        "sample" => {
+            // Standalone run of the degraded-serving sampler: emit the
+            // edge-sampled graph as a `.asg` artifact plus the
+            // `SampleReport` whose `max_row_dropped_mass` bounds the
+            // per-element SpMM error (times max|B|).
+            let inp = args.positional.get(1).context(
+                "usage: data sample <in> [out.asg] [--keep-frac F] \
+                 [--min-keep-deg D] [--json]",
+            )?;
+            let keep_frac = args.get_parse("keep-frac", 0.5f64)?;
+            let min_keep_deg = args.get_parse("min-keep-deg", 8usize)?;
+            if !(keep_frac > 0.0 && keep_frac <= 1.0) {
+                bail!("--keep-frac must be in (0, 1], got {keep_frac}");
+            }
+            let spec = data::SampleSpec { keep_frac, min_keep_deg };
+            let (loaded, _perm) =
+                data::CsrGraph::load_with_perm(Path::new(inp.as_str()))?;
+            let g = loaded.csr;
+            let s = data::sample_edges(&g, &spec);
+            let out = match args.positional.get(2) {
+                None => None,
+                Some(out) => {
+                    if data::GraphFormat::from_path(Path::new(out.as_str()))
+                        != data::GraphFormat::AsgSnapshot
+                    {
+                        bail!(
+                            "sample output {out:?} must end in .asg (pass an \
+                             explicit out.asg to avoid overwriting the source \
+                             format)"
+                        );
+                    }
+                    data::write_asg(Path::new(out.as_str()), &s.graph, None)?;
+                    Some(out.as_str())
+                }
+            };
+            if args.get("json").map(|v| v != "false").unwrap_or(false) {
+                use autosage::util::json::Json;
+                let r = &s.report;
+                let j = Json::obj(vec![
+                    ("input", Json::str(inp.as_str())),
+                    (
+                        "output",
+                        out.map(Json::str).unwrap_or(Json::Null),
+                    ),
+                    ("keep_frac", Json::num(keep_frac)),
+                    ("min_keep_deg", Json::from(min_keep_deg)),
+                    ("rows_sampled", Json::from(r.rows_sampled)),
+                    ("edges_kept", Json::from(r.edges_kept)),
+                    ("edges_dropped", Json::from(r.edges_dropped)),
+                    ("max_row_dropped_mass", Json::num(r.max_row_dropped_mass)),
+                    ("dropped_mass_frac", Json::num(r.dropped_mass_frac)),
+                    ("signature_in", Json::str(graph_signature(&g))),
+                    ("signature_out", Json::str(graph_signature(&s.graph))),
+                ]);
+                println!("{}", j.pretty());
+            } else {
+                println!(
+                    "sample {inp} (keep-frac {keep_frac}, min-keep-deg {min_keep_deg})"
+                );
+                println!("  {}", s.report);
+                println!(
+                    "  signatures: {} -> {}",
+                    graph_signature(&g),
+                    graph_signature(&s.graph)
+                );
+                println!(
+                    "  error bound: |Y_full - Y_sampled| <= {:.6} * max|B| per element",
+                    s.report.max_row_dropped_mass
+                );
+                if let Some(out) = out {
+                    println!(
+                        "written {out}: {} rows, {} nnz",
+                        s.graph.n_rows,
+                        s.graph.nnz()
+                    );
+                }
+            }
+            Ok(())
+        }
+        other => bail!("unknown data action {other:?} (convert|inspect|reorder|sample)"),
     }
 }
 
@@ -675,6 +763,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // `--retries N` turns on bounded retry with jittered backoff for
     // QueueFull rejections and deadline sheds.
     spec.max_retries = args.get_parse("retries", spec.max_retries)?;
+    // `--approx-frac P` marks that fraction of SpMM requests as opt-in
+    // approximate: they take the edge-sampled degraded path regardless
+    // of queue depth and their replies carry the error bound.
+    spec.approx_frac = args.get_parse("approx-frac", spec.approx_frac)?;
+    if !(0.0..=1.0).contains(&spec.approx_frac) {
+        bail!("--approx-frac must be in [0, 1], got {}", spec.approx_frac);
+    }
     if let Some(p) = args.get("presets") {
         spec.presets = p.split(',').map(str::to_string).collect();
     }
@@ -740,7 +835,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             );
             std::fs::write(dir.join("metrics.prom"), &snap)
                 .context("writing metrics.prom")?;
-            reg.write_audit_jsonl(&dir.join("audit.jsonl"))?;
+            reg.write_audit_jsonl_capped(
+                &dir.join("audit.jsonl"),
+                cfg.log_rotate_bytes as u64,
+            )?;
         }
         report.perf_profile().save(&dir.join("perf.json"))?;
 
@@ -774,6 +872,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         m.add_metric("faults_injected", report.faults_injected as f64);
         m.add_metric("quarantined", report.quarantined as f64);
         m.add_metric("retries", report.retries as f64);
+        m.add_metric("approx_requested", report.approx_requested as f64);
+        m.add_metric("model_reloads", pool.model_reloads() as f64);
+        m.add_metric("model_rollbacks", pool.model_rollbacks() as f64);
         for rel in [
             "serve_bench.csv",
             "serve_bench.csv.meta.json",
@@ -791,9 +892,10 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         // Chaos evidence: the quarantine log lands next to the trace so
         // a failed run names the exact poisoning requests.
         if !pool.resilience().quarantine.is_empty() {
-            pool.resilience()
-                .quarantine
-                .write_jsonl(&dir.join("quarantine.jsonl"))?;
+            pool.resilience().quarantine.write_jsonl_capped(
+                &dir.join("quarantine.jsonl"),
+                cfg.log_rotate_bytes as u64,
+            )?;
             m.add_artifact(dir, "quarantine.jsonl")?;
         }
         let mpath = m.write(dir)?;
@@ -803,6 +905,25 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             dir.display(),
             mpath.display()
         );
+    }
+    // Shutdown flushes (cache persist, watcher teardown) are fault
+    // sites too: drop the pool before writing `recovery.json` so it
+    // captures the complete injected-fault log and recovery counters
+    // for the whole process lifetime. The file deliberately stays out
+    // of the manifest — it is the cross-run determinism witness (CI
+    // `cmp`s it between two same-seed runs) and must not absorb run
+    // ids or timestamps.
+    let (model_reloads, model_rollbacks) =
+        (pool.model_reloads(), pool.model_rollbacks());
+    drop(pool);
+    if let Some(dir) = args.get("out") {
+        let path = Path::new(dir).join("recovery.json");
+        std::fs::write(
+            &path,
+            recovery_report_json(model_reloads, model_rollbacks),
+        )
+        .with_context(|| format!("writing {}", path.display()))?;
+        println!("[recovery {}]", path.display());
     }
     // Failures the run *chose* (injected faults, deadline sheds) are
     // expected under chaos/overload; anything beyond them is a real
@@ -825,6 +946,50 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `recovery.json` body: the sorted applied-fault log (site, per-site
+/// op index, kind), the process-wide recovery counters, and the
+/// hot-reload totals. Pure function of what the run did — two same-seed
+/// runs with identical per-site op counts produce identical bytes,
+/// which is exactly what the CI crash-smoke job `cmp`s.
+fn recovery_report_json(model_reloads: u64, model_rollbacks: u64) -> String {
+    use autosage::util::iofault;
+    use autosage::util::json::Json;
+    let injector = iofault::installed();
+    let faults: Vec<Json> = injector
+        .as_ref()
+        .map(|i| i.log_snapshot())
+        .unwrap_or_default()
+        .into_iter()
+        .map(|(site, op, kind)| {
+            Json::obj(vec![
+                ("site", Json::str(site)),
+                ("op", Json::from(op as usize)),
+                ("kind", Json::str(kind.as_str())),
+            ])
+        })
+        .collect();
+    let counters: Vec<(&str, Json)> = iofault::recovery()
+        .snapshot()
+        .into_iter()
+        .map(|(k, v)| (k, Json::from(v as usize)))
+        .collect();
+    let mut text = Json::obj(vec![
+        (
+            "injected_total",
+            Json::from(
+                injector.map(|i| i.injected_total()).unwrap_or(0) as usize,
+            ),
+        ),
+        ("io_faults", Json::Arr(faults)),
+        ("recovery", Json::obj(counters)),
+        ("model_reloads", Json::from(model_reloads as usize)),
+        ("model_rollbacks", Json::from(model_rollbacks as usize)),
+    ])
+    .pretty();
+    text.push('\n');
+    text
 }
 
 /// `autosage train`: mine probe + audit telemetry into a trained cost
@@ -1072,4 +1237,273 @@ fn cmd_cache(args: &Args) -> Result<()> {
         }
         other => bail!("unknown cache action {other:?}"),
     }
+}
+
+/// `autosage doctor`: audit — and with `--fix`, repair — the durable
+/// state of a run directory. It reuses the exact salvage paths the
+/// serving layer runs at load time (valid-prefix JSONL recovery,
+/// per-entry cache quarantine, generational `.asg`/`.asgm` fallback,
+/// manifest self-hash validation), so what doctor reports recovered is
+/// what a restarted pool would actually see.
+fn cmd_doctor(args: &Args) -> Result<()> {
+    use autosage::server::QuarantineLog;
+    use autosage::util::iofault;
+    use autosage::util::json::Json;
+
+    let dir = args
+        .positional
+        .first()
+        .context("usage: doctor <DIR> [--fix] [--json] [--cache FILE]")?;
+    let dir = Path::new(dir.as_str());
+    if !dir.is_dir() {
+        bail!("doctor: {} is not a directory", dir.display());
+    }
+    let fix = args.get("fix").map(|v| v != "false").unwrap_or(false);
+    let as_json = args.get("json").map(|v| v != "false").unwrap_or(false);
+
+    let mut rows: Vec<(String, String, String)> = Vec::new();
+    let mut issues = 0usize;
+    let mut repaired = 0usize;
+
+    // Manifest first: its artifact hashes describe the directory as the
+    // run wrote it, before any --fix rewrite changes them.
+    let manifest = dir.join("manifest.json");
+    if manifest.exists() {
+        match obs::manifest::validate(&manifest) {
+            Ok(rep) => rows.push((
+                "manifest.json".into(),
+                "ok".into(),
+                format!("run {} ({} artifacts verified)", rep.run_id, rep.n_artifacts),
+            )),
+            Err(e) => {
+                issues += 1;
+                rows.push(("manifest.json".into(), "invalid".into(), format!("{e:#}")));
+            }
+        }
+    }
+
+    // JSONL streams: valid-prefix salvage. `kept` counts schema-valid
+    // entries for quarantine.jsonl (stricter) and JSON-valid lines for
+    // the rest; either way the keepable lines are a prefix of the file,
+    // so a --fix rewrite of `lines[..kept]` is always sound.
+    for name in ["trace.jsonl", "audit.jsonl", "quarantine.jsonl"] {
+        let path = dir.join(name);
+        if !path.exists() {
+            continue;
+        }
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                issues += 1;
+                rows.push((name.into(), "unreadable".into(), e.to_string()));
+                continue;
+            }
+        };
+        let (kept, dropped) = if name == "quarantine.jsonl" {
+            let (entries, dropped) = QuarantineLog::salvage_jsonl(&text);
+            (entries.len(), dropped)
+        } else {
+            let (lines, dropped) = iofault::salvage_jsonl(&text);
+            (lines.len(), dropped)
+        };
+        if dropped == 0 {
+            rows.push((name.into(), "ok".into(), format!("{kept} lines")));
+        } else if fix {
+            let (lines, _) = iofault::salvage_jsonl(&text);
+            let mut out = lines[..kept.min(lines.len())].join("\n");
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            std::fs::write(&path, out)
+                .with_context(|| format!("rewriting {}", path.display()))?;
+            issues += 1;
+            repaired += 1;
+            rows.push((
+                name.into(),
+                "repaired".into(),
+                format!("kept {kept} lines, dropped {dropped} torn tail lines"),
+            ));
+        } else {
+            issues += 1;
+            rows.push((
+                name.into(),
+                "torn".into(),
+                format!(
+                    "{kept} valid lines, {dropped} dropped \
+                     (--fix rewrites the valid prefix)"
+                ),
+            ));
+        }
+    }
+
+    // Schedule cache: per-entry quarantine or whole-file reset, exactly
+    // as a restarting pool would load it. The audit path never mutates;
+    // --fix persists the salvaged view (or resets a hopeless file,
+    // keeping the original as `<path>.corrupt`).
+    let cache_path = args.get("cache").map(PathBuf::from).or_else(|| {
+        let p = dir.join("autosage_cache.json");
+        p.exists().then_some(p)
+    });
+    if let Some(cp) = cache_path {
+        if !cp.exists() {
+            bail!("doctor: no schedule cache at {}", cp.display());
+        }
+        let label = cp
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| cp.display().to_string());
+        match ScheduleCache::load(&cp) {
+            Ok(cache) if cache.quarantined == 0 => {
+                rows.push((label, "ok".into(), format!("{} entries", cache.len())));
+            }
+            Ok(mut cache) => {
+                issues += 1;
+                if fix {
+                    cache.save()?;
+                    repaired += 1;
+                    rows.push((
+                        label,
+                        "repaired".into(),
+                        format!(
+                            "{} corrupt entries quarantined, {} kept",
+                            cache.quarantined,
+                            cache.len()
+                        ),
+                    ));
+                } else {
+                    rows.push((
+                        label,
+                        "degraded".into(),
+                        format!(
+                            "{} corrupt entries quarantined on load, {} kept \
+                             (--fix persists the salvaged view)",
+                            cache.quarantined,
+                            cache.len()
+                        ),
+                    ));
+                }
+            }
+            Err(e) => {
+                issues += 1;
+                if fix {
+                    let (mut cache, _salvage) = ScheduleCache::load_salvaged(&cp);
+                    cache.save()?;
+                    repaired += 1;
+                    rows.push((
+                        label,
+                        "reset".into(),
+                        "file-level corruption: original kept as .corrupt, \
+                         cache restarted empty"
+                            .into(),
+                    ));
+                } else {
+                    rows.push((
+                        label,
+                        "corrupt".into(),
+                        format!("{e:#} (--fix moves it aside and restarts empty)"),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Generational binary artifacts: current generation good, `.prev`
+    // fallback needed, or terminal corruption (both generations bad).
+    let mut names: Vec<String> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.ends_with(".asg") || n.ends_with(".asgm"))
+        .collect();
+    names.sort();
+    for name in names {
+        let path = dir.join(&name);
+        let outcome = if name.ends_with(".asgm") {
+            autosage::model::read_model_generational(&path).map(|(_, fb)| fb)
+        } else {
+            data::read_asg_generational(&path).map(|(_, fb)| fb)
+        };
+        match outcome {
+            Ok(false) => {
+                rows.push((name, "ok".into(), "current generation".into()));
+            }
+            Ok(true) => {
+                issues += 1;
+                if fix {
+                    // Promote the readable previous generation back to
+                    // current so the next load pays no fallback.
+                    let mut prev = path.as_os_str().to_os_string();
+                    prev.push(".prev");
+                    std::fs::copy(PathBuf::from(prev), &path)
+                        .with_context(|| format!("restoring {}", path.display()))?;
+                    repaired += 1;
+                    rows.push((
+                        name,
+                        "repaired".into(),
+                        "corrupt current generation replaced by .prev".into(),
+                    ));
+                } else {
+                    rows.push((
+                        name,
+                        "stale".into(),
+                        "current generation corrupt, previous generation \
+                         readable (--fix restores it)"
+                            .into(),
+                    ));
+                }
+            }
+            Err(e) => {
+                issues += 1;
+                let detail = match e.downcast_ref::<iofault::CorruptArtifact>() {
+                    Some(c) => {
+                        format!("corrupt, no usable previous generation: {}", c.detail)
+                    }
+                    None => format!("{e:#}"),
+                };
+                rows.push((name, "corrupt".into(), detail));
+            }
+        }
+    }
+
+    if as_json {
+        let artifacts: Vec<Json> = rows
+            .iter()
+            .map(|(name, status, detail)| {
+                Json::obj(vec![
+                    ("artifact", Json::str(name.as_str())),
+                    ("status", Json::str(status.as_str())),
+                    ("detail", Json::str(detail.as_str())),
+                ])
+            })
+            .collect();
+        let counters: Vec<(&str, Json)> = iofault::recovery()
+            .snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, Json::from(v as usize)))
+            .collect();
+        let j = Json::obj(vec![
+            ("dir", Json::str(dir.display().to_string())),
+            ("checked", Json::from(rows.len())),
+            ("issues", Json::from(issues)),
+            ("repaired", Json::from(repaired)),
+            ("artifacts", Json::Arr(artifacts)),
+            ("recovery", Json::obj(counters)),
+        ]);
+        println!("{}", j.pretty());
+    } else {
+        println!(
+            "doctor {}: {} artifacts checked, {} issues, {} repaired",
+            dir.display(),
+            rows.len(),
+            issues,
+            repaired
+        );
+        for (name, status, detail) in &rows {
+            println!("  {name:<24} {status:<9} {detail}");
+        }
+        if issues > repaired && !fix {
+            println!("  (re-run with --fix to repair what salvage recovered)");
+        }
+    }
+    Ok(())
 }

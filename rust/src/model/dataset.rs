@@ -61,12 +61,20 @@ pub fn examples_from_cache(cache: &ScheduleCache) -> Vec<Example> {
 /// Mine an `audit.jsonl` body into examples: per (op, feature-vector)
 /// group, the `"chosen"` row wins, a `"fallback"` row labels the group
 /// `"baseline"`, and groups with neither yield nothing.
+///
+/// Torn/short tails are salvaged: the valid JSONL prefix trains, the
+/// dropped tail is counted in `iofault::recovery()`. Lines that parse
+/// as JSON but are not audit samples stay hard errors (schema drift is
+/// a bug, not disk damage).
 pub fn examples_from_audit(audit_jsonl: &str) -> Result<Vec<Example>> {
+    let (lines, dropped) = crate::util::iofault::salvage_jsonl(audit_jsonl);
+    if dropped > 0 {
+        crate::util::iofault::recovery()
+            .jsonl_lines_dropped
+            .fetch_add(dropped as u64, std::sync::atomic::Ordering::Relaxed);
+    }
     let mut by_key: BTreeMap<String, Example> = BTreeMap::new();
-    for (i, line) in audit_jsonl.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
+    for (i, line) in lines.into_iter().enumerate() {
         let j = Json::parse(line).with_context(|| format!("audit.jsonl line {}", i + 1))?;
         let s = AuditSample::from_json(&j)
             .with_context(|| format!("audit.jsonl line {}: not an audit sample", i + 1))?;
@@ -156,6 +164,16 @@ mod tests {
         assert_eq!(ex.len(), 2);
         assert_eq!(ex[0].label, "ell_r8_f32");
         assert_eq!(ex[1].label, "baseline");
+    }
+
+    #[test]
+    fn audit_with_torn_tail_salvages_the_valid_prefix() {
+        let feats = [100.0, 400.0];
+        let good = sample_line("spmm", "ell_r8_f32", "chosen", Some(&feats));
+        let torn = format!("{good}\n{}", &good[..good.len() / 2]);
+        let ex = examples_from_audit(&torn).unwrap();
+        assert_eq!(ex.len(), 1, "prefix row survives, torn tail drops");
+        assert_eq!(ex[0].label, "ell_r8_f32");
     }
 
     #[test]

@@ -24,14 +24,19 @@ use std::path::Path;
 
 use crate::graph::signature::Fnv1a;
 use crate::model::CostModel;
+use crate::util::iofault::{self, CorruptArtifact};
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 
 pub const MODEL_MAGIC: &[u8; 8] = b"ASGMODL1";
 pub const MODEL_VERSION: u32 = 1;
 
-/// Serialize `model` to `path`, crash-safely (temp file + rename).
-pub fn write_model(path: &Path, model: &CostModel) -> Result<()> {
+/// Extension appended to a model path to hold the previous generation
+/// (`model.asgm.prev`). [`write_model_generational`] maintains it and
+/// [`read_model_generational`] falls back to it on corruption.
+pub const PREV_SUFFIX: &str = "prev";
+
+fn encode_model(model: &CostModel) -> Vec<u8> {
     let payload = model.to_json().to_string();
     let mut buf: Vec<u8> = Vec::with_capacity(8 + 4 + 8 + 8 + payload.len() + 8);
     buf.extend_from_slice(MODEL_MAGIC);
@@ -42,25 +47,72 @@ pub fn write_model(path: &Path, model: &CostModel) -> Result<()> {
     let mut h = Fnv1a::new();
     h.write(&buf);
     buf.extend_from_slice(&h.finish().to_le_bytes());
+    buf
+}
 
+/// Serialize `model` to `path`, crash-safely (temp file + rename).
+pub fn write_model(path: &Path, model: &CostModel) -> Result<()> {
+    let buf = encode_model(model);
     if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
         fs::create_dir_all(dir).ok();
     }
+    iofault::write_atomic("model.write", path, &buf)
+        .with_context(|| format!("writing model {}", path.display()))
+}
+
+/// Path of the previous-generation sibling for a model at `path`
+/// (`model.asgm` -> `model.asgm.prev`).
+pub fn prev_path(path: &Path) -> std::path::PathBuf {
     let file_name = path
         .file_name()
         .map(|n| n.to_string_lossy().into_owned())
         .unwrap_or_else(|| "model.asgm".to_string());
-    let tmp = path.with_file_name(format!("{file_name}.tmp"));
-    fs::write(&tmp, &buf)
-        .with_context(|| format!("writing model temp file {}", tmp.display()))?;
-    fs::rename(&tmp, path)
-        .with_context(|| format!("renaming model over {}", path.display()))
+    path.with_file_name(format!("{file_name}.{PREV_SUFFIX}"))
+}
+
+/// Serialize `model` to `path` keeping a two-generation history: the
+/// existing file (generation N-1) is first renamed to `<path>.prev`,
+/// then the new generation is written atomically. A reader that finds
+/// the current file corrupt can fall back to the previous generation
+/// via [`read_model_generational`].
+pub fn write_model_generational(path: &Path, model: &CostModel) -> Result<()> {
+    if path.exists() {
+        iofault::rename("model.rotate", path, &prev_path(path))
+            .with_context(|| format!("rotating previous model {}", path.display()))?;
+    }
+    write_model(path, model)
+}
+
+/// Load a model, falling back to the previous generation (`<path>.prev`)
+/// when the current file is corrupt. Returns the model plus a flag that
+/// is `true` when the fallback path was used. When both generations are
+/// unreadable the error downcasts to [`CorruptArtifact`].
+pub fn read_model_generational(path: &Path) -> Result<(CostModel, bool)> {
+    match read_model(path) {
+        Ok(m) => Ok((m, false)),
+        Err(primary) => {
+            let prev = prev_path(path);
+            if prev.exists() {
+                if let Ok(m) = read_model(&prev) {
+                    iofault::recovery().generation_fallbacks.fetch_add(
+                        1,
+                        std::sync::atomic::Ordering::Relaxed,
+                    );
+                    return Ok((m, true));
+                }
+            }
+            Err(anyhow::Error::new(CorruptArtifact {
+                path: path.to_path_buf(),
+                detail: format!("{primary:#}"),
+            }))
+        }
+    }
 }
 
 /// Load and fully verify a cost model from `path`.
 pub fn read_model(path: &Path) -> Result<CostModel> {
-    let buf =
-        fs::read(path).with_context(|| format!("reading model {}", path.display()))?;
+    let buf = iofault::read_file("model.read", path)
+        .with_context(|| format!("reading model {}", path.display()))?;
     let name = path.display();
     let header = 8 + 4 + 8 + 8;
     if buf.len() < header + 8 {
@@ -166,5 +218,42 @@ mod tests {
         let err = format!("{:#}", read_model(&path).unwrap_err());
         assert!(err.contains("version"), "{err}");
         let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn generational_write_keeps_previous_and_falls_back_on_corruption() {
+        let path = tmpfile("gen.asgm");
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(prev_path(&path));
+
+        write_model_generational(&path, &tiny_model(1)).unwrap();
+        assert!(!prev_path(&path).exists(), "no .prev after first write");
+        write_model_generational(&path, &tiny_model(2)).unwrap();
+        assert!(prev_path(&path).exists(), ".prev holds generation N-1");
+        assert_eq!(read_model(&prev_path(&path)).unwrap(), tiny_model(1));
+
+        // Healthy current file: no fallback.
+        let (m, fell_back) = read_model_generational(&path).unwrap();
+        assert_eq!(m, tiny_model(2));
+        assert!(!fell_back);
+
+        // Corrupt the current generation: reader falls back to N-1.
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        let (m, fell_back) = read_model_generational(&path).unwrap();
+        assert_eq!(m, tiny_model(1));
+        assert!(fell_back);
+
+        // Both generations corrupt: typed refusal.
+        fs::write(prev_path(&path), b"garbage").unwrap();
+        let err = read_model_generational(&path).unwrap_err();
+        assert!(
+            err.downcast_ref::<CorruptArtifact>().is_some(),
+            "expected CorruptArtifact, got {err:#}"
+        );
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(prev_path(&path));
     }
 }

@@ -32,7 +32,7 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 
 pub use dataset::{class_summary, examples_from_audit, examples_from_cache, merge_and_cap, Example};
-pub use format::{read_model, write_model, MODEL_MAGIC, MODEL_VERSION};
+pub use format::{read_model, read_model_generational, write_model, write_model_generational, MODEL_MAGIC, MODEL_VERSION};
 pub use tree::{DecisionTree, Prediction, DEFAULT_MAX_DEPTH};
 
 /// Cap on training examples; beyond it a seeded subsample keeps

@@ -163,7 +163,7 @@ impl RunManifest {
         let path = dir.join("manifest.json");
         let mut text = Json::Obj(obj).pretty();
         text.push('\n');
-        std::fs::write(&path, &text)
+        crate::util::iofault::write_atomic("obs.manifest.write", &path, text.as_bytes())
             .with_context(|| format!("writing manifest {}", path.display()))?;
         Ok(path)
     }

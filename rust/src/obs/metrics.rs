@@ -310,13 +310,23 @@ impl MetricsRegistry {
 
     /// Write the buffered audit samples as JSONL (one object per line).
     pub fn write_audit_jsonl(&self, path: &Path) -> Result<usize> {
+        self.write_audit_jsonl_capped(path, 0)
+    }
+
+    /// [`write_audit_jsonl`] with size-capped rotation: when the file
+    /// on disk already holds `cap_bytes` or more, it is rotated to
+    /// `<path>.1` first (`cap_bytes == 0` disables rotation). The write
+    /// goes through the fault-injectable wrapper.
+    pub fn write_audit_jsonl_capped(&self, path: &Path, cap_bytes: u64) -> Result<usize> {
         let samples = self.audit_snapshot();
         let mut out = String::new();
         for s in &samples {
             out.push_str(&s.to_json().to_string());
             out.push('\n');
         }
-        std::fs::write(path, &out)
+        crate::util::iofault::rotate_if_large(path, cap_bytes)
+            .with_context(|| format!("rotating audit JSONL {}", path.display()))?;
+        crate::util::iofault::write_file("obs.audit.write", path, out.as_bytes())
             .with_context(|| format!("writing audit JSONL {}", path.display()))?;
         Ok(samples.len())
     }
@@ -451,6 +461,12 @@ pub const REQUIRED_SERVING_SERIES: &[&str] = &[
     "autosage_pool_shed_total",
     "autosage_pool_degraded_total",
     "autosage_worker_panics_total",
+    "autosage_io_faults_injected_total",
+    "autosage_io_write_retries_total",
+    "autosage_salvage_total",
+    "autosage_log_rotations_total",
+    "autosage_model_reloads_total",
+    "autosage_model_rollbacks_total",
 ];
 
 /// Validate a serving `metrics.prom` snapshot: well-formed exposition
@@ -571,6 +587,16 @@ mod tests {
         reg.set_counter("autosage_pool_shed_total", 0);
         reg.set_counter("autosage_pool_degraded_total", 0);
         reg.set_counter("autosage_worker_panics_total", 0);
+        assert!(
+            validate_serving_snapshot(&reg.render_prometheus()).is_err(),
+            "must fail without durability counters"
+        );
+        reg.set_counter("autosage_io_faults_injected_total", 0);
+        reg.set_counter("autosage_io_write_retries_total", 0);
+        reg.set_counter("autosage_salvage_total", 0);
+        reg.set_counter("autosage_log_rotations_total", 0);
+        reg.set_counter("autosage_model_reloads_total", 0);
+        reg.set_counter("autosage_model_rollbacks_total", 0);
         let snap = validate_serving_snapshot(&reg.render_prometheus()).unwrap();
         assert_eq!(snap["autosage_traces_sampled_out_total"], 3.0);
         assert_eq!(snap["autosage_model_predictions_total"], 0.0);

@@ -56,18 +56,23 @@ pub struct StageStat {
 
 /// Parse a `trace.jsonl` body into per-stage stats plus the distinct
 /// trace-id count (excluding the synthetic trace 0 used by warns).
+/// Torn tails are salvaged (valid prefix reports, dropped lines count
+/// in `iofault::recovery()`).
 pub fn stage_breakdown(trace_jsonl: &str) -> Result<(Vec<StageStat>, usize)> {
     struct Acc {
         count: u64,
         sum_us: f64,
         max_us: f64,
     }
+    let (lines, dropped) = crate::util::iofault::salvage_jsonl(trace_jsonl);
+    if dropped > 0 {
+        crate::util::iofault::recovery()
+            .jsonl_lines_dropped
+            .fetch_add(dropped as u64, std::sync::atomic::Ordering::Relaxed);
+    }
     let mut by_name: BTreeMap<String, Acc> = BTreeMap::new();
     let mut traces: BTreeSet<String> = BTreeSet::new();
-    for (i, line) in trace_jsonl.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
+    for (i, line) in lines.into_iter().enumerate() {
         let j = Json::parse(line).with_context(|| format!("trace.jsonl line {}", i + 1))?;
         let name = j
             .get("name")
@@ -126,7 +131,10 @@ pub struct CalibrationRow {
 
 /// Parse an `audit.jsonl` body into per-(op, variant) calibration rows.
 /// Samples with non-positive measured time are skipped (a relative
-/// error against ~0 is noise, not signal).
+/// error against ~0 is noise, not signal). Torn tails are salvaged
+/// (valid prefix aggregates, dropped lines count in
+/// `iofault::recovery()`); JSON-valid lines that are not audit samples
+/// stay hard errors.
 pub fn calibration_table(audit_jsonl: &str) -> Result<Vec<CalibrationRow>> {
     struct Acc {
         buckets: BTreeSet<String>,
@@ -135,11 +143,14 @@ pub fn calibration_table(audit_jsonl: &str) -> Result<Vec<CalibrationRow>> {
         max_abs: f64,
         sum_signed: f64,
     }
+    let (lines, dropped) = crate::util::iofault::salvage_jsonl(audit_jsonl);
+    if dropped > 0 {
+        crate::util::iofault::recovery()
+            .jsonl_lines_dropped
+            .fetch_add(dropped as u64, std::sync::atomic::Ordering::Relaxed);
+    }
     let mut by_key: BTreeMap<(String, String), Acc> = BTreeMap::new();
-    for (i, line) in audit_jsonl.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
+    for (i, line) in lines.into_iter().enumerate() {
         let j = Json::parse(line).with_context(|| format!("audit.jsonl line {}", i + 1))?;
         let s = AuditSample::from_json(&j)
             .with_context(|| format!("audit.jsonl line {}: not an audit sample", i + 1))?;
@@ -238,7 +249,7 @@ pub fn gather_report(dir: &Path) -> Result<ReportData> {
         if !p.exists() {
             return Ok(None);
         }
-        std::fs::read_to_string(&p)
+        crate::util::iofault::read_to_string("obs.report.read", &p)
             .map(Some)
             .with_context(|| format!("reading {}", p.display()))
     };
@@ -449,8 +460,20 @@ mod tests {
     }
 
     #[test]
-    fn malformed_artifact_lines_are_errors() {
-        assert!(stage_breakdown("not json").is_err());
+    fn torn_tails_salvage_but_schema_drift_is_an_error() {
+        // Unparseable lines are a torn tail: salvage to the valid prefix.
+        let (stats, n) = stage_breakdown("not json").unwrap();
+        assert!(stats.is_empty() && n == 0);
+        let torn = format!("{}\nnot json", span_line("0000000000000001", "execute", 10));
+        let (stats, n) = stage_breakdown(&torn).unwrap();
+        assert_eq!((stats.len(), n), (1, 1), "prefix survives the torn tail");
+        let rows = calibration_table(
+            "{\"op\":\"spmm\",\"variant\":\"ell\",\"bucket\":\"b\",\
+             \"predicted_ms\":1.0,\"measured_ms\":2.0}\n{\"op\":",
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 1);
+        // JSON-valid but not an audit sample: a bug, not disk damage.
         assert!(calibration_table(r#"{"op":"spmm"}"#).is_err());
     }
 }

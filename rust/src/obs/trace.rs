@@ -36,7 +36,6 @@
 //! * `warn` — demoted non-fatal errors (e.g. cache persist I/O)
 
 use std::collections::VecDeque;
-use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -364,14 +363,7 @@ impl Recorder {
             out.push_str(&self.jsonl_line(s));
             out.push('\n');
         }
-        let mut f = std::fs::OpenOptions::new()
-            .create(true)
-            .append(!first)
-            .write(true)
-            .truncate(first)
-            .open(path)
-            .with_context(|| format!("opening trace JSONL {}", path.display()))?;
-        f.write_all(out.as_bytes())
+        crate::util::iofault::append_file("obs.trace.flush", path, out.as_bytes(), first)
             .with_context(|| format!("writing trace JSONL {}", path.display()))?;
         buf.flushed = buf.evicted + buf.spans.len() as u64;
         Ok(path.to_path_buf())

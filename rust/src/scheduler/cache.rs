@@ -36,9 +36,23 @@ pub struct ScheduleCache {
     /// Telemetry counters (§8.6 warm-up vs steady-state accounting).
     pub hits: usize,
     pub misses: usize,
+    /// Individually-corrupt entries dropped by the last load (salvage
+    /// recovery: one bad entry no longer poisons the whole file).
+    pub quarantined: usize,
     /// Unsaved in-memory changes (entries *or* counters). Lets callers
     /// buffer writes and flush periodically instead of on every insert.
     dirty: bool,
+}
+
+/// What [`ScheduleCache::load_salvaged`] had to do to produce a usable
+/// cache.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct CacheSalvage {
+    /// Individually-corrupt entries dropped (file kept).
+    pub entries_quarantined: usize,
+    /// The whole file was unreadable/unparseable and was moved aside to
+    /// `<path>.corrupt`; the cache restarted empty.
+    pub file_reset: bool,
 }
 
 /// Compose the paper's cache key.
@@ -63,7 +77,7 @@ impl ScheduleCache {
             ..Default::default()
         };
         if path.exists() {
-            let text = fs::read_to_string(path)
+            let text = crate::util::iofault::read_to_string("scheduler.cache.read", path)
                 .with_context(|| format!("reading cache {}", path.display()))?;
             let root = Json::parse(&text).map_err(|e| anyhow!("cache: {e}"))?;
             let version = root.get("version").as_i64().ok_or_else(|| {
@@ -83,20 +97,26 @@ impl ScheduleCache {
             if let Some(obj) = root.get("entries").as_obj() {
                 for (k, v) in obj {
                     let variant = v.get("variant").as_str().unwrap_or("");
-                    if variant.is_empty() {
-                        // Silently defaulting to "baseline" would turn a
-                        // corrupt entry into a wrong-but-plausible replay.
-                        return Err(anyhow!(
-                            "cache {}: entry {k:?} has a missing or empty variant",
-                            path.display()
-                        ));
+                    let t_baseline_ms = v.get("t_baseline_ms").as_f64().unwrap_or(0.0);
+                    let t_star_ms = v.get("t_star_ms").as_f64().unwrap_or(0.0);
+                    // Salvage recovery: an individually-corrupt entry is
+                    // quarantined (dropped + counted), it no longer
+                    // poisons the whole file. Silently defaulting the
+                    // variant to "baseline" would still be wrong — a
+                    // corrupt entry must never replay as plausible.
+                    if variant.is_empty()
+                        || !t_baseline_ms.is_finite()
+                        || !t_star_ms.is_finite()
+                    {
+                        cache.quarantined += 1;
+                        continue;
                     }
                     cache.entries.insert(
                         k.clone(),
                         CachedChoice {
                             variant: variant.to_string(),
-                            t_baseline_ms: v.get("t_baseline_ms").as_f64().unwrap_or(0.0),
-                            t_star_ms: v.get("t_star_ms").as_f64().unwrap_or(0.0),
+                            t_baseline_ms,
+                            t_star_ms,
                             alpha: v.get("alpha").as_f64().unwrap_or(0.95),
                             features: v
                                 .get("features")
@@ -106,8 +126,49 @@ impl ScheduleCache {
                     );
                 }
             }
+            if cache.quarantined > 0 {
+                crate::util::iofault::recovery()
+                    .cache_entries_quarantined
+                    .fetch_add(cache.quarantined as u64, std::sync::atomic::Ordering::Relaxed);
+                // The quarantined keys are gone from memory; persisting
+                // the salvaged view drops them from disk too.
+                cache.dirty = true;
+            }
         }
         Ok(cache)
+    }
+
+    /// Salvage load that never fails on corruption: per-entry damage is
+    /// quarantined by [`ScheduleCache::load`]; file-level damage
+    /// (unparseable JSON, missing/unsupported version, unreadable
+    /// bytes) moves the file aside to `<path>.corrupt` (preserving the
+    /// evidence) and restarts with an empty cache. This is the load
+    /// path for long-lived pools, where "refuse to start" is worse than
+    /// "reprobe a cold cache".
+    pub fn load_salvaged(path: &Path) -> (ScheduleCache, CacheSalvage) {
+        match ScheduleCache::load(path) {
+            Ok(cache) => {
+                let report = CacheSalvage {
+                    entries_quarantined: cache.quarantined,
+                    file_reset: false,
+                };
+                (cache, report)
+            }
+            Err(_) => {
+                let mut aside = path.as_os_str().to_os_string();
+                aside.push(".corrupt");
+                let _ = fs::rename(path, PathBuf::from(aside));
+                crate::util::iofault::recovery()
+                    .cache_files_reset
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let cache = ScheduleCache {
+                    path: Some(path.to_path_buf()),
+                    dirty: true,
+                    ..Default::default()
+                };
+                (cache, CacheSalvage { entries_quarantined: 0, file_reset: true })
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -223,20 +284,15 @@ impl ScheduleCache {
 /// Crash-safe file write: a sibling temp file renamed over the target —
 /// a crash mid-write leaves the old file intact instead of a
 /// truncated/corrupt one. Shared by `ScheduleCache::save` and the serve
-/// pool's off-mutex cache flush.
+/// pool's off-mutex cache flush. Routed through the I/O fault injector
+/// (site `scheduler.cache.write`), which also owns the bounded retry
+/// that absorbs injected torn writes / ENOSPC / failed renames.
 pub(crate) fn write_atomic(path: &Path, text: &str) -> Result<()> {
     if let Some(dir) = path.parent() {
         fs::create_dir_all(dir).ok();
     }
-    let file_name = path
-        .file_name()
-        .map(|n| n.to_string_lossy().into_owned())
-        .unwrap_or_else(|| "cache.json".to_string());
-    let tmp = path.with_file_name(format!("{file_name}.tmp"));
-    fs::write(&tmp, text)
-        .with_context(|| format!("writing temp file {}", tmp.display()))?;
-    fs::rename(&tmp, path)
-        .with_context(|| format!("renaming temp file over {}", path.display()))
+    crate::util::iofault::write_atomic("scheduler.cache.write", path, text.as_bytes())
+        .with_context(|| format!("writing cache {}", path.display()))
 }
 
 #[cfg(test)]
@@ -364,23 +420,60 @@ mod tests {
     }
 
     #[test]
-    fn load_rejects_missing_or_empty_variant() {
+    fn load_quarantines_corrupt_entries_and_keeps_good_ones() {
         for (name, body) in [
             (
                 "novariant.json",
-                r#"{"version": 1, "entries": {"d|g|F64|spmm": {"t_baseline_ms": 1.0}}}"#,
+                r#"{"version": 1, "entries": {"bad": {"t_baseline_ms": 1.0}, "good": {"variant": "v", "t_baseline_ms": 1.0, "t_star_ms": 0.5, "alpha": 0.95}}}"#,
             ),
             (
                 "emptyvariant.json",
-                r#"{"version": 1, "entries": {"d|g|F64|spmm": {"variant": ""}}}"#,
+                r#"{"version": 1, "entries": {"bad": {"variant": ""}, "good": {"variant": "v", "t_baseline_ms": 1.0, "t_star_ms": 0.5, "alpha": 0.95}}}"#,
             ),
         ] {
             let path = tmpfile(name);
             fs::write(&path, body).unwrap();
-            let err = ScheduleCache::load(&path).unwrap_err();
-            assert!(format!("{err:#}").contains("variant"), "{name}: {err:#}");
+            let c = ScheduleCache::load(&path).unwrap();
+            assert_eq!(c.quarantined, 1, "{name}");
+            assert_eq!(c.len(), 1, "{name}: the good entry survives");
+            assert!(c.peek("good").is_some(), "{name}");
+            assert!(c.peek("bad").is_none(), "{name}");
+            // A salvaged load is dirty: the next save drops the
+            // quarantined entry from disk too.
+            assert!(c.is_dirty(), "{name}");
             let _ = fs::remove_file(&path);
         }
+    }
+
+    #[test]
+    fn load_salvaged_resets_unparseable_files_aside() {
+        let path = tmpfile("salvage_reset.json");
+        fs::write(&path, "{definitely not json").unwrap();
+        let (c, report) = ScheduleCache::load_salvaged(&path);
+        assert!(report.file_reset);
+        assert_eq!(report.entries_quarantined, 0);
+        assert!(c.is_empty());
+        assert!(c.is_dirty());
+        assert!(!path.exists(), "corrupt file moved aside");
+        let mut aside = path.as_os_str().to_os_string();
+        aside.push(".corrupt");
+        let aside = PathBuf::from(aside);
+        assert!(aside.exists(), "evidence preserved at .corrupt");
+        let _ = fs::remove_file(&aside);
+    }
+
+    #[test]
+    fn load_salvaged_is_a_passthrough_for_healthy_files() {
+        let path = tmpfile("salvage_ok.json");
+        let _ = fs::remove_file(&path);
+        let mut c = ScheduleCache::load(&path).unwrap();
+        c.insert("k".into(), sample());
+        c.save().unwrap();
+        let (c2, report) = ScheduleCache::load_salvaged(&path);
+        assert_eq!(report, CacheSalvage::default());
+        assert_eq!(c2.len(), 1);
+        assert!(!c2.is_dirty());
+        let _ = fs::remove_file(&path);
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::graph::signature::graph_signature;
 use crate::graph::Csr;
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
 
-pub use cache::{cache_key, CachedChoice, ScheduleCache};
+pub use cache::{cache_key, CacheSalvage, CachedChoice, ScheduleCache};
 pub use estimate::{DeviceModel, EstimateError};
 pub use features::InputFeatures;
 pub use guardrail::Choice;

@@ -47,6 +47,11 @@ pub struct LoadSpec {
     /// Base backoff before the first retry, in microseconds (doubles
     /// per attempt, plus a seeded jitter of up to one base unit).
     pub retry_backoff_us: u64,
+    /// Fraction of SpMM requests submitted in opt-in approximate mode
+    /// (seeded per client): they route through the edge-sampled graph
+    /// regardless of queue depth and verify against the reply's error
+    /// bound. 0.0 = off.
+    pub approx_frac: f64,
 }
 
 impl LoadSpec {
@@ -62,6 +67,7 @@ impl LoadSpec {
             verify: true,
             max_retries: 0,
             retry_backoff_us: 200,
+            approx_frac: 0.0,
         }
     }
 
@@ -77,6 +83,7 @@ impl LoadSpec {
             verify: true,
             max_retries: 0,
             retry_backoff_us: 200,
+            approx_frac: 0.0,
         }
     }
 }
@@ -154,6 +161,8 @@ pub struct LoadReport {
     pub degraded: usize,
     /// Retry attempts actually performed across all clients.
     pub retries: usize,
+    /// Requests submitted in opt-in approximate mode.
+    pub approx_requested: usize,
     /// Requests shed past their deadline, summed across shards.
     pub shed: u64,
     /// Worker panics caught by supervision, summed across shards.
@@ -296,6 +305,7 @@ struct ClientTally {
     injected_errors: usize,
     degraded: usize,
     retries: usize,
+    approx_requested: usize,
 }
 
 /// Seeded jittered exponential backoff between retry attempts:
@@ -358,6 +368,7 @@ pub fn run_load_traced(
         let verify = spec.verify;
         let max_retries = spec.max_retries;
         let backoff_us = spec.retry_backoff_us;
+        let approx_frac = spec.approx_frac;
         let seed = spec.seed;
         let recorder = recorder.clone();
         let handle = std::thread::Builder::new()
@@ -367,8 +378,19 @@ pub fn run_load_traced(
                 // Retry backoff jitter gets its own seeded stream per
                 // client so the whole run stays replayable.
                 let mut retry_rng = Rng::for_stream(seed ^ 0x9e37_79b9, c as u64);
+                // Approximate-mode coin flips get their own seeded
+                // stream so the same seed replays the same approx mix.
+                let mut approx_rng = Rng::for_stream(seed ^ 0x00aa_55aa, c as u64);
                 for &ci in &mix {
                     let combo = &combos[ci];
+                    // Opt-in approximation is SpMM-only: the sampled-
+                    // graph error bound is an SpMM statement.
+                    let approx = combo.op == Op::Spmm
+                        && approx_frac > 0.0
+                        && approx_rng.next_f64() < approx_frac;
+                    if approx {
+                        t.approx_requested += 1;
+                    }
                     let t0 = Instant::now();
                     // Fresh trace per request, subject to head sampling:
                     // unsampled requests travel untraced (None) but still
@@ -383,20 +405,22 @@ pub fn run_load_traced(
                         // With a retry budget, submission must not block:
                         // `QueueFull` is the backoff signal.
                         let submitted = if max_retries == 0 {
-                            pool.submit_traced(
+                            pool.submit_opts(
                                 combo.op,
                                 combo.graph.clone(),
                                 combo.f,
                                 combo.operands.clone(),
                                 tctx,
+                                approx,
                             )
                         } else {
-                            pool.try_submit_traced(
+                            pool.try_submit_opts(
                                 combo.op,
                                 combo.graph.clone(),
                                 combo.f,
                                 combo.operands.clone(),
                                 tctx,
+                                approx,
                             )
                         };
                         let rx = match submitted {
@@ -497,6 +521,7 @@ pub fn run_load_traced(
     let (mut ok, mut errors, mut mismatches) = (0usize, 0usize, 0usize);
     let mut eb = ErrorBreakdown::default();
     let (mut injected_errors, mut degraded, mut retries) = (0usize, 0usize, 0usize);
+    let mut approx_requested = 0usize;
     for h in handles {
         let t = h.join().map_err(|_| anyhow!("load client panicked"))?;
         lat.extend(t.lat);
@@ -507,6 +532,7 @@ pub fn run_load_traced(
         injected_errors += t.injected_errors;
         degraded += t.degraded;
         retries += t.retries;
+        approx_requested += t.approx_requested;
     }
     let wall_ms = sw.elapsed().as_secs_f64() * 1e3;
     let total = spec.clients * spec.requests_per_client;
@@ -586,6 +612,12 @@ pub fn run_load_traced(
              {faults_injected} faults injected | {quarantined} quarantined | {retries} retries\n"
         ));
     }
+    if approx_requested > 0 {
+        text.push_str(&format!(
+            "approx   : {approx_requested} requested | {degraded} served on the sampled graph \
+             (replies carry the error bound)\n"
+        ));
+    }
     text.push_str(&format!(
         "schedule : {unique_keys} unique keys | {probes} probes | cache {cache_hits} hits / \
          {cache_misses} misses / {cache_len} entries (single-flight saved {} probes)\n",
@@ -628,6 +660,7 @@ pub fn run_load_traced(
         injected_errors,
         degraded,
         retries,
+        approx_requested,
         shed,
         worker_panics,
         faults_injected,
@@ -651,6 +684,7 @@ mod tests {
             verify: false,
             max_retries: 0,
             retry_backoff_us: 200,
+            approx_frac: 0.0,
         };
         let combos = build_combos(&spec).unwrap();
         assert_eq!(combos.len(), 2);
@@ -725,6 +759,7 @@ mod tests {
             verify: false,
             max_retries: 0,
             retry_backoff_us: 200,
+            approx_frac: 0.0,
         };
         let combos = build_combos(&spec).unwrap();
         assert_eq!(combos.len(), 1);

@@ -247,6 +247,49 @@ pub fn prometheus_snapshot(
     ] {
         reg.counter(name);
     }
+    // Durability counters: crash-point I/O faults injected (absolute
+    // mirror of the installed injector), write retries + salvage
+    // recoveries + log rotations (process-wide recovery stats), and the
+    // hot-reload transition counters (live-incremented at transition
+    // time; materialized here so clean runs export explicit zeros).
+    {
+        use crate::util::iofault;
+        let inj = iofault::installed();
+        reg.set_counter(
+            "autosage_io_faults_injected_total",
+            inj.as_ref().map(|i| i.injected_total()).unwrap_or(0),
+        );
+        if let Some(i) = inj.as_ref() {
+            for kind in iofault::IoFaultKind::ALL {
+                let n = i.injected_of(kind);
+                if n > 0 {
+                    reg.set_counter(
+                        &format!(
+                            "autosage_io_faults_injected_total{{kind=\"{}\"}}",
+                            kind.as_str()
+                        ),
+                        n,
+                    );
+                }
+            }
+        }
+        let rec = iofault::recovery();
+        reg.set_counter(
+            "autosage_io_write_retries_total",
+            rec.write_retries.load(std::sync::atomic::Ordering::Relaxed),
+        );
+        reg.set_counter("autosage_salvage_total", rec.salvage_total());
+        reg.set_counter(
+            "autosage_log_rotations_total",
+            rec.rotations.load(std::sync::atomic::Ordering::Relaxed),
+        );
+    }
+    for name in [
+        "autosage_model_reloads_total",
+        "autosage_model_rollbacks_total",
+    ] {
+        reg.counter(name);
+    }
     if let Some(p) = pool {
         p.export_into(reg);
     }
@@ -347,9 +390,24 @@ mod tests {
         crate::obs::metrics::validate_serving_snapshot(&first).expect("valid snapshot");
         assert!(first.contains("autosage_pool_requests_total 3\n"));
         assert!(first.contains("autosage_trace_sample_rate 0.5\n"));
+        assert!(first.contains("autosage_io_faults_injected_total"));
+        assert!(first.contains("autosage_model_reloads_total"));
         // Re-render without new traffic: absolute mirrors must not
-        // double-count.
+        // double-count. The process-global durability mirrors (salvage
+        // and retry stats shared with every concurrently-running test)
+        // are excluded from the comparison — they may legitimately move
+        // between renders under `cargo test`'s parallelism.
         let second = prometheus_snapshot(&reg, Some(&m), Some(&rec));
-        assert_eq!(first, second, "snapshot must be idempotent");
+        let stable = |s: &str| -> String {
+            s.lines()
+                .filter(|l| {
+                    !l.starts_with("autosage_io_")
+                        && !l.starts_with("autosage_salvage_total")
+                        && !l.starts_with("autosage_log_rotations_total")
+                })
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(stable(&first), stable(&second), "snapshot must be idempotent");
     }
 }

@@ -23,13 +23,28 @@
 //! injector can place backend errors / panics / latency spikes as a
 //! pure function of (seed, request id); and under queue-depth overload
 //! eligible SpMM requests degrade to an edge-sampled graph with a
-//! per-reply error bound instead of rejecting.
+//! per-reply error bound instead of rejecting. Clients can also opt
+//! into the sampled-graph path explicitly (`submit_approx_*`): an
+//! approximate request degrades regardless of queue depth and its
+//! reply carries the same error bound.
+//!
+//! Validated model hot-reload: when `AUTOSAGE_MODEL_RELOAD_MS` > 0 a
+//! watcher thread polls the model path off the request path. A changed
+//! file is loaded through the generational reader (corrupt current →
+//! previous generation; both corrupt → rejected, never installed) and
+//! becomes a *canary candidate*: it shadows the incumbent, grading its
+//! predictions against ground truth (probe outcomes and feature-
+//! bearing cache hits) for `AUTOSAGE_MODEL_CANARY_N` observations.
+//! Agreement ≥ `AUTOSAGE_MODEL_CANARY_AGREE` promotes it (workers pick
+//! the new generation up at their next batch); anything less rolls it
+//! back. Transitions land in `autosage_model_reloads_total` /
+//! `autosage_model_rollbacks_total` and as `model_reload` trace events.
 
 use std::path::PathBuf;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -40,10 +55,12 @@ use crate::coordinator::AutoSage;
 use crate::data::sample::SampleSpec;
 use crate::graph::signature::{graph_signature, Fnv1a};
 use crate::graph::Csr;
+use crate::model::CostModel;
 use crate::obs::metrics::{feature_bucket, AuditSample, MetricsRegistry};
-use crate::obs::trace::{Recorder, SpanRecord, TraceCtx};
+use crate::obs::trace::{Recorder, SpanRecord, TraceCtx, TraceId};
 use crate::scheduler::{cache_key, CachedChoice, DecisionSource, Op};
 use crate::telemetry::ServeShardStats;
+use crate::util::iofault;
 
 use super::metrics::{ServerMetrics, ShardMetrics};
 use super::resilience::{FaultKind, QuarantineEntry, Resilience, ServeError};
@@ -111,6 +128,10 @@ struct QueuedRequest {
     /// Deadline propagated with the request (`AUTOSAGE_DEADLINE_MS`,
     /// 0 = none): shed at dequeue once queue wait exceeds it.
     deadline_ms: f64,
+    /// Client opted into approximate serving: an eligible SpMM request
+    /// takes the edge-sampled-graph path regardless of queue depth and
+    /// its reply carries the error bound.
+    approx: bool,
     /// Sentinel used by `debug_stop_shard`: makes the worker exit its
     /// loop cleanly after the current batch (never served).
     stop: bool,
@@ -136,6 +157,143 @@ impl Drop for AliveGuard {
     }
 }
 
+/// A canary candidate model being graded in shadow mode.
+struct Candidate {
+    model: Arc<CostModel>,
+    agree: u64,
+    disagree: u64,
+}
+
+/// The pool's live model slot: the incumbent every worker serves with,
+/// plus at most one canary candidate under shadow grading. Workers
+/// watch `generation` and re-fetch the incumbent when it changes, so a
+/// promotion never blocks the request path on a lock inside `decide`.
+struct ModelSlot {
+    incumbent: Mutex<Option<Arc<CostModel>>>,
+    /// Bumped on every promotion.
+    generation: AtomicU64,
+    candidate: Mutex<Option<Candidate>>,
+    reloads: AtomicU64,
+    rollbacks: AtomicU64,
+}
+
+/// Outcome of grading one ground-truth observation against the canary.
+enum CanaryVerdict {
+    Promoted,
+    RolledBack { agree: u64, disagree: u64 },
+}
+
+impl ModelSlot {
+    fn new(initial: Option<Arc<CostModel>>) -> ModelSlot {
+        ModelSlot {
+            incumbent: Mutex::new(initial),
+            generation: AtomicU64::new(0),
+            candidate: Mutex::new(None),
+            reloads: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+        }
+    }
+
+    fn current(&self) -> Option<Arc<CostModel>> {
+        self.incumbent.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Install a freshly-loaded model as the canary candidate. Returns
+    /// false when it is byte-equal to the incumbent (nothing to canary).
+    /// A still-grading previous candidate is replaced and its partial
+    /// grade discarded — the newest file wins.
+    fn set_candidate(&self, m: Arc<CostModel>) -> bool {
+        let mut cand = self.candidate.lock().unwrap_or_else(|p| p.into_inner());
+        {
+            let inc = self.incumbent.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(cur) = inc.as_ref() {
+                if **cur == *m {
+                    return false;
+                }
+            }
+        }
+        *cand = Some(Candidate { model: m, agree: 0, disagree: 0 });
+        true
+    }
+
+    /// Grade one ground-truth `(op, features) → variant` observation
+    /// against the candidate in shadow mode. Observations the candidate
+    /// cannot predict (no tree for the op) don't count toward the
+    /// quota. Returns the verdict once `canary_n` observations are in:
+    /// agreement fraction ≥ `canary_agree` promotes the candidate to
+    /// incumbent (new generation), anything less rolls it back.
+    fn grade(
+        &self,
+        op: &str,
+        features: &[f64],
+        actual_variant: &str,
+        canary_n: usize,
+        canary_agree: f64,
+    ) -> Option<CanaryVerdict> {
+        let mut guard = self.candidate.lock().unwrap_or_else(|p| p.into_inner());
+        let cand = guard.as_mut()?;
+        let predicted = cand.model.predict(op, features)?;
+        if predicted.variant == actual_variant {
+            cand.agree += 1;
+        } else {
+            cand.disagree += 1;
+        }
+        let graded = cand.agree + cand.disagree;
+        if (graded as usize) < canary_n.max(1) {
+            return None;
+        }
+        let frac = cand.agree as f64 / graded as f64;
+        let cand = guard.take().expect("candidate checked above");
+        if frac >= canary_agree {
+            let mut inc = self.incumbent.lock().unwrap_or_else(|p| p.into_inner());
+            *inc = Some(cand.model);
+            drop(inc);
+            self.generation.fetch_add(1, Ordering::Release);
+            self.reloads.fetch_add(1, Ordering::Relaxed);
+            Some(CanaryVerdict::Promoted)
+        } else {
+            self.rollbacks.fetch_add(1, Ordering::Relaxed);
+            Some(CanaryVerdict::RolledBack {
+                agree: cand.agree,
+                disagree: cand.disagree,
+            })
+        }
+    }
+}
+
+/// Record a `model_reload` transition: counter + trace event. Runs off
+/// the request path (watcher thread) or once per transition (grading),
+/// never per request.
+fn note_model_transition(
+    registry: Option<&MetricsRegistry>,
+    recorder: Option<&Recorder>,
+    outcome: &str,
+    detail: &str,
+) {
+    if let Some(reg) = registry {
+        match outcome {
+            "promoted" => reg.inc("autosage_model_reloads_total"),
+            "rolled_back" | "rejected" => reg.inc("autosage_model_rollbacks_total"),
+            _ => {}
+        }
+    }
+    if let Some(r) = recorder {
+        r.event(
+            TraceId(0),
+            None,
+            "model_reload",
+            vec![
+                ("outcome".to_string(), outcome.to_string()),
+                ("detail".to_string(), detail.to_string()),
+            ],
+        );
+    }
+}
+
 /// Handle to the running pool. Dropping it shuts the workers down and
 /// surfaces any worker panic (satellite: a crashed worker is not
 /// silent).
@@ -151,9 +309,13 @@ pub struct ServerPool {
     recorder: Option<Arc<Recorder>>,
     /// Metrics registry shared with every shard worker (None = unmetered).
     registry: Option<Arc<MetricsRegistry>>,
-    /// Trained cost model shared read-only with every shard worker
-    /// (None = probe-only scheduling).
-    model: Option<Arc<crate::model::CostModel>>,
+    /// Live model slot: incumbent + canary candidate + generation.
+    /// Workers re-fetch the incumbent when the generation changes.
+    slot: Arc<ModelSlot>,
+    /// Model-path watcher thread (hot-reload), present when
+    /// `model_reload_ms > 0` and a model path is configured.
+    watcher_stop: Arc<AtomicBool>,
+    watcher: Option<JoinHandle<()>>,
     /// Fault injector + quarantine log + degrade cache, shared with
     /// every shard worker.
     resilience: Arc<Resilience>,
@@ -201,20 +363,59 @@ impl ServerPool {
         registry: Option<Arc<MetricsRegistry>>,
     ) -> Result<ServerPool> {
         cfg.validate().map_err(|e| anyhow!(e))?;
+        // Crash-point I/O chaos: install the seeded injector before the
+        // first artifact touch so cache/model loads run under fire too.
+        // Rate 0 leaves any manually-installed injector alone.
+        if cfg.io_fault_rate > 0.0 {
+            let kinds =
+                iofault::parse_io_kinds(&cfg.io_fault_kinds).map_err(|e| anyhow!(e))?;
+            iofault::install(Some(Arc::new(iofault::IoFaultInjector::new(
+                cfg.io_fault_seed as u64,
+                cfg.io_fault_rate,
+                kinds,
+            ))));
+        }
         let n = cfg.serve_workers.max(1);
-        let shared = Arc::new(SharedScheduleCache::load(&cfg.cache_path)?);
+        let (shared, salvage) = SharedScheduleCache::load_salvaged(&cfg.cache_path);
+        let shared = Arc::new(shared);
+        if salvage.entries_quarantined > 0 || salvage.file_reset {
+            let msg = format!(
+                "schedule cache salvage: {} entries quarantined, file reset: {}",
+                salvage.entries_quarantined, salvage.file_reset
+            );
+            if let Some(r) = &recorder {
+                r.warn(None, "cache_salvage", &msg);
+            } else {
+                eprintln!("autosage: warning: {msg}");
+            }
+        }
         let metrics = Arc::new(ServerMetrics::new(n));
         let flush = Duration::from_millis(cfg.cache_flush_ms as u64);
         // The trained cost model (if any) is loaded ONCE here and shared
         // read-only across every shard — a load failure is a spawn-time
-        // error, not K identical per-worker failures.
+        // error, not K identical per-worker failures. The generational
+        // reader falls back to the previous generation when the current
+        // file is corrupt; only both-corrupt refuses to spawn.
         let model = if cfg.model_path.is_empty() {
             None
         } else {
-            Some(Arc::new(crate::model::read_model(std::path::Path::new(
-                &cfg.model_path,
-            ))?))
+            let (m, fell_back) = crate::model::read_model_generational(
+                std::path::Path::new(&cfg.model_path),
+            )?;
+            if fell_back {
+                let msg = format!(
+                    "model {} corrupt; serving previous generation",
+                    cfg.model_path
+                );
+                if let Some(r) = &recorder {
+                    r.warn(None, "model_generation_fallback", &msg);
+                } else {
+                    eprintln!("autosage: warning: {msg}");
+                }
+            }
+            Some(Arc::new(m))
         };
+        let slot = Arc::new(ModelSlot::new(model));
         // Workers keep their scheduler caches in-memory: the shared
         // layer owns cross-shard visibility and persistence. The model
         // path is cleared too — workers receive the Arc, not the file.
@@ -235,18 +436,37 @@ impl ServerPool {
             let m = Arc::clone(&metrics);
             let rec = recorder.clone();
             let reg = registry.clone();
-            let mdl = model.clone();
+            let sl = Arc::clone(&slot);
             let res = Arc::clone(&resilience);
             let alive = Arc::new(AtomicBool::new(true));
             let alive_w = Arc::clone(&alive);
             let join = std::thread::Builder::new()
                 .name(format!("autosage-shard-{shard_id}"))
                 .spawn(move || {
-                    worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, reg, mdl, res, alive_w, flush)
+                    worker_loop(shard_id, rx, dir, wcfg, sh, m, rec, reg, sl, res, alive_w, flush)
                 })
                 .with_context(|| format!("spawning shard {shard_id} worker"))?;
             shards.push(Shard { tx, join, alive });
         }
+        // Hot-reload watcher: polls the model path off the request path
+        // and installs changed files as canary candidates.
+        let watcher_stop = Arc::new(AtomicBool::new(false));
+        let watcher = if cfg.model_reload_ms > 0 && !cfg.model_path.is_empty() {
+            let path = PathBuf::from(&cfg.model_path);
+            let sl = Arc::clone(&slot);
+            let stop = Arc::clone(&watcher_stop);
+            let rec = recorder.clone();
+            let reg = registry.clone();
+            let poll = Duration::from_millis(cfg.model_reload_ms as u64);
+            Some(
+                std::thread::Builder::new()
+                    .name("autosage-model-watch".to_string())
+                    .spawn(move || model_watcher(path, sl, poll, stop, rec, reg))
+                    .context("spawning model hot-reload watcher")?,
+            )
+        } else {
+            None
+        };
         Ok(ServerPool {
             shards,
             metrics,
@@ -254,7 +474,9 @@ impl ServerPool {
             queue_bound: cfg.serve_queue_depth.max(1) as u64,
             recorder,
             registry,
-            model,
+            slot,
+            watcher_stop,
+            watcher,
             resilience,
             next_req_id: AtomicU64::new(0),
             deadline_ms: cfg.deadline_ms,
@@ -283,8 +505,24 @@ impl ServerPool {
         operands: Vec<(String, Vec<f32>)>,
         trace: Option<TraceCtx>,
     ) -> Result<Receiver<ServeResponse>, SubmitError> {
+        self.try_submit_opts(op, graph, f, operands, trace, false)
+    }
+
+    /// [`Self::try_submit_traced`] with the approximate-mode flag: an
+    /// eligible SpMM request routes through the edge-sampled graph
+    /// regardless of queue depth; the reply carries the error bound.
+    pub fn try_submit_opts(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+        trace: Option<TraceCtx>,
+        approx: bool,
+    ) -> Result<Receiver<ServeResponse>, SubmitError> {
         let (mut qr, shard, rx) = self.package(op, graph, f, operands);
         qr.trace = trace;
+        qr.approx = approx;
         let sm = &self.metrics.shards[shard];
         // Dead-shard fast path (satellite): a stopped/crashed worker is
         // visible here, not only when the channel finally disconnects.
@@ -332,8 +570,23 @@ impl ServerPool {
         operands: Vec<(String, Vec<f32>)>,
         trace: Option<TraceCtx>,
     ) -> Result<Receiver<ServeResponse>, SubmitError> {
+        self.submit_opts(op, graph, f, operands, trace, false)
+    }
+
+    /// [`Self::submit_traced`] with the approximate-mode flag (see
+    /// [`Self::try_submit_opts`]).
+    pub fn submit_opts(
+        &self,
+        op: Op,
+        graph: Csr,
+        f: usize,
+        operands: Vec<(String, Vec<f32>)>,
+        trace: Option<TraceCtx>,
+        approx: bool,
+    ) -> Result<Receiver<ServeResponse>, SubmitError> {
         let (mut qr, shard, rx) = self.package(op, graph, f, operands);
         qr.trace = trace;
+        qr.approx = approx;
         let sm = &self.metrics.shards[shard];
         if !self.shards[shard].alive.load(Ordering::Acquire) {
             return Err(SubmitError::Closed);
@@ -386,6 +639,7 @@ impl ServerPool {
             trace: None,
             req_id: self.next_req_id.fetch_add(1, Ordering::Relaxed),
             deadline_ms: self.deadline_ms,
+            approx: false,
             stop: false,
         };
         (qr, shard, rx)
@@ -403,7 +657,23 @@ impl ServerPool {
 
     /// Whether a trained cost model is attached to the shards.
     pub fn has_model(&self) -> bool {
-        self.model.is_some()
+        self.slot.current().is_some()
+    }
+
+    /// Model generation currently served (bumps on every promotion).
+    pub fn model_generation(&self) -> u64 {
+        self.slot.generation()
+    }
+
+    /// Hot-reload promotions since spawn.
+    pub fn model_reloads(&self) -> u64 {
+        self.slot.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Hot-reload rollbacks (canary disagreement or corrupt candidate)
+    /// since spawn.
+    pub fn model_rollbacks(&self) -> u64 {
+        self.slot.rollbacks.load(Ordering::Relaxed)
     }
 
     pub fn n_shards(&self) -> usize {
@@ -458,6 +728,7 @@ impl ServerPool {
             trace: None,
             req_id: u64::MAX,
             deadline_ms: 0.0,
+            approx: false,
             stop: true,
         };
         let sm = &self.metrics.shards[shard];
@@ -479,6 +750,12 @@ impl ServerPool {
 
 impl Drop for ServerPool {
     fn drop(&mut self) {
+        // Stop the hot-reload watcher first: no candidate may install
+        // while the pool is winding down.
+        self.watcher_stop.store(true, Ordering::Release);
+        if let Some(w) = self.watcher.take() {
+            let _ = w.join();
+        }
         // Close every shard queue first so all workers wind down in
         // parallel, then join and surface panics.
         let shards = std::mem::take(&mut self.shards);
@@ -533,6 +810,12 @@ struct WorkerSettings {
     queue_bound: u64,
     degrade_watermark: f64,
     sample_spec: SampleSpec,
+    /// Canary quota: ground-truth observations graded before a
+    /// candidate model's promote/rollback verdict.
+    canary_n: usize,
+    /// Agreement fraction required to promote (0.0 = always promote —
+    /// the deterministic-promotion test knob).
+    canary_agree: f64,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -545,7 +828,7 @@ fn worker_loop(
     metrics: Arc<ServerMetrics>,
     recorder: Option<Arc<Recorder>>,
     registry: Option<Arc<MetricsRegistry>>,
-    model: Option<Arc<crate::model::CostModel>>,
+    slot: Arc<ModelSlot>,
     resilience: Arc<Resilience>,
     alive: Arc<AtomicBool>,
     flush: Duration,
@@ -560,6 +843,8 @@ fn worker_loop(
             keep_frac: cfg.degrade_keep_frac,
             min_keep_deg: cfg.degrade_min_deg,
         },
+        canary_n: cfg.model_canary_n,
+        canary_agree: cfg.model_canary_agree,
     };
     let mut sage = match AutoSage::new(&artifacts_dir, cfg, None) {
         Ok(s) => s,
@@ -591,8 +876,17 @@ fn worker_loop(
     };
     sage.set_recorder(recorder.clone());
     sage.set_metrics(registry.clone());
-    sage.set_model(model);
+    let mut model_gen = slot.generation();
+    sage.set_model(slot.current());
     while let Ok(first) = rx.recv() {
+        // Pick up a hot-reload promotion at batch granularity: the
+        // generation check is one atomic load per batch, the slot lock
+        // is touched only when it actually changed.
+        let g = slot.generation();
+        if g != model_gen {
+            model_gen = g;
+            sage.set_model(slot.current());
+        }
         let mut batch = collect_batch(&rx, first, batch_max, window);
         let sm = &metrics.shards[shard];
         sm.queue_depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
@@ -619,6 +913,7 @@ fn worker_loop(
                 registry.as_deref(),
                 &resilience,
                 &settings,
+                &slot,
                 batch,
             );
         }
@@ -807,6 +1102,7 @@ fn serve_batch(
     registry: Option<&MetricsRegistry>,
     res: &Resilience,
     settings: &WorkerSettings,
+    slot: &ModelSlot,
     batch: Vec<QueuedRequest>,
 ) {
     // Deadline shedding at dequeue: a request that already waited past
@@ -850,8 +1146,11 @@ fn serve_batch(
         // Supervised scheduling: a panic inside decide (estimate,
         // probe, backend) quarantines the group leader and fails the
         // group with a typed reply — the shard stays alive.
-        let decided: Result<(String, DecisionSource), ServeError> =
-            match catch_unwind(AssertUnwindSafe(|| decide_for(sage, shared, sm, leader))) {
+        let decided: Result<(String, DecisionSource), ServeError> = match catch_unwind(
+            AssertUnwindSafe(|| {
+                decide_for(sage, shared, sm, slot, settings, registry, recorder, leader)
+            }),
+        ) {
                 Ok(Ok(v)) => Ok(v),
                 Ok(Err(e)) => {
                     Err(ServeError::Execute { msg: format!("{e:#}"), injected: false })
@@ -987,14 +1286,19 @@ fn serve_batch(
                         }
                     }
                     // Graceful degradation: queue depth at/over the
-                    // watermark degrades eligible SpMM requests to the
-                    // edge-sampled graph instead of rejecting them.
-                    let degrade = if settings.degrade_watermark > 0.0
-                        && qr.op == Op::Spmm
+                    // watermark — or an explicit approximate-mode
+                    // request — serves eligible SpMM on the
+                    // edge-sampled graph instead of the full one.
+                    let degrade = if qr.op == Op::Spmm
                         && !matches!(fault, Some(FaultKind::Error))
                     {
-                        let depth = sm.queue_depth.load(Ordering::Relaxed) as f64;
-                        if depth >= settings.degrade_watermark * settings.queue_bound as f64 {
+                        let overloaded = settings.degrade_watermark > 0.0 && {
+                            let depth = sm.queue_depth.load(Ordering::Relaxed) as f64;
+                            depth
+                                >= settings.degrade_watermark
+                                    * settings.queue_bound as f64
+                        };
+                        if qr.approx || overloaded {
                             let sg = res.degrade.get_or_build(
                                 &qr.sig,
                                 &qr.graph,
@@ -1013,6 +1317,11 @@ fn serve_batch(
                     } else {
                         None
                     };
+                    if qr.approx && degrade.is_some() {
+                        if let Some(reg) = registry {
+                            reg.inc("autosage_approx_served_total");
+                        }
+                    }
                     let degraded_mass =
                         degrade.as_ref().map(|sg| sg.report.max_row_dropped_mass);
                     let exec_start_us = recorder.map(|r| r.now_us());
@@ -1137,13 +1446,58 @@ fn serve_batch(
     }
 }
 
+/// Grade one ground-truth observation against the canary candidate (if
+/// any) and record the promote/rollback transition when the verdict
+/// quota is reached. Cheap when no candidate is in flight: one lock
+/// acquire, no prediction.
+fn canary_grade(
+    slot: &ModelSlot,
+    settings: &WorkerSettings,
+    registry: Option<&MetricsRegistry>,
+    recorder: Option<&Recorder>,
+    op: &str,
+    features: &[f64],
+    actual_variant: &str,
+) {
+    match slot.grade(
+        op,
+        features,
+        actual_variant,
+        settings.canary_n,
+        settings.canary_agree,
+    ) {
+        None => {}
+        Some(CanaryVerdict::Promoted) => {
+            note_model_transition(
+                registry,
+                recorder,
+                "promoted",
+                &format!("canary agreed over {} observations", settings.canary_n),
+            );
+        }
+        Some(CanaryVerdict::RolledBack { agree, disagree }) => {
+            note_model_transition(
+                registry,
+                recorder,
+                "rolled_back",
+                &format!("canary agreement {agree}/{}", agree + disagree),
+            );
+        }
+    }
+}
+
 /// Schedule one coalescing group: shared-cache lookup with
 /// single-flight — concurrent misses on the same key across shards
 /// block on ONE probe instead of probing K times.
+#[allow(clippy::too_many_arguments)]
 fn decide_for(
     sage: &mut AutoSage,
     shared: &SharedScheduleCache,
     sm: &ShardMetrics,
+    slot: &ModelSlot,
+    settings: &WorkerSettings,
+    registry: Option<&MetricsRegistry>,
+    recorder: Option<&Recorder>,
     leader: &QueuedRequest,
 ) -> Result<(String, DecisionSource)> {
     let key = cache_key(
@@ -1155,6 +1509,20 @@ fn decide_for(
     match shared.lookup(&key) {
         Lookup::Hit(c) => {
             sm.cache_hits.fetch_add(1, Ordering::Relaxed);
+            // Feature-bearing cache hits are probe outcomes from an
+            // earlier request — ground truth the canary candidate is
+            // graded against in shadow mode.
+            if let Some(feats) = c.features.as_deref() {
+                canary_grade(
+                    slot,
+                    settings,
+                    registry,
+                    recorder,
+                    leader.op.as_str(),
+                    feats,
+                    &c.variant,
+                );
+            }
             Ok((c.variant, DecisionSource::Cache))
         }
         Lookup::Probe(ticket) => {
@@ -1163,6 +1531,21 @@ fn decide_for(
             let d = sage.decide(&leader.graph, leader.op, leader.f)?;
             if d.source == DecisionSource::Probe {
                 sm.probes.fetch_add(1, Ordering::Relaxed);
+            }
+            // A fresh probe outcome is the strongest ground truth the
+            // shadow canary gets.
+            if d.source == DecisionSource::Probe {
+                if let Some(feats) = d.features.as_deref() {
+                    canary_grade(
+                        slot,
+                        settings,
+                        registry,
+                        recorder,
+                        leader.op.as_str(),
+                        feats,
+                        d.choice.variant(),
+                    );
+                }
             }
             // Probe resolutions carry the input's feature vector into
             // the shared cache (training data for `autosage train`);
@@ -1175,6 +1558,67 @@ fn decide_for(
                 features: d.features,
             });
             Ok((d.choice.variant().to_string(), d.source))
+        }
+    }
+}
+
+/// Hot-reload watcher body: poll the model path, load changed files
+/// through the generational reader off the request path, and install
+/// them as canary candidates. A file that fails to load through BOTH
+/// generations is rejected and counted as a rollback — a torn or
+/// corrupt write can never reach serving.
+fn model_watcher(
+    path: PathBuf,
+    slot: Arc<ModelSlot>,
+    poll: Duration,
+    stop: Arc<AtomicBool>,
+    recorder: Option<Arc<Recorder>>,
+    registry: Option<Arc<MetricsRegistry>>,
+) {
+    let fingerprint = |p: &std::path::Path| -> Option<(u64, std::time::SystemTime)> {
+        let md = std::fs::metadata(p).ok()?;
+        Some((md.len(), md.modified().ok()?))
+    };
+    let mut last = fingerprint(&path);
+    while !stop.load(Ordering::Acquire) {
+        // Sleep in short slices so pool Drop never waits a full poll.
+        let mut slept = Duration::from_millis(0);
+        while slept < poll && !stop.load(Ordering::Acquire) {
+            let step = (poll - slept).min(Duration::from_millis(20));
+            std::thread::sleep(step);
+            slept += step;
+        }
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        let now = fingerprint(&path);
+        if now.is_none() || now == last {
+            continue;
+        }
+        last = now;
+        match crate::model::read_model_generational(&path) {
+            Ok((m, fell_back)) => {
+                if slot.set_candidate(Arc::new(m)) {
+                    note_model_transition(
+                        registry.as_deref(),
+                        recorder.as_deref(),
+                        "candidate",
+                        &format!(
+                            "loaded {} (generation fallback: {fell_back})",
+                            path.display()
+                        ),
+                    );
+                }
+            }
+            Err(e) => {
+                slot.rollbacks.fetch_add(1, Ordering::Relaxed);
+                note_model_transition(
+                    registry.as_deref(),
+                    recorder.as_deref(),
+                    "rejected",
+                    &format!("{e:#}"),
+                );
+            }
         }
     }
 }
@@ -1232,5 +1676,84 @@ mod tests {
         assert!(SubmitError::QueueFull.to_string().contains("full"));
         assert!(SubmitError::Closed.to_string().contains("shut down"));
         assert_ne!(SubmitError::QueueFull, SubmitError::Closed);
+    }
+
+    /// A one-op model that predicts `hi` for feature[0]=1 and `lo` for
+    /// feature[0]=0 (13-wide vectors matching FEATURE_NAMES).
+    fn split_model(lo: &str, hi: &str) -> Arc<CostModel> {
+        let ex = |f0: f64, label: &str| crate::model::Example {
+            op: "spmm".to_string(),
+            features: {
+                let mut v = vec![0.0; 13];
+                v[0] = f0;
+                v
+            },
+            label: label.to_string(),
+        };
+        let examples =
+            vec![ex(0.0, lo), ex(1.0, hi), ex(0.0, lo), ex(1.0, hi)];
+        Arc::new(CostModel::train(&examples, &[], 7, 4).unwrap())
+    }
+
+    fn hi_features() -> Vec<f64> {
+        let mut v = vec![0.0; 13];
+        v[0] = 1.0;
+        v
+    }
+
+    #[test]
+    fn canary_promotes_on_agreement() {
+        let slot = ModelSlot::new(None);
+        assert!(slot.set_candidate(split_model("csr", "ell")));
+        // Agreement threshold 0.0 with quota 1: one graded observation
+        // promotes deterministically, whatever the candidate predicted.
+        let verdict = slot.grade("spmm", &hi_features(), "ell", 1, 0.0);
+        assert!(matches!(verdict, Some(CanaryVerdict::Promoted)));
+        assert_eq!(slot.generation(), 1);
+        assert_eq!(slot.reloads.load(Ordering::Relaxed), 1);
+        let promoted = slot.current().expect("promoted model installed");
+        assert_eq!(
+            promoted.predict("spmm", &hi_features()).unwrap().variant,
+            "ell"
+        );
+    }
+
+    #[test]
+    fn canary_rolls_back_on_disagreement() {
+        let slot = ModelSlot::new(Some(split_model("csr", "ell")));
+        assert!(slot.set_candidate(split_model("csr", "hub")));
+        // The candidate predicts "hub" where ground truth says "ell":
+        // 0/1 agreement under a 0.5 threshold rolls it back.
+        let verdict = slot.grade("spmm", &hi_features(), "ell", 1, 0.5);
+        assert!(matches!(
+            verdict,
+            Some(CanaryVerdict::RolledBack { agree: 0, disagree: 1 })
+        ));
+        assert_eq!(slot.generation(), 0, "rollback must not bump the generation");
+        assert_eq!(slot.rollbacks.load(Ordering::Relaxed), 1);
+        // The incumbent keeps serving and the candidate is gone.
+        assert_eq!(
+            slot.current().unwrap().predict("spmm", &hi_features()).unwrap().variant,
+            "ell"
+        );
+        assert!(slot.grade("spmm", &hi_features(), "ell", 1, 0.0).is_none());
+    }
+
+    #[test]
+    fn identical_candidate_is_ignored_and_unknown_ops_do_not_count() {
+        let m = split_model("csr", "ell");
+        let slot = ModelSlot::new(Some(Arc::clone(&m)));
+        assert!(
+            !slot.set_candidate(Arc::clone(&m)),
+            "byte-equal model must not re-canary"
+        );
+        let other = split_model("csr", "hub");
+        assert!(slot.set_candidate(other));
+        // An op the candidate has no tree for doesn't consume quota.
+        assert!(slot.grade("sddmm", &hi_features(), "ell", 1, 0.0).is_none());
+        assert!(matches!(
+            slot.grade("spmm", &hi_features(), "hub", 1, 0.0),
+            Some(CanaryVerdict::Promoted)
+        ));
     }
 }

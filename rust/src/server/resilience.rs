@@ -296,14 +296,52 @@ impl QuarantineLog {
 
     /// Write one JSON object per line; returns the entry count.
     pub fn write_jsonl(&self, path: &std::path::Path) -> Result<usize> {
+        self.write_jsonl_capped(path, 0)
+    }
+
+    /// [`write_jsonl`] with size-capped rotation: when the existing
+    /// file already holds `cap_bytes` or more it is first rotated to
+    /// `<path>.1` (`cap_bytes == 0` disables rotation). The write
+    /// itself goes through the fault-injectable wrapper.
+    pub fn write_jsonl_capped(
+        &self,
+        path: &std::path::Path,
+        cap_bytes: u64,
+    ) -> Result<usize> {
         let entries = self.snapshot();
         let mut out = String::new();
         for e in &entries {
             out.push_str(&e.to_json().to_string());
             out.push('\n');
         }
-        std::fs::write(path, out)?;
+        crate::util::iofault::rotate_if_large(path, cap_bytes)?;
+        crate::util::iofault::write_file("obs.quarantine.write", path, out.as_bytes())?;
         Ok(entries.len())
+    }
+
+    /// Parse a `quarantine.jsonl` body, salvaging a torn tail: returns
+    /// the valid-prefix entries plus the count of dropped lines (also
+    /// accounted in `iofault::recovery()`). Parsed-JSON lines that are
+    /// not quarantine entries drop too — the file has exactly one
+    /// schema, so a mismatch is tail corruption, not drift.
+    pub fn salvage_jsonl(text: &str) -> (Vec<QuarantineEntry>, usize) {
+        let (lines, mut dropped) = crate::util::iofault::salvage_jsonl(text);
+        let mut out = Vec::new();
+        for (i, line) in lines.iter().enumerate() {
+            match Json::parse(line).ok().as_ref().and_then(QuarantineEntry::from_json) {
+                Some(e) => out.push(e),
+                None => {
+                    dropped += lines.len() - i;
+                    break;
+                }
+            }
+        }
+        if dropped > 0 {
+            crate::util::iofault::recovery()
+                .jsonl_lines_dropped
+                .fetch_add(dropped as u64, Ordering::Relaxed);
+        }
+        (out, dropped)
     }
 }
 
@@ -443,6 +481,47 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         let back = QuarantineEntry::from_json(&Json::parse(text.trim()).unwrap()).unwrap();
         assert_eq!(back, q.snapshot()[0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_salvages_torn_tail_and_rotates_at_cap() {
+        let q = QuarantineLog::default();
+        for id in 0..3 {
+            q.record(QuarantineEntry {
+                req_id: id,
+                shard: 0,
+                sig: "s".into(),
+                op: "spmm".into(),
+                f: 32,
+                injected: false,
+                msg: "m".into(),
+            });
+        }
+        let dir = std::env::temp_dir().join("autosage_quarantine_salvage_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("quarantine.jsonl");
+        q.write_jsonl(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Tear the final line mid-object.
+        let torn = &text[..text.len() - 8];
+        let (entries, dropped) = QuarantineLog::salvage_jsonl(torn);
+        assert_eq!(entries.len(), 2, "valid prefix survives");
+        assert_eq!(dropped, 1);
+        assert_eq!(entries[0].req_id, 0);
+        // A JSON-valid line that is not an entry drops as tail damage.
+        let (entries, dropped) = QuarantineLog::salvage_jsonl(
+            &format!("{}{{\"req_id\":1}}\n", &text),
+        );
+        assert_eq!(entries.len(), 3);
+        assert_eq!(dropped, 1);
+        // Rotation: a tiny cap forces the existing file aside.
+        q.write_jsonl_capped(&path, 1).unwrap();
+        let mut rotated = path.as_os_str().to_os_string();
+        rotated.push(".1");
+        assert!(std::path::PathBuf::from(rotated).exists());
+        assert_eq!(QuarantineLog::salvage_jsonl(
+            &std::fs::read_to_string(&path).unwrap()).0.len(), 3);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

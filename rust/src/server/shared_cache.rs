@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::scheduler::cache::write_atomic;
+use crate::scheduler::cache::{write_atomic, CacheSalvage};
 use crate::scheduler::{CachedChoice, ScheduleCache};
 
 /// Shared, thread-safe wrapper around the persistent [`ScheduleCache`].
@@ -75,14 +75,24 @@ impl SharedScheduleCache {
     }
 
     /// Load from `cache_path`; an empty path means in-memory only (the
-    /// same convention as `AUTOSAGE_CACHE=""`).
+    /// same convention as `AUTOSAGE_CACHE=""`). Uses the salvage load
+    /// path: individually-corrupt entries quarantine, a wholly-corrupt
+    /// file moves aside to `<path>.corrupt` and the pool starts with an
+    /// empty cache — "reprobe cold" beats "refuse to serve". Returns
+    /// the salvage report next to the cache so the pool can log it.
     pub fn load(cache_path: &str) -> Result<SharedScheduleCache> {
-        let cache = if cache_path.is_empty() {
-            ScheduleCache::in_memory()
+        Ok(SharedScheduleCache::load_salvaged(cache_path).0)
+    }
+
+    /// [`SharedScheduleCache::load`] surfacing the [`CacheSalvage`]
+    /// report (what was quarantined or reset, if anything).
+    pub fn load_salvaged(cache_path: &str) -> (SharedScheduleCache, CacheSalvage) {
+        let (cache, report) = if cache_path.is_empty() {
+            (ScheduleCache::in_memory(), CacheSalvage::default())
         } else {
-            ScheduleCache::load(Path::new(cache_path))?
+            ScheduleCache::load_salvaged(Path::new(cache_path))
         };
-        Ok(SharedScheduleCache::new(cache))
+        (SharedScheduleCache::new(cache), report)
     }
 
     fn lock(&self) -> MutexGuard<'_, State> {

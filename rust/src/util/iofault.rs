@@ -1,0 +1,728 @@
+//! Seeded I/O fault injection + salvage bookkeeping for durable state.
+//!
+//! PR 9's `FaultInjector` made *requests* survive a hostile runtime;
+//! this module makes *artifacts* survive a hostile disk. Every durable
+//! read/write site (schedule cache, `.asgm` models, `.asg` snapshots,
+//! trace/audit/quarantine JSONL, manifests, `metrics.prom`) funnels
+//! through the wrappers here, which consult one process-global
+//! [`IoFaultInjector`].
+//!
+//! Determinism contract (mirrors `server::resilience::FaultInjector`):
+//! the decision for operation `idx` at `site` is a **pure function** of
+//! `(AUTOSAGE_IO_FAULT_SEED, site, idx)` — per-site operation counters
+//! isolate sites from each other, so thread interleaving across sites
+//! never shifts a decision. Two runs with the same seed and the same
+//! per-site operation counts inject the identical fault set; the sorted
+//! [`IoFaultInjector::log_snapshot`] is the cross-run witness
+//! (`recovery.json` in serve-bench `--out` dirs, `cmp`-compared by the
+//! CI `crash-smoke` job).
+//!
+//! Fault kinds and how each is absorbed:
+//! * `torn_write`  — only a prefix reaches the tmp file; the atomic
+//!   rename never happens and the write retries (bounded).
+//! * `enospc`      — the write fails before any byte lands; retried.
+//! * `failed_rename` — the tmp file is left behind, the destination is
+//!   untouched; the whole write-then-rename retries.
+//! * `short_read`  — the reader sees a truncated byte stream; salvage
+//!   recovery (valid-prefix JSONL, per-entry cache quarantine,
+//!   checksum-gated generational fallback) absorbs it.
+//! * `bit_flip`    — the write/read *silently* succeeds with one byte
+//!   corrupted; checksums and per-line/per-entry validation catch it
+//!   downstream, never the caller's happy path.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::rng::Rng;
+
+/// Bounded retry budget at write sites: an injected transient fault
+/// consumes one attempt (and one op index), so a deterministic fault on
+/// attempt k is followed by a *different* decision on attempt k+1.
+pub const WRITE_RETRIES: usize = 4;
+
+/// Log cap, mirroring `FaultInjector`.
+const LOG_CAP: usize = 65_536;
+
+/// What kind of I/O fault to inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IoFaultKind {
+    TornWrite,
+    ShortRead,
+    FailedRename,
+    Enospc,
+    BitFlip,
+}
+
+impl IoFaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            IoFaultKind::TornWrite => "torn_write",
+            IoFaultKind::ShortRead => "short_read",
+            IoFaultKind::FailedRename => "failed_rename",
+            IoFaultKind::Enospc => "enospc",
+            IoFaultKind::BitFlip => "bit_flip",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<IoFaultKind> {
+        match s.trim() {
+            "torn_write" => Some(IoFaultKind::TornWrite),
+            "short_read" => Some(IoFaultKind::ShortRead),
+            "failed_rename" => Some(IoFaultKind::FailedRename),
+            "enospc" => Some(IoFaultKind::Enospc),
+            "bit_flip" => Some(IoFaultKind::BitFlip),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [IoFaultKind; 5] = [
+        IoFaultKind::TornWrite,
+        IoFaultKind::ShortRead,
+        IoFaultKind::FailedRename,
+        IoFaultKind::Enospc,
+        IoFaultKind::BitFlip,
+    ];
+
+    fn index(&self) -> usize {
+        match self {
+            IoFaultKind::TornWrite => 0,
+            IoFaultKind::ShortRead => 1,
+            IoFaultKind::FailedRename => 2,
+            IoFaultKind::Enospc => 3,
+            IoFaultKind::BitFlip => 4,
+        }
+    }
+}
+
+/// Parse `AUTOSAGE_IO_FAULT_KINDS` (comma-separated, deduplicated,
+/// order-preserving). Unknown names are an error, mirroring
+/// `resilience::parse_kinds`.
+pub fn parse_io_kinds(csv: &str) -> Result<Vec<IoFaultKind>, String> {
+    let mut out = Vec::new();
+    for part in csv.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        let k = IoFaultKind::parse(p).ok_or_else(|| {
+            format!(
+                "unknown io fault kind {p:?} \
+                 (torn_write|short_read|failed_rename|enospc|bit_flip)"
+            )
+        })?;
+        if !out.contains(&k) {
+            out.push(k);
+        }
+    }
+    Ok(out)
+}
+
+/// The class of filesystem operation a site performs; only a subset of
+/// fault kinds is physically meaningful for each.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Write,
+    Read,
+    Rename,
+}
+
+fn applicable(kind: IoFaultKind, class: OpClass) -> bool {
+    match class {
+        OpClass::Write => matches!(
+            kind,
+            IoFaultKind::TornWrite | IoFaultKind::Enospc | IoFaultKind::BitFlip
+        ),
+        OpClass::Read => {
+            matches!(kind, IoFaultKind::ShortRead | IoFaultKind::BitFlip)
+        }
+        OpClass::Rename => matches!(kind, IoFaultKind::FailedRename),
+    }
+}
+
+/// FNV-1a over the site name — the per-site stream tag mixed into the
+/// injector seed (same hash family the artifact checksums use).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Deterministic, seeded I/O fault injector.
+pub struct IoFaultInjector {
+    seed: u64,
+    rate: f64,
+    kinds: Vec<IoFaultKind>,
+    /// Per-site operation counters: site → next op index.
+    ops: Mutex<BTreeMap<&'static str, u64>>,
+    /// Injected-fault counters, indexed by `IoFaultKind::index`.
+    injected: [AtomicU64; 5],
+    /// Applied-fault log: (site, op index, kind), capped at `LOG_CAP`.
+    log: Mutex<Vec<(&'static str, u64, IoFaultKind)>>,
+}
+
+impl IoFaultInjector {
+    pub fn new(seed: u64, rate: f64, kinds: Vec<IoFaultKind>) -> IoFaultInjector {
+        let kinds = if kinds.is_empty() {
+            IoFaultKind::ALL.to_vec()
+        } else {
+            kinds
+        };
+        IoFaultInjector {
+            seed,
+            rate: rate.clamp(0.0, 1.0),
+            kinds,
+            ops: Mutex::new(BTreeMap::new()),
+            injected: Default::default(),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Pure decision for operation `idx` at `site`: a function of
+    /// `(seed, site, idx)` only. No state is touched.
+    pub fn decide_at(
+        &self,
+        site: &str,
+        idx: u64,
+        class: OpClass,
+    ) -> Option<IoFaultKind> {
+        let mut rng = Rng::for_stream(self.seed ^ fnv1a64(site.as_bytes()), idx);
+        if rng.next_f64() >= self.rate {
+            return None;
+        }
+        let usable: Vec<IoFaultKind> = self
+            .kinds
+            .iter()
+            .copied()
+            .filter(|&k| applicable(k, class))
+            .collect();
+        if usable.is_empty() {
+            return None;
+        }
+        Some(usable[rng.below(usable.len())])
+    }
+
+    /// Allocate the next op index for `site` and decide; an injected
+    /// fault is counted and logged.
+    fn next(&self, site: &'static str, class: OpClass) -> Option<IoFaultKind> {
+        let idx = {
+            let mut ops = self.ops.lock().unwrap_or_else(|p| p.into_inner());
+            let c = ops.entry(site).or_insert(0);
+            let idx = *c;
+            *c += 1;
+            idx
+        };
+        let kind = self.decide_at(site, idx, class)?;
+        self.injected[kind.index()].fetch_add(1, Ordering::Relaxed);
+        let mut log = self.log.lock().unwrap_or_else(|p| p.into_inner());
+        if log.len() < LOG_CAP {
+            log.push((site, idx, kind));
+        }
+        Some(kind)
+    }
+
+    pub fn injected_total(&self) -> u64 {
+        self.injected.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn injected_of(&self, kind: IoFaultKind) -> u64 {
+        self.injected[kind.index()].load(Ordering::Relaxed)
+    }
+
+    /// Sorted applied-fault log — the determinism witness: two runs
+    /// with the same seed and the same per-site op counts produce
+    /// byte-identical snapshots regardless of thread interleaving.
+    pub fn log_snapshot(&self) -> Vec<(String, u64, IoFaultKind)> {
+        let mut v: Vec<(String, u64, IoFaultKind)> = self
+            .log
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .map(|(s, i, k)| (s.to_string(), *i, *k))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Process-global injector slot. `None` (the default) means every
+/// wrapper below is a plain passthrough to `std::fs`.
+static GLOBAL: Mutex<Option<Arc<IoFaultInjector>>> = Mutex::new(None);
+
+/// Install (or clear, with `None`) the process-global injector.
+/// Production installs from `AUTOSAGE_IO_FAULT_*`; tests that install
+/// one must serialize on a shared lock and uninstall when done.
+pub fn install(inj: Option<Arc<IoFaultInjector>>) {
+    *GLOBAL.lock().unwrap_or_else(|p| p.into_inner()) = inj;
+}
+
+/// The currently-installed global injector, if any.
+pub fn installed() -> Option<Arc<IoFaultInjector>> {
+    GLOBAL.lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+fn decide(site: &'static str, class: OpClass) -> Option<IoFaultKind> {
+    installed().and_then(|i| i.next(site, class))
+}
+
+// ---- global recovery counters -----------------------------------------
+
+/// Process-wide salvage/recovery counters, incremented by the wrappers
+/// here and by the salvage-aware readers (schedule cache, JSONL
+/// streams, generational model/snapshot loads). Exported as the
+/// `autosage_salvage_*` / `autosage_io_*` metric series.
+#[derive(Default)]
+pub struct RecoveryStats {
+    /// Write attempts retried after an injected (or real) transient
+    /// write/rename failure that a later attempt absorbed.
+    pub write_retries: AtomicU64,
+    /// JSONL tail lines dropped by valid-prefix salvage.
+    pub jsonl_lines_dropped: AtomicU64,
+    /// Individually-corrupt schedule-cache entries quarantined on load.
+    pub cache_entries_quarantined: AtomicU64,
+    /// Whole cache files too corrupt to parse, moved aside and reset.
+    pub cache_files_reset: AtomicU64,
+    /// Corrupt current-generation artifacts recovered from `.prev`.
+    pub generation_fallbacks: AtomicU64,
+    /// Size-capped log rotations performed.
+    pub rotations: AtomicU64,
+}
+
+impl RecoveryStats {
+    /// Sum of all salvage events (the `autosage_salvage_total` series).
+    pub fn salvage_total(&self) -> u64 {
+        self.jsonl_lines_dropped.load(Ordering::Relaxed)
+            + self.cache_entries_quarantined.load(Ordering::Relaxed)
+            + self.cache_files_reset.load(Ordering::Relaxed)
+            + self.generation_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// `(name, value)` pairs in a fixed order (deterministic exports).
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("write_retries", self.write_retries.load(Ordering::Relaxed)),
+            (
+                "jsonl_lines_dropped",
+                self.jsonl_lines_dropped.load(Ordering::Relaxed),
+            ),
+            (
+                "cache_entries_quarantined",
+                self.cache_entries_quarantined.load(Ordering::Relaxed),
+            ),
+            (
+                "cache_files_reset",
+                self.cache_files_reset.load(Ordering::Relaxed),
+            ),
+            (
+                "generation_fallbacks",
+                self.generation_fallbacks.load(Ordering::Relaxed),
+            ),
+            ("rotations", self.rotations.load(Ordering::Relaxed)),
+        ]
+    }
+}
+
+static RECOVERY: RecoveryStats = RecoveryStats {
+    write_retries: AtomicU64::new(0),
+    jsonl_lines_dropped: AtomicU64::new(0),
+    cache_entries_quarantined: AtomicU64::new(0),
+    cache_files_reset: AtomicU64::new(0),
+    generation_fallbacks: AtomicU64::new(0),
+    rotations: AtomicU64::new(0),
+};
+
+/// The process-wide recovery counters.
+pub fn recovery() -> &'static RecoveryStats {
+    &RECOVERY
+}
+
+// ---- typed corrupt-artifact error -------------------------------------
+
+/// Terminal corruption: the artifact at `path` is unreadable AND no
+/// previous generation could stand in. Loaders attach this (via
+/// `anyhow::Error::new`) so callers can downcast and distinguish
+/// "corrupt → refuse" from ordinary I/O errors or staleness.
+#[derive(Debug)]
+pub struct CorruptArtifact {
+    pub path: PathBuf,
+    pub detail: String,
+}
+
+impl std::fmt::Display for CorruptArtifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "corrupt artifact {}: {} (no recoverable generation)",
+            self.path.display(),
+            self.detail
+        )
+    }
+}
+
+impl std::error::Error for CorruptArtifact {}
+
+// ---- wrapped filesystem operations ------------------------------------
+
+fn injected_err(kind: IoFaultKind, site: &str) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::Other,
+        format!("injected {} at {site}", kind.as_str()),
+    )
+}
+
+/// Flip one bit near the middle of the buffer (deterministic position,
+/// so same-seed runs corrupt identically).
+fn bit_flipped(bytes: &[u8]) -> Vec<u8> {
+    let mut v = bytes.to_vec();
+    if !v.is_empty() {
+        let i = v.len() / 2;
+        v[i] ^= 0x01;
+    }
+    v
+}
+
+/// Fault-wrapped whole-file write (truncate semantics), retried up to
+/// [`WRITE_RETRIES`] times. `torn_write` leaves a prefix behind and
+/// retries; `enospc` fails before any byte lands and retries;
+/// `bit_flip` silently succeeds with one corrupted byte (salvage on
+/// read is the only defense). Only returns `Err` when the retry budget
+/// is exhausted or the real filesystem fails.
+pub fn write_file(site: &'static str, path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let mut last: Option<io::Error> = None;
+    for attempt in 0..WRITE_RETRIES {
+        if attempt > 0 {
+            recovery().write_retries.fetch_add(1, Ordering::Relaxed);
+        }
+        match decide(site, OpClass::Write) {
+            None => return std::fs::write(path, bytes),
+            Some(IoFaultKind::BitFlip) => {
+                return std::fs::write(path, bit_flipped(bytes));
+            }
+            Some(k @ IoFaultKind::TornWrite) => {
+                let _ = std::fs::write(path, &bytes[..bytes.len() / 2]);
+                last = Some(injected_err(k, site));
+            }
+            Some(k @ IoFaultKind::Enospc) => {
+                last = Some(injected_err(k, site));
+            }
+            Some(_) => unreachable!("non-write kind for OpClass::Write"),
+        }
+    }
+    Err(last.unwrap_or_else(|| injected_err(IoFaultKind::Enospc, site)))
+}
+
+/// Fault-wrapped append (used by the incremental trace flush). Only
+/// `enospc` (retryable, nothing written) and `bit_flip` (silent
+/// corruption, salvage on read) apply: a torn *append* cannot be
+/// retried without duplicating the written prefix.
+pub fn append_file(
+    site: &'static str,
+    path: &Path,
+    bytes: &[u8],
+    truncate: bool,
+) -> io::Result<()> {
+    use std::io::Write;
+    let mut payload: Option<Vec<u8>> = None;
+    let mut last: Option<io::Error> = None;
+    let mut ok = false;
+    for attempt in 0..WRITE_RETRIES {
+        if attempt > 0 {
+            recovery().write_retries.fetch_add(1, Ordering::Relaxed);
+        }
+        match decide(site, OpClass::Write) {
+            None => {
+                ok = true;
+                break;
+            }
+            Some(IoFaultKind::BitFlip) => {
+                payload = Some(bit_flipped(bytes));
+                ok = true;
+                break;
+            }
+            Some(k) => last = Some(injected_err(k, site)),
+        }
+    }
+    if !ok {
+        return Err(last.unwrap_or_else(|| injected_err(IoFaultKind::Enospc, site)));
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(!truncate)
+        .write(true)
+        .truncate(truncate)
+        .open(path)?;
+    f.write_all(payload.as_deref().unwrap_or(bytes))
+}
+
+/// Fault-wrapped rename. A `failed_rename` leaves the source (the tmp
+/// file) behind and the destination untouched — exactly a crash between
+/// write and rename.
+pub fn rename(site: &'static str, from: &Path, to: &Path) -> io::Result<()> {
+    if let Some(k) = decide(site, OpClass::Rename) {
+        return Err(injected_err(k, site));
+    }
+    std::fs::rename(from, to)
+}
+
+/// Fault-wrapped atomic write: tmp file + rename, the whole pair
+/// retried up to [`WRITE_RETRIES`] times. This is THE write path for
+/// every durable artifact (schedule cache, `.asgm`, `.asg`, manifests).
+pub fn write_atomic(site: &'static str, path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let tmp = path.with_extension(match path.extension() {
+        Some(e) => format!("{}.tmp", e.to_string_lossy()),
+        None => "tmp".to_string(),
+    });
+    let mut last: Option<io::Error> = None;
+    for attempt in 0..WRITE_RETRIES {
+        if attempt > 0 {
+            recovery().write_retries.fetch_add(1, Ordering::Relaxed);
+        }
+        let written = match decide(site, OpClass::Write) {
+            None => std::fs::write(&tmp, bytes).map(|_| ()),
+            Some(IoFaultKind::BitFlip) => std::fs::write(&tmp, bit_flipped(bytes)),
+            Some(k @ IoFaultKind::TornWrite) => {
+                let _ = std::fs::write(&tmp, &bytes[..bytes.len() / 2]);
+                Err(injected_err(k, site))
+            }
+            Some(k @ IoFaultKind::Enospc) => Err(injected_err(k, site)),
+            Some(_) => unreachable!("non-write kind for OpClass::Write"),
+        };
+        match written.and_then(|_| rename(site, &tmp, path)) {
+            Ok(()) => return Ok(()),
+            Err(e) => last = Some(e),
+        }
+    }
+    let _ = std::fs::remove_file(&tmp);
+    Err(last.unwrap_or_else(|| injected_err(IoFaultKind::Enospc, site)))
+}
+
+/// Fault-wrapped whole-file read. `short_read` truncates the byte
+/// stream; `bit_flip` corrupts one byte — both *silently*, so readers
+/// must validate (checksums, per-line parses) and salvage.
+pub fn read_file(site: &'static str, path: &Path) -> io::Result<Vec<u8>> {
+    let data = std::fs::read(path)?;
+    Ok(match decide(site, OpClass::Read) {
+        None => data,
+        Some(IoFaultKind::ShortRead) => data[..data.len() / 2].to_vec(),
+        Some(IoFaultKind::BitFlip) => bit_flipped(&data),
+        Some(_) => unreachable!("non-read kind for OpClass::Read"),
+    })
+}
+
+/// [`read_file`] decoded as UTF-8 (lossy — injected truncation/flips
+/// may split a code point; the JSON layer rejects what the decoder
+/// mangles).
+pub fn read_to_string(site: &'static str, path: &Path) -> io::Result<String> {
+    Ok(String::from_utf8_lossy(&read_file(site, path)?).into_owned())
+}
+
+// ---- salvage + rotation helpers ---------------------------------------
+
+/// Valid-prefix JSONL salvage: returns the leading run of lines that
+/// parse as JSON and the count of dropped tail lines (first unparseable
+/// line onward — a torn/short write corrupts the *tail*, never the
+/// middle). Pure; callers account drops via
+/// `recovery().jsonl_lines_dropped`.
+pub fn salvage_jsonl(text: &str) -> (Vec<&str>, usize) {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut kept = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if crate::util::json::Json::parse(line).is_ok() {
+            kept.push(*line);
+        } else {
+            return (kept, lines.len() - i);
+        }
+    }
+    (kept, 0)
+}
+
+/// Size-capped rotation: when `path` holds at least `cap_bytes`, rename
+/// it to `<path>.1` (replacing any previous rotation) so the live file
+/// restarts empty. Returns whether a rotation happened; rotations count
+/// in `recovery().rotations`. `cap_bytes == 0` disables rotation.
+pub fn rotate_if_large(path: &Path, cap_bytes: u64) -> io::Result<bool> {
+    if cap_bytes == 0 {
+        return Ok(false);
+    }
+    match std::fs::metadata(path) {
+        Ok(m) if m.len() >= cap_bytes => {
+            let mut rotated = path.as_os_str().to_os_string();
+            rotated.push(".1");
+            std::fs::rename(path, PathBuf::from(rotated))?;
+            recovery().rotations.fetch_add(1, Ordering::Relaxed);
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_pure_and_seeded() {
+        let a = IoFaultInjector::new(7, 0.5, vec![]);
+        let b = IoFaultInjector::new(7, 0.5, vec![]);
+        for idx in 0..200 {
+            assert_eq!(
+                a.decide_at("site.x", idx, OpClass::Write),
+                b.decide_at("site.x", idx, OpClass::Write),
+                "same (seed, site, idx) must decide identically"
+            );
+        }
+        let decisions_a: Vec<_> =
+            (0..200).map(|i| a.decide_at("site.x", i, OpClass::Write)).collect();
+        let c = IoFaultInjector::new(8, 0.5, vec![]);
+        let decisions_c: Vec<_> =
+            (0..200).map(|i| c.decide_at("site.x", i, OpClass::Write)).collect();
+        assert_ne!(decisions_a, decisions_c, "different seed, different set");
+        let other_site: Vec<_> =
+            (0..200).map(|i| a.decide_at("site.y", i, OpClass::Write)).collect();
+        assert_ne!(decisions_a, other_site, "sites are independent streams");
+    }
+
+    #[test]
+    fn decisions_respect_op_class() {
+        let inj = IoFaultInjector::new(3, 1.0, vec![]);
+        for idx in 0..100 {
+            if let Some(k) = inj.decide_at("s", idx, OpClass::Write) {
+                assert!(applicable(k, OpClass::Write), "{k:?} not a write fault");
+            }
+            if let Some(k) = inj.decide_at("s", idx, OpClass::Read) {
+                assert!(applicable(k, OpClass::Read), "{k:?} not a read fault");
+            }
+            assert_eq!(
+                inj.decide_at("s", idx, OpClass::Rename),
+                Some(IoFaultKind::FailedRename)
+            );
+        }
+    }
+
+    #[test]
+    fn rate_zero_never_fires_rate_one_always() {
+        let off = IoFaultInjector::new(1, 0.0, vec![]);
+        let on = IoFaultInjector::new(1, 1.0, vec![]);
+        for idx in 0..100 {
+            assert_eq!(off.decide_at("s", idx, OpClass::Write), None);
+            assert!(on.decide_at("s", idx, OpClass::Write).is_some());
+        }
+    }
+
+    #[test]
+    fn kind_filter_restricts_the_menu() {
+        let inj = IoFaultInjector::new(5, 1.0, vec![IoFaultKind::Enospc]);
+        for idx in 0..50 {
+            assert_eq!(
+                inj.decide_at("s", idx, OpClass::Write),
+                Some(IoFaultKind::Enospc)
+            );
+            // Enospc is not a read fault: reads see nothing.
+            assert_eq!(inj.decide_at("s", idx, OpClass::Read), None);
+        }
+    }
+
+    #[test]
+    fn parse_kinds_round_trip_and_dedup() {
+        for k in IoFaultKind::ALL {
+            assert_eq!(IoFaultKind::parse(k.as_str()), Some(k));
+        }
+        let v = parse_io_kinds("bit_flip, enospc ,bit_flip,").unwrap();
+        assert_eq!(v, vec![IoFaultKind::BitFlip, IoFaultKind::Enospc]);
+        assert!(parse_io_kinds("nope").is_err());
+        assert!(parse_io_kinds("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn log_snapshot_is_sorted_and_counted() {
+        let inj = IoFaultInjector::new(11, 1.0, vec![IoFaultKind::Enospc]);
+        inj.next("b.site", OpClass::Write);
+        inj.next("a.site", OpClass::Write);
+        inj.next("a.site", OpClass::Write);
+        assert_eq!(inj.injected_total(), 3);
+        assert_eq!(inj.injected_of(IoFaultKind::Enospc), 3);
+        let log = inj.log_snapshot();
+        assert_eq!(
+            log,
+            vec![
+                ("a.site".to_string(), 0, IoFaultKind::Enospc),
+                ("a.site".to_string(), 1, IoFaultKind::Enospc),
+                ("b.site".to_string(), 0, IoFaultKind::Enospc),
+            ]
+        );
+    }
+
+    #[test]
+    fn salvage_jsonl_recovers_valid_prefix() {
+        let text = "{\"a\":1}\n{\"b\":2}\n{\"c\":tr\n{\"d\":4}\n";
+        let (kept, dropped) = salvage_jsonl(text);
+        assert_eq!(kept, vec!["{\"a\":1}", "{\"b\":2}"]);
+        assert_eq!(dropped, 2, "corrupt line AND everything after it drop");
+        let (kept, dropped) = salvage_jsonl("{\"a\":1}\n{\"b\":2}\n");
+        assert_eq!((kept.len(), dropped), (2, 0));
+        let (kept, dropped) = salvage_jsonl("");
+        assert_eq!((kept.len(), dropped), (0, 0));
+        // A torn final line (no closing brace) is the classic case.
+        let (kept, dropped) = salvage_jsonl("{\"a\":1}\n{\"b\":");
+        assert_eq!((kept.len(), dropped), (1, 1));
+    }
+
+    #[test]
+    fn rotate_if_large_renames_and_counts() {
+        let dir = std::env::temp_dir().join("autosage_iofault_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("rot-{}.jsonl", std::process::id()));
+        std::fs::write(&p, "0123456789").unwrap();
+        assert!(!rotate_if_large(&p, 0).unwrap(), "cap 0 disables rotation");
+        assert!(!rotate_if_large(&p, 1000).unwrap(), "below cap: no-op");
+        let before = recovery().rotations.load(Ordering::Relaxed);
+        assert!(rotate_if_large(&p, 10).unwrap());
+        assert!(!p.exists());
+        let mut rotated = p.as_os_str().to_os_string();
+        rotated.push(".1");
+        let rotated = PathBuf::from(rotated);
+        assert_eq!(std::fs::read_to_string(&rotated).unwrap(), "0123456789");
+        assert!(recovery().rotations.load(Ordering::Relaxed) > before);
+        let _ = std::fs::remove_file(&rotated);
+    }
+
+    // NOTE: tests for the global install() + wrapper behavior live in
+    // `tests/durability.rs` behind one shared lock — the injector slot
+    // is process-global and unit tests run concurrently.
+
+    #[test]
+    fn write_atomic_passthrough_without_injector() {
+        let dir = std::env::temp_dir().join("autosage_iofault_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("atomic-{}.json", std::process::id()));
+        write_atomic("test.site", &p, b"{\"ok\":true}").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"{\"ok\":true}");
+        assert_eq!(read_file("test.site", &p).unwrap(), b"{\"ok\":true}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_artifact_displays_path_and_detail() {
+        let e = CorruptArtifact {
+            path: PathBuf::from("/x/model.asgm"),
+            detail: "checksum mismatch".to_string(),
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("model.asgm"));
+        assert!(msg.contains("checksum mismatch"));
+        let any = anyhow::Error::new(e);
+        assert!(any.downcast_ref::<CorruptArtifact>().is_some());
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod csv;
 pub mod envcfg;
+pub mod iofault;
 pub mod json;
 pub mod rng;
 pub mod sha256;

@@ -1,0 +1,352 @@
+//! Durability integration: seeded I/O fault injection wrapper
+//! semantics, same-seed determinism of the injected-fault log, JSONL
+//! valid-prefix salvage (plain and schema-strict), schedule-cache
+//! entry quarantine round-trips, and the `autosage doctor` audit →
+//! repair → clean cycle driven through the real CLI binary.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use autosage::model::{
+    read_model_generational, write_model_generational, CostModel, Example,
+    DEFAULT_MAX_DEPTH,
+};
+use autosage::scheduler::features::FEATURE_NAMES;
+use autosage::scheduler::{CachedChoice, ScheduleCache};
+use autosage::server::{QuarantineEntry, QuarantineLog};
+use autosage::util::iofault::{
+    self, IoFaultInjector, IoFaultKind, OpClass, WRITE_RETRIES,
+};
+use autosage::util::json::Json;
+
+/// The injector slot is process-global: tests that `install` one must
+/// hold this lock for their whole body and uninstall before releasing.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_faults() -> MutexGuard<'static, ()> {
+    FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("autosage_durability_tests")
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A trivially valid one-op model for generational-artifact fixtures.
+fn tiny_model(label: &str) -> CostModel {
+    let examples = vec![Example {
+        op: "spmm".to_string(),
+        features: vec![1.0; FEATURE_NAMES.len()],
+        label: label.to_string(),
+    }];
+    CostModel::train(&examples, &[], 1, DEFAULT_MAX_DEPTH).unwrap()
+}
+
+fn choice(variant: &str) -> CachedChoice {
+    CachedChoice {
+        variant: variant.to_string(),
+        t_baseline_ms: 2.0,
+        t_star_ms: 1.0,
+        alpha: 0.5,
+        features: None,
+    }
+}
+
+/// Rate-1.0 bit_flip on the write path: the write *succeeds* but the
+/// byte at len/2 lands with one flipped bit — silent corruption that
+/// only read-side validation can catch.
+#[test]
+fn bit_flip_write_corrupts_exactly_one_middle_byte() {
+    let _guard = lock_faults();
+    let inj = Arc::new(IoFaultInjector::new(11, 1.0, vec![IoFaultKind::BitFlip]));
+    iofault::install(Some(Arc::clone(&inj)));
+    let dir = tmpdir("bitflip");
+    let path = dir.join("payload.bin");
+    let data: Vec<u8> = (0..64u8).collect();
+    iofault::write_file("test.bitflip.write", &path, &data)
+        .expect("bit_flip is silent — the write must succeed");
+    iofault::install(None);
+
+    let on_disk = std::fs::read(&path).unwrap();
+    assert_eq!(on_disk.len(), data.len());
+    let diffs: Vec<usize> = (0..data.len())
+        .filter(|&i| on_disk[i] != data[i])
+        .collect();
+    assert_eq!(diffs, vec![data.len() / 2], "exactly the middle byte flips");
+    assert_eq!(on_disk[32] ^ data[32], 0x01, "one bit, deterministic position");
+    assert_eq!(inj.injected_of(IoFaultKind::BitFlip), 1);
+    assert_eq!(inj.injected_total(), 1);
+}
+
+/// Rate-1.0 short_read halves the byte stream silently; the caller
+/// sees a successful read of a truncated payload.
+#[test]
+fn short_read_silently_truncates_to_half() {
+    let _guard = lock_faults();
+    let dir = tmpdir("shortread");
+    let path = dir.join("payload.bin");
+    std::fs::write(&path, vec![7u8; 100]).unwrap();
+    let inj = Arc::new(IoFaultInjector::new(3, 1.0, vec![IoFaultKind::ShortRead]));
+    iofault::install(Some(Arc::clone(&inj)));
+    let got = iofault::read_file("test.shortread.read", &path).unwrap();
+    iofault::install(None);
+    assert_eq!(got.len(), 50, "short_read returns the first half");
+    assert!(got.iter().all(|&b| b == 7));
+    assert_eq!(inj.injected_of(IoFaultKind::ShortRead), 1);
+}
+
+/// Rate-1.0 failed_rename exhausts the atomic-write retry budget: the
+/// destination is never created, the tmp file is cleaned up, and every
+/// retry is counted in the process-wide recovery stats.
+#[test]
+fn failed_rename_exhausts_retries_and_leaves_no_debris() {
+    let _guard = lock_faults();
+    let dir = tmpdir("failedrename");
+    let path = dir.join("artifact.json");
+    let retries_before = iofault::recovery().snapshot()[0].1;
+    let inj =
+        Arc::new(IoFaultInjector::new(5, 1.0, vec![IoFaultKind::FailedRename]));
+    iofault::install(Some(Arc::clone(&inj)));
+    let err = iofault::write_atomic("test.rename.write", &path, b"{\"k\":1}\n")
+        .expect_err("every rename injected — the retry budget must exhaust");
+    iofault::install(None);
+
+    assert!(err.to_string().contains("failed_rename"), "{err}");
+    assert!(!path.exists(), "destination must stay untouched");
+    let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+    assert!(leftovers.is_empty(), "tmp file must be cleaned up: {leftovers:?}");
+    assert_eq!(inj.injected_of(IoFaultKind::FailedRename), WRITE_RETRIES as u64);
+    let retries_after = iofault::recovery().snapshot()[0].1;
+    assert!(
+        retries_after - retries_before >= (WRITE_RETRIES - 1) as u64,
+        "each attempt past the first counts as a write retry"
+    );
+}
+
+/// Same seed, same op sequence → byte-identical injected-fault logs and
+/// totals, across two fresh injectors. This is the property the CI
+/// crash-smoke job's `cmp recovery.json` leans on.
+#[test]
+fn same_seed_injectors_replay_the_identical_fault_set() {
+    let _guard = lock_faults();
+    let run = |tag: &str| -> (Vec<(String, u64, IoFaultKind)>, u64) {
+        let dir = tmpdir(&format!("sameseed_{tag}"));
+        let inj = Arc::new(IoFaultInjector::new(99, 0.5, vec![]));
+        iofault::install(Some(Arc::clone(&inj)));
+        let a = dir.join("a.json");
+        let b = dir.join("b.json");
+        for i in 0..20 {
+            let payload = format!("{{\"i\":{i}}}\n");
+            let _ = iofault::write_file("test.seed.write", &a, payload.as_bytes());
+            let _ = iofault::write_atomic("test.seed.atomic", &b, payload.as_bytes());
+            if a.exists() {
+                let _ = iofault::read_file("test.seed.read", &a);
+            }
+        }
+        iofault::install(None);
+        (inj.log_snapshot(), inj.injected_total())
+    };
+    let (log1, total1) = run("one");
+    let (log2, total2) = run("two");
+    assert!(total1 > 0, "rate 0.5 over 60+ ops must inject something");
+    assert_eq!(total1, total2);
+    assert_eq!(log1, log2, "same-seed runs must inject the identical set");
+
+    // And the pure decision function agrees with itself across instances.
+    let x = IoFaultInjector::new(99, 0.5, vec![]);
+    let y = IoFaultInjector::new(99, 0.5, vec![]);
+    for idx in 0..100 {
+        assert_eq!(
+            x.decide_at("test.seed.atomic", idx, OpClass::Write),
+            y.decide_at("test.seed.atomic", idx, OpClass::Write)
+        );
+    }
+}
+
+/// Valid-prefix salvage over a torn JSONL stream: the intact leading
+/// lines survive, everything from the first unparseable line is
+/// dropped and counted.
+#[test]
+fn jsonl_salvage_recovers_the_valid_prefix_of_a_torn_stream() {
+    let text = "{\"a\":1}\n\n{\"b\":2}\n{\"c\":3}\n{\"d\":4,\"tr";
+    let (kept, dropped) = iofault::salvage_jsonl(text);
+    assert_eq!(kept, vec!["{\"a\":1}", "{\"b\":2}", "{\"c\":3}"]);
+    assert_eq!(dropped, 1, "only the torn tail line drops");
+
+    // Torn mid-stream: the drop count covers the whole tail, because a
+    // later "valid-looking" line after a tear cannot be trusted.
+    let (kept, dropped) = iofault::salvage_jsonl("{\"a\":1}\n{bad\n{\"b\":2}\n");
+    assert_eq!(kept, vec!["{\"a\":1}"]);
+    assert_eq!(dropped, 2);
+
+    let (kept, dropped) = iofault::salvage_jsonl("");
+    assert!(kept.is_empty());
+    assert_eq!(dropped, 0);
+}
+
+/// Schema-strict quarantine salvage: a line that parses as JSON but is
+/// not a QuarantineEntry ends the valid prefix, just like a torn line.
+#[test]
+fn quarantine_salvage_is_schema_strict() {
+    let mk = |id: u64| QuarantineEntry {
+        req_id: id,
+        shard: 0,
+        sig: format!("sig{id}"),
+        op: "spmm".to_string(),
+        f: 64,
+        injected: true,
+        msg: "injected panic".to_string(),
+    };
+    let mut text = String::new();
+    for id in 0..3 {
+        text.push_str(&mk(id).to_json().to_string());
+        text.push('\n');
+    }
+    text.push_str("{\"not\":\"a quarantine entry\"}\n");
+    text.push_str(&mk(9).to_json().to_string());
+    text.push('\n');
+
+    let (entries, dropped) = QuarantineLog::salvage_jsonl(&text);
+    assert_eq!(entries.len(), 3, "schema salvage keeps the conforming prefix");
+    assert_eq!(dropped, 2, "the off-schema line and everything after it drop");
+    for (id, e) in entries.iter().enumerate() {
+        assert_eq!(e.req_id, id as u64);
+        assert_eq!(e.sig, format!("sig{id}"));
+        assert!(e.injected);
+    }
+
+    // A fully well-formed stream round-trips losslessly.
+    let (entries, dropped) = QuarantineLog::salvage_jsonl(
+        &entries.iter().map(|e| e.to_json().to_string() + "\n").collect::<String>(),
+    );
+    assert_eq!(entries.len(), 3);
+    assert_eq!(dropped, 0);
+}
+
+/// One textually-corrupted cache entry quarantines on load without
+/// poisoning its neighbors, and a save persists the salvaged view.
+#[test]
+fn schedule_cache_quarantines_corrupt_entries_individually() {
+    // No injector installed here — but cache save/load go through the
+    // fault-wrapped I/O layer, so keep other tests' injectors out.
+    let _guard = lock_faults();
+    let dir = tmpdir("cachequarantine");
+    let path = dir.join("cache.json");
+    let mut cache = ScheduleCache::load(&path).unwrap();
+    cache.insert("spmm|good|64".to_string(), choice("ell_r8_f32"));
+    cache.insert("spmm|bad|64".to_string(), choice("hub_r8_f32"));
+    cache.save().unwrap();
+
+    // Corrupt exactly one entry: an empty variant fails entry
+    // validation while the file as a whole stays parseable JSON.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("hub_r8_f32"));
+    std::fs::write(&path, text.replace("hub_r8_f32", "")).unwrap();
+
+    let back = ScheduleCache::load(&path).unwrap();
+    assert_eq!(back.quarantined, 1, "the bad entry quarantines");
+    assert_eq!(back.len(), 1, "the good entry survives");
+    assert!(back.peek("spmm|good|64").is_some());
+    assert!(back.peek("spmm|bad|64").is_none());
+    assert!(back.is_dirty(), "a quarantining load must mark the cache dirty");
+
+    // Whole-file corruption resets through the salvage path instead.
+    std::fs::write(&path, "not json at all {{{").unwrap();
+    let (empty, salvage) = ScheduleCache::load_salvaged(&path);
+    assert_eq!(empty.len(), 0);
+    assert!(salvage.file_reset);
+    let mut corrupt = path.as_os_str().to_os_string();
+    corrupt.push(".corrupt");
+    assert!(
+        PathBuf::from(corrupt).exists(),
+        "the unparseable original is kept aside for forensics"
+    );
+}
+
+/// `autosage doctor` through the real binary: a torn trace stream and a
+/// stale generational model are reported read-only, repaired under
+/// `--fix`, and a re-audit comes back clean.
+#[test]
+fn doctor_audits_repairs_and_then_finds_nothing() {
+    // The fixtures are written through the fault-wrapped model writer.
+    let _guard = lock_faults();
+    let dir = tmpdir("doctor");
+
+    // Fixture 1: trace.jsonl with two valid lines and a torn tail.
+    std::fs::write(
+        dir.join("trace.jsonl"),
+        "{\"name\":\"a\"}\n{\"name\":\"b\"}\n{\"name\":\"c\",\"du",
+    )
+    .unwrap();
+
+    // Fixture 2: a generational model whose current file is corrupt but
+    // whose previous generation is intact.
+    let model_path = dir.join("model.asgm");
+    write_model_generational(&model_path, &tiny_model("ell_r8_f32")).unwrap();
+    write_model_generational(&model_path, &tiny_model("hub_r8_f32")).unwrap();
+    let mut bytes = std::fs::read(&model_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&model_path, &bytes).unwrap();
+    let (_, fell_back) = read_model_generational(&model_path).unwrap();
+    assert!(fell_back, "fixture sanity: the corrupt current must fall back");
+
+    let doctor = |fix: bool| -> Json {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_autosage"));
+        cmd.arg("doctor").arg(&dir).arg("--json");
+        if fix {
+            cmd.arg("--fix");
+        }
+        let out = cmd.output().unwrap();
+        assert!(
+            out.status.success(),
+            "doctor failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        Json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap()
+    };
+    let status_of = |j: &Json, artifact: &str| -> String {
+        j.get("artifacts")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|a| a.get("artifact").as_str() == Some(artifact))
+            .unwrap_or_else(|| panic!("doctor must report {artifact}"))
+            .get("status")
+            .as_str()
+            .unwrap()
+            .to_string()
+    };
+
+    // Audit: both problems visible, nothing touched on disk.
+    let audit = doctor(false);
+    assert_eq!(status_of(&audit, "trace.jsonl"), "torn");
+    assert_eq!(status_of(&audit, "model.asgm"), "stale");
+    assert_eq!(audit.get("issues").as_usize(), Some(2));
+    assert_eq!(audit.get("repaired").as_usize(), Some(0));
+    assert_eq!(std::fs::read(&model_path).unwrap(), bytes, "audit must not mutate");
+
+    // Fix: the torn tail is rewritten away, the model restored from .prev.
+    let fixed = doctor(true);
+    assert_eq!(status_of(&fixed, "trace.jsonl"), "repaired");
+    assert_eq!(status_of(&fixed, "model.asgm"), "repaired");
+    assert_eq!(fixed.get("repaired").as_usize(), Some(2));
+    assert_eq!(
+        std::fs::read_to_string(dir.join("trace.jsonl")).unwrap(),
+        "{\"name\":\"a\"}\n{\"name\":\"b\"}\n"
+    );
+    let (restored, fell_back) = read_model_generational(&model_path).unwrap();
+    assert!(!fell_back, "the repaired current generation reads directly");
+    assert_eq!(restored, tiny_model("ell_r8_f32"), "repair promotes .prev");
+
+    // Re-audit: everything reads clean.
+    let clean = doctor(false);
+    assert_eq!(status_of(&clean, "trace.jsonl"), "ok");
+    assert_eq!(status_of(&clean, "model.asgm"), "ok");
+    assert_eq!(clean.get("issues").as_usize(), Some(0));
+}

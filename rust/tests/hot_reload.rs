@@ -1,0 +1,207 @@
+//! Validated model hot-reload: the pool's watcher picks a retrained
+//! `.asgm` up off the request path, shadow-grades it as a canary
+//! against live probe outcomes, promotes it on agreement (new
+//! generation, counter, trace event) — and a corrupt overwrite is
+//! rejected without ever reaching serving.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use autosage::config::Config;
+use autosage::gen::preset;
+use autosage::model::{
+    write_model_generational, CostModel, Example, DEFAULT_MAX_DEPTH,
+};
+use autosage::obs::metrics::MetricsRegistry;
+use autosage::obs::trace::Recorder;
+use autosage::scheduler::features::FEATURE_NAMES;
+use autosage::scheduler::Op;
+use autosage::server::ServerPool;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("autosage_hot_reload_tests")
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Pool config wired for fast hot-reload testing: native backend, a
+/// tight watcher poll, and a one-observation canary quota with a zero
+/// agreement bar so grading is deterministic (the quota, not the
+/// agreement fraction, is what these tests exercise).
+fn reload_cfg(model_path: &std::path::Path) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = "native".to_string();
+    cfg.cache_path = String::new();
+    cfg.probe_full_max_rows = 512;
+    cfg.probe_iters = 2;
+    cfg.probe_cap_ms = 200.0;
+    cfg.serve_workers = 1;
+    cfg.model_path = model_path.display().to_string();
+    cfg.model_reload_ms = 10;
+    cfg.model_canary_n = 1;
+    cfg.model_canary_agree = 0.0;
+    cfg
+}
+
+/// A model that predicts `label` for `op` with confidence 1.0: one
+/// single-class example trains a pure leaf.
+fn constant_model(op: &str, label: &str) -> CostModel {
+    let examples = vec![Example {
+        op: op.to_string(),
+        features: vec![1.0; FEATURE_NAMES.len()],
+        label: label.to_string(),
+    }];
+    CostModel::train(&examples, &[], 1, DEFAULT_MAX_DEPTH).unwrap()
+}
+
+fn spmm_call(pool: &ServerPool, seed: u64) {
+    let (g, _) = preset("er_s", seed);
+    let b = vec![0.5f32; g.n_rows * 64];
+    let resp = pool.call(Op::Spmm, g, 64, vec![("b".into(), b)]).unwrap();
+    resp.result.expect("no faults configured — requests must succeed");
+}
+
+fn wait_until(deadline: Duration, mut done: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < deadline {
+        if done() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    done()
+}
+
+/// A retrained model written over `model_path` is picked up live,
+/// canaried against a real probe outcome, and promoted: generation
+/// bumps, the reload counter and `model_reload` trace events fire, and
+/// no restart happened anywhere.
+#[test]
+fn retrained_model_is_canaried_and_promoted_live() {
+    let dir = tmpdir("promote");
+    let model_path = dir.join("model.asgm");
+    // Incumbent knows only sddmm — every SpMM request probes, and each
+    // probe outcome is ground truth the canary is graded against.
+    write_model_generational(
+        &model_path,
+        &constant_model("sddmm", Op::Sddmm.baseline_variant()),
+    )
+    .unwrap();
+
+    let registry = Arc::new(MetricsRegistry::new());
+    let recorder = Arc::new(Recorder::new("hot-reload-test"));
+    let pool = ServerPool::spawn_observed(
+        PathBuf::from("artifacts"),
+        reload_cfg(&model_path),
+        Some(Arc::clone(&recorder)),
+        Some(Arc::clone(&registry)),
+    )
+    .unwrap();
+    assert!(pool.has_model(), "the incumbent must load at spawn");
+    assert_eq!(pool.model_generation(), 0);
+    assert_eq!(pool.model_reloads(), 0);
+
+    // Let the watcher fingerprint the incumbent before the overwrite,
+    // so the retrained file registers as a change.
+    std::thread::sleep(Duration::from_millis(150));
+    write_model_generational(
+        &model_path,
+        &constant_model("spmm", Op::Spmm.baseline_variant()),
+    )
+    .unwrap();
+
+    // Serve SpMM until the canary has been installed, graded against a
+    // probe outcome, and promoted. Varying the graph seed keeps minting
+    // cold keys, so ground truth keeps flowing whenever grading needs it.
+    let mut seed = 0u64;
+    let promoted = wait_until(Duration::from_secs(20), || {
+        seed += 1;
+        spmm_call(&pool, seed);
+        pool.model_reloads() == 1
+    });
+    assert!(promoted, "candidate must promote within the window");
+    assert_eq!(pool.model_generation(), 1, "promotion bumps the generation");
+    assert_eq!(pool.model_rollbacks(), 0);
+    assert!(pool.has_model());
+
+    // The promoted incumbent serves: confidence-1.0 spmm predictions
+    // now skip the probe, and requests still succeed.
+    spmm_call(&pool, 9999);
+
+    // Observable as metrics and trace events, per the required series.
+    assert_eq!(
+        registry
+            .counter("autosage_model_reloads_total")
+            .load(Ordering::Relaxed),
+        1
+    );
+    let prom = registry.render_prometheus();
+    assert!(prom.contains("autosage_model_reloads_total 1"), "{prom}");
+    let spans = recorder.snapshot();
+    let reload_events: Vec<_> =
+        spans.iter().filter(|s| s.name == "model_reload").collect();
+    let outcome = |o: &str| {
+        reload_events.iter().any(|s| {
+            s.attrs
+                .iter()
+                .any(|(k, v)| k == "outcome" && v == o)
+        })
+    };
+    assert!(outcome("candidate"), "the canary install must leave a trace event");
+    assert!(outcome("promoted"), "the promotion must leave a trace event");
+}
+
+/// A corrupt overwrite of the model file (no usable previous
+/// generation) is rejected by the watcher: counted as a rollback, the
+/// incumbent keeps serving, and the generation never moves.
+#[test]
+fn corrupt_model_overwrite_is_rejected_and_incumbent_survives() {
+    let dir = tmpdir("reject");
+    let model_path = dir.join("model.asgm");
+    write_model_generational(
+        &model_path,
+        &constant_model("sddmm", Op::Sddmm.baseline_variant()),
+    )
+    .unwrap();
+
+    let registry = Arc::new(MetricsRegistry::new());
+    let recorder = Arc::new(Recorder::new("hot-reload-reject"));
+    let pool = ServerPool::spawn_observed(
+        PathBuf::from("artifacts"),
+        reload_cfg(&model_path),
+        Some(Arc::clone(&recorder)),
+        Some(Arc::clone(&registry)),
+    )
+    .unwrap();
+    assert!(pool.has_model());
+    std::thread::sleep(Duration::from_millis(150));
+
+    // Torn/corrupt retrain: garbage bytes, and the first generational
+    // write left no `.prev` behind — nothing recoverable.
+    std::fs::write(&model_path, b"not a model file at all").unwrap();
+    let rejected =
+        wait_until(Duration::from_secs(20), || pool.model_rollbacks() >= 1);
+    assert!(rejected, "the watcher must reject the corrupt file");
+    assert_eq!(pool.model_reloads(), 0, "a rejected file never promotes");
+    assert_eq!(pool.model_generation(), 0);
+    assert!(pool.has_model(), "the incumbent stays installed");
+    spmm_call(&pool, 1);
+
+    assert!(
+        registry
+            .counter("autosage_model_rollbacks_total")
+            .load(Ordering::Relaxed)
+            >= 1
+    );
+    let spans = recorder.snapshot();
+    assert!(
+        spans.iter().any(|s| s.name == "model_reload"
+            && s.attrs.iter().any(|(k, v)| k == "outcome" && v == "rejected")),
+        "rejection must leave a model_reload trace event"
+    );
+}

@@ -157,6 +157,7 @@ fn one_trace_id_spans_loadgen_to_reply_for_a_coalesced_batch() {
         verify: true,
         max_retries: 0,
         retry_backoff_us: 200,
+        approx_frac: 0.0,
     };
     let report = run_load_traced(Arc::clone(&pool), &spec, Some(Arc::clone(&rec))).unwrap();
     assert_eq!(report.errors, 0, "{}", report.text);
@@ -514,6 +515,7 @@ fn rate_zero_sampling_audits_and_counts_but_records_no_request_spans() {
         verify: false,
         max_retries: 0,
         retry_backoff_us: 200,
+        approx_frac: 0.0,
     };
     let report = run_load_traced(Arc::clone(&pool), &spec, Some(Arc::clone(&rec))).unwrap();
     assert_eq!(report.errors, 0, "{}", report.text);

@@ -52,6 +52,7 @@ fn chaos_mixed_workload_stays_correct_and_replays_identically() {
         verify: true,
         max_retries: 0,
         retry_backoff_us: 200,
+        approx_frac: 0.0,
     };
     let total = (spec.clients * spec.requests_per_client) as u64;
     let registry = Arc::new(MetricsRegistry::new());

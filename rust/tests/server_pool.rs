@@ -44,6 +44,7 @@ fn concurrent_mixed_workload_matches_oracle_with_one_probe_per_key() {
         verify: true,
         max_retries: 0,
         retry_backoff_us: 200,
+        approx_frac: 0.0,
     };
     let report = run_load(Arc::clone(&pool), &spec).unwrap();
     assert_eq!(report.total, 16);

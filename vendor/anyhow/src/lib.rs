@@ -12,16 +12,29 @@ use std::fmt::{self, Debug, Display};
 /// `Result` with a defaulted error type, as in anyhow.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// A string-chain error value.
+/// A string-chain error value, optionally carrying the typed root-cause
+/// payload (set by [`Error::new`]) so callers can `downcast_ref` it.
 pub struct Error {
     /// Context chain, innermost (root cause) first.
     chain: Vec<String>,
+    /// The typed root cause, when built via [`Error::new`]. Context
+    /// wrapping preserves it; string construction leaves it `None`.
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from any displayable message.
     pub fn msg<M: Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], payload: None }
+    }
+
+    /// Build an error from a typed std error, keeping the value so
+    /// [`Error::downcast_ref`] can recover it (as in real anyhow).
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { chain: vec![e.to_string()], payload: Some(Box::new(e)) }
     }
 
     /// Wrap this error with an outer context message.
@@ -33,6 +46,12 @@ impl Error {
     /// The innermost (root cause) message.
     pub fn root_cause(&self) -> &str {
         &self.chain[0]
+    }
+
+    /// The typed root cause, if this error was built via [`Error::new`]
+    /// with a value of type `T` (context wrapping does not erase it).
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
     }
 }
 
@@ -68,7 +87,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
-        Error::msg(e.to_string())
+        Error::new(e)
     }
 }
 
@@ -154,6 +173,23 @@ mod tests {
             Ok(())
         }
         assert_eq!(format!("{}", f().unwrap_err()), "disk on fire");
+    }
+
+    #[test]
+    fn typed_errors_survive_context_and_downcast() {
+        let e = Error::new(io_err()).context("saving");
+        assert_eq!(format!("{e:#}"), "saving: disk on fire");
+        let io = e.downcast_ref::<std::io::Error>().expect("payload kept");
+        assert_eq!(io.to_string(), "disk on fire");
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // String-built errors have no typed payload.
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
+        // `?`-converted std errors are downcastable too.
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().downcast_ref::<std::io::Error>().is_some());
     }
 
     #[test]
